@@ -1,0 +1,93 @@
+//! END-TO-END driver: the full APACHE stack serving a realistic mixed
+//! batch — Lola-MNIST inference requests interleaved with HE3DB predicate
+//! queries, HELR iterations and a VSP cycle — across simulated DIMMs, with
+//! the numeric hot path executing through the AOT PJRT artifacts.
+//!
+//! Reports: wall-clock latency/throughput of the serving loop, modelled
+//! DIMM time, per-op counts, and artifact invocations. Recorded in
+//! EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_serving`
+
+use apache_fhe::apps;
+use apache_fhe::coordinator::{ApacheConfig, Coordinator, TaskRequest};
+use apache_fhe::util::benchkit::{fmt_duration, fmt_rate, Table};
+use std::time::Instant;
+
+fn main() {
+    let mut cfg = ApacheConfig {
+        dimms: 4,
+        use_runtime: true,
+        ..Default::default()
+    };
+    cfg.artifacts_dir = apache_fhe::runtime::Runtime::default_dir()
+        .to_string_lossy()
+        .into_owned();
+    let coord = Coordinator::new(cfg);
+
+    // mixed batch: 8 MNIST inferences, 4 Q6 queries, 4 HELR iterations,
+    // 2 VSP cycles — the multi-scheme mix the paper targets
+    let mut reqs = Vec::new();
+    for i in 0..8 {
+        let mut t = apps::lola_mnist(i % 2 == 0);
+        t.name = format!("{}-{i}", t.name);
+        reqs.push(TaskRequest { task: t });
+    }
+    for i in 0..4 {
+        let mut t = apps::he3db_q6(4096);
+        t.name = format!("{}-{i}", t.name);
+        reqs.push(TaskRequest { task: t });
+    }
+    for i in 0..4 {
+        let mut t = apps::helr_iteration();
+        t.name = format!("{}-{i}", t.name);
+        reqs.push(TaskRequest { task: t });
+    }
+    for i in 0..2 {
+        let mut t = apps::vsp_cycle();
+        t.name = format!("{}-{i}", t.name);
+        reqs.push(TaskRequest { task: t });
+    }
+    let n = reqs.len();
+
+    let t0 = Instant::now();
+    let results = coord.serve_batch(reqs);
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut table = Table::new(&["task", "dimm", "ops", "modelled"]);
+    for r in &results {
+        table.row(&[
+            r.name.clone(),
+            r.dimm.to_string(),
+            r.ops.to_string(),
+            fmt_duration(r.modelled_s),
+        ]);
+    }
+    table.print("end-to-end serving results");
+
+    let modelled_total: f64 = results.iter().map(|r| r.modelled_s).sum();
+    println!("\n== summary ==");
+    println!("tasks served        : {n}");
+    println!("wall-clock          : {}", fmt_duration(wall));
+    println!("serving throughput  : {}", fmt_rate(n as f64 / wall));
+    println!(
+        "modelled DIMM time  : {} ({} DIMMs)",
+        fmt_duration(modelled_total),
+        coord.cfg.dimms
+    );
+    println!(
+        "modelled makespan   : {}",
+        fmt_duration(modelled_total / coord.cfg.dimms as f64)
+    );
+    println!(
+        "artifact invocations: {}",
+        coord.metrics.counter("runtime.invocations")
+    );
+    println!("\nmetrics: {}", coord.metrics.to_json().render());
+    assert_eq!(results.len(), n);
+    assert!(
+        coord.metrics.counter("runtime.invocations") as usize >= n,
+        "hot path must execute through PJRT artifacts"
+    );
+    println!("\ne2e_serving OK");
+}

@@ -1,0 +1,81 @@
+//! Lola-MNIST-style encrypted inference (functional, scaled down):
+//! a 2-layer network with square activation evaluated under CKKS on a
+//! synthetic digit, plus the hardware-model estimate of the same workload
+//! at paper scale (the Fig. 11 benchmark).
+//!
+//! Run: `cargo run --release --example mnist_inference`
+
+use apache_fhe::apps;
+use apache_fhe::ckks::ciphertext::{decrypt, encode_plaintext, encrypt};
+use apache_fhe::ckks::encoding::C64;
+use apache_fhe::ckks::keys::CkksKeys;
+use apache_fhe::ckks::{ops, CkksCtx};
+use apache_fhe::hw::DimmConfig;
+use apache_fhe::math::sampler::Rng;
+use apache_fhe::params::{CkksParams, TfheParams};
+use apache_fhe::sched::oplevel::OpShapes;
+use apache_fhe::sched::tasklevel::task_latency;
+
+fn main() {
+    let mut rng = Rng::seeded(7);
+    let ctx = CkksCtx::new(CkksParams::tiny());
+    let keys = CkksKeys::generate(&ctx, &[1, 2, 4, 8], false, &mut rng);
+    let slots = 16usize; // 16-pixel "image" (4×4 synthetic digit)
+
+    // synthetic digit + plaintext model (one dense layer of 16→16,
+    // square activation, readout weights)
+    let image: Vec<f64> = (0..slots).map(|i| ((i * 7) % 5) as f64 * 0.1).collect();
+    let w1: Vec<f64> = (0..slots).map(|i| 0.05 + 0.01 * (i % 3) as f64).collect();
+    let w2: Vec<f64> = (0..slots).map(|i| if i % 2 == 0 { 0.1 } else { -0.1 }).collect();
+
+    // plaintext reference
+    let h: Vec<f64> = image.iter().zip(&w1).map(|(x, w)| x * w).collect();
+    let act: Vec<f64> = h.iter().map(|v| v * v).collect();
+    let expect: f64 = act.iter().zip(&w2).map(|(a, w)| a * w).sum();
+
+    // encrypted evaluation
+    let enc_img: Vec<C64> = image.iter().map(|&v| C64::from_re(v)).collect();
+    let ct = encrypt(&ctx, &keys.sk, &enc_img, ctx.params.scale, ctx.max_level(), &mut rng);
+    let w1p = encode_plaintext(
+        &ctx,
+        &w1.iter().map(|&v| C64::from_re(v)).collect::<Vec<_>>(),
+        ctx.params.scale,
+        ct.level,
+    );
+    let hidden = ops::rescale(&ctx, &ops::mul_plain(&ct, &w1p, ctx.params.scale));
+    let activated = ops::rescale(&ctx, &ops::square(&ctx, &keys, &hidden));
+    let w2p = encode_plaintext(
+        &ctx,
+        &w2.iter().map(|&v| C64::from_re(v)).collect::<Vec<_>>(),
+        ctx.params.scale,
+        activated.level,
+    );
+    let weighted = ops::rescale(&ctx, &ops::mul_plain(&activated, &w2p, ctx.params.scale));
+    // rotate-add reduction over 16 slots
+    let mut acc = weighted;
+    let mut step = 1i64;
+    while (step as usize) < slots {
+        let rot = ops::rotate(&ctx, &keys, &acc, step);
+        acc = ops::add(&acc, &rot);
+        step *= 2;
+    }
+    let score = decrypt(&ctx, &keys.sk, &acc)[0].re;
+    println!("encrypted score = {score:.6}, plaintext = {expect:.6}");
+    assert!((score - expect).abs() < 1e-2, "inference mismatch");
+
+    // paper-scale hardware estimate (Fig. 11 input)
+    let shapes = OpShapes {
+        ckks: CkksParams::paper_shape(),
+        tfhe: TfheParams::paper_shape(),
+    };
+    let cfg = DimmConfig::paper();
+    for enc_w in [false, true] {
+        let t = apps::lola_mnist(enc_w);
+        println!(
+            "modelled Lola-MNIST ({}) on 1 APACHE DIMM: {:.3} ms",
+            if enc_w { "encrypted weights" } else { "plain weights" },
+            task_latency(&t, &shapes, &cfg) * 1e3
+        );
+    }
+    println!("mnist_inference OK");
+}

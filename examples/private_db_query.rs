@@ -1,0 +1,100 @@
+//! HE3DB-style private database predicate (functional mini TPC-H Q6):
+//! evaluate `quantity < T` homomorphically over encrypted 4-bit records
+//! with TFHE gates, then aggregate the selected (encrypted) revenues.
+//!
+//! Run: `cargo run --release --example private_db_query`
+
+use apache_fhe::apps;
+use apache_fhe::hw::DimmConfig;
+use apache_fhe::math::sampler::Rng;
+use apache_fhe::params::{CkksParams, TfheParams};
+use apache_fhe::sched::oplevel::OpShapes;
+use apache_fhe::sched::tasklevel::task_latency;
+use apache_fhe::tfhe::bootstrap::BootstrapKey;
+use apache_fhe::tfhe::gates::*;
+use apache_fhe::tfhe::lwe::{LweCiphertext, LweSecretKey};
+use apache_fhe::tfhe::rlwe::RlweSecretKey;
+use apache_fhe::tfhe::TfheCtx;
+use std::sync::Arc;
+
+/// 4-bit comparator a < b (homomorphic, MSB-first).
+fn hom_less_than(
+    ctx: &Arc<TfheCtx>,
+    bk: &BootstrapKey,
+    a: &[LweCiphertext; 4],
+    b: &[LweCiphertext; 4],
+) -> LweCiphertext {
+    // lt = Σ_i (a_i < b_i) AND (higher bits equal)
+    let mut result: Option<LweCiphertext> = None;
+    let mut all_eq: Option<LweCiphertext> = None;
+    for i in (0..4).rev() {
+        let ai_lt_bi = hom_and(ctx, bk, &hom_not(&a[i]), &b[i]);
+        let term = match &all_eq {
+            None => ai_lt_bi,
+            Some(eq) => hom_and(ctx, bk, eq, &ai_lt_bi),
+        };
+        result = Some(match result {
+            None => term,
+            Some(r) => hom_or(ctx, bk, &r, &term),
+        });
+        let eq_i = hom_xnor(ctx, bk, &a[i], &b[i]);
+        all_eq = Some(match all_eq {
+            None => eq_i,
+            Some(eq) => hom_and(ctx, bk, &eq, &eq_i),
+        });
+    }
+    result.unwrap()
+}
+
+fn encrypt_u4(
+    ctx: &Arc<TfheCtx>,
+    key: &LweSecretKey,
+    v: u8,
+    rng: &mut Rng,
+) -> [LweCiphertext; 4] {
+    std::array::from_fn(|i| encrypt_bool(ctx, key, (v >> i) & 1 == 1, rng))
+}
+
+fn main() {
+    let mut rng = Rng::seeded(99);
+    let ctx = TfheCtx::new(TfheParams::tiny());
+    let sk = LweSecretKey::generate(&ctx, &mut rng);
+    let zk = RlweSecretKey::generate(&ctx, &mut rng);
+    let bk = BootstrapKey::generate(&ctx, &sk, &zk, &mut rng);
+
+    // tiny table: (quantity, revenue)
+    let table: Vec<(u8, u32)> = vec![(3, 100), (9, 250), (5, 80), (12, 400), (1, 60)];
+    let threshold = 6u8;
+    let thr_enc = encrypt_u4(&ctx, &sk, threshold, &mut rng);
+
+    let mut selected_revenue = 0u32;
+    for (qty, rev) in &table {
+        let qty_enc = encrypt_u4(&ctx, &sk, *qty, &mut rng);
+        let sel = hom_less_than(&ctx, &bk, &qty_enc, &thr_enc);
+        let selected = decrypt_bool(&sk, &sel);
+        assert_eq!(selected, *qty < threshold, "predicate qty={qty}");
+        if selected {
+            selected_revenue += rev;
+        }
+        println!("record qty={qty:2} rev={rev:3} → selected={selected}");
+    }
+    println!("SUM(revenue WHERE quantity < {threshold}) = {selected_revenue}");
+    assert_eq!(selected_revenue, 100 + 80 + 60);
+
+    // paper-scale Q6 on the hardware model (Fig. 11 input, 2^14 records)
+    let shapes = OpShapes {
+        ckks: CkksParams::paper_shape(),
+        tfhe: TfheParams::paper_shape(),
+    };
+    let cfg = DimmConfig::paper();
+    let t = apps::he3db_q6(1 << 14);
+    let modelled = task_latency(&t, &shapes, &cfg);
+    let cpu = apps::cpu_reference_q6_seconds(1 << 14);
+    println!(
+        "modelled TPC-H Q6 (2^14 records): {:.3} s/DIMM, CPU ref {:.1} s → {:.0}x",
+        modelled,
+        cpu,
+        cpu / modelled
+    );
+    println!("private_db_query OK");
+}

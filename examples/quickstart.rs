@@ -1,0 +1,54 @@
+//! Quickstart: the multi-scheme FHE library in ~60 lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use apache_fhe::ckks::ciphertext::{decrypt, encrypt};
+use apache_fhe::ckks::encoding::C64;
+use apache_fhe::ckks::keys::CkksKeys;
+use apache_fhe::ckks::{ops, CkksCtx};
+use apache_fhe::math::sampler::Rng;
+use apache_fhe::params::{CkksParams, TfheParams};
+use apache_fhe::tfhe::bootstrap::BootstrapKey;
+use apache_fhe::tfhe::gates::{decrypt_bool, encrypt_bool, hom_and, hom_xor};
+use apache_fhe::tfhe::lwe::LweSecretKey;
+use apache_fhe::tfhe::rlwe::RlweSecretKey;
+use apache_fhe::tfhe::TfheCtx;
+
+fn main() {
+    let mut rng = Rng::seeded(2024);
+
+    // ---- CKKS lane: approximate arithmetic over complex slots ----
+    let ctx = CkksCtx::new(CkksParams::tiny());
+    let keys = CkksKeys::generate(&ctx, &[1], false, &mut rng);
+    let slots = ctx.params.num_slots();
+    let xs: Vec<C64> = (0..slots).map(|i| C64::from_re(i as f64 / slots as f64)).collect();
+    let ct = encrypt(&ctx, &keys.sk, &xs, ctx.params.scale, ctx.max_level(), &mut rng);
+    // (x² rotated by one slot)
+    let sq = ops::rescale(&ctx, &ops::square(&ctx, &keys, &ct));
+    let rot = ops::rotate(&ctx, &keys, &sq, 1);
+    let out = decrypt(&ctx, &keys.sk, &rot);
+    let expect = ((1 % slots) as f64 / slots as f64).powi(2);
+    println!(
+        "CKKS: rot(x², 1)[0] = {:.6} (expect {:.6})",
+        out[0].re, expect
+    );
+    assert!((out[0].re - expect).abs() < 1e-2);
+
+    // ---- TFHE lane: exact boolean logic with bootstrapped gates ----
+    let tctx = TfheCtx::new(TfheParams::tiny());
+    let sk = LweSecretKey::generate(&tctx, &mut rng);
+    let zk = RlweSecretKey::generate(&tctx, &mut rng);
+    let bk = BootstrapKey::generate(&tctx, &sk, &zk, &mut rng);
+    let a = encrypt_bool(&tctx, &sk, true, &mut rng);
+    let b = encrypt_bool(&tctx, &sk, false, &mut rng);
+    let and = hom_and(&tctx, &bk, &a, &b);
+    let xor = hom_xor(&tctx, &bk, &a, &b);
+    println!(
+        "TFHE: true AND false = {}, true XOR false = {}",
+        decrypt_bool(&sk, &and),
+        decrypt_bool(&sk, &xor)
+    );
+    assert!(!decrypt_bool(&sk, &and));
+    assert!(decrypt_bool(&sk, &xor));
+    println!("quickstart OK");
+}

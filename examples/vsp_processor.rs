@@ -1,0 +1,76 @@
+//! VSP-style homomorphic datapath slice: a 4-bit ripple-carry adder built
+//! from bootstrapped gates — the execute stage of the five-stage TFHE
+//! processor [48] — plus a circuit-bootstrapped CMUX "RAM" word select.
+//!
+//! Run: `cargo run --release --example vsp_processor`
+
+use apache_fhe::math::sampler::Rng;
+use apache_fhe::params::TfheParams;
+use apache_fhe::tfhe::circuit_bootstrap::{circuit_bootstrap, CircuitBootstrapKey};
+use apache_fhe::tfhe::gates::*;
+use apache_fhe::tfhe::lwe::{LweCiphertext, LweSecretKey};
+use apache_fhe::tfhe::rgsw::cmux;
+use apache_fhe::tfhe::rlwe::{RlweCiphertext, RlweSecretKey};
+use apache_fhe::tfhe::TfheCtx;
+use std::sync::Arc;
+
+fn full_adder(
+    ctx: &Arc<TfheCtx>,
+    bk: &apache_fhe::tfhe::bootstrap::BootstrapKey,
+    a: &LweCiphertext,
+    b: &LweCiphertext,
+    cin: &LweCiphertext,
+) -> (LweCiphertext, LweCiphertext) {
+    let axb = hom_xor(ctx, bk, a, b);
+    let sum = hom_xor(ctx, bk, &axb, cin);
+    let c1 = hom_and(ctx, bk, a, b);
+    let c2 = hom_and(ctx, bk, &axb, cin);
+    let cout = hom_or(ctx, bk, &c1, &c2);
+    (sum, cout)
+}
+
+fn main() {
+    let mut rng = Rng::seeded(41);
+    let ctx = TfheCtx::new(TfheParams::tiny());
+    let sk = LweSecretKey::generate(&ctx, &mut rng);
+    let zk = RlweSecretKey::generate(&ctx, &mut rng);
+    let cbk = CircuitBootstrapKey::generate(&ctx, &sk, &zk, &mut rng);
+
+    // --- execute stage: 4-bit adder, 5 + 11 = 16 (mod 16 → 0 with carry)
+    let (x, y) = (5u8, 11u8);
+    let enc = |v: u8, rng: &mut Rng| -> Vec<LweCiphertext> {
+        (0..4).map(|i| encrypt_bool(&ctx, &sk, (v >> i) & 1 == 1, rng)).collect()
+    };
+    let xa = enc(x, &mut rng);
+    let yb = enc(y, &mut rng);
+    let mut carry = encrypt_bool(&ctx, &sk, false, &mut rng);
+    let mut sum_bits = Vec::new();
+    for i in 0..4 {
+        let (s, c) = full_adder(&ctx, &cbk.bk, &xa[i], &yb[i], &carry);
+        sum_bits.push(s);
+        carry = c;
+    }
+    let sum: u8 = sum_bits
+        .iter()
+        .enumerate()
+        .map(|(i, b)| (decrypt_bool(&sk, b) as u8) << i)
+        .sum();
+    let cout = decrypt_bool(&sk, &carry);
+    println!("ALU: {x} + {y} = {sum} (carry {cout})");
+    assert_eq!(sum, (x + y) % 16);
+    assert_eq!(cout, x as u32 + (y as u32) >= 16);
+
+    // --- memory stage: CMUX word select with a circuit-bootstrapped bit
+    let t = ctx.params.plaintext_space;
+    let delta = ctx.params.delta();
+    let word = |v: u64| -> Vec<u64> { vec![v * delta; ctx.n_poly()] };
+    let ram0 = RlweCiphertext::encrypt_phase(&ctx, &zk, &word(1), ctx.params.rlwe_sigma, &mut rng);
+    let ram1 = RlweCiphertext::encrypt_phase(&ctx, &zk, &word(3), ctx.params.rlwe_sigma, &mut rng);
+    let addr_bit = encrypt_bool(&ctx, &sk, true, &mut rng);
+    let addr_gsw = circuit_bootstrap(&ctx, &cbk, &addr_bit);
+    let fetched = cmux(&ctx, &addr_gsw, &ram0, &ram1);
+    let value = fetched.decrypt(&ctx, &zk, delta, t)[0];
+    println!("RAM[addr=1] = {value}");
+    assert_eq!(value, 3);
+    println!("vsp_processor OK");
+}

@@ -1,0 +1,104 @@
+"""AOT lowering: JAX/Pallas graphs → HLO *text* artifacts + manifest.
+
+HLO text (not `.serialize()`): the image's xla_extension 0.5.1 rejects
+jax≥0.5 protos with 64-bit instruction ids; the text parser reassigns ids
+(see /opt/xla-example/README.md). Lowered with return_tuple=True — the
+Rust side unwraps with `to_tuple1()`.
+
+Run via `make artifacts` (no-op when inputs are unchanged). Never imported
+at runtime.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.common import ntt_prime
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def u64(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint64)
+
+
+def artifact_registry():
+    """Every (name, fn, arg_shapes) pair to lower. Shapes follow the
+    functional TFHE parameter sets (rust params.rs): N ∈ {256, 1024},
+    l = 7 gadget levels → 14 RGSW rows."""
+    registry = []
+    for n in (256, 1024):
+        q = ntt_prime(31, 2 * n)
+        rows = 14
+        # twiddle tables are runtime inputs (see kernels/ntt.py docstring)
+        tw = u64((n,))
+        ninv = u64((1,))
+        registry.append(
+            (f"ntt_fwd_n{n}", model.make_ntt_batch(n, q), [u64((rows, n)), tw], q)
+        )
+        registry.append(
+            (f"ntt_inv_n{n}", model.make_intt_batch(n, q), [u64((2, n)), tw, ninv], q)
+        )
+        registry.append(
+            (
+                f"external_product_n{n}",
+                model.make_external_product(n, q, rows),
+                [u64((rows, n)), u64((rows, n)), u64((rows, n)), tw, tw, ninv],
+                q,
+            )
+        )
+        registry.append(
+            (
+                f"routine1_n{n}",
+                model.make_routine1(n, q),
+                [u64((rows, n)), u64((rows, n)), u64((rows, n)), tw],
+                q,
+            )
+        )
+        registry.append(
+            (
+                f"routine2_n{n}",
+                model.make_routine2(q),
+                [u64((rows, n)), u64((rows, n)), u64((rows, n))],
+                q,
+            )
+        )
+    return registry
+
+
+def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest_lines = []
+    for name, fn, shapes, q in artifact_registry():
+        lowered = jax.jit(fn).lower(*shapes)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        shape_desc = ";".join(
+            "x".join(map(str, s.shape)) for s in shapes
+        )
+        manifest_lines.append(f"{name} {name}.hlo.txt {len(shapes)} {shape_desc} {q}")
+        print(f"lowered {name}: {len(text)} chars, q={q}")
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest with {len(manifest_lines)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

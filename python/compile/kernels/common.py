@@ -1,0 +1,98 @@
+"""Shared number theory for the build-time kernels.
+
+Mirrors rust/src/math/modops.rs exactly (same prime search, same primitive
+root, same twiddle layout) so AOT artifacts and the Rust functional library
+agree bit-for-bit.
+"""
+
+from functools import lru_cache
+
+
+def is_prime(n: int) -> bool:
+    if n < 2:
+        return False
+    for p in [2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37]:
+        if n == p:
+            return True
+        if n % p == 0:
+            return False
+    d, s = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        s += 1
+    for a in [2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37]:
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(s - 1):
+            x = x * x % n
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+def ntt_prime(bits: int, two_n: int) -> int:
+    """Largest prime p ≡ 1 (mod 2N) with exactly `bits` bits (same scan
+    order as rust ntt_primes)."""
+    top = 1 << bits
+    cand = (top - 1) // two_n * two_n + 1
+    while cand > (1 << (bits - 1)):
+        if is_prime(cand):
+            return cand
+        cand -= two_n
+    raise ValueError("no prime found")
+
+
+def primitive_root(q: int) -> int:
+    factors = []
+    m = q - 1
+    f = 2
+    while f * f <= m:
+        if m % f == 0:
+            factors.append(f)
+            while m % f == 0:
+                m //= f
+        f += 1
+    if m > 1:
+        factors.append(m)
+    g = 2
+    while True:
+        if all(pow(g, (q - 1) // p, q) != 1 for p in factors):
+            return g
+        g += 1
+
+
+def root_of_unity(two_n: int, q: int) -> int:
+    assert (q - 1) % two_n == 0
+    g = primitive_root(q)
+    psi = pow(g, (q - 1) // two_n, q)
+    assert pow(psi, two_n, q) == 1 and pow(psi, two_n // 2, q) != 1
+    return psi
+
+
+def bit_reverse(x: int, bits: int) -> int:
+    out = 0
+    for _ in range(bits):
+        out = (out << 1) | (x & 1)
+        x >>= 1
+    return out
+
+
+@lru_cache(maxsize=None)
+def twiddles(n: int, q: int):
+    """(w, wi, n_inv): forward/inverse twiddle tables in the bit-reversed CT
+    layout used by rust NttTable."""
+    psi = root_of_unity(2 * n, q)
+    psi_inv = pow(psi, q - 2, q)
+    bits = n.bit_length() - 1
+    pows = [1] * n
+    pows_i = [1] * n
+    for i in range(1, n):
+        pows[i] = pows[i - 1] * psi % q
+        pows_i[i] = pows_i[i - 1] * psi_inv % q
+    w = [pows[bit_reverse(i, bits)] for i in range(n)]
+    wi = [pows_i[bit_reverse(i, bits)] for i in range(n)]
+    n_inv = pow(n, q - 2, q)
+    return w, wi, n_inv

@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: batched negacyclic NTT/INTT.
+
+The paper's (I)NTT functional unit (§IV-B(2)) as a Pallas kernel. The
+stage loop is unrolled at trace time (N is static for an AOT artifact);
+each stage is one fully-vectorized butterfly pass over the whole batch —
+the software rendering of a 2·lanes-wide pipelined butterfly array.
+
+Twiddle tables are *runtime inputs*, not baked constants: xla_extension
+0.5.1 (the Rust-side PJRT) mis-parses large u64 dense constants in HLO
+text, and the Rust coordinator owns bit-identical tables anyway
+(rust/src/math/ntt.rs — same prime scan, same primitive root, same
+bit-reversed layout).
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls (see DESIGN.md). On a real TPU the same structure tiles
+(batch × N) blocks into VMEM with the twiddle vector resident — the
+analogue of the paper's register-file-fed NTT FU.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import twiddles
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _ntt_body(x, w, q, n):
+    """One full forward NTT over x: (B, N) uint64, natural → bit-rev."""
+    m = 1
+    t = n
+    while m < n:
+        t //= 2
+        # view as (B, m, 2, t): u = [..0..], v = [..1..] * w[m+i]
+        xv = x.reshape(x.shape[0], m, 2, t)
+        u = xv[:, :, 0, :]
+        w_stage = w[m : 2 * m].reshape(1, m, 1)  # noqa: E203
+        v = (xv[:, :, 1, :] * w_stage) % q
+        x = jnp.stack(((u + v) % q, (u + q - v) % q), axis=2).reshape(
+            x.shape[0], n
+        )
+        m *= 2
+    return x
+
+
+def _intt_body(x, wi, n_inv, q, n):
+    """Inverse NTT: bit-rev → natural, scaled by N^{-1}."""
+    t = 1
+    m = n
+    while m > 1:
+        h = m // 2
+        xv = x.reshape(x.shape[0], h, 2, t)
+        u = xv[:, :, 0, :]
+        v = xv[:, :, 1, :]
+        w_stage = wi[h : 2 * h].reshape(1, h, 1)  # noqa: E203
+        lo = (u + v) % q
+        hi = ((u + q - v) % q * w_stage) % q
+        x = jnp.stack((lo, hi), axis=2).reshape(x.shape[0], n)
+        t *= 2
+        m = h
+    return (x * n_inv) % q
+
+
+def ntt_fwd(x, w, q: int):
+    """Forward NTT Pallas call: x (B, N), w (N,) twiddles."""
+    n = x.shape[-1]
+
+    def kernel(x_ref, w_ref, o_ref):
+        o_ref[...] = _ntt_body(x_ref[...], w_ref[...], q, n)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.uint64),
+        interpret=True,
+    )(x, w)
+
+
+def ntt_inv(x, wi, n_inv_arr, q: int):
+    """Inverse NTT Pallas call: x (B, N), wi (N,), n_inv_arr (1,)."""
+    n = x.shape[-1]
+
+    def kernel(x_ref, w_ref, ninv_ref, o_ref):
+        o_ref[...] = _intt_body(x_ref[...], w_ref[...], ninv_ref[0], q, n)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.uint64),
+        interpret=True,
+    )(x, wi, n_inv_arr)
+
+
+def ntt_fwd_kernel(n: int, q: int):
+    """Test convenience: closure with concrete tables (interpret path)."""
+    w, _, _ = twiddles(n, q)
+    w_arr = jnp.array(w, dtype=jnp.uint64)
+    return lambda x: ntt_fwd(x, w_arr, q)
+
+
+def ntt_inv_kernel(n: int, q: int):
+    _, wi, n_inv = twiddles(n, q)
+    wi_arr = jnp.array(wi, dtype=jnp.uint64)
+    ninv_arr = jnp.array([n_inv], dtype=jnp.uint64)
+    return lambda x: ntt_inv(x, wi_arr, ninv_arr, q)

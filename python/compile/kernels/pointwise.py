@@ -1,0 +1,62 @@
+"""L1 Pallas kernels: the MMult–MAdd pipeline routine (R2 of Fig. 5).
+
+Fused modular multiply-accumulate over u64 residues < 2^31 (products fit
+u64 — the paper's 32-bit FU mode; 64-bit mode is two fused lanes, modelled
+in hw::fu)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def mmult_madd_kernel(q: int):
+    """(a, b, c) → (a ∘ b + c) mod q, any equal shapes."""
+
+    def kernel(a_ref, b_ref, c_ref, o_ref):
+        # q stays a Python int: Pallas forbids captured array constants,
+        # and weak-typed scalars fold into the ops.
+        prod = (a_ref[...] * b_ref[...]) % q
+        o_ref[...] = (prod + c_ref[...]) % q
+
+    def call(a, b, c):
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct(a.shape, jnp.uint64),
+            interpret=True,
+        )(a, b, c)
+
+    return call
+
+
+def fma_reduce_kernel(q: int):
+    """(digits (R, N), rows (R, N)) → Σ_j digits[j] ∘ rows[j] mod q —
+    the MAdd accumulation tree at the end of the external product."""
+    def kernel(d_ref, r_ref, o_ref):
+        prod = (d_ref[...] * r_ref[...]) % q
+        # log-depth pairwise reduction keeps every partial < q
+        acc = prod
+        rows = acc.shape[0]
+        while rows > 1:
+            half = rows // 2
+            lo = acc[:half]
+            hi = acc[half : 2 * half]  # noqa: E203
+            merged = (lo + hi) % q
+            if rows % 2 == 1:
+                merged = jnp.concatenate([merged, acc[2 * half :]], axis=0)  # noqa: E203
+                rows = half + 1
+            else:
+                rows = half
+            acc = merged
+        o_ref[...] = acc[0]
+
+    def call(digits, rows):
+        n = digits.shape[1]
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.uint64),
+            interpret=True,
+        )(digits, rows)
+
+    return call

@@ -1,0 +1,48 @@
+"""Pure-numpy correctness oracles for the Pallas kernels.
+
+O(N²) schoolbook negacyclic arithmetic — slow, obviously correct, used by
+pytest to validate every kernel and graph before the AOT artifacts ship to
+the Rust runtime.
+"""
+
+import numpy as np
+
+
+def negacyclic_mul_naive(a, b, q: int):
+    """Schoolbook multiplication in Z_q[X]/(X^N+1). a, b uint64 arrays."""
+    n = len(a)
+    out = np.zeros(n, dtype=np.uint64)
+    for i in range(n):
+        ai = int(a[i])
+        if ai == 0:
+            continue
+        for j in range(n):
+            p = ai * int(b[j]) % q
+            k = i + j
+            if k < n:
+                out[k] = np.uint64((int(out[k]) + p) % q)
+            else:
+                out[k - n] = np.uint64((int(out[k - n]) - p) % q)
+    return out
+
+
+def pointwise_mod(a, b, q: int):
+    """(a ∘ b) mod q for values < 2^32 (products fit u64)."""
+    return (a.astype(np.uint64) * b.astype(np.uint64)) % np.uint64(q)
+
+
+def fma_mod(a, b, c, q: int):
+    """(a ∘ b + c) mod q."""
+    return (pointwise_mod(a, b, q) + c.astype(np.uint64)) % np.uint64(q)
+
+
+def external_product_ref(digits, rows_b, rows_a, q: int):
+    """Reference external-product accumulation in coefficient domain:
+    out_b = Σ_j digits[j] ⊛ rows_b[j] (negacyclic), out_a likewise."""
+    n = digits.shape[1]
+    out_b = np.zeros(n, dtype=np.uint64)
+    out_a = np.zeros(n, dtype=np.uint64)
+    for j in range(digits.shape[0]):
+        out_b = (out_b + negacyclic_mul_naive(digits[j], rows_b[j], q)) % np.uint64(q)
+        out_a = (out_a + negacyclic_mul_naive(digits[j], rows_a[j], q)) % np.uint64(q)
+    return out_b, out_a

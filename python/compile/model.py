@@ -1,0 +1,84 @@
+"""L2 JAX graphs: the paper's operator dataflows, composed from the L1
+Pallas kernels so they lower into a single HLO module per operator.
+
+Graphs mirror the Fig. 9 CMUX dataflow and the Fig. 4 pipeline routines:
+  * routine1 — (I)NTT → MMult → MAdd (pipeline R1)
+  * routine2 — MMult → MAdd (pipeline R2, NTT-independent)
+  * external_product — decomposed digits × RGSW rows → RLWE pair
+    (the blind-rotation/CMUX hot loop; gadget decomposition is bit-twiddling
+    done by the Rust coordinator, the heavy polynomial arithmetic runs here)
+
+Python never runs at request time: `aot.py` lowers these once to HLO text,
+and the Rust runtime executes the artifacts via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ntt import ntt_fwd, ntt_fwd_kernel, ntt_inv, ntt_inv_kernel
+from .kernels.pointwise import mmult_madd_kernel
+
+jax.config.update("jax_enable_x64", True)
+
+
+def make_routine1(n: int, q: int):
+    """R1: out = NTT(x) ∘ key + acc (all (B, N) u64, eval-domain key/acc).
+    `w` is the forward twiddle table, supplied by the Rust runtime."""
+    fma = mmult_madd_kernel(q)
+
+    def routine1(x, key, acc, w):
+        return (fma(ntt_fwd(x, w, q), key, acc),)
+
+    return routine1
+
+
+def make_routine2(q: int):
+    """R2: out = a ∘ b + c — HAdd/PMult traffic that must not stall R1."""
+    fma = mmult_madd_kernel(q)
+
+    def routine2(a, b, c):
+        return (fma(a, b, c),)
+
+    return routine2
+
+
+def make_external_product(n: int, q: int, rows: int):
+    """Full external-product accumulation (Fig. 9):
+
+    inputs:
+      digits  (rows, N) u64 — gadget-decomposed input RLWE, coeff domain
+      rows_b  (rows, N) u64 — RGSW b-rows, eval domain
+      rows_a  (rows, N) u64 — RGSW a-rows, eval domain
+    output: (2, N) coeff-domain RLWE accumulation (b, a).
+    """
+    qq = jnp.uint64(q)
+
+    def external_product(digits, rows_b, rows_a, w, wi, n_inv_arr):
+        d_hat = ntt_fwd(digits, w, q)  # (rows, N) eval
+        prod_b = (d_hat * rows_b) % qq
+        prod_a = (d_hat * rows_a) % qq
+        acc_b = prod_b[0]
+        acc_a = prod_a[0]
+        for j in range(1, rows):
+            acc_b = (acc_b + prod_b[j]) % qq
+            acc_a = (acc_a + prod_a[j]) % qq
+        out = ntt_inv(jnp.stack([acc_b, acc_a]), wi, n_inv_arr, q)
+        return (out,)
+
+    return external_product
+
+
+def make_ntt_batch(n: int, q: int):
+    """Standalone batched forward NTT (for cross-validation vs Rust)."""
+
+    def ntt_batch(x, w):
+        return (ntt_fwd(x, w, q),)
+
+    return ntt_batch
+
+
+def make_intt_batch(n: int, q: int):
+    def intt_batch(x, wi, n_inv_arr):
+        return (ntt_inv(x, wi, n_inv_arr, q),)
+
+    return intt_batch

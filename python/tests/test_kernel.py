@@ -1,0 +1,96 @@
+"""L1 kernel correctness: Pallas vs the numpy schoolbook oracle.
+
+Hypothesis sweeps ring sizes and values; every kernel output is compared
+exactly (integer arithmetic — no tolerance)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.common import ntt_prime, twiddles, root_of_unity
+from compile.kernels.ntt import ntt_fwd_kernel, ntt_inv_kernel
+from compile.kernels.pointwise import mmult_madd_kernel, fma_reduce_kernel
+
+
+def rand_poly(rng, n, q, batch=None):
+    shape = (batch, n) if batch else (n,)
+    return rng.integers(0, q, size=shape, dtype=np.uint64)
+
+
+@pytest.mark.parametrize("logn", [3, 5, 8])
+def test_ntt_roundtrip(logn):
+    n = 1 << logn
+    q = ntt_prime(31, 2 * n)
+    fwd = ntt_fwd_kernel(n, q)
+    inv = ntt_inv_kernel(n, q)
+    rng = np.random.default_rng(1)
+    x = rand_poly(rng, n, q, batch=4)
+    back = np.asarray(inv(fwd(x)))
+    np.testing.assert_array_equal(back, x)
+
+
+@pytest.mark.parametrize("logn", [3, 5, 7])
+def test_ntt_convolution_matches_schoolbook(logn):
+    n = 1 << logn
+    q = ntt_prime(31, 2 * n)
+    fwd = ntt_fwd_kernel(n, q)
+    inv = ntt_inv_kernel(n, q)
+    rng = np.random.default_rng(2)
+    a = rand_poly(rng, n, q, batch=1)
+    b = rand_poly(rng, n, q, batch=1)
+    prod_eval = (np.asarray(fwd(a)) * np.asarray(fwd(b))) % q
+    got = np.asarray(inv(prod_eval))[0]
+    expect = ref.negacyclic_mul_naive(a[0], b[0], q)
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_twiddle_tables_match_rust_layout():
+    # psi^N = -1 and table[1] = psi^bitrev(1)
+    n = 64
+    q = ntt_prime(31, 2 * n)
+    psi = root_of_unity(2 * n, q)
+    assert pow(psi, n, q) == q - 1
+    w, wi, n_inv = twiddles(n, q)
+    assert w[0] == 1 and wi[0] == 1
+    assert n_inv * n % q == 1
+    assert w[1] == pow(psi, 32, q)  # bitrev(1) over 6 bits = 32
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    logn=st.integers(min_value=2, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_mmult_madd_matches_numpy(logn, seed):
+    n = 1 << logn
+    q = ntt_prime(31, 2 * n)
+    fma = mmult_madd_kernel(q)
+    rng = np.random.default_rng(seed)
+    a, b, c = (rand_poly(rng, n, q, batch=3) for _ in range(3))
+    got = np.asarray(fma(a, b, c))
+    np.testing.assert_array_equal(got, ref.fma_mod(a, b, c, q))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_fma_reduce_matches_numpy(rows, seed):
+    n = 32
+    q = ntt_prime(31, 2 * n)
+    red = fma_reduce_kernel(q)
+    rng = np.random.default_rng(seed)
+    digits = rand_poly(rng, n, q, batch=rows)
+    rows_t = rand_poly(rng, n, q, batch=rows)
+    got = np.asarray(red(digits, rows_t))
+    expect = ref.pointwise_mod(digits, rows_t, q).sum(axis=0, dtype=object) % q
+    np.testing.assert_array_equal(got, expect.astype(np.uint64))
+
+
+def test_prime_matches_rust_convention():
+    # rust TfheParams::tiny / functional use ntt_primes(31, 2N, 1)[0]
+    assert ntt_prime(31, 512) % 512 == 1
+    assert ntt_prime(31, 2048) % 2048 == 1
+    assert ntt_prime(31, 512) < 2**31

@@ -1,0 +1,69 @@
+"""L2 graph correctness: composite operator dataflows vs the oracle."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.common import ntt_prime, twiddles
+from compile.kernels.ntt import ntt_fwd_kernel
+
+
+def tables(n, q):
+    w, wi, n_inv = twiddles(n, q)
+    return (
+        np.array(w, dtype=np.uint64),
+        np.array(wi, dtype=np.uint64),
+        np.array([n_inv], dtype=np.uint64),
+    )
+
+
+@pytest.mark.parametrize("n,rows", [(32, 4), (64, 14)])
+def test_external_product_graph_matches_reference(n, rows):
+    q = ntt_prime(31, 2 * n)
+    ext = model.make_external_product(n, q, rows)
+    rng = np.random.default_rng(7)
+    digits = rng.integers(0, 256, size=(rows, n), dtype=np.uint64)  # small digits
+    rows_b_coeff = rng.integers(0, q, size=(rows, n), dtype=np.uint64)
+    rows_a_coeff = rng.integers(0, q, size=(rows, n), dtype=np.uint64)
+    fwd = ntt_fwd_kernel(n, q)
+    rows_b = np.asarray(fwd(rows_b_coeff))
+    rows_a = np.asarray(fwd(rows_a_coeff))
+    w, wi, ninv = tables(n, q)
+    (got,) = ext(digits, rows_b, rows_a, w, wi, ninv)
+    got = np.asarray(got)
+    exp_b, exp_a = ref.external_product_ref(digits, rows_b_coeff, rows_a_coeff, q)
+    np.testing.assert_array_equal(got[0], exp_b)
+    np.testing.assert_array_equal(got[1], exp_a)
+
+
+def test_routine1_is_ntt_then_fma():
+    n, q = 64, ntt_prime(31, 128)
+    r1 = model.make_routine1(n, q)
+    rng = np.random.default_rng(8)
+    x = rng.integers(0, q, size=(3, n), dtype=np.uint64)
+    key = rng.integers(0, q, size=(3, n), dtype=np.uint64)
+    acc = rng.integers(0, q, size=(3, n), dtype=np.uint64)
+    w, _, _ = tables(n, q)
+    (got,) = r1(x, key, acc, w)
+    fwd = ntt_fwd_kernel(n, q)
+    expect = (np.asarray(fwd(x)) * key % q + acc) % q
+    np.testing.assert_array_equal(np.asarray(got), expect)
+
+
+def test_routine2_shapes_and_values():
+    q = ntt_prime(31, 128)
+    r2 = model.make_routine2(q)
+    rng = np.random.default_rng(9)
+    a, b, c = (rng.integers(0, q, size=(2, 64), dtype=np.uint64) for _ in range(3))
+    (got,) = r2(a, b, c)
+    np.testing.assert_array_equal(np.asarray(got), ref.fma_mod(a, b, c, q))
+
+
+def test_aot_registry_covers_both_rings():
+    from compile.aot import artifact_registry
+
+    names = [r[0] for r in artifact_registry()]
+    for n in (256, 1024):
+        for kind in ("ntt_fwd", "ntt_inv", "external_product", "routine1", "routine2"):
+            assert f"{kind}_n{n}" in names

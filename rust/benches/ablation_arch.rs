@@ -1,0 +1,65 @@
+//! Ablations over the three APACHE design choices (DESIGN.md §ablations):
+//! configurable interconnect (R2), dual-32-bit FUs, in-memory KS — plus
+//! DIMM scaling 1/2/4/8 and group-scheduling on/off.
+mod common;
+use apache_fhe::apps;
+use apache_fhe::hw::DimmConfig;
+use apache_fhe::sched::oplevel::{batch_factor, profile_op, FheOp};
+use apache_fhe::sched::tasklevel::{schedule_tasks, Task};
+use apache_fhe::util::benchkit::Table;
+
+fn main() {
+    let shapes = common::paper_shapes();
+    let base = DimmConfig::paper();
+    let variants: Vec<(&str, DimmConfig)> = vec![
+        ("full APACHE", base.clone()),
+        ("no routine-2", { let mut c = base.clone(); c.routine2 = false; c }),
+        ("no dual-32", { let mut c = base.clone(); c.dual32 = false; c }),
+        ("no IMC-KS", { let mut c = base.clone(); c.imc_ks = false; c }),
+        ("none (fixed)", { let mut c = base.clone(); c.routine2 = false; c.dual32 = false; c.imc_ks = false; c }),
+    ];
+    let ops = [FheOp::CMult, FheOp::HomGate, FheOp::CircuitBootstrap, FheOp::PMult];
+    let mut t = Table::new(&["variant", "CMult", "HomGate", "CircuitBoot", "PMult"]);
+    let full: Vec<f64> = ops.iter().map(|&op| profile_op(op, &shapes, &base).latency_s(&base)).collect();
+    for (name, cfg) in &variants {
+        let cells: Vec<String> = ops
+            .iter()
+            .enumerate()
+            .map(|(i, &op)| {
+                let lat = profile_op(op, &shapes, cfg).latency_s(cfg);
+                format!("{:.2}x", lat / full[i])
+            })
+            .collect();
+        t.row(&[name.to_string(), cells[0].clone(), cells[1].clone(), cells[2].clone(), cells[3].clone()]);
+    }
+    t.print("ablation: latency vs full APACHE (1.00x = full)");
+
+    // every ablation must cost something on at least one operator
+    for (name, cfg) in &variants[1..] {
+        let worse = ops.iter().enumerate().any(|(i, &op)| {
+            profile_op(op, &shapes, cfg).latency_s(cfg) > full[i] * 1.005
+        });
+        assert!(worse, "{name} should hurt at least one op");
+    }
+
+    // DIMM scaling on a mixed batch
+    let batch: Vec<Task> = (0..16).map(|i| if i % 2 == 0 { apps::lola_mnist(false) } else { apps::he3db_q6(4096) }).collect();
+    let mut s = Table::new(&["DIMMs", "makespan (s)", "scaling"]);
+    let base_make = schedule_tasks(&batch, &shapes, &base, 1, 30e9).makespan_s;
+    for d in [1usize, 2, 4, 8] {
+        let m = schedule_tasks(&batch, &shapes, &base, d, 30e9).makespan_s;
+        s.row(&[d.to_string(), format!("{m:.3}"), format!("{:.2}x", base_make / m)]);
+    }
+    s.print("ablation: DIMM scaling (Fig. 8 task-level parallelism)");
+
+    // group-level batching (§V-B): key reuse factor
+    let mut g = Table::new(&["batch", "relative cost/op (evk-sharing)", "non-sharing"]);
+    for b in [1u64, 4, 16, 64] {
+        g.row(&[
+            b.to_string(),
+            format!("{:.2}", batch_factor(FheOp::CMult, b)),
+            format!("{:.2}", batch_factor(FheOp::HAdd, b)),
+        ]);
+    }
+    g.print("ablation: group-level operator batching");
+}

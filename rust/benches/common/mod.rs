@@ -1,0 +1,10 @@
+//! Shared helpers for the paper-table benches.
+use apache_fhe::params::{CkksParams, TfheParams};
+use apache_fhe::sched::oplevel::OpShapes;
+
+pub fn paper_shapes() -> OpShapes {
+    OpShapes {
+        ckks: CkksParams::paper_shape(),
+        tfhe: TfheParams::paper_shape(),
+    }
+}

@@ -1,0 +1,63 @@
+//! Fig. 11: full-application comparison — Lola-MNIST (enc/unenc), HELR,
+//! fully-packed bootstrapping, VSP, HE3DB TPC-H Q6 — APACHE ×2/×8 vs the
+//! paper-reported speedup claims.
+mod common;
+use apache_fhe::apps;
+use apache_fhe::baseline;
+use apache_fhe::hw::DimmConfig;
+use apache_fhe::sched::tasklevel::{schedule_tasks, task_latency, Task};
+use apache_fhe::util::benchkit::{fmt_duration, Table};
+
+fn main() {
+    let shapes = common::paper_shapes();
+    let cfg = DimmConfig::paper();
+    let workloads: Vec<(Task, usize)> = vec![
+        (apps::lola_mnist(true), 8),
+        (apps::lola_mnist(false), 8),
+        (apps::helr_iteration(), 8),
+        (apps::packed_bootstrapping(), 8),
+        (apps::vsp_cycle(), 2),
+        (apps::he3db_q6(1 << 14), 8),
+    ];
+    let mut t = Table::new(&["application", "DIMMs", "latency/DIMM", "makespan (batch of 8)"]);
+    for (task, dimms) in &workloads {
+        let lat = task_latency(task, &shapes, &cfg);
+        let batch: Vec<Task> = (0..8).map(|_| task.clone()).collect();
+        let sched = schedule_tasks(&batch, &shapes, &cfg, *dimms, 30e9);
+        t.row(&[
+            task.name.clone(),
+            dimms.to_string(),
+            fmt_duration(lat),
+            fmt_duration(sched.makespan_s),
+        ]);
+    }
+    t.print("Fig. 11: application latencies on APACHE (modelled)");
+
+    // reproduce the speedup table against the fixed-pipeline baseline
+    let fixed = baseline::hbm_fixed_pipeline_config();
+    let mut s = Table::new(&["application", "APACHE xN / fixed-pipeline x1", "paper claim vs best ASIC"]);
+    let claims = baseline::application_claims();
+    for (task, dimms) in &workloads {
+        let a = {
+            let batch: Vec<Task> = (0..8).map(|_| task.clone()).collect();
+            schedule_tasks(&batch, &shapes, &cfg, *dimms, 30e9).makespan_s
+        };
+        let f = {
+            let batch: Vec<Task> = (0..8).map(|_| task.clone()).collect();
+            schedule_tasks(&batch, &shapes, &fixed, 1, 30e9).makespan_s
+        };
+        let claim = claims
+            .iter()
+            .find(|(_, bench, _)| task.name.starts_with(&bench.to_lowercase().replace(' ', "-")) || bench.contains("HE3DB") && task.name.starts_with("he3db"))
+            .map(|(b, _, v)| format!("{v:.1}x vs {b}"))
+            .unwrap_or_else(|| "-".into());
+        s.row(&[task.name.clone(), format!("{:.2}x", f / a), claim]);
+    }
+    s.print("Fig. 11: speedups (model) vs paper claims");
+    // CPU comparison for HE3DB (paper: 2304x)
+    let q6 = apps::he3db_q6(1 << 14);
+    let on_apache = task_latency(&q6, &shapes, &cfg) / 8.0;
+    let cpu = apps::cpu_reference_q6_seconds(1 << 14);
+    println!("\nHE3DB Q6 vs CPU: {:.0}x (paper: 2304x)", cpu / on_apache);
+    assert!(cpu / on_apache > 10.0, "must beat CPU by orders of magnitude");
+}

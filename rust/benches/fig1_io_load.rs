@@ -1,0 +1,48 @@
+//! Fig. 1: I/O load vs pipeline depth of FHE operators — the scatter that
+//! motivates the three-level hierarchy (data-heavy ops need TB/s-class
+//! bandwidth to keep a pipelined unit fed; compute-heavy ops do not).
+mod common;
+use apache_fhe::hw::DimmConfig;
+use apache_fhe::sched::oplevel::{profile_op, FheOp};
+use apache_fhe::util::benchkit::{fmt_bytes, Table};
+
+fn main() {
+    let shapes = common::paper_shapes();
+    let cfg = DimmConfig::paper();
+    let ops = [
+        FheOp::HAdd, FheOp::PMult, FheOp::CMult, FheOp::HRot, FheOp::KeySwitch,
+        FheOp::Cmux, FheOp::PubKS, FheOp::PrivKS, FheOp::GateBootstrap,
+        FheOp::CircuitBootstrap, FheOp::CkksBootstrap,
+    ];
+    let mut t = Table::new(&["operator", "class", "bytes/op (all levels)", "BW to keep pipeline fed"]);
+    for op in ops {
+        let p = profile_op(op, &shapes, &cfg);
+        let bytes = p.io_external + p.io_internal + p.io_bank;
+        let compute_s = (p.cycles as f64 / cfg.clock_hz as f64).max(1e-9);
+        let demand = bytes as f64 / compute_s;
+        t.row(&[
+            p.name.clone(),
+            if op.is_data_heavy() { "data-heavy".into() } else { "compute-heavy".into() },
+            fmt_bytes(bytes as f64),
+            format!("{}/s", fmt_bytes(demand)),
+        ]);
+    }
+    t.print("Fig. 1: operator I/O load (bandwidth demand)");
+    // headline: PrivKS demands ≥ TB/s-class bandwidth (paper: 8 TB/s for
+    // a fully pipelined CB unit), far beyond HBM's ~2 TB/s
+    let pks = profile_op(FheOp::PrivKS, &shapes, &cfg);
+    let cb = profile_op(FheOp::CircuitBootstrap, &shapes, &cfg);
+    let cb_compute = cb.cycles as f64 / cfg.clock_hz as f64;
+    let cb_demand = (pks.io_bank * 2 * shapes.tfhe.cb_levels as u64) as f64 / cb_compute;
+    println!(
+        "\nCB key-feed demand: {}/s — {:.0}x the DIMM external bus \
+         (paper: 8 TB/s at their 1.8 GB bank; ours scales with the smaller \
+         functional key bank but is equally infeasible off-chip)",
+        fmt_bytes(cb_demand),
+        cb_demand / cfg.external_bw()
+    );
+    assert!(
+        cb_demand > 10.0 * cfg.external_bw(),
+        "CB must be infeasible over external I/O: {cb_demand}"
+    );
+}

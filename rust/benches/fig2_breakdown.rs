@@ -1,0 +1,48 @@
+//! Fig. 2: runtime breakdown of TPC-H Q6 (HE3DB) and Lola-MNIST — which
+//! scheme dominates each protocol (TFHE dominates the database; the CNN
+//! is pure CKKS).
+mod common;
+use apache_fhe::apps;
+use apache_fhe::hw::DimmConfig;
+use apache_fhe::sched::oplevel::{profile_op, FheOp};
+use apache_fhe::util::benchkit::Table;
+
+fn breakdown(task: &apache_fhe::sched::tasklevel::Task, shapes: &apache_fhe::sched::oplevel::OpShapes, cfg: &DimmConfig) -> (f64, f64) {
+    let mut tfhe = 0.0;
+    let mut ckks = 0.0;
+    for node in &task.graph.nodes {
+        let lat = profile_op(node.op, shapes, cfg).latency_s(cfg);
+        match node.op {
+            FheOp::Cmux | FheOp::PubKS | FheOp::PrivKS | FheOp::GateBootstrap
+            | FheOp::CircuitBootstrap | FheOp::HomGate => tfhe += lat,
+            _ => ckks += lat,
+        }
+    }
+    (tfhe, ckks)
+}
+
+fn main() {
+    let shapes = common::paper_shapes();
+    let cfg = DimmConfig::paper();
+    let mut t = Table::new(&["workload", "TFHE-lane time", "CKKS-lane time", "TFHE share"]);
+    for (name, task) in [
+        ("TPC-H Q6 (8192 records)", apps::he3db_q6(8192)),
+        ("TPC-H Q6 (1024 records)", apps::he3db_q6(1024)),
+        ("Lola-MNIST (unenc)", apps::lola_mnist(false)),
+        ("Lola-MNIST (enc)", apps::lola_mnist(true)),
+    ] {
+        let (tf, ck) = breakdown(&task, &shapes, &cfg);
+        t.row(&[
+            name.into(),
+            format!("{:.3} ms", tf * 1e3),
+            format!("{:.3} ms", ck * 1e3),
+            format!("{:.0}%", 100.0 * tf / (tf + ck)),
+        ]);
+    }
+    t.print("Fig. 2: scheme-level runtime breakdown");
+    // shape: Q6 is TFHE-dominated; MNIST is CKKS-only
+    let (tf_q6, ck_q6) = breakdown(&apps::he3db_q6(8192), &shapes, &cfg);
+    assert!(tf_q6 > ck_q6);
+    let (tf_m, _) = breakdown(&apps::lola_mnist(false), &shapes, &cfg);
+    assert!(tf_m == 0.0, "MNIST has no TFHE ops");
+}

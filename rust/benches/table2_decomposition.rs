@@ -1,0 +1,42 @@
+//! Table II: decomposition/classification of homomorphic operators —
+//! FU mix (from the emitted microcode), pipeline depth class, cached key
+//! size, operand bitwidth and data/compute classification.
+mod common;
+use apache_fhe::params::{CkksParams, TfheParams};
+use apache_fhe::sched::microcode::{emit, MicroOp};
+use apache_fhe::sched::oplevel::FheOp;
+use apache_fhe::util::benchkit::{fmt_bytes, Table};
+
+fn main() {
+    let ck = CkksParams::paper_shape();
+    let tf = TfheParams::paper_shape();
+    let mut t = Table::new(&["operator", "NTT", "MA", "MM", "Auto", "cached key", "class"]);
+    let rows = [
+        (FheOp::Cmux, 0u64, "Computation"),
+        (FheOp::PrivKS, tf.privksk_bytes(), "Data"),
+        (FheOp::PubKS, tf.ksk_bytes(tf.lwe_n), "Data"),
+        (FheOp::HAdd, 0, "Data"),
+        (FheOp::CMult, ck.evk_bytes(), "Computation"),
+        (FheOp::KeySwitch, ck.evk_bytes(), "Computation"),
+    ];
+    for (op, key, class) in rows {
+        let stream = emit(op, ck.n as u64, ck.num_q as u64, 2 * tf.decomp_levels as u64, key);
+        let has = |f: &dyn Fn(&MicroOp) -> bool| if stream.iter().any(|m| f(m)) { "Y" } else { "-" };
+        t.row(&[
+            format!("{op:?}"),
+            has(&|m| matches!(m, MicroOp::Ntt { .. })).into(),
+            has(&|m| matches!(m, MicroOp::MAdd { .. })).into(),
+            has(&|m| matches!(m, MicroOp::MMult { .. })).into(),
+            has(&|m| matches!(m, MicroOp::Automorph { .. })).into(),
+            fmt_bytes(key as f64),
+            class.into(),
+        ]);
+    }
+    t.print("Table II: operator decomposition (from emitted microcode)");
+    // Table II claims: PrivKS key GB-class, GB key tens of MB
+    assert!(tf.privksk_bytes() > (200 << 20), "PrivKS key must be huge");
+    let bsk_mb = tf.bsk_bytes() >> 20;
+    assert!((10..100).contains(&bsk_mb), "BSK {bsk_mb} MB (paper: 37 MB)");
+    println!("\nBSK = {} MB (paper: 37 MB), PrivKS bank = {} MB (paper: 1.8 GB class)",
+        bsk_mb, tf.privksk_bytes() >> 20);
+}

@@ -1,0 +1,16 @@
+//! Table IV: NMC module area and TDP with per-component breakdown.
+use apache_fhe::hw::{AreaPower, DimmConfig};
+use apache_fhe::util::benchkit::Table;
+
+fn main() {
+    let ap = AreaPower::of(&DimmConfig::paper());
+    let mut t = Table::new(&["component", "area mm2", "power W"]);
+    for (name, a, p) in &ap.components {
+        t.row(&[name.clone(), format!("{a:.2}"), format!("{p:.2}")]);
+    }
+    t.row(&["TOTAL".into(), format!("{:.2}", ap.total_area()), format!("{:.2}", ap.total_power())]);
+    t.print("Table IV: NMC module area/TDP (22 nm)");
+    assert!((ap.total_area() - 60.95).abs() < 0.1);
+    assert!((ap.total_power() - 13.14).abs() < 0.05);
+    println!("\nmatches paper totals: 60.95 mm2 / 13.14 W");
+}

@@ -1,0 +1,95 @@
+//! Real wall-clock micro-benchmarks of the functional hot paths: Rust NTT,
+//! external product, gate bootstrap, CKKS CMult, and the PJRT artifact
+//! round-trip. These are the §Perf before/after numbers in EXPERIMENTS.md.
+use apache_fhe::ckks::ciphertext::encrypt;
+use apache_fhe::ckks::encoding::C64;
+use apache_fhe::ckks::keys::CkksKeys;
+use apache_fhe::ckks::{ops, CkksCtx};
+use apache_fhe::math::modops::ntt_primes;
+use apache_fhe::math::ntt::NttTable;
+use apache_fhe::math::sampler::Rng;
+use apache_fhe::params::{CkksParams, TfheParams};
+use apache_fhe::runtime::Runtime;
+use apache_fhe::tfhe::bootstrap::{bootstrap_to_sign, BootstrapKey};
+use apache_fhe::tfhe::gates::encrypt_bool;
+use apache_fhe::tfhe::lwe::LweSecretKey;
+use apache_fhe::tfhe::rgsw::{external_product, RgswCiphertext};
+use apache_fhe::tfhe::rlwe::{RlweCiphertext, RlweSecretKey};
+use apache_fhe::tfhe::TfheCtx;
+use apache_fhe::util::benchkit::{bench, bench_once, fmt_rate, Table};
+
+fn main() {
+    let mut rng = Rng::seeded(1);
+    let mut t = Table::new(&["hot path", "median", "throughput"]);
+
+    // NTT at several sizes
+    for logn in [10usize, 12] {
+        let n = 1 << logn;
+        let q = ntt_primes(28, 2 * n as u64, 1)[0];
+        let table = NttTable::new(n, q);
+        let data = rng.uniform_poly(n, q);
+        let st = bench(&format!("ntt-{n}"), || {
+            let mut a = data.clone();
+            table.forward(&mut a);
+            std::hint::black_box(&a);
+        });
+        t.row(&[format!("NTT N={n}"), apache_fhe::util::benchkit::fmt_duration(st.median), fmt_rate(st.ops_per_sec())]);
+    }
+
+    // TFHE external product + gate bootstrap (tiny params)
+    let ctx = TfheCtx::new(TfheParams::tiny());
+    let sk = LweSecretKey::generate(&ctx, &mut rng);
+    let zk = RlweSecretKey::generate(&ctx, &mut rng);
+    let rgsw = RgswCiphertext::encrypt_bit(&ctx, &zk, 1, ctx.params.rlwe_sigma, &mut rng);
+    let ct = RlweCiphertext::encrypt_phase(&ctx, &zk, &vec![0u64; ctx.n_poly()], ctx.params.rlwe_sigma, &mut rng);
+    let st = bench("external-product", || {
+        std::hint::black_box(external_product(&ctx, &rgsw, &ct));
+    });
+    t.row(&["TFHE external product (N=256)".into(), apache_fhe::util::benchkit::fmt_duration(st.median), fmt_rate(st.ops_per_sec())]);
+
+    let bk = BootstrapKey::generate(&ctx, &sk, &zk, &mut rng);
+    let c = encrypt_bool(&ctx, &sk, true, &mut rng);
+    let st = bench_once("gate-bootstrap", || {
+        std::hint::black_box(bootstrap_to_sign(&ctx, &bk, &c, ctx.q() / 8));
+    });
+    t.row(&["TFHE gate bootstrap (tiny)".into(), apache_fhe::util::benchkit::fmt_duration(st.median), fmt_rate(st.ops_per_sec())]);
+
+    // CKKS CMult (tiny)
+    let cctx = CkksCtx::new(CkksParams::tiny());
+    let keys = CkksKeys::generate(&cctx, &[], false, &mut rng);
+    let slots = cctx.params.num_slots();
+    let z: Vec<C64> = (0..slots).map(|i| C64::from_re(i as f64 / slots as f64)).collect();
+    let a = encrypt(&cctx, &keys.sk, &z, cctx.params.scale, cctx.max_level(), &mut rng);
+    let st = bench_once("ckks-cmult", || {
+        std::hint::black_box(ops::rescale(&cctx, &ops::square(&cctx, &keys, &a)));
+    });
+    t.row(&["CKKS CMult+rescale (N=1024, L=4)".into(), apache_fhe::util::benchkit::fmt_duration(st.median), fmt_rate(st.ops_per_sec())]);
+
+    // PJRT artifact round trip
+    match Runtime::new(Runtime::default_dir()) {
+        Ok(rt) => {
+            let q = rt.manifest["external_product_n256"].modulus;
+            let table = NttTable::new(256, q);
+            let mk = |rng: &mut Rng, bound: u64, len: usize| -> Vec<u64> {
+                (0..len).map(|_| rng.uniform(bound)).collect()
+            };
+            let digits = mk(&mut rng, 256, 14 * 256);
+            let rows_b = mk(&mut rng, q, 14 * 256);
+            let rows_a = mk(&mut rng, q, 14 * 256);
+            let inputs = vec![
+                digits,
+                rows_b,
+                rows_a,
+                table.forward_twiddles().to_vec(),
+                table.inverse_twiddles().to_vec(),
+                vec![table.n_inv()],
+            ];
+            let st = bench("pjrt-external-product", || {
+                std::hint::black_box(rt.execute_u64("external_product_n256", &inputs).unwrap());
+            });
+            t.row(&["PJRT external_product_n256".into(), apache_fhe::util::benchkit::fmt_duration(st.median), fmt_rate(st.ops_per_sec())]);
+        }
+        Err(e) => eprintln!("skipping PJRT bench: {e}"),
+    }
+    t.print("wall-clock hot paths (this machine)");
+}

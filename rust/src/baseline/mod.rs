@@ -1,0 +1,163 @@
+//! Comparison baselines (§VI-B):
+//!  * `fixed_pipeline_config` — the architecture prior ASICs share
+//!    (Table I critique): two-level memory (HBM off-chip), fixed 64-bit
+//!    FUs, single fixed pipeline order, no in-memory KS.
+//!  * `published` — the reported numbers of the accelerators the paper
+//!    compares against (Table V rows, Fig. 11 series), used verbatim as
+//!    comparison constants, exactly as the paper does.
+
+use crate::hw::DimmConfig;
+
+/// Prior-work-style accelerator: same compute inventory as one APACHE
+/// DIMM, but with the classic two-level hierarchy and fixed topology.
+pub fn fixed_pipeline_config() -> DimmConfig {
+    let mut cfg = DimmConfig::paper();
+    cfg.imc_ks = false; // keys cross the external interface
+    cfg.dual32 = false; // fixed 64-bit FUs (BTS/ARK/Strix style)
+    cfg.routine2 = false; // single fixed pipeline order
+    cfg
+}
+
+/// HBM-attached variant (F1/CraterLake/BTS class): much higher external
+/// bandwidth, same fixed topology. We model HBM2e ≈ 2 TB/s as a 64×
+/// multiplier on the DDR4 channel.
+pub fn hbm_fixed_pipeline_config() -> DimmConfig {
+    let mut cfg = fixed_pipeline_config();
+    cfg.mts = 3200 * 64; // ≈ 2 TB/s external
+    cfg
+}
+
+/// One published comparison row.
+#[derive(Debug, Clone)]
+pub struct Published {
+    pub name: &'static str,
+    /// ops/second by operator name, as reported (Table V, §VI-C text)
+    pub ops: &'static [(&'static str, f64)],
+}
+
+/// Table V + Fig. 11 constants from the paper.
+pub fn published() -> Vec<Published> {
+    vec![
+        Published {
+            name: "Poseidon [77]",
+            ops: &[
+                ("PMult", 14.6e3),
+                ("HAdd", 13.3e3),
+                ("CMult", 273.0),
+                ("Rotation", 302.0),
+                ("KeySwitch", 312.0),
+            ],
+        },
+        Published {
+            name: "MATCHA [32]",
+            ops: &[("HomGate-I", 10e3)],
+        },
+        Published {
+            name: "Strix [55]",
+            ops: &[
+                ("HomGate-I", 74.7e3),
+                ("HomGate-II", 39.6e3),
+                ("CircuitBoot", 2.6e3),
+            ],
+        },
+        Published {
+            name: "Morphling [54]",
+            ops: &[
+                ("HomGate-I", 147e3),
+                ("HomGate-II", 78.7e3),
+                ("CircuitBoot", 7.4e3),
+            ],
+        },
+    ]
+}
+
+/// Paper-reported APACHE rows (Table V) — the targets our model should
+/// land near in *shape* (who wins, rough ratios).
+pub fn apache_reported() -> Vec<(&'static str, usize, f64)> {
+    vec![
+        ("PMult", 2, 355e3),
+        ("HAdd", 2, 355e3),
+        ("CMult", 2, 6.5e3),
+        ("Rotation", 2, 6.8e3),
+        ("KeySwitch", 2, 7.4e3),
+        ("HomGate-I", 2, 500e3),
+        ("HomGate-II", 2, 264e3),
+        ("CircuitBoot", 2, 49.6e3),
+        ("PMult", 4, 708e3),
+        ("HAdd", 4, 708e3),
+        ("CMult", 4, 13.1e3),
+        ("Rotation", 4, 13.6e3),
+        ("KeySwitch", 4, 14.8e3),
+        ("HomGate-I", 4, 1000e3),
+        ("HomGate-II", 4, 528e3),
+        ("CircuitBoot", 4, 99.2e3),
+    ]
+}
+
+/// Fig. 11 application-level speedup claims (baseline, benchmark, factor).
+pub fn application_claims() -> Vec<(&'static str, &'static str, f64)> {
+    vec![
+        ("CraterLake [62]", "Lola-MNIST (enc)", 2.4),
+        ("CraterLake [62]", "Lola-MNIST (unenc)", 2.5),
+        ("BTS [38]", "Packed bootstrapping", 8.04),
+        ("BTS [38]", "HELR", 15.63),
+        ("Strix [55]", "VSP", 18.68),
+        ("Morphling [54]", "VSP", 6.8),
+        ("CPU", "HE3DB TPC-H Q6", 2304.0),
+        ("Strix [55]", "CircuitBoot 128b", 19.08),
+        ("Morphling [54]", "CircuitBoot 128b", 6.7),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{CkksParams, TfheParams};
+    use crate::sched::oplevel::{profile_op, FheOp, OpShapes};
+
+    fn shapes() -> OpShapes {
+        OpShapes {
+            ckks: CkksParams::paper_shape(),
+            tfhe: TfheParams::paper_shape(),
+        }
+    }
+
+    #[test]
+    fn apache_beats_fixed_pipeline_where_the_paper_claims() {
+        let apache = DimmConfig::paper();
+        let fixed = hbm_fixed_pipeline_config();
+        let s = shapes();
+        // TFHE ops: the utilization + IMC design wins per-DIMM
+        for op in [FheOp::GateBootstrap, FheOp::CircuitBootstrap] {
+            let a = profile_op(op, &s, &apache).latency_s(&apache);
+            let f = profile_op(op, &s, &fixed).latency_s(&fixed);
+            assert!(a < f, "{op:?}: apache {a} vs fixed+HBM {f}");
+        }
+        // CKKS ops: a single HBM ASIC may beat one DIMM on raw latency
+        // (the paper compares APACHE×8 against single accelerators);
+        // aggregate throughput must win
+        for op in [FheOp::CMult, FheOp::HRot] {
+            let a = profile_op(op, &s, &apache).throughput_ops(&apache, 8);
+            let f = profile_op(op, &s, &fixed).throughput_ops(&fixed, 1);
+            assert!(a > f, "{op:?}: apache x8 {a} vs fixed+HBM {f}");
+        }
+    }
+
+    #[test]
+    fn io_bound_ops_show_largest_gap() {
+        // PrivKS is where the in-memory level pays off most
+        let apache = DimmConfig::paper();
+        let fixed = fixed_pipeline_config();
+        let s = shapes();
+        let a = profile_op(FheOp::PrivKS, &s, &apache).latency_s(&apache);
+        let f = profile_op(FheOp::PrivKS, &s, &fixed).latency_s(&fixed);
+        assert!(f / a > 50.0, "expected large PrivKS gap, got {}", f / a);
+    }
+
+    #[test]
+    fn published_tables_are_wellformed() {
+        assert!(!published().is_empty());
+        assert_eq!(apache_reported().len(), 16);
+        assert!(application_claims().iter().all(|c| c.2 > 1.0));
+    }
+}

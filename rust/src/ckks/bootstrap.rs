@@ -1,0 +1,377 @@
+//! Fully-packed CKKS bootstrapping (the paper's third CKKS benchmark,
+//! [1], [13]): ModRaise → SubSum → CoeffToSlot → EvalSine → SlotToCoeff.
+//!
+//! Functional regime: sparse packing with `n'` slots in an N-degree ring
+//! and a sparse (h = 64) secret, which bounds the ModRaise overflow
+//! `I` so the sine approximation (Taylor-in-cos + double-angle ladder)
+//! converges at our 28-bit prime scale. The *paper-scale* fully-packed
+//! variant feeds the hardware model through `sched`/`hw` (cycle counts do
+//! not require live ciphertexts) — see DESIGN.md substitution ledger.
+
+use super::ciphertext::{decrypt, encode_plaintext, encrypt, CkksCiphertext};
+use super::encoding::C64;
+use super::keys::{CkksKeys, CkksSecretKey};
+use super::ops;
+use super::CkksCtx;
+use crate::math::poly::RnsPoly;
+use crate::math::sampler::Rng;
+use std::f64::consts::PI;
+use std::sync::Arc;
+
+/// Bootstrapping configuration + key material.
+pub struct BootstrapContext {
+    pub ctx: Arc<CkksCtx>,
+    pub keys: CkksKeys,
+    /// sparse slot count n'
+    pub slots: usize,
+    /// double-angle ladder depth r
+    pub r: u32,
+    /// input-folding scalar 2π/(gap·2^r·8), applied via the scale ledger
+    pub theta: f64,
+    /// CoeffToSlot diagonals (of F^H/n' · θ) and SlotToCoeff diagonals (F)
+    pub cts_diags: Vec<Vec<C64>>,
+    pub stc_diags: Vec<Vec<C64>>,
+}
+
+fn build_embedding_matrix(slots: usize) -> Vec<Vec<C64>> {
+    // F_{jk} = exp(2πi · (5^j mod 4n') · k / 4n')
+    let m = 4 * slots;
+    let mut rot = 1usize;
+    let mut rows = Vec::with_capacity(slots);
+    for _ in 0..slots {
+        let row: Vec<C64> = (0..slots)
+            .map(|k| C64::expi(2.0 * PI * ((rot * k) % m) as f64 / m as f64))
+            .collect();
+        rows.push(row);
+        rot = rot * 5 % m;
+    }
+    rows
+}
+
+fn diagonals(mat: &[Vec<C64>]) -> Vec<Vec<C64>> {
+    let n = mat.len();
+    (0..n)
+        .map(|d| (0..n).map(|j| mat[j][(j + d) % n]).collect())
+        .collect()
+}
+
+impl BootstrapContext {
+    /// Rotations (slot indices) needed for SubSum + the two BSGS
+    /// transforms with giant step g.
+    pub fn required_rotations(ctx: &CkksCtx, slots: usize) -> Vec<i64> {
+        let full_slots = ctx.params.num_slots();
+        let mut rots: Vec<i64> = Vec::new();
+        // SubSum: n'·2^i
+        let mut step = slots as i64;
+        while step < full_slots as i64 {
+            rots.push(step);
+            step *= 2;
+        }
+        // BSGS baby steps 1..g and giant steps g·i
+        let g = (slots as f64).sqrt().ceil() as i64;
+        for j in 1..g {
+            rots.push(j);
+        }
+        let mut gi = g;
+        while gi < slots as i64 {
+            rots.push(gi);
+            gi += g;
+        }
+        rots.sort_unstable();
+        rots.dedup();
+        rots
+    }
+
+    pub fn new(ctx: &Arc<CkksCtx>, slots: usize, rng: &mut Rng) -> Self {
+        assert!(slots.is_power_of_two() && slots <= ctx.params.num_slots());
+        let sk = CkksSecretKey::generate_sparse(ctx, 64, rng);
+        let rots = Self::required_rotations(ctx, slots);
+        let keys = CkksKeys::generate_with_sk(ctx, sk, &rots, true, rng);
+        // r doublings amplify noise 2^r×, so keep r small and push accuracy
+        // into a degree-14 Taylor evaluated on u/8 (the /8 keeps the Horner
+        // coefficients encodable at Δ).
+        let r = 4u32;
+        let gap = ctx.params.num_slots() / slots;
+        // θ folds: 1/gap (SubSum), 1/(2^r·8) (ladder + variable scaling),
+        // 2π (radians). The 1/q0 factor is NOT folded here — it would
+        // underflow the plaintext encoding of the diagonals (θ/q0 ≈ 1e-13
+        // rounds to 0 at scale Δ); it is absorbed into the scale ledger
+        // after CoeffToSlot, which is exact and free.
+        let theta = 2.0 * PI / (gap as f64 * (1u64 << r) as f64 * 8.0);
+        let f = build_embedding_matrix(slots);
+        // CtS: A = F^H/n'. θ is NOT folded into the diagonal values — the
+        // diagonals stay O(1) so they encode at Δ with full precision, and
+        // θ (a public real scalar) is absorbed into the scale ledger after
+        // the transform, which is exact and free.
+        let n_inv = 1.0 / slots as f64;
+        let a: Vec<Vec<C64>> = (0..slots)
+            .map(|j| {
+                (0..slots)
+                    .map(|k| f[k][j].conj().scale(n_inv))
+                    .collect()
+            })
+            .collect();
+        BootstrapContext {
+            ctx: ctx.clone(),
+            keys,
+            slots,
+            r,
+            theta,
+            cts_diags: diagonals(&a),
+            stc_diags: diagonals(&f),
+        }
+    }
+
+    /// ModRaise: re-express a level-1 ciphertext over the full tower.
+    /// Phase becomes `v + q_0·I` with `|I|` bounded by the sparse secret.
+    pub fn mod_raise(&self, ct: &CkksCiphertext) -> CkksCiphertext {
+        assert_eq!(ct.level, 1, "mod_raise expects an exhausted ciphertext");
+        let ctx = &self.ctx;
+        let l_max = ctx.max_level();
+        let raise = |p: &RnsPoly| -> RnsPoly {
+            let mut c = p.clone();
+            c.to_coeff();
+            let q0 = ctx.basis.moduli[0];
+            let signed: Vec<i64> = c.limbs[0]
+                .iter()
+                .map(|&v| crate::math::modops::centered(v, q0))
+                .collect();
+            let mut out = RnsPoly::from_signed(&ctx.basis, &signed, l_max);
+            out.to_eval();
+            out
+        };
+        CkksCiphertext {
+            c0: raise(&ct.c0),
+            c1: raise(&ct.c1),
+            scale: ct.scale,
+            level: l_max,
+            slots: ct.slots,
+        }
+    }
+
+    /// SubSum (trace projection): kills every non-grid coefficient and
+    /// multiplies grid coefficients by `gap`.
+    pub fn sub_sum(&self, ct: &CkksCiphertext) -> CkksCiphertext {
+        let full_slots = self.ctx.params.num_slots();
+        let mut acc = ct.clone();
+        let mut step = self.slots as i64;
+        while step < full_slots as i64 {
+            let rot = ops::rotate(&self.ctx, &self.keys, &acc, step);
+            acc = ops::add(&acc, &rot);
+            step *= 2;
+        }
+        acc
+    }
+
+    /// BSGS diagonal linear transform: `out = Σ_d diag_d ∘ rot_d(ct)`,
+    /// rescaled once at the end.
+    pub fn linear_transform(&self, ct: &CkksCiphertext, diags: &[Vec<C64>]) -> CkksCiphertext {
+        let ctx = &self.ctx;
+        let n = diags.len();
+        let g = (n as f64).sqrt().ceil() as usize;
+        let delta = ctx.params.scale;
+        let mut babies: Vec<CkksCiphertext> = Vec::with_capacity(g);
+        babies.push(ct.clone());
+        for j in 1..g {
+            babies.push(ops::rotate(ctx, &self.keys, ct, j as i64));
+        }
+        let mut total: Option<CkksCiphertext> = None;
+        let mut i = 0usize;
+        while i * g < n {
+            let base = i * g;
+            let mut inner: Option<CkksCiphertext> = None;
+            for j in 0..g.min(n - base) {
+                let d = base + j;
+                // pre-rotate the diagonal by -base so the outer rotation
+                // lands it on the right slots: rot_base(diag') = diag
+                let rotated_diag: Vec<C64> =
+                    (0..n).map(|k| diags[d][(k + n - base) % n]).collect();
+                let plain = encode_plaintext(ctx, &rotated_diag, delta, ct.level);
+                let term = ops::mul_plain(&babies[j], &plain, delta);
+                inner = Some(match inner {
+                    None => term,
+                    Some(acc) => ops::add(&acc, &term),
+                });
+            }
+            let mut outer = inner.unwrap();
+            if base > 0 {
+                outer = ops::rotate(ctx, &self.keys, &outer, base as i64);
+            }
+            total = Some(match total {
+                None => outer,
+                Some(acc) => ops::add(&acc, &outer),
+            });
+            i += 1;
+        }
+        ops::rescale(ctx, &total.unwrap())
+    }
+
+    /// Add a constant to every slot, encoded at the ciphertext's *exact*
+    /// scale — keeps the scale ledger drift-free.
+    fn add_const(&self, ct: &CkksCiphertext, v: f64) -> CkksCiphertext {
+        let c: Vec<C64> = (0..self.slots).map(|_| C64::from_re(v)).collect();
+        let plain = encode_plaintext(&self.ctx, &c, ct.scale, ct.level);
+        ops::add_plain(ct, &plain)
+    }
+
+    /// Evaluate `cos(8·x)` via a degree-14 Taylor (Horner in v = x²,
+    /// coefficients (−1)^k·64^k/(2k)! — all O(100), safely encodable),
+    /// then `r` double-angle steps. Input slots hold
+    /// `x = 2π(t − 1/4)/(2^r·8)`; output is `sin(2πt)`.
+    ///
+    /// Horner keeps every addition as add-plain at the ciphertext's exact
+    /// running scale, so no cross-path scale drift accumulates (the RNS
+    /// primes are only ≈ Δ, not equal to it).
+    fn eval_sine_ladder(&self, x: &CkksCiphertext) -> CkksCiphertext {
+        let ctx = &self.ctx;
+        let keys = &self.keys;
+        let v = ops::rescale(ctx, &ops::square(ctx, keys, x));
+        // c'_k = (−1)^k·64^k/(2k)!, k = 0..7
+        let mut coeffs = Vec::with_capacity(8);
+        let mut fact = 1.0f64;
+        for k in 0..8u32 {
+            if k > 0 {
+                fact *= (2 * k - 1) as f64 * (2 * k) as f64;
+            }
+            let c = 64f64.powi(k as i32) / fact * if k % 2 == 0 { 1.0 } else { -1.0 };
+            coeffs.push(c);
+        }
+        let mut acc = ops::rescale(ctx, &ops::mul_scalar(ctx, &v, coeffs[7]));
+        for k in (0..7).rev() {
+            acc = self.add_const(&acc, coeffs[k]);
+            if k > 0 {
+                let vd = ops::mod_down_to(ctx, &v, acc.level);
+                acc = ops::rescale(ctx, &ops::mul(ctx, keys, &acc, &vd));
+            }
+        }
+        // double-angle ladder: cos(2x) = 2cos² − 1
+        for _ in 0..self.r {
+            let sq = ops::rescale(ctx, &ops::square(ctx, keys, &acc));
+            let doubled = ops::add(&sq, &sq);
+            acc = self.add_const(&doubled, -1.0);
+        }
+        acc
+    }
+
+    /// Full bootstrap: same message, fresh level budget. Messages must be
+    /// small (|m| ≲ 0.05) — the sine-approximation regime.
+    pub fn bootstrap(&self, ct: &CkksCiphertext) -> CkksCiphertext {
+        let ctx = &self.ctx;
+        let keys = &self.keys;
+        assert_eq!(ct.slots, self.slots);
+        let raised = self.mod_raise(ct);
+        let folded = self.sub_sum(&raised);
+        let mut t = self.linear_transform(&folded, &self.cts_diags);
+        // exact ledger correction for q0 ≈ Δ_in (within ~0.1%):
+        // value' = value·Δ_in/q0  ⇔  scale' = scale·q0/Δ_in
+        let q0 = self.ctx.basis.moduli[0] as f64;
+        t.scale = t.scale * q0 / ct.scale;
+        // apply θ as its own scalar product: its Δ-scaled integer (~51k)
+        // carries ~1e-5 relative error, vs ~1e-4 if folded into the
+        // already-small diagonal values — the ladder amplifies this angle
+        // error by ~2π·t, so the extra level is well spent.
+        let x = ops::rescale(&self.ctx, &ops::mul_scalar(&self.ctx, &t, self.theta));
+        // real/imag split via conjugation — BEFORE the −1/4 shift, which is
+        // real and must be applied to each component separately.
+        let xc = ops::conjugate(ctx, keys, &x);
+        let re = ops::rescale(ctx, &ops::mul_scalar(ctx, &ops::add(&x, &xc), 0.5));
+        let neg_half_i: Vec<C64> = (0..self.slots).map(|_| C64::new(0.0, -0.5)).collect();
+        let im_raw = ops::sub(&x, &xc);
+        let neg_half_i_plain =
+            encode_plaintext(ctx, &neg_half_i, ctx.params.scale, im_raw.level);
+        let im = ops::rescale(ctx, &ops::mul_plain(&im_raw, &neg_half_i_plain, ctx.params.scale));
+        // shift both components: x_c = 2π(t_c − 1/4)/(2^r·8)
+        let shift = -2.0 * PI * 0.25 / ((1u64 << self.r) as f64 * 8.0);
+        let re = self.add_const(&re, shift);
+        let im = self.add_const(&im, shift);
+        let sin_re = self.eval_sine_ladder(&re);
+        let sin_im = self.eval_sine_ladder(&ops::mod_down_to(ctx, &im, re.level));
+        // recombine c = sin_re·1 + sin_im·i — both sides go through one
+        // plaintext product so their scale ledgers stay identical.
+        let lvl = sin_re.level.min(sin_im.level);
+        let delta = ctx.params.scale;
+        let i_const: Vec<C64> = (0..self.slots).map(|_| C64::new(0.0, 1.0)).collect();
+        let one_const: Vec<C64> = (0..self.slots).map(|_| C64::from_re(1.0)).collect();
+        let i_plain = encode_plaintext(ctx, &i_const, delta, lvl);
+        let one_plain = encode_plaintext(ctx, &one_const, delta, lvl);
+        let sin_im_i = ops::rescale(
+            ctx,
+            &ops::mul_plain(&ops::mod_down_to(ctx, &sin_im, lvl), &i_plain, delta),
+        );
+        let sin_re_1 = ops::rescale(
+            ctx,
+            &ops::mul_plain(&ops::mod_down_to(ctx, &sin_re, lvl), &one_plain, delta),
+        );
+        let combined = ops::add(&sin_re_1, &sin_im_i);
+        // m = sin(2πε)·q0/(2π·Δ_in)
+        let q0 = ctx.basis.moduli[0] as f64;
+        let back = ops::rescale(
+            ctx,
+            &ops::mul_scalar(ctx, &combined, q0 / (2.0 * PI * ct.scale)),
+        );
+        self.linear_transform(&back, &self.stc_diags)
+    }
+}
+
+/// Convenience: encrypt at level 1 (exhausted), bootstrap, return result
+/// and remaining level.
+pub fn demo_roundtrip(bs: &BootstrapContext, msg: &[C64], rng: &mut Rng) -> (Vec<C64>, usize) {
+    let ctx = &bs.ctx;
+    let ct = encrypt(ctx, &bs.keys.sk, msg, ctx.params.scale, 1, rng);
+    let boosted = bs.bootstrap(&ct);
+    let out = decrypt(ctx, &bs.keys.sk, &boosted);
+    (out, boosted.level)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::CkksParams;
+
+    fn max_err(a: &[C64], b: &[C64]) -> f64 {
+        a.iter()
+            .zip(b.iter())
+            .map(|(x, y)| x.sub(*y).abs())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn cts_then_stc_is_identity() {
+        // F·(F^H/n'·x) = x — validates the embedding matrices and the BSGS
+        // plumbing, without the θ folding (θ only makes sense on ModRaised
+        // values, where it would underflow fresh small messages).
+        let ctx = CkksCtx::new(CkksParams::functional_boot());
+        let mut rng = Rng::seeded(1200);
+        let bs = BootstrapContext::new(&ctx, 8, &mut rng);
+        let slots = 8;
+        let f = build_embedding_matrix(slots);
+        let n_inv = 1.0 / slots as f64;
+        let a: Vec<Vec<C64>> = (0..slots)
+            .map(|j| (0..slots).map(|k| f[k][j].conj().scale(n_inv)).collect())
+            .collect();
+        let cts_unit = diagonals(&a);
+        let msg: Vec<C64> = (0..slots)
+            .map(|i| C64::new(0.25 * (i as f64 + 1.0) / 8.0, -0.1))
+            .collect();
+        let ct = encrypt(&ctx, &bs.keys.sk, &msg, ctx.params.scale, ctx.max_level(), &mut rng);
+        let mid = bs.linear_transform(&ct, &cts_unit);
+        let out = bs.linear_transform(&mid, &bs.stc_diags);
+        let got = decrypt(&ctx, &bs.keys.sk, &out);
+        let err = max_err(&got, &msg);
+        assert!(err < 5e-3, "err {err}");
+    }
+
+    #[test]
+    fn full_bootstrap_recovers_small_messages() {
+        let ctx = CkksCtx::new(CkksParams::functional_boot());
+        let mut rng = Rng::seeded(1201);
+        let bs = BootstrapContext::new(&ctx, 8, &mut rng);
+        let msg: Vec<C64> = (0..8)
+            .map(|i| C64::new(0.01 * ((i as f64) - 3.5) / 4.0, 0.005))
+            .collect();
+        let (out, level) = demo_roundtrip(&bs, &msg, &mut rng);
+        assert!(level >= 1, "bootstrap must return budget, level={level}");
+        let err = max_err(&out, &msg);
+        assert!(err < 2e-3, "bootstrap error {err}");
+    }
+}

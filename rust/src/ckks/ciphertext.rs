@@ -1,0 +1,164 @@
+//! CKKS ciphertexts: encryption, decryption, encode/decode plumbing.
+
+use super::encoding::C64;
+use super::keys::CkksSecretKey;
+use super::CkksCtx;
+use crate::math::poly::{Domain, RnsPoly};
+use crate::math::rns::crt_reconstruct;
+use crate::math::sampler::Rng;
+use std::sync::Arc;
+
+/// A CKKS ciphertext: `(c0, c1)` in Eval domain over the first `level`
+/// q-limbs; decrypts to `c0 + c1·s ≈ Δ·m`.
+#[derive(Debug, Clone)]
+pub struct CkksCiphertext {
+    pub c0: RnsPoly,
+    pub c1: RnsPoly,
+    pub scale: f64,
+    /// number of live q-limbs
+    pub level: usize,
+    /// number of packed slots
+    pub slots: usize,
+}
+
+/// Encode a slot vector into an RNS plaintext polynomial (Eval domain) at
+/// the given scale and level.
+pub fn encode_plaintext(
+    ctx: &Arc<CkksCtx>,
+    z: &[C64],
+    scale: f64,
+    level: usize,
+) -> RnsPoly {
+    let coeffs = ctx.encoder.encode(z, scale);
+    let mut p = RnsPoly::from_signed(&ctx.basis, &coeffs, level);
+    p.to_eval();
+    p
+}
+
+/// Symmetric encryption of a slot vector.
+pub fn encrypt(
+    ctx: &Arc<CkksCtx>,
+    sk: &CkksSecretKey,
+    z: &[C64],
+    scale: f64,
+    level: usize,
+    rng: &mut Rng,
+) -> CkksCiphertext {
+    let n = ctx.n();
+    let m = encode_plaintext(ctx, z, scale, level);
+    // c1 = uniform a (independent residues == uniform mod Q_level by CRT)
+    let a_limbs: Vec<Vec<u64>> = (0..level)
+        .map(|i| rng.uniform_poly(n, ctx.basis.moduli[i]))
+        .collect();
+    let c1 = RnsPoly::from_limbs(&ctx.basis, a_limbs, Domain::Eval);
+    let e_signed: Vec<i64> = (0..n)
+        .map(|_| {
+            let q0 = ctx.basis.moduli[0];
+            crate::math::modops::centered(rng.gaussian(ctx.params.sigma, q0), q0)
+        })
+        .collect();
+    let mut e = RnsPoly::from_signed(&ctx.basis, &e_signed, level);
+    e.to_eval();
+    // c0 = -c1·s + m + e
+    let s_l = sk.s.select_limbs(&(0..level).collect::<Vec<_>>());
+    let mut c0 = c1.mul_eval(&s_l).neg();
+    c0.add_assign(&m);
+    c0.add_assign(&e);
+    CkksCiphertext {
+        c0,
+        c1,
+        scale,
+        level,
+        slots: z.len(),
+    }
+}
+
+/// Reconstruct centered signed coefficients from an RNS polynomial in
+/// coeff domain, using up to 4 limbs (112 bits) — exact whenever the
+/// underlying value is that small, which CKKS guarantees by design
+/// (|phase| ≈ Δ²·m ≪ Q_subset/2).
+pub fn reconstruct_signed(ctx: &CkksCtx, p: &RnsPoly) -> Vec<i64> {
+    assert_eq!(p.domain, Domain::Coeff);
+    let use_limbs = p.num_limbs().min(4);
+    let moduli: Vec<u64> = (0..use_limbs).map(|i| p.modulus_of(i)).collect();
+    let q_sub: u128 = moduli.iter().map(|&m| m as u128).product();
+    let n = p.n();
+    let mut out = vec![0i64; n];
+    let mut residues = vec![0u64; use_limbs];
+    for k in 0..n {
+        for i in 0..use_limbs {
+            residues[i] = p.limbs[i][k];
+        }
+        let v = crt_reconstruct(&residues, &moduli);
+        let signed = if v > q_sub / 2 {
+            (v as i128 - q_sub as i128) as i64
+        } else {
+            v as i64
+        };
+        out[k] = signed;
+    }
+    out
+}
+
+/// Decrypt to slot values.
+pub fn decrypt(
+    ctx: &Arc<CkksCtx>,
+    sk: &CkksSecretKey,
+    ct: &CkksCiphertext,
+) -> Vec<C64> {
+    let s_l = sk.s.select_limbs(&(0..ct.level).collect::<Vec<_>>());
+    let mut phase = ct.c1.mul_eval(&s_l);
+    phase.add_assign(&ct.c0);
+    phase.to_coeff();
+    let coeffs = reconstruct_signed(ctx, &phase);
+    ctx.encoder.decode(&coeffs, ct.scale, ct.slots)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::CkksParams;
+
+    pub fn max_err(a: &[C64], b: &[C64]) -> f64 {
+        a.iter()
+            .zip(b.iter())
+            .map(|(x, y)| x.sub(*y).abs())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let ctx = CkksCtx::new(CkksParams::tiny());
+        let mut rng = Rng::seeded(1000);
+        let sk = CkksSecretKey::generate(&ctx, &mut rng);
+        let slots = ctx.params.num_slots();
+        let z: Vec<C64> = (0..slots)
+            .map(|i| C64::new((i as f64 / slots as f64) - 0.5, 0.25))
+            .collect();
+        let ct = encrypt(&ctx, &sk, &z, ctx.params.scale, ctx.max_level(), &mut rng);
+        let back = decrypt(&ctx, &sk, &ct);
+        assert!(max_err(&back, &z) < 1e-4, "err {}", max_err(&back, &z));
+    }
+
+    #[test]
+    fn sparse_slots_roundtrip() {
+        let ctx = CkksCtx::new(CkksParams::tiny());
+        let mut rng = Rng::seeded(1001);
+        let sk = CkksSecretKey::generate(&ctx, &mut rng);
+        let z: Vec<C64> = (0..16).map(|i| C64::from_re(i as f64 * 0.1)).collect();
+        let ct = encrypt(&ctx, &sk, &z, ctx.params.scale, 2, &mut rng);
+        assert_eq!(ct.level, 2);
+        let back = decrypt(&ctx, &sk, &ct);
+        assert!(max_err(&back, &z) < 1e-4);
+    }
+
+    #[test]
+    fn reconstruction_is_exact_for_small_values() {
+        let ctx = CkksCtx::new(CkksParams::tiny());
+        let vals: Vec<i64> = (0..ctx.n() as i64)
+            .map(|i| (i - 512) * 1_000_003)
+            .collect();
+        let p = RnsPoly::from_signed(&ctx.basis, &vals, ctx.max_level());
+        assert_eq!(reconstruct_signed(&ctx, &p), vals);
+    }
+}

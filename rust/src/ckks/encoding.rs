@@ -1,0 +1,317 @@
+//! CKKS canonical-embedding encoder.
+//!
+//! Messages are vectors of N/2 complex slots; encoding evaluates the
+//! inverse special FFT (decimation over the 5^j rotation group of the
+//! 2N-th roots of unity) and scales by Δ. We carry both an O(N log N)
+//! special FFT (production) and an O(N²) naive embedding (test oracle).
+
+use std::f64::consts::PI;
+
+/// Minimal complex arithmetic (no external crates).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
+
+    pub fn new(re: f64, im: f64) -> C64 {
+        C64 { re, im }
+    }
+
+    pub fn from_re(re: f64) -> C64 {
+        C64 { re, im: 0.0 }
+    }
+
+    pub fn expi(theta: f64) -> C64 {
+        C64 {
+            re: theta.cos(),
+            im: theta.sin(),
+        }
+    }
+
+    pub fn conj(self) -> C64 {
+        C64 {
+            re: self.re,
+            im: -self.im,
+        }
+    }
+
+    pub fn add(self, o: C64) -> C64 {
+        C64 {
+            re: self.re + o.re,
+            im: self.im + o.im,
+        }
+    }
+
+    pub fn sub(self, o: C64) -> C64 {
+        C64 {
+            re: self.re - o.re,
+            im: self.im - o.im,
+        }
+    }
+
+    pub fn mul(self, o: C64) -> C64 {
+        C64 {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+
+    pub fn scale(self, k: f64) -> C64 {
+        C64 {
+            re: self.re * k,
+            im: self.im * k,
+        }
+    }
+
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+}
+
+/// Encoder tables for ring degree N (slots = N/2).
+#[derive(Debug, Clone)]
+pub struct Encoder {
+    pub n: usize,
+    pub slots: usize,
+    /// ξ^k = exp(2πik / 2N) for k in [0, 2N).
+    ksi: Vec<C64>,
+    /// rot_group[j] = 5^j mod 2N.
+    rot_group: Vec<usize>,
+}
+
+impl Encoder {
+    pub fn new(n: usize) -> Encoder {
+        assert!(n.is_power_of_two() && n >= 4);
+        let slots = n / 2;
+        let m = 2 * n;
+        let ksi: Vec<C64> = (0..m).map(|k| C64::expi(2.0 * PI * k as f64 / m as f64)).collect();
+        let mut rot_group = vec![0usize; slots];
+        let mut five = 1usize;
+        for r in rot_group.iter_mut() {
+            *r = five;
+            five = five * 5 % m;
+        }
+        Encoder {
+            n,
+            slots,
+            ksi,
+            rot_group,
+        }
+    }
+
+    fn bit_reverse(vals: &mut [C64]) {
+        let n = vals.len();
+        let mut j = 0usize;
+        for i in 1..n {
+            let mut bit = n >> 1;
+            while j & bit != 0 {
+                j ^= bit;
+                bit >>= 1;
+            }
+            j ^= bit;
+            if i < j {
+                vals.swap(i, j);
+            }
+        }
+    }
+
+    /// Special FFT: slot values → embedding evaluations (decode direction).
+    pub fn fft(&self, vals: &mut [C64]) {
+        let size = vals.len();
+        assert!(size.is_power_of_two() && size <= self.slots);
+        let m = 2 * self.n;
+        Self::bit_reverse(vals);
+        let mut len = 2;
+        while len <= size {
+            let lenh = len >> 1;
+            let lenq = len << 2;
+            for i in (0..size).step_by(len) {
+                for j in 0..lenh {
+                    let idx = (self.rot_group[j] % lenq) * m / lenq;
+                    let u = vals[i + j];
+                    let v = vals[i + j + lenh].mul(self.ksi[idx]);
+                    vals[i + j] = u.add(v);
+                    vals[i + j + lenh] = u.sub(v);
+                }
+            }
+            len <<= 1;
+        }
+    }
+
+    /// Inverse special FFT (encode direction).
+    pub fn fft_inv(&self, vals: &mut [C64]) {
+        let size = vals.len();
+        assert!(size.is_power_of_two() && size <= self.slots);
+        let m = 2 * self.n;
+        let mut len = size;
+        while len >= 2 {
+            let lenh = len >> 1;
+            let lenq = len << 2;
+            for i in (0..size).step_by(len) {
+                for j in 0..lenh {
+                    let idx = (lenq - (self.rot_group[j] % lenq)) * m / lenq;
+                    let u = vals[i + j].add(vals[i + j + lenh]);
+                    let v = vals[i + j].sub(vals[i + j + lenh]).mul(self.ksi[idx]);
+                    vals[i + j] = u;
+                    vals[i + j + lenh] = v;
+                }
+            }
+            len >>= 1;
+        }
+        Self::bit_reverse(vals);
+        let inv = 1.0 / size as f64;
+        for v in vals.iter_mut() {
+            *v = v.scale(inv);
+        }
+    }
+
+    /// Encode `z` (≤ N/2 slots, power-of-two length) into signed integer
+    /// polynomial coefficients at scale Δ. Sparse packing replicates the
+    /// embedding across the unused slots as in HEAAN.
+    pub fn encode(&self, z: &[C64], scale: f64) -> Vec<i64> {
+        let size = z.len();
+        assert!(size.is_power_of_two() && size <= self.slots);
+        let mut vals = z.to_vec();
+        self.fft_inv(&mut vals);
+        let gap = self.slots / size;
+        let mut coeffs = vec![0i64; self.n];
+        for (j, v) in vals.iter().enumerate() {
+            coeffs[j * gap] = (v.re * scale).round() as i64;
+            coeffs[j * gap + self.n / 2] = (v.im * scale).round() as i64;
+        }
+        coeffs
+    }
+
+    /// Decode signed coefficients at scale Δ into `size` slots.
+    pub fn decode(&self, coeffs: &[i64], scale: f64, size: usize) -> Vec<C64> {
+        assert_eq!(coeffs.len(), self.n);
+        let gap = self.slots / size;
+        let mut vals: Vec<C64> = (0..size)
+            .map(|j| {
+                C64::new(
+                    coeffs[j * gap] as f64 / scale,
+                    coeffs[j * gap + self.n / 2] as f64 / scale,
+                )
+            })
+            .collect();
+        self.fft(&mut vals);
+        vals
+    }
+
+    /// Naive O(N²) embedding evaluation: p(ζ_j) for ζ_j = ξ^{5^j} — the
+    /// decode oracle used by tests.
+    pub fn decode_naive(&self, coeffs: &[i64], scale: f64) -> Vec<C64> {
+        let m = 2 * self.n;
+        (0..self.slots)
+            .map(|j| {
+                let mut acc = C64::ZERO;
+                for (k, &c) in coeffs.iter().enumerate() {
+                    let idx = self.rot_group[j] * k % m;
+                    acc = acc.add(self.ksi[idx].scale(c as f64));
+                }
+                acc.scale(1.0 / scale)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::sampler::Rng;
+
+    fn random_slots(n: usize, rng: &mut Rng) -> Vec<C64> {
+        (0..n)
+            .map(|_| C64::new(rng.next_f64() * 2.0 - 1.0, rng.next_f64() * 2.0 - 1.0))
+            .collect()
+    }
+
+    #[test]
+    fn fft_roundtrip() {
+        let enc = Encoder::new(64);
+        let mut rng = Rng::seeded(1);
+        let orig = random_slots(32, &mut rng);
+        let mut vals = orig.clone();
+        enc.fft_inv(&mut vals);
+        enc.fft(&mut vals);
+        for (a, b) in vals.iter().zip(orig.iter()) {
+            assert!(a.sub(*b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let enc = Encoder::new(128);
+        let mut rng = Rng::seeded(2);
+        let z = random_slots(64, &mut rng);
+        let scale = (1u64 << 30) as f64;
+        let coeffs = enc.encode(&z, scale);
+        let back = enc.decode(&coeffs, scale, 64);
+        for (a, b) in back.iter().zip(z.iter()) {
+            assert!(a.sub(*b).abs() < 1e-6, "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn decode_matches_naive_embedding() {
+        let enc = Encoder::new(64);
+        let mut rng = Rng::seeded(3);
+        let z = random_slots(32, &mut rng);
+        let scale = (1u64 << 24) as f64;
+        let coeffs = enc.encode(&z, scale);
+        let fast = enc.decode(&coeffs, scale, 32);
+        let naive = enc.decode_naive(&coeffs, scale);
+        for (a, b) in fast.iter().zip(naive.iter()) {
+            assert!(a.sub(*b).abs() < 1e-6, "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn embedding_is_multiplicative() {
+        // decode(poly_mul(encode(x), encode(y))) ≈ x ∘ y — the property
+        // CKKS PMult relies on. Negacyclic poly mult over the integers.
+        let n = 64;
+        let enc = Encoder::new(n);
+        let mut rng = Rng::seeded(4);
+        let x = random_slots(32, &mut rng);
+        let y = random_slots(32, &mut rng);
+        let scale = (1u64 << 20) as f64;
+        let px = enc.encode(&x, scale);
+        let py = enc.encode(&y, scale);
+        // naive signed negacyclic convolution
+        let mut prod = vec![0i128; n];
+        for i in 0..n {
+            for j in 0..n {
+                let v = px[i] as i128 * py[j] as i128;
+                if i + j < n {
+                    prod[i + j] += v;
+                } else {
+                    prod[i + j - n] -= v;
+                }
+            }
+        }
+        let prod_i64: Vec<i64> = prod.iter().map(|&v| v as i64).collect();
+        let out = enc.decode(&prod_i64, scale * scale, 32);
+        for (o, (a, b)) in out.iter().zip(x.iter().zip(y.iter())) {
+            let expect = a.mul(*b);
+            assert!(o.sub(expect).abs() < 1e-3, "{o:?} vs {expect:?}");
+        }
+    }
+
+    #[test]
+    fn sparse_packing_roundtrip() {
+        let enc = Encoder::new(128);
+        let mut rng = Rng::seeded(5);
+        let z = random_slots(8, &mut rng); // 8 slots in a 64-slot ring
+        let scale = (1u64 << 30) as f64;
+        let coeffs = enc.encode(&z, scale);
+        let back = enc.decode(&coeffs, scale, 8);
+        for (a, b) in back.iter().zip(z.iter()) {
+            assert!(a.sub(*b).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! CKKS key material: secret key, relinearization key, rotation keys.
+//!
+//! Key switching uses the SEAL-style per-limb digit decomposition with a
+//! special basis P: one evk row per q-limb, generated once over the full
+//! (Q, P) basis and *truncated* to the live limbs at use time — because
+//! `q̂_i (mod q_j) = 0` for every j ≠ i, the same key is valid at every
+//! level. This is also why the paper's scheduler can cluster operators by
+//! shared evaluation key (§V-B): the key bytes dominate the traffic.
+
+use super::CkksCtx;
+use crate::math::automorph::{galois_eval_map, rotation_to_galois};
+use crate::math::modops::mod_mul;
+use crate::math::poly::{Domain, RnsPoly};
+use crate::math::sampler::Rng;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Secret key: ternary s̃, stored in Eval domain over the full (Q, P) basis.
+pub struct CkksSecretKey {
+    pub s: RnsPoly,
+    /// signed coefficients (for key generation products)
+    pub s_signed: Vec<i64>,
+}
+
+impl CkksSecretKey {
+    pub fn generate(ctx: &Arc<CkksCtx>, rng: &mut Rng) -> Self {
+        let n = ctx.n();
+        let s_signed: Vec<i64> = (0..n)
+            .map(|_| match rng.uniform(3) {
+                0 => 0i64,
+                1 => 1,
+                _ => -1,
+            })
+            .collect();
+        Self::from_signed(ctx, s_signed)
+    }
+
+    /// Sparse ternary secret of Hamming weight `h` — required by
+    /// bootstrapping to bound the ModRaise overflow `|I| ≈ √(h/12)·k`
+    /// (HEAAN practice).
+    pub fn generate_sparse(ctx: &Arc<CkksCtx>, h: usize, rng: &mut Rng) -> Self {
+        let n = ctx.n();
+        assert!(h <= n);
+        let mut s_signed = vec![0i64; n];
+        let mut placed = 0;
+        while placed < h {
+            let idx = rng.uniform(n as u64) as usize;
+            if s_signed[idx] == 0 {
+                s_signed[idx] = if rng.uniform(2) == 0 { 1 } else { -1 };
+                placed += 1;
+            }
+        }
+        Self::from_signed(ctx, s_signed)
+    }
+
+    fn from_signed(ctx: &Arc<CkksCtx>, s_signed: Vec<i64>) -> Self {
+        let all = ctx.basis.moduli.len();
+        let mut s = RnsPoly::from_signed(&ctx.basis, &s_signed, all);
+        s.to_eval();
+        CkksSecretKey { s, s_signed }
+    }
+}
+
+/// One key-switching key: for each digit (q-limb) i, an RLWE pair
+/// `(b_i, a_i)` over the full (Q, P) basis in Eval domain with
+/// `b_i = -a_i·s + e + P·q̂_i·w` on limb q_i only, where `w` is the source
+/// secret (s² for relinearization, σ_k(s) for rotations).
+pub struct KeySwitchKey {
+    /// digit_rows[i] = (b, a)
+    pub digit_rows: Vec<(RnsPoly, RnsPoly)>,
+}
+
+impl KeySwitchKey {
+    /// Generate a KSK transferring `w` (Eval domain, full basis) to `s`.
+    pub fn generate(
+        ctx: &Arc<CkksCtx>,
+        sk: &CkksSecretKey,
+        w: &RnsPoly,
+        rng: &mut Rng,
+    ) -> Self {
+        let n = ctx.n();
+        let all_idx: Vec<usize> = (0..ctx.basis.moduli.len()).collect();
+        let num_q = ctx.basis.num_q;
+        let digit_rows = (0..num_q)
+            .map(|i| {
+                // uniform a over full basis (independent per limb residues of
+                // one underlying uniform value is approximated by independent
+                // uniforms — standard RNS practice for simulators)
+                let a_limbs: Vec<Vec<u64>> = all_idx
+                    .iter()
+                    .map(|&mi| rng.uniform_poly(n, ctx.basis.moduli[mi]))
+                    .collect();
+                let mut a = RnsPoly::from_limbs_idx(
+                    &ctx.basis,
+                    a_limbs,
+                    all_idx.clone(),
+                    Domain::Eval,
+                );
+                let e_signed: Vec<i64> = (0..n)
+                    .map(|_| {
+                        let q0 = ctx.basis.moduli[0];
+                        crate::math::modops::centered(
+                            rng.gaussian(ctx.params.sigma, q0),
+                            q0,
+                        )
+                    })
+                    .collect();
+                let mut e = RnsPoly::from_signed(&ctx.basis, &e_signed, ctx.basis.moduli.len());
+                e.to_eval();
+                // b = -a·s + e
+                let mut b = a.mul_eval(&sk.s).neg();
+                b.add_assign(&e);
+                // + P·q̂_i·w on limb i
+                let qi = ctx.basis.moduli[i];
+                let scale = ctx.p_qhat_mod_qi[i];
+                for k in 0..n {
+                    let term = mod_mul(w.limbs[i][k] % qi, scale, qi);
+                    b.limbs[i][k] = crate::math::modops::mod_add(b.limbs[i][k], term, qi);
+                }
+                let _ = &mut a;
+                (b, a)
+            })
+            .collect();
+        KeySwitchKey { digit_rows }
+    }
+
+    /// Bytes of key material (Table II accounting).
+    pub fn size_bytes(&self) -> u64 {
+        let (b, _) = &self.digit_rows[0];
+        self.digit_rows.len() as u64 * 2 * b.limbs.len() as u64 * b.n() as u64 * 8
+    }
+}
+
+/// Full CKKS key set.
+pub struct CkksKeys {
+    pub sk: CkksSecretKey,
+    /// relinearization key (w = s²)
+    pub relin: KeySwitchKey,
+    /// rotation keys by Galois exponent k (w = σ_k(s))
+    pub rot: BTreeMap<usize, KeySwitchKey>,
+}
+
+impl CkksKeys {
+    /// Generate sk + relin + rotation keys for the given slot rotations
+    /// (negative allowed) and optionally conjugation (k = 2N-1).
+    pub fn generate(
+        ctx: &Arc<CkksCtx>,
+        rotations: &[i64],
+        with_conj: bool,
+        rng: &mut Rng,
+    ) -> Self {
+        let sk = CkksSecretKey::generate(ctx, rng);
+        Self::generate_with_sk(ctx, sk, rotations, with_conj, rng)
+    }
+
+    /// Same, with a caller-provided secret (e.g. sparse for bootstrapping).
+    pub fn generate_with_sk(
+        ctx: &Arc<CkksCtx>,
+        sk: CkksSecretKey,
+        rotations: &[i64],
+        with_conj: bool,
+        rng: &mut Rng,
+    ) -> Self {
+        let s2 = sk.s.mul_eval(&sk.s);
+        let relin = KeySwitchKey::generate(ctx, &sk, &s2, rng);
+        let mut rot = BTreeMap::new();
+        let n = ctx.n();
+        let mut galois_elems: Vec<usize> = rotations
+            .iter()
+            .map(|&r| rotation_to_galois(r, n))
+            .collect();
+        if with_conj {
+            galois_elems.push(2 * n - 1);
+        }
+        for k in galois_elems {
+            if rot.contains_key(&k) || k == 1 {
+                continue;
+            }
+            let map = galois_eval_map(n, k);
+            let sk_rot = sk.s.galois_eval(&map);
+            rot.insert(k, KeySwitchKey::generate(ctx, &sk, &sk_rot, rng));
+        }
+        CkksKeys { sk, relin, rot }
+    }
+
+    pub fn rot_key(&self, k: usize) -> &KeySwitchKey {
+        self.rot
+            .get(&k)
+            .unwrap_or_else(|| panic!("no rotation key for Galois element {k}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::CkksParams;
+
+    #[test]
+    fn keygen_produces_full_basis_keys() {
+        let ctx = CkksCtx::new(CkksParams::tiny());
+        let mut rng = Rng::seeded(900);
+        let keys = CkksKeys::generate(&ctx, &[1, -1], true, &mut rng);
+        let total = ctx.basis.moduli.len();
+        assert_eq!(keys.sk.s.num_limbs(), total);
+        assert_eq!(keys.relin.digit_rows.len(), ctx.basis.num_q);
+        for (b, a) in &keys.relin.digit_rows {
+            assert_eq!(b.num_limbs(), total);
+            assert_eq!(a.num_limbs(), total);
+            assert_eq!(b.domain, Domain::Eval);
+        }
+        // rotations 1, -1 and conjugation
+        assert_eq!(keys.rot.len(), 3);
+        assert!(keys.relin.size_bytes() > 0);
+    }
+}

@@ -1,0 +1,130 @@
+//! RNS-CKKS: approximate homomorphic arithmetic over complex slots
+//! (§II-D(1) operators: HAdd, PMult, CMult, KeySwith, HRot, rescale,
+//! and fully-packed bootstrapping in [`bootstrap`]).
+
+pub mod bootstrap;
+pub mod ciphertext;
+pub mod encoding;
+pub mod keys;
+pub mod ops;
+
+use crate::math::modops::{mod_inv, mod_mul};
+use crate::math::rns::{BConvTable, RnsBasis};
+use crate::params::CkksParams;
+use encoding::Encoder;
+use std::sync::Arc;
+
+/// Shared CKKS context: basis, encoder, key-switching precomputations.
+pub struct CkksCtx {
+    pub params: CkksParams,
+    pub basis: Arc<RnsBasis>,
+    pub encoder: Encoder,
+    /// `(q̂_i^{-1}) mod q_i` over the FULL tower (level-independent digit
+    /// decomposition — see keys.rs).
+    pub qhat_inv: Vec<u64>,
+    /// `[P·q̂_i] mod q_i` — the evk message scaling per digit.
+    pub p_qhat_mod_qi: Vec<u64>,
+    /// BConv table P → full Q tower (Moddown, Eq. 5).
+    pub p_to_q: BConvTable,
+    /// `P^{-1} mod q_j` per q limb.
+    pub p_inv_mod_q: Vec<u64>,
+    /// `q_l^{-1} mod q_j` for rescale: `rescale_inv[l][j]`, j < l.
+    pub rescale_inv: Vec<Vec<u64>>,
+}
+
+impl CkksCtx {
+    pub fn new(params: CkksParams) -> Arc<Self> {
+        let basis = RnsBasis::new(params.n, &params.q_moduli, &params.p_moduli);
+        let encoder = Encoder::new(params.n);
+        let q = &params.q_moduli;
+        let p = &params.p_moduli;
+        let l_max = q.len();
+        let mut qhat_inv = vec![0u64; l_max];
+        let mut p_qhat_mod_qi = vec![0u64; l_max];
+        for i in 0..l_max {
+            let qi = q[i];
+            let mut hat = 1u64;
+            for (k, &qk) in q.iter().enumerate() {
+                if k != i {
+                    hat = mod_mul(hat, qk % qi, qi);
+                }
+            }
+            qhat_inv[i] = mod_inv(hat, qi);
+            let mut ph = hat;
+            for &pj in p {
+                ph = mod_mul(ph, pj % qi, qi);
+            }
+            p_qhat_mod_qi[i] = ph;
+        }
+        let p_to_q = BConvTable::new(p, q);
+        let p_inv_mod_q = q
+            .iter()
+            .map(|&qj| {
+                let mut pm = 1u64;
+                for &pp in p {
+                    pm = mod_mul(pm, pp % qj, qj);
+                }
+                mod_inv(pm, qj)
+            })
+            .collect();
+        let rescale_inv = (0..l_max)
+            .map(|l| {
+                (0..l)
+                    .map(|j| mod_inv(q[l] % q[j], q[j]))
+                    .collect()
+            })
+            .collect();
+        Arc::new(CkksCtx {
+            params,
+            basis,
+            encoder,
+            qhat_inv,
+            p_qhat_mod_qi,
+            p_to_q,
+            p_inv_mod_q,
+            rescale_inv,
+        })
+    }
+
+    pub fn max_level(&self) -> usize {
+        self.params.q_moduli.len()
+    }
+
+    pub fn n(&self) -> usize {
+        self.params.n
+    }
+
+    /// Limb indices of the joint (Q_level, P) basis used during keyswitch.
+    pub fn joint_idx(&self, level: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..level).collect();
+        idx.extend(self.basis.num_q..self.basis.moduli.len());
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_precomputations_consistent() {
+        let ctx = CkksCtx::new(CkksParams::tiny());
+        let q = &ctx.params.q_moduli;
+        for i in 0..q.len() {
+            // q̂_i · q̂_i^{-1} ≡ 1 mod q_i
+            let mut hat = 1u64;
+            for (k, &qk) in q.iter().enumerate() {
+                if k != i {
+                    hat = mod_mul(hat, qk % q[i], q[i]);
+                }
+            }
+            assert_eq!(mod_mul(hat, ctx.qhat_inv[i], q[i]), 1);
+        }
+        // rescale_inv[l][j]·q_l ≡ 1 mod q_j
+        for l in 1..q.len() {
+            for j in 0..l {
+                assert_eq!(mod_mul(ctx.rescale_inv[l][j], q[l] % q[j], q[j]), 1);
+            }
+        }
+    }
+}

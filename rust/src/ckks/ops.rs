@@ -1,0 +1,462 @@
+//! CKKS homomorphic operators (§II-D(1)): HAdd, PMult, CMult (with
+//! KeySwith), HRot, rescale. The KeySwith core follows the paper's Modup →
+//! (NTT, MMult, MAdd) → Moddown decomposition (Fig. 4(b)); the scheduler
+//! (`sched::oplevel`) mirrors exactly this structure when emitting
+//! micro-ops.
+
+use super::ciphertext::CkksCiphertext;
+use super::keys::{CkksKeys, KeySwitchKey};
+use super::CkksCtx;
+use crate::math::automorph::{galois_eval_map, rotation_to_galois};
+use crate::math::modops::{mod_mul, mod_sub};
+use crate::math::poly::{Domain, RnsPoly};
+use std::sync::Arc;
+
+fn assert_aligned(a: &CkksCiphertext, b: &CkksCiphertext) {
+    assert_eq!(a.level, b.level, "level mismatch");
+    // Tolerant alignment: rescale by distinct ~28-bit primes leaves a
+    // sub-percent scale drift; treat it as (tracked) approximation error
+    // rather than forcing scale-correction multiplications.
+    assert!(
+        (a.scale / b.scale - 1.0).abs() < 0.02,
+        "scale mismatch: {} vs {}",
+        a.scale,
+        b.scale
+    );
+    assert_eq!(a.slots, b.slots, "slot count mismatch");
+}
+
+/// HAdd: coefficient-wise addition.
+pub fn add(a: &CkksCiphertext, b: &CkksCiphertext) -> CkksCiphertext {
+    assert_aligned(a, b);
+    CkksCiphertext {
+        c0: a.c0.add(&b.c0),
+        c1: a.c1.add(&b.c1),
+        scale: a.scale,
+        level: a.level,
+        slots: a.slots,
+    }
+}
+
+pub fn sub(a: &CkksCiphertext, b: &CkksCiphertext) -> CkksCiphertext {
+    assert_aligned(a, b);
+    CkksCiphertext {
+        c0: a.c0.sub(&b.c0),
+        c1: a.c1.sub(&b.c1),
+        scale: a.scale,
+        level: a.level,
+        slots: a.slots,
+    }
+}
+
+pub fn neg(a: &CkksCiphertext) -> CkksCiphertext {
+    CkksCiphertext {
+        c0: a.c0.neg(),
+        c1: a.c1.neg(),
+        scale: a.scale,
+        level: a.level,
+        slots: a.slots,
+    }
+}
+
+/// PMult: multiply by an encoded plaintext polynomial (Eval domain, same
+/// level). Output scale multiplies; caller typically rescales.
+pub fn mul_plain(ct: &CkksCiphertext, plain: &RnsPoly, plain_scale: f64) -> CkksCiphertext {
+    assert_eq!(plain.num_limbs(), ct.level, "plaintext level mismatch");
+    CkksCiphertext {
+        c0: ct.c0.mul_eval(plain),
+        c1: ct.c1.mul_eval(plain),
+        scale: ct.scale * plain_scale,
+        level: ct.level,
+        slots: ct.slots,
+    }
+}
+
+/// Add an encoded plaintext (same scale & level).
+pub fn add_plain(ct: &CkksCiphertext, plain: &RnsPoly) -> CkksCiphertext {
+    CkksCiphertext {
+        c0: ct.c0.add(plain),
+        c1: ct.c1.clone(),
+        scale: ct.scale,
+        level: ct.level,
+        slots: ct.slots,
+    }
+}
+
+/// Multiply by a real scalar via integer scaling at Δ (consumes a level on
+/// rescale).
+pub fn mul_scalar(ctx: &Arc<CkksCtx>, ct: &CkksCiphertext, k: f64) -> CkksCiphertext {
+    let delta = ctx.params.scale;
+    let ki = (k * delta).round() as i64;
+    let mut c0 = ct.c0.clone();
+    let mut c1 = ct.c1.clone();
+    let scalars: Vec<u64> = (0..ct.level)
+        .map(|i| crate::math::modops::from_signed(ki, ctx.basis.moduli[i]))
+        .collect();
+    c0.mul_scalar_per_limb(&scalars);
+    c1.mul_scalar_per_limb(&scalars);
+    CkksCiphertext {
+        c0,
+        c1,
+        scale: ct.scale * delta,
+        level: ct.level,
+        slots: ct.slots,
+    }
+}
+
+/// Rescale: divide by the last live modulus, dropping one level.
+/// `c'_j = (c_j − c_last) · q_last^{-1} mod q_j` (Eq. 5 specialised to a
+/// single-modulus P = q_last).
+pub fn rescale(ctx: &Arc<CkksCtx>, ct: &CkksCiphertext) -> CkksCiphertext {
+    assert!(ct.level >= 2, "cannot rescale at level 1");
+    let l = ct.level - 1; // index of dropped limb
+    let q_last = ctx.basis.moduli[l];
+    let drop = |p: &RnsPoly| -> RnsPoly {
+        let mut c = p.clone();
+        c.to_coeff();
+        let last = c.limbs[l].clone();
+        let mut limbs = Vec::with_capacity(l);
+        for j in 0..l {
+            let qj = ctx.basis.moduli[j];
+            let inv = ctx.rescale_inv[l][j];
+            let limb: Vec<u64> = c.limbs[j]
+                .iter()
+                .zip(last.iter())
+                .map(|(&cj, &cl)| {
+                    // centered lift of c_last into q_j
+                    let cl_j = crate::math::modops::from_signed(
+                        crate::math::modops::centered(cl, q_last),
+                        qj,
+                    );
+                    mod_mul(mod_sub(cj, cl_j, qj), inv, qj)
+                })
+                .collect();
+            limbs.push(limb);
+        }
+        let mut out = RnsPoly::from_limbs(&ctx.basis, limbs, Domain::Coeff);
+        out.to_eval();
+        out
+    };
+    CkksCiphertext {
+        c0: drop(&ct.c0),
+        c1: drop(&ct.c1),
+        scale: ct.scale / q_last as f64,
+        level: l,
+        slots: ct.slots,
+    }
+}
+
+/// Drop to a target level without rescaling (level alignment for HAdd).
+pub fn mod_down_to(ctx: &Arc<CkksCtx>, ct: &CkksCiphertext, level: usize) -> CkksCiphertext {
+    assert!(level <= ct.level);
+    let keep: Vec<usize> = (0..level).collect();
+    let _ = ctx;
+    CkksCiphertext {
+        c0: ct.c0.select_limbs(&keep),
+        c1: ct.c1.select_limbs(&keep),
+        scale: ct.scale,
+        level,
+        slots: ct.slots,
+    }
+}
+
+/// The KeySwith core (Fig. 4(b) steps ②–⑨): given `d` over Q_l (Eval),
+/// return `(b, a)` over Q_l (Eval) with `b + a·s ≈ d·w` where `w` is the
+/// key's source secret.
+///
+/// Pipeline: per-digit Modup (exact single-limb base extension) → NTT →
+/// MMult/MAdd against the evk rows → INTT → Moddown (BConv, Eq. 5).
+pub fn key_switch_core(
+    ctx: &Arc<CkksCtx>,
+    ksk: &KeySwitchKey,
+    d: &RnsPoly,
+) -> (RnsPoly, RnsPoly) {
+    let level = d.num_limbs();
+    let n = ctx.n();
+    let joint = ctx.joint_idx(level);
+    // d in coeff domain for digit extraction
+    let mut d_coeff = d.clone();
+    d_coeff.to_coeff();
+    let mut acc_b = RnsPoly::zero_idx(&ctx.basis, joint.clone(), Domain::Eval);
+    let mut acc_a = RnsPoly::zero_idx(&ctx.basis, joint.clone(), Domain::Eval);
+    for i in 0..level {
+        let qi = ctx.basis.moduli[i];
+        // D_i = [d · q̂_i^{-1}]_{q_i}
+        let scaled: Vec<u64> = d_coeff.limbs[i]
+            .iter()
+            .map(|&c| mod_mul(c, ctx.qhat_inv[i], qi))
+            .collect();
+        // exact base extension of the small digit to the joint basis
+        let limbs: Vec<Vec<u64>> = joint
+            .iter()
+            .map(|&mi| {
+                let m = ctx.basis.moduli[mi];
+                if mi == i {
+                    scaled.clone()
+                } else {
+                    scaled
+                        .iter()
+                        .map(|&v| {
+                            crate::math::modops::from_signed(
+                                crate::math::modops::centered(v, qi),
+                                m,
+                            )
+                        })
+                        .collect()
+                }
+            })
+            .collect();
+        let mut digit =
+            RnsPoly::from_limbs_idx(&ctx.basis, limbs, joint.clone(), Domain::Coeff);
+        digit.to_eval();
+        // MMult–MAdd against the evk row (truncated to the joint basis)
+        let (row_b, row_a) = &ksk.digit_rows[i];
+        let row_b_t = row_b.select_limbs(&joint);
+        let row_a_t = row_a.select_limbs(&joint);
+        acc_b.fma_eval(&digit, &row_b_t);
+        acc_a.fma_eval(&digit, &row_a_t);
+    }
+    // Moddown (Eq. 5): drop P
+    let moddown = |acc: &mut RnsPoly| -> RnsPoly {
+        acc.to_coeff();
+        let p_limbs: Vec<Vec<u64>> = acc.limbs[level..].to_vec();
+        let conv_all = ctx.p_to_q.convert(&p_limbs); // over ALL q limbs
+        let limbs: Vec<Vec<u64>> = (0..level)
+            .map(|j| {
+                let qj = ctx.basis.moduli[j];
+                let pinv = ctx.p_inv_mod_q[j];
+                acc.limbs[j]
+                    .iter()
+                    .zip(conv_all[j].iter())
+                    .map(|(&x, &c)| mod_mul(mod_sub(x, c, qj), pinv, qj))
+                    .collect()
+            })
+            .collect();
+        let mut out = RnsPoly::from_limbs(&ctx.basis, limbs, Domain::Coeff);
+        out.to_eval();
+        out
+    };
+    let _ = n;
+    (moddown(&mut acc_b), moddown(&mut acc_a))
+}
+
+/// CMult with relinearization: tensor product then KeySwith of the `c1·c1'`
+/// term. Output scale is the product; callers rescale.
+pub fn mul(ctx: &Arc<CkksCtx>, keys: &CkksKeys, a: &CkksCiphertext, b: &CkksCiphertext) -> CkksCiphertext {
+    // Unlike add, multiplication tolerates unequal operand scales —
+    // the result scale is simply the product.
+    assert_eq!(a.level, b.level, "level mismatch");
+    assert_eq!(a.slots, b.slots, "slot count mismatch");
+    let d0 = a.c0.mul_eval(&b.c0);
+    let mut d1 = a.c0.mul_eval(&b.c1);
+    d1.add_assign(&a.c1.mul_eval(&b.c0));
+    let d2 = a.c1.mul_eval(&b.c1);
+    let (ks_b, ks_a) = key_switch_core(ctx, &keys.relin, &d2);
+    let mut c0 = d0;
+    c0.add_assign(&ks_b);
+    let mut c1 = d1;
+    c1.add_assign(&ks_a);
+    CkksCiphertext {
+        c0,
+        c1,
+        scale: a.scale * b.scale,
+        level: a.level,
+        slots: a.slots,
+    }
+}
+
+/// Square (saves one tensor product).
+pub fn square(ctx: &Arc<CkksCtx>, keys: &CkksKeys, a: &CkksCiphertext) -> CkksCiphertext {
+    mul(ctx, keys, a, a)
+}
+
+/// HRot: rotate slots left by `r` via the Galois automorphism σ_{5^r} plus
+/// KeySwith with the rotation key.
+pub fn rotate(ctx: &Arc<CkksCtx>, keys: &CkksKeys, ct: &CkksCiphertext, r: i64) -> CkksCiphertext {
+    if r == 0 {
+        return ct.clone();
+    }
+    let k = rotation_to_galois(r, ctx.n());
+    rotate_galois(ctx, keys, ct, k)
+}
+
+/// Rotation/conjugation by explicit Galois element `k`.
+pub fn rotate_galois(
+    ctx: &Arc<CkksCtx>,
+    keys: &CkksKeys,
+    ct: &CkksCiphertext,
+    k: usize,
+) -> CkksCiphertext {
+    let map = galois_eval_map(ctx.n(), k);
+    let c0_rot = ct.c0.galois_eval(&map);
+    let c1_rot = ct.c1.galois_eval(&map);
+    let (ks_b, ks_a) = key_switch_core(ctx, keys.rot_key(k), &c1_rot);
+    let mut c0 = c0_rot;
+    c0.add_assign(&ks_b);
+    CkksCiphertext {
+        c0,
+        c1: ks_a,
+        scale: ct.scale,
+        level: ct.level,
+        slots: ct.slots,
+    }
+}
+
+/// Complex conjugation of all slots (Galois element 2N−1).
+pub fn conjugate(ctx: &Arc<CkksCtx>, keys: &CkksKeys, ct: &CkksCiphertext) -> CkksCiphertext {
+    rotate_galois(ctx, keys, ct, 2 * ctx.n() - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::ciphertext::{decrypt, encode_plaintext, encrypt};
+    use crate::ckks::encoding::C64;
+    use crate::ckks::keys::CkksKeys;
+    use crate::math::sampler::Rng;
+    use crate::params::CkksParams;
+
+    struct Fx {
+        ctx: Arc<CkksCtx>,
+        keys: CkksKeys,
+        rng: Rng,
+    }
+
+    fn setup() -> Fx {
+        let ctx = CkksCtx::new(CkksParams::tiny());
+        let mut rng = Rng::seeded(1100);
+        let keys = CkksKeys::generate(&ctx, &[1, 2, -1], true, &mut rng);
+        Fx { ctx, keys, rng }
+    }
+
+    fn ramp(slots: usize) -> Vec<C64> {
+        (0..slots)
+            .map(|i| C64::new(0.8 * (i as f64 / slots as f64) - 0.4, 0.1))
+            .collect()
+    }
+
+    fn max_err(a: &[C64], b: &[C64]) -> f64 {
+        a.iter()
+            .zip(b.iter())
+            .map(|(x, y)| x.sub(*y).abs())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn hadd_and_hsub() {
+        let mut f = setup();
+        let slots = f.ctx.params.num_slots();
+        let z = ramp(slots);
+        let level = f.ctx.max_level();
+        let c1 = encrypt(&f.ctx, &f.keys.sk, &z, f.ctx.params.scale, level, &mut f.rng);
+        let c2 = encrypt(&f.ctx, &f.keys.sk, &z, f.ctx.params.scale, level, &mut f.rng);
+        let sum = decrypt(&f.ctx, &f.keys.sk, &add(&c1, &c2));
+        let expect: Vec<C64> = z.iter().map(|v| v.scale(2.0)).collect();
+        assert!(max_err(&sum, &expect) < 1e-3);
+        let diff = decrypt(&f.ctx, &f.keys.sk, &sub(&c1, &c2));
+        let zero: Vec<C64> = z.iter().map(|_| C64::ZERO).collect();
+        assert!(max_err(&diff, &zero) < 1e-3);
+    }
+
+    #[test]
+    fn pmult_with_rescale() {
+        let mut f = setup();
+        let slots = f.ctx.params.num_slots();
+        let z = ramp(slots);
+        let w: Vec<C64> = (0..slots).map(|i| C64::from_re(((i % 5) as f64) * 0.2 - 0.4)).collect();
+        let level = f.ctx.max_level();
+        let ct = encrypt(&f.ctx, &f.keys.sk, &z, f.ctx.params.scale, level, &mut f.rng);
+        let plain = encode_plaintext(&f.ctx, &w, f.ctx.params.scale, level);
+        let prod = rescale(&f.ctx, &mul_plain(&ct, &plain, f.ctx.params.scale));
+        assert_eq!(prod.level, level - 1);
+        let got = decrypt(&f.ctx, &f.keys.sk, &prod);
+        let expect: Vec<C64> = z.iter().zip(w.iter()).map(|(a, b)| a.mul(*b)).collect();
+        assert!(max_err(&got, &expect) < 1e-2, "err {}", max_err(&got, &expect));
+    }
+
+    #[test]
+    fn cmult_relinearized() {
+        let mut f = setup();
+        let slots = f.ctx.params.num_slots();
+        let z1 = ramp(slots);
+        let z2: Vec<C64> = (0..slots).map(|i| C64::from_re(0.3 - (i % 3) as f64 * 0.1)).collect();
+        let level = f.ctx.max_level();
+        let c1 = encrypt(&f.ctx, &f.keys.sk, &z1, f.ctx.params.scale, level, &mut f.rng);
+        let c2 = encrypt(&f.ctx, &f.keys.sk, &z2, f.ctx.params.scale, level, &mut f.rng);
+        let prod = rescale(&f.ctx, &mul(&f.ctx, &f.keys, &c1, &c2));
+        let got = decrypt(&f.ctx, &f.keys.sk, &prod);
+        let expect: Vec<C64> = z1.iter().zip(z2.iter()).map(|(a, b)| a.mul(*b)).collect();
+        assert!(max_err(&got, &expect) < 1e-2, "err {}", max_err(&got, &expect));
+    }
+
+    #[test]
+    fn multiplication_depth_two() {
+        let mut f = setup();
+        let slots = f.ctx.params.num_slots();
+        let z = ramp(slots);
+        let level = f.ctx.max_level();
+        let ct = encrypt(&f.ctx, &f.keys.sk, &z, f.ctx.params.scale, level, &mut f.rng);
+        let sq = rescale(&f.ctx, &square(&f.ctx, &f.keys, &ct));
+        let quad = rescale(&f.ctx, &square(&f.ctx, &f.keys, &sq));
+        let got = decrypt(&f.ctx, &f.keys.sk, &quad);
+        let expect: Vec<C64> = z.iter().map(|v| v.mul(*v).mul(v.mul(*v))).collect();
+        assert!(max_err(&got, &expect) < 5e-2, "err {}", max_err(&got, &expect));
+    }
+
+    #[test]
+    fn rotation_shifts_slots() {
+        let mut f = setup();
+        let slots = f.ctx.params.num_slots();
+        let z: Vec<C64> = (0..slots).map(|i| C64::from_re(i as f64 / slots as f64)).collect();
+        let level = f.ctx.max_level();
+        let ct = encrypt(&f.ctx, &f.keys.sk, &z, f.ctx.params.scale, level, &mut f.rng);
+        for r in [1i64, 2, -1] {
+            let rot = rotate(&f.ctx, &f.keys, &ct, r);
+            let got = decrypt(&f.ctx, &f.keys.sk, &rot);
+            let expect: Vec<C64> = (0..slots)
+                .map(|i| z[(i as i64 + r).rem_euclid(slots as i64) as usize])
+                .collect();
+            assert!(max_err(&got, &expect) < 1e-2, "r={r} err {}", max_err(&got, &expect));
+        }
+    }
+
+    #[test]
+    fn conjugation() {
+        let mut f = setup();
+        let slots = f.ctx.params.num_slots();
+        let z = ramp(slots);
+        let level = f.ctx.max_level();
+        let ct = encrypt(&f.ctx, &f.keys.sk, &z, f.ctx.params.scale, level, &mut f.rng);
+        let conj = conjugate(&f.ctx, &f.keys, &ct);
+        let got = decrypt(&f.ctx, &f.keys.sk, &conj);
+        let expect: Vec<C64> = z.iter().map(|v| v.conj()).collect();
+        assert!(max_err(&got, &expect) < 1e-2);
+    }
+
+    #[test]
+    fn scalar_multiplication() {
+        let mut f = setup();
+        let slots = f.ctx.params.num_slots();
+        let z = ramp(slots);
+        let level = f.ctx.max_level();
+        let ct = encrypt(&f.ctx, &f.keys.sk, &z, f.ctx.params.scale, level, &mut f.rng);
+        let scaled = rescale(&f.ctx, &mul_scalar(&f.ctx, &ct, 1.5));
+        let got = decrypt(&f.ctx, &f.keys.sk, &scaled);
+        let expect: Vec<C64> = z.iter().map(|v| v.scale(1.5)).collect();
+        assert!(max_err(&got, &expect) < 1e-2);
+    }
+
+    #[test]
+    fn level_alignment_for_add() {
+        let mut f = setup();
+        let slots = f.ctx.params.num_slots();
+        let z = ramp(slots);
+        let level = f.ctx.max_level();
+        let c_full = encrypt(&f.ctx, &f.keys.sk, &z, f.ctx.params.scale, level, &mut f.rng);
+        let c_low = encrypt(&f.ctx, &f.keys.sk, &z, f.ctx.params.scale, level - 1, &mut f.rng);
+        let aligned = mod_down_to(&f.ctx, &c_full, level - 1);
+        let sum = decrypt(&f.ctx, &f.keys.sk, &add(&aligned, &c_low));
+        let expect: Vec<C64> = z.iter().map(|v| v.scale(2.0)).collect();
+        assert!(max_err(&sum, &expect) < 1e-3);
+    }
+}

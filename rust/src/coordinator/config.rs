@@ -1,0 +1,108 @@
+//! Coordinator configuration: TOML-subset file + CLI overrides.
+
+use crate::hw::{DimmConfig, DramTiming};
+use crate::util::toml_lite;
+use anyhow::{anyhow, Result};
+
+/// Full system configuration (one file drives the launcher, the hardware
+/// model and the scheduler).
+#[derive(Debug, Clone)]
+pub struct ApacheConfig {
+    pub dimms: usize,
+    pub host_bw: f64,
+    pub dimm: DimmConfig,
+    pub artifacts_dir: String,
+    /// execute the numeric hot path through PJRT artifacts
+    pub use_runtime: bool,
+    pub worker_threads: usize,
+}
+
+impl Default for ApacheConfig {
+    fn default() -> Self {
+        ApacheConfig {
+            dimms: 2,
+            host_bw: 30e9,
+            dimm: DimmConfig::paper(),
+            artifacts_dir: "artifacts".into(),
+            use_runtime: false,
+            worker_threads: 2,
+        }
+    }
+}
+
+impl ApacheConfig {
+    /// Parse from TOML-subset text. Unknown keys are ignored (forward
+    /// compatibility); malformed values error.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = toml_lite::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut cfg = ApacheConfig::default();
+        cfg.dimms = doc.get_int("system", "dimms", cfg.dimms as i64) as usize;
+        cfg.host_bw = doc.get_float("system", "host_bw_gbs", 30.0) * 1e9;
+        cfg.use_runtime = doc.get_bool("system", "use_runtime", cfg.use_runtime);
+        cfg.worker_threads =
+            doc.get_int("system", "worker_threads", cfg.worker_threads as i64) as usize;
+        cfg.artifacts_dir = doc
+            .get_str("system", "artifacts_dir", &cfg.artifacts_dir)
+            .to_string();
+        let d = &mut cfg.dimm;
+        d.ranks = doc.get_int("dimm", "ranks", d.ranks as i64) as usize;
+        d.mts = doc.get_int("dimm", "mts", d.mts as i64) as u64;
+        d.clock_hz = (doc.get_float("dimm", "clock_ghz", 1.0) * 1e9) as u64;
+        d.ntt_units = doc.get_int("dimm", "ntt_units", d.ntt_units as i64) as usize;
+        d.mmult_lanes = doc.get_int("dimm", "mmult_lanes", d.mmult_lanes as i64) as usize;
+        d.madd_lanes = doc.get_int("dimm", "madd_lanes", d.madd_lanes as i64) as usize;
+        d.imc_ks = doc.get_bool("dimm", "imc_ks", d.imc_ks);
+        d.dual32 = doc.get_bool("dimm", "dual32", d.dual32);
+        d.routine2 = doc.get_bool("dimm", "routine2", d.routine2);
+        d.timing = DramTiming::ddr4_3200();
+        if cfg.dimms == 0 {
+            return Err(anyhow!("system.dimms must be >= 1"));
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self> {
+        Self::from_toml(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ApacheConfig::from_toml(
+            r#"
+[system]
+dimms = 8
+host_bw_gbs = 25.0
+use_runtime = true
+[dimm]
+ranks = 4
+ntt_units = 2
+imc_ks = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.dimms, 8);
+        assert!((cfg.host_bw - 25e9).abs() < 1.0);
+        assert!(cfg.use_runtime);
+        assert_eq!(cfg.dimm.ranks, 4);
+        assert_eq!(cfg.dimm.ntt_units, 2);
+        assert!(!cfg.dimm.imc_ks);
+        // untouched fields keep defaults
+        assert_eq!(cfg.dimm.mmult_lanes, 256);
+    }
+
+    #[test]
+    fn zero_dimms_rejected() {
+        assert!(ApacheConfig::from_toml("[system]\ndimms = 0\n").is_err());
+    }
+
+    #[test]
+    fn defaults_on_empty() {
+        let cfg = ApacheConfig::from_toml("").unwrap();
+        assert_eq!(cfg.dimms, 2);
+    }
+}

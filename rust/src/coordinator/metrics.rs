@@ -1,0 +1,89 @@
+//! Metrics registry: counters and latency aggregates, JSON-exportable.
+
+use crate::util::jsonw::Json;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    latencies: BTreeMap<String, Vec<f64>>,
+}
+
+/// Thread-safe metrics sink shared by leader + workers.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn observe(&self, name: &str, seconds: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies.entry(name.to_string()).or_default().push(seconds);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn percentile(&self, name: &str, p: f64) -> Option<f64> {
+        let g = self.inner.lock().unwrap();
+        let v = g.latencies.get(name)?;
+        if v.is_empty() {
+            return None;
+        }
+        let mut s = v.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() - 1) as f64 * p).round() as usize;
+        Some(s[idx])
+    }
+
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let mut counters = Json::obj();
+        for (k, v) in &g.counters {
+            counters = counters.put(k, *v);
+        }
+        let mut lats = Json::obj();
+        for (k, v) in &g.latencies {
+            let mut s = v.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mean = s.iter().sum::<f64>() / s.len().max(1) as f64;
+            lats = lats.put(
+                k,
+                Json::obj()
+                    .put("count", s.len())
+                    .put("mean_s", mean)
+                    .put("p50_s", s[s.len() / 2])
+                    .put("p99_s", s[(s.len() - 1) * 99 / 100]),
+            );
+        }
+        Json::obj().put("counters", counters).put("latencies", lats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_percentiles() {
+        let m = Metrics::default();
+        m.incr("ops", 3);
+        m.incr("ops", 2);
+        assert_eq!(m.counter("ops"), 5);
+        for i in 1..=100 {
+            m.observe("lat", i as f64 / 1000.0);
+        }
+        assert!((m.percentile("lat", 0.5).unwrap() - 0.050).abs() < 0.002);
+        assert!(m.percentile("lat", 0.99).unwrap() > 0.098);
+        assert!(m.percentile("missing", 0.5).is_none());
+        let js = m.to_json().render();
+        assert!(js.contains("\"ops\":5"));
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator: the leader process that owns the event loop, process
+//! topology, metrics and CLI (§III-B architectural overview).
+//!
+//! std-thread + mpsc based (no async runtime in the offline vendor set):
+//! a leader thread pulls FHE tasks off a queue, runs the §V scheduler, and
+//! dispatches per-DIMM work to worker threads. Worker "DIMMs" advance the
+//! hardware model (cycle/bandwidth accounting) and optionally execute the
+//! numeric hot path through the PJRT artifacts.
+
+pub mod config;
+pub mod metrics;
+pub mod server;
+
+pub use config::ApacheConfig;
+pub use metrics::Metrics;
+pub use server::{Coordinator, TaskRequest, TaskResult};

@@ -1,0 +1,94 @@
+//! Area / thermal-design-power roll-up (Table IV, 22 nm Synopsys DC
+//! estimates reproduced as per-component constants).
+
+use super::DimmConfig;
+
+/// Per-component area (mm²) and power (W) of one NMC module.
+#[derive(Debug, Clone)]
+pub struct AreaPower {
+    pub components: Vec<(String, f64, f64)>,
+}
+
+impl AreaPower {
+    /// Table IV constants, scaled by the instantiated component counts.
+    pub fn of(cfg: &DimmConfig) -> AreaPower {
+        // per-unit constants derived from Table IV (counts in comments)
+        let ntt_area = 13.04 / 4.0; // 64-point (I)NTT ×4
+        let ntt_pow = 6.28 / 4.0;
+        let auto_area = 2.4 / 2.0; // Automorphism ×2
+        let auto_pow = 0.6 / 2.0;
+        let dec_area = 0.03 / 2.0; // Decomposition ×2
+        let dec_pow = 0.02 / 2.0;
+        let mm_area = 5.0 / 512.0; // Modular Multiplier ×256×2
+        let mm_pow = 3.01 / 512.0;
+        let ma_area = 0.36 / 512.0; // Modular Adder ×256×2
+        let ma_pow = 0.39 / 512.0;
+        let mut c = vec![
+            (
+                format!("64-point (I)NTT x {}", cfg.ntt_units),
+                ntt_area * cfg.ntt_units as f64,
+                ntt_pow * cfg.ntt_units as f64,
+            ),
+            (
+                format!("Automorphism x {}", cfg.auto_units),
+                auto_area * cfg.auto_units as f64,
+                auto_pow * cfg.auto_units as f64,
+            ),
+            ("Decomposition x 2".into(), dec_area * 2.0, dec_pow * 2.0),
+            (
+                format!("Modular Multiplier x {} x 2", cfg.mmult_lanes),
+                mm_area * 2.0 * cfg.mmult_lanes as f64,
+                mm_pow * 2.0 * cfg.mmult_lanes as f64,
+            ),
+            (
+                format!("Modular Adder x {} x 2", cfg.madd_lanes),
+                ma_area * 2.0 * cfg.madd_lanes as f64,
+                ma_pow * 2.0 * cfg.madd_lanes as f64,
+            ),
+        ];
+        if cfg.imc_ks {
+            c.push(("Adders in each x8 DRAM".into(), 0.12, 0.02));
+        }
+        c.push(("Regfile (8 + 1 MB)".into(), 14.4, 1.01));
+        c.push(("Data Buffer (16 MB)".into(), 25.6, 1.8));
+        AreaPower { components: c }
+    }
+
+    pub fn total_area(&self) -> f64 {
+        self.components.iter().map(|c| c.1).sum()
+    }
+
+    pub fn total_power(&self) -> f64 {
+        self.components.iter().map(|c| c.2).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_reproduces_table_iv_totals() {
+        let ap = AreaPower::of(&DimmConfig::paper());
+        // Table IV: total 60.95 mm², 13.14 W
+        assert!(
+            (ap.total_area() - 60.95).abs() < 0.1,
+            "area {}",
+            ap.total_area()
+        );
+        assert!(
+            (ap.total_power() - 13.14).abs() < 0.05,
+            "power {}",
+            ap.total_power()
+        );
+    }
+
+    #[test]
+    fn smaller_config_is_smaller() {
+        let mut cfg = DimmConfig::paper();
+        cfg.ntt_units = 2;
+        cfg.mmult_lanes = 128;
+        let ap = AreaPower::of(&cfg);
+        assert!(ap.total_area() < 60.0);
+    }
+}

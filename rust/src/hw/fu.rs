@@ -1,0 +1,142 @@
+//! Functional-unit occupancy models (§IV-B): pipelined units characterized
+//! by (lanes, pipeline depth, initiation interval), with the configurable
+//! 64-bit ↔ dual-32-bit width mode of the paper's Karatsuba MMult / split
+//! MAdd / composable NTT designs (Fig. 6, 7).
+
+/// Operand width mode (§IV-B): one 64-bit op or two parallel 32-bit ops
+/// per FU pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Width {
+    W64,
+    W32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FuKind {
+    Ntt,
+    MMult,
+    MAdd,
+    Automorph,
+    Decomp,
+}
+
+/// A pool of identical pipelined FUs.
+#[derive(Debug, Clone)]
+pub struct FuPool {
+    pub kind: FuKind,
+    pub units: usize,
+    pub lanes_per_unit: usize,
+    /// pipeline fill latency (cycles) — Table II note: NTT 150–250 stages,
+    /// MMult ≤5, MAdd ≤3, Automorph ~63
+    pub depth: u64,
+    /// supports the dual-32-bit configuration
+    pub configurable: bool,
+}
+
+impl FuPool {
+    pub fn ntt(units: usize, lanes: usize, configurable: bool) -> Self {
+        FuPool {
+            kind: FuKind::Ntt,
+            units,
+            lanes_per_unit: lanes,
+            depth: 200,
+            configurable,
+        }
+    }
+
+    pub fn mmult(lanes: usize, configurable: bool) -> Self {
+        FuPool {
+            kind: FuKind::MMult,
+            units: 1,
+            lanes_per_unit: lanes,
+            depth: 5,
+            configurable,
+        }
+    }
+
+    pub fn madd(lanes: usize, configurable: bool) -> Self {
+        FuPool {
+            kind: FuKind::MAdd,
+            units: 1,
+            lanes_per_unit: lanes,
+            depth: 3,
+            configurable,
+        }
+    }
+
+    pub fn automorph(units: usize) -> Self {
+        FuPool {
+            kind: FuKind::Automorph,
+            units,
+            lanes_per_unit: 128,
+            depth: 63,
+            configurable: false,
+        }
+    }
+
+    pub fn decomp(units: usize) -> Self {
+        FuPool {
+            kind: FuKind::Decomp,
+            units,
+            lanes_per_unit: 64,
+            depth: 2,
+            configurable: false,
+        }
+    }
+
+    /// Effective parallel lanes for a given operand width: a configurable
+    /// 64-bit FU runs two 32-bit operations per pass (§IV-B).
+    pub fn effective_lanes(&self, width: Width) -> usize {
+        let base = self.units * self.lanes_per_unit;
+        match (width, self.configurable) {
+            (Width::W32, true) => base * 2,
+            _ => base,
+        }
+    }
+
+    /// Cycles to process `elements` scalar operations at `width`.
+    pub fn cycles(&self, elements: u64, width: Width) -> u64 {
+        let lanes = self.effective_lanes(width) as u64;
+        self.depth + elements.div_ceil(lanes)
+    }
+
+    /// Cycles for a full negacyclic NTT of size n (N/2·log2 N butterflies).
+    pub fn ntt_cycles(&self, n: u64, width: Width) -> u64 {
+        debug_assert_eq!(self.kind, FuKind::Ntt);
+        let butterflies = n / 2 * n.ilog2() as u64;
+        self.cycles(butterflies, width)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dual32_doubles_throughput_when_configurable() {
+        let f = FuPool::mmult(256, true);
+        assert_eq!(f.effective_lanes(Width::W64), 256);
+        assert_eq!(f.effective_lanes(Width::W32), 512);
+        let fixed = FuPool::mmult(256, false);
+        assert_eq!(fixed.effective_lanes(Width::W32), 256);
+    }
+
+    #[test]
+    fn cycles_scale_with_elements() {
+        let f = FuPool::madd(256, true);
+        let small = f.cycles(256, Width::W64);
+        let big = f.cycles(256 * 100, Width::W64);
+        assert!(big > small * 20);
+        // pipeline depth dominates tiny jobs
+        assert_eq!(f.cycles(1, Width::W64), f.depth + 1);
+    }
+
+    #[test]
+    fn ntt_cycle_count_matches_butterfly_math() {
+        let f = FuPool::ntt(4, 64, true);
+        let n = 1u64 << 16;
+        let c = f.ntt_cycles(n, Width::W32);
+        let butterflies = n / 2 * 16;
+        assert_eq!(c, 200 + butterflies.div_ceil(4 * 64 * 2));
+    }
+}

@@ -1,0 +1,110 @@
+//! In-memory computing level (§III-B③): accumulation adders at the bank
+//! level of each ×8 DRAM chip, where the PrivKS/PubKS evaluation keys are
+//! pre-loaded. The keys never cross the DIMM's external interface — only
+//! the (tiny) input/output LWE vectors do, which is the source of the
+//! paper's 3.15×10^5 / 3.05×10^4 I/O-reduction claims (§VI-C).
+
+use super::{DimmConfig, OpProfile};
+use crate::params::TfheShape;
+
+/// The bank-level key-switch engine.
+#[derive(Debug, Clone)]
+pub struct ImcKs {
+    pub enabled: bool,
+}
+
+impl ImcKs {
+    pub fn from_config(cfg: &DimmConfig) -> Self {
+        ImcKs { enabled: cfg.imc_ks }
+    }
+
+    /// Profile a PubKS (LWE→LWE functional key switch) over `batch` inputs.
+    pub fn pubks(&self, shape: &TfheShape, batch: u64) -> OpProfile {
+        let word = shape.word_bits as u64 / 8;
+        let key_bytes = shape.ksk_bytes(shape.lwe_n);
+        // only the input LWE crosses external I/O; the result stays
+        // resident in the DIMM (the §III-B execution model)
+        let io_lwe = (shape.rlwe_n as u64 + 1) * word * batch;
+        let mut p = OpProfile {
+            name: "PubKS".into(),
+            ..Default::default()
+        };
+        if self.enabled {
+            // keys stream at bank level; only ciphertexts cross external I/O
+            p.io_bank = key_bytes * batch;
+            p.io_external = io_lwe;
+            // a couple of adders deep (Table II: pipeline ≤ 3): compute is
+            // one accumulation per key word, done in-bank
+            p.cycles = 0;
+        } else {
+            // without IMC the whole key crosses the external interface
+            p.io_external = key_bytes * batch + io_lwe;
+            p.io_internal = key_bytes * batch;
+        }
+        p
+    }
+
+    /// Profile a PrivKS (LWE→RLWE private functional key switch).
+    pub fn privks(&self, shape: &TfheShape, batch: u64) -> OpProfile {
+        let word = shape.word_bits as u64 / 8;
+        let key_bytes = shape.privksk_bytes();
+        let io = (shape.rlwe_n as u64 + 1) * word * batch;
+        let mut p = OpProfile {
+            name: "PrivKS".into(),
+            ..Default::default()
+        };
+        if self.enabled {
+            p.io_bank = key_bytes * batch;
+            p.io_external = io;
+        } else {
+            p.io_external = key_bytes * batch + io;
+            p.io_internal = key_bytes * batch;
+        }
+        p
+    }
+
+    /// The §VI-C reduction factor: external bytes without IMC / with IMC.
+    pub fn io_reduction(shape: &TfheShape, private: bool) -> f64 {
+        let on = ImcKs { enabled: true };
+        let off = ImcKs { enabled: false };
+        let (a, b) = if private {
+            (off.privks(shape, 1), on.privks(shape, 1))
+        } else {
+            (off.pubks(shape, 1), on.pubks(shape, 1))
+        };
+        a.io_external as f64 / b.io_external as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TfheParams;
+
+    #[test]
+    fn imc_moves_key_traffic_off_the_external_bus() {
+        let shape = TfheParams::paper_shape();
+        let cfg = DimmConfig::paper();
+        let imc = ImcKs::from_config(&cfg);
+        let p = imc.privks(&shape, 1);
+        assert!(p.io_bank > 100 * p.io_external);
+        let mut cfg_off = cfg.clone();
+        cfg_off.imc_ks = false;
+        let off = ImcKs::from_config(&cfg_off).privks(&shape, 1);
+        assert!(off.io_external > 1000 * p.io_external);
+    }
+
+    #[test]
+    fn reduction_factors_match_paper_order_of_magnitude() {
+        // paper: 3.15e5 (PrivKS), 3.05e4 (PubKS)
+        let shape = TfheParams::paper_shape();
+        let priv_red = ImcKs::io_reduction(&shape, true);
+        let pub_red = ImcKs::io_reduction(&shape, false);
+        assert!(
+            priv_red > 1e4 && priv_red < 1e7,
+            "privks reduction {priv_red}"
+        );
+        assert!(pub_red > 1e3 && pub_red < 1e6, "pubks reduction {pub_red}");
+        assert!(priv_red > pub_red, "PrivKS keys are bigger");
+    }
+}

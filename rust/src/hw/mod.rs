@@ -1,0 +1,188 @@
+//! APACHE DIMM hardware model (§III, §IV, §VI-A(2,3)).
+//!
+//! Trace-driven analytical simulator standing in for the paper's
+//! Ramulator/CACTI/NVsim + Synopsys DC flow (see DESIGN.md substitution
+//! ledger): pipelined FU occupancy models, a three-level memory hierarchy
+//! (external I/O ↔ near-memory ↔ in-memory), the configurable R1/R2
+//! interconnect with the Eq. (8)/(9) utilization accounting, bank-level
+//! key-switching adders, and the Table-IV area/power roll-up.
+
+pub mod dram;
+pub mod energy;
+pub mod fu;
+pub mod imc;
+pub mod interconnect;
+
+pub use dram::DramTiming;
+pub use energy::AreaPower;
+pub use fu::{FuKind, FuPool, Width};
+pub use imc::ImcKs;
+pub use interconnect::{Interconnect, Routine};
+
+/// Static configuration of one APACHE DIMM (Table III + §IV).
+#[derive(Debug, Clone)]
+pub struct DimmConfig {
+    /// DRAM ranks per DIMM (data buses parallelized into the NMC module).
+    pub ranks: usize,
+    /// memory clock, MT/s (DDR4-3200)
+    pub mts: u64,
+    /// NMC logic clock (Hz)
+    pub clock_hz: u64,
+    /// number of 64-point (I)NTT FU clusters
+    pub ntt_units: usize,
+    /// butterfly lanes per NTT unit
+    pub ntt_lanes: usize,
+    /// modular multipliers per pipeline
+    pub mmult_lanes: usize,
+    /// modular adders per pipeline
+    pub madd_lanes: usize,
+    /// automorphism units
+    pub auto_units: usize,
+    /// enable the in-memory KS adders (§III-B③)
+    pub imc_ks: bool,
+    /// enable the configurable dual-32-bit FU mode (§IV-B)
+    pub dual32: bool,
+    /// enable the second MMult–MAdd pipeline routine (Fig. 5)
+    pub routine2: bool,
+    pub timing: DramTiming,
+}
+
+impl DimmConfig {
+    /// The paper's DIMM (Table III, Table IV component counts).
+    pub fn paper() -> Self {
+        DimmConfig {
+            ranks: 8,
+            mts: 3200,
+            clock_hz: 1_000_000_000,
+            ntt_units: 4,
+            ntt_lanes: 64, // 64-point NTT FU
+            mmult_lanes: 256,
+            madd_lanes: 256,
+            auto_units: 2,
+            imc_ks: true,
+            dual32: true,
+            routine2: true,
+            timing: DramTiming::ddr4_3200(),
+        }
+    }
+
+    /// External I/O bandwidth of the DIMM (bytes/s): 64-bit channel.
+    pub fn external_bw(&self) -> f64 {
+        self.mts as f64 * 1e6 * 8.0
+    }
+
+    /// Internal (rank-parallel) bandwidth available to the NMC module.
+    pub fn internal_bw(&self) -> f64 {
+        self.external_bw() * self.ranks as f64
+    }
+
+    /// In-memory (bank-level) bandwidth: ranks × banks × row-buffer rate.
+    /// This is where PrivKS/PubKS accumulation runs.
+    pub fn bank_bw(&self) -> f64 {
+        // 16 banks/rank, 8KB row, one row per tRC
+        let trc_s = self.timing.trc_ns() * 1e-9;
+        self.ranks as f64 * 16.0 * 8192.0 / trc_s
+    }
+}
+
+/// Per-operator execution profile produced by the model: cycles + bytes
+/// moved at each memory level (feeds Fig. 1, Fig. 12, Table V, claims).
+#[derive(Debug, Clone, Default)]
+pub struct OpProfile {
+    pub name: String,
+    pub cycles: u64,
+    /// busy cycles per FU kind (utilization numerators)
+    pub ntt_busy: u64,
+    pub mmult_busy: u64,
+    pub madd_busy: u64,
+    pub auto_busy: u64,
+    pub decomp_busy: u64,
+    /// bytes crossing each level
+    pub io_external: u64,
+    pub io_internal: u64,
+    pub io_bank: u64,
+}
+
+impl OpProfile {
+    pub fn latency_s(&self, cfg: &DimmConfig) -> f64 {
+        let compute = self.cycles as f64 / cfg.clock_hz as f64;
+        let ext = self.io_external as f64 / cfg.external_bw();
+        let int = self.io_internal as f64 / cfg.internal_bw();
+        let bank = self.io_bank as f64 / cfg.bank_bw();
+        // compute overlaps with internal/bank streaming; external I/O and
+        // the slowest of (compute, streams) bound the operator
+        compute.max(int).max(bank) + ext
+    }
+
+    pub fn throughput_ops(&self, cfg: &DimmConfig, dimms: usize) -> f64 {
+        dimms as f64 / self.latency_s(cfg)
+    }
+
+    pub fn ntt_utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.ntt_busy as f64 / self.cycles as f64
+    }
+
+    /// merge a sub-operator profile executed `times` times
+    pub fn absorb(&mut self, other: &OpProfile, times: u64) {
+        self.cycles += other.cycles * times;
+        self.ntt_busy += other.ntt_busy * times;
+        self.mmult_busy += other.mmult_busy * times;
+        self.madd_busy += other.madd_busy * times;
+        self.auto_busy += other.auto_busy * times;
+        self.decomp_busy += other.decomp_busy * times;
+        self.io_external += other.io_external * times;
+        self.io_internal += other.io_internal * times;
+        self.io_bank += other.io_bank * times;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_bandwidth_hierarchy() {
+        let cfg = DimmConfig::paper();
+        // external 25.6 GB/s, internal 8× that, bank level far above both
+        assert!((cfg.external_bw() - 25.6e9).abs() / 25.6e9 < 0.01);
+        assert!((cfg.internal_bw() / cfg.external_bw() - 8.0).abs() < 1e-9);
+        assert!(cfg.bank_bw() > 10.0 * cfg.internal_bw());
+    }
+
+    #[test]
+    fn profile_latency_is_bounded_by_slowest_resource() {
+        let cfg = DimmConfig::paper();
+        let p = OpProfile {
+            cycles: 1_000_000, // 1 ms of compute
+            io_external: 1024, // negligible
+            ..Default::default()
+        };
+        let lat = p.latency_s(&cfg);
+        assert!(lat >= 1e-3 && lat < 1.1e-3, "{lat}");
+        // io-bound case
+        let p2 = OpProfile {
+            cycles: 10,
+            io_external: 26_000_000_000, // ~1s at external BW
+            ..Default::default()
+        };
+        assert!(p2.latency_s(&cfg) > 0.9);
+    }
+
+    #[test]
+    fn absorb_accumulates() {
+        let mut a = OpProfile::default();
+        let b = OpProfile {
+            cycles: 10,
+            ntt_busy: 5,
+            io_internal: 100,
+            ..Default::default()
+        };
+        a.absorb(&b, 3);
+        assert_eq!(a.cycles, 30);
+        assert_eq!(a.ntt_busy, 15);
+        assert_eq!(a.io_internal, 300);
+    }
+}

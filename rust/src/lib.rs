@@ -1,0 +1,45 @@
+//! # APACHE — multi-scheme FHE with a processing-near-memory backend
+//!
+//! Reproduction of *"APACHE: A Processing-Near-Memory Architecture for
+//! Multi-Scheme Fully Homomorphic Encryption"* (Ding et al., 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * [`math`], [`ckks`], [`tfhe`] — the functional multi-scheme FHE library
+//!   (the paper's behavioral simulator, §VI-A(1)).
+//! * [`hw`] — the APACHE DIMM hardware model: DRAM timing, NMC functional
+//!   units, configurable interconnect, in-memory key-switching adders,
+//!   area/power (§III, §IV, §VI-A(2,3)).
+//! * [`sched`] — the multi-scheme operator compiler: operator-level group
+//!   scheduling, task-level multi-DIMM scheduling, packing (§V).
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas kernels
+//!   (`artifacts/*.hlo.txt`), the accelerator datapath.
+//! * [`coordinator`] — the L3 leader: config, task queue, DIMM workers,
+//!   metrics, serving loop.
+//! * [`apps`] — paper benchmark workload generators (Lola-MNIST, HELR,
+//!   packed bootstrapping, VSP, HE3DB TPC-H Q6).
+//! * [`baseline`] — fixed-pipeline two-level-memory accelerator model and
+//!   published accelerator numbers used for comparison rows.
+
+pub mod math;
+pub mod params;
+pub mod util;
+
+pub mod tfhe;
+
+pub mod ckks;
+
+pub mod runtime;
+
+pub mod hw;
+
+pub mod sched;
+
+pub mod baseline;
+
+pub mod coordinator;
+
+pub mod apps;
+
+
+
+

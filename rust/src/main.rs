@@ -1,0 +1,144 @@
+//! `apache` — the launcher CLI.
+//!
+//! Subcommands:
+//!   serve    — run the coordinator on a synthetic mixed batch
+//!   inspect  — print the schedule/microcode for an operator
+//!   profile  — print the hardware profile of every operator
+//!   area     — print the Table-IV area/power roll-up
+//!   config   — dump the effective configuration
+
+use apache_fhe::baseline;
+use apache_fhe::coordinator::{ApacheConfig, Coordinator, TaskRequest};
+use apache_fhe::hw::AreaPower;
+use apache_fhe::params::{CkksParams, TfheParams};
+use apache_fhe::sched::microcode;
+use apache_fhe::sched::oplevel::{profile_op, FheOp, OpShapes};
+use apache_fhe::sched::tasklevel::cmux_tree_task;
+use apache_fhe::util::benchkit::{fmt_bytes, fmt_duration, Table};
+use apache_fhe::util::cli::Args;
+
+fn shapes() -> OpShapes {
+    OpShapes {
+        ckks: CkksParams::paper_shape(),
+        tfhe: TfheParams::paper_shape(),
+    }
+}
+
+fn load_config(args: &Args) -> ApacheConfig {
+    let mut cfg = match args.opt("config") {
+        Some(path) => ApacheConfig::from_file(path).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        }),
+        None => ApacheConfig::default(),
+    };
+    if let Some(d) = args.opt("dimms") {
+        cfg.dimms = d.parse().expect("--dimms");
+    }
+    if args.flag("runtime") {
+        cfg.use_runtime = true;
+    }
+    cfg
+}
+
+fn all_ops() -> Vec<FheOp> {
+    vec![
+        FheOp::HAdd,
+        FheOp::PMult,
+        FheOp::CMult,
+        FheOp::HRot,
+        FheOp::KeySwitch,
+        FheOp::Rescale,
+        FheOp::Cmux,
+        FheOp::PubKS,
+        FheOp::PrivKS,
+        FheOp::GateBootstrap,
+        FheOp::CircuitBootstrap,
+        FheOp::HomGate,
+        FheOp::CkksBootstrap,
+    ]
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("serve") => {
+            let cfg = load_config(&args);
+            let n_tasks = args.opt_usize("tasks", 16);
+            let coord = Coordinator::new(cfg);
+            let reqs: Vec<TaskRequest> = (0..n_tasks)
+                .map(|i| TaskRequest {
+                    task: cmux_tree_task(&format!("task-{i:03}"), 31),
+                })
+                .collect();
+            let t0 = std::time::Instant::now();
+            let results = coord.serve_batch(reqs);
+            println!(
+                "served {} tasks in {} (modelled DIMM time: {})",
+                results.len(),
+                fmt_duration(t0.elapsed().as_secs_f64()),
+                fmt_duration(results.iter().map(|r| r.modelled_s).sum::<f64>()),
+            );
+            println!("{}", coord.metrics.to_json().render());
+        }
+        Some("profile") => {
+            let cfg = load_config(&args);
+            let s = shapes();
+            let mut t = Table::new(&["op", "latency", "NTT utl", "ext I/O", "bank I/O"]);
+            for op in all_ops() {
+                let p = profile_op(op, &s, &cfg.dimm);
+                t.row(&[
+                    p.name.clone(),
+                    fmt_duration(p.latency_s(&cfg.dimm)),
+                    format!("{:.0}%", 100.0 * p.ntt_utilization()),
+                    fmt_bytes(p.io_external as f64),
+                    fmt_bytes(p.io_bank as f64),
+                ]);
+            }
+            t.print("operator profiles (paper shapes)");
+        }
+        Some("inspect") => {
+            let op = match args.positional.first().map(|s| s.as_str()) {
+                Some("cmux") => FheOp::Cmux,
+                Some("keyswitch") => FheOp::KeySwitch,
+                Some("hadd") => FheOp::HAdd,
+                Some("privks") => FheOp::PrivKS,
+                _ => FheOp::Cmux,
+            };
+            let stream = microcode::emit(op, 1024, 44, 14, 1 << 29);
+            for (i, m) in stream.iter().enumerate() {
+                println!("{i:3}  {m:?}");
+            }
+        }
+        Some("area") => {
+            let cfg = load_config(&args);
+            let ap = AreaPower::of(&cfg.dimm);
+            let mut t = Table::new(&["component", "area mm2", "power W"]);
+            for (name, a, p) in &ap.components {
+                t.row(&[name.clone(), format!("{a:.2}"), format!("{p:.2}")]);
+            }
+            t.row(&[
+                "TOTAL".into(),
+                format!("{:.2}", ap.total_area()),
+                format!("{:.2}", ap.total_power()),
+            ]);
+            t.print("NMC module area/power (Table IV)");
+        }
+        Some("config") => {
+            let cfg = load_config(&args);
+            println!("{cfg:#?}");
+        }
+        Some("baselines") => {
+            for b in baseline::published() {
+                println!("{}: {:?}", b.name, b.ops);
+            }
+        }
+        _ => {
+            eprintln!(
+                "usage: apache <serve|profile|inspect|area|config|baselines> \
+                 [--config file.toml] [--dimms N] [--tasks N] [--runtime]"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Coefficient automorphisms — the paper's Automorph FU (§IV-B(3)).
+//!
+//! Two flavours, exactly the disparity Fig. 7 discusses:
+//!   * CKKS/BGV: Galois map σ_k: X ↦ X^k with k odd (k = 5^r mod 2N for a
+//!     rotation by r slots) — a data-dependent permutation with sign flips,
+//!     implemented in hardware with SRAM permute/transpose passes.
+//!   * TFHE blind rotation: multiplication by a monomial X^k — a barrel
+//!     shift with negacyclic sign wrap, implemented with shift registers.
+
+use super::modops::mod_neg;
+
+/// Apply σ_k: a(X) ↦ a(X^k) in coefficient domain over Z_q[X]/(X^N+1).
+/// `k` must be odd (units of Z_{2N}).
+pub fn galois_coeff(a: &[u64], k: usize, q: u64) -> Vec<u64> {
+    let n = a.len();
+    debug_assert!(n.is_power_of_two());
+    debug_assert!(k % 2 == 1, "Galois exponent must be odd");
+    let two_n = 2 * n;
+    let mut out = vec![0u64; n];
+    for (i, &c) in a.iter().enumerate() {
+        let j = (i * k) % two_n;
+        if j < n {
+            out[j] = c;
+        } else {
+            out[j - n] = mod_neg(c, q);
+        }
+    }
+    out
+}
+
+/// Apply σ_k to a polynomial in *Eval* (bit-reversed NTT) domain.
+/// For the negacyclic NTT, evaluation points are ψ^(2·br(i)+1); σ_k permutes
+/// them. We do it the simple, always-correct way: INTT → permute → NTT is
+/// avoided by doing the index arithmetic directly on natural-order slots.
+/// `slot_map[i]` gives, for output eval slot i (natural order), the input
+/// slot index. Precompute with [`galois_eval_map`].
+pub fn apply_eval_map(a: &[u64], map: &[usize]) -> Vec<u64> {
+    map.iter().map(|&src| a[src]).collect()
+}
+
+/// Precompute the eval-domain permutation for σ_k, assuming the transform
+/// uses *bit-reversed* output indexing (our `NttTable`). Point i (natural
+/// index) of the forward NTT is the evaluation at ψ^(2·br(i)+1). σ_k sends
+/// the evaluation at root ω to the evaluation at ω^k; hence output point
+/// with exponent e reads input point with exponent e·k mod 2N.
+pub fn galois_eval_map(n: usize, k: usize) -> Vec<usize> {
+    let bits = n.trailing_zeros();
+    let two_n = 2 * n;
+    let br = |x: usize| -> usize { x.reverse_bits() >> (usize::BITS - bits) };
+    // exponent of natural point i: e_i = 2*br(i) + 1
+    // want output[i] = eval at e_i^... : out(ω_{e_i}) = in(ω_{e_i * k mod 2N})
+    // find which natural index j has exponent e_i * k: e_j = 2*br(j)+1.
+    let mut exp_to_idx = vec![usize::MAX; two_n];
+    for j in 0..n {
+        exp_to_idx[2 * br(j) + 1] = j;
+    }
+    (0..n)
+        .map(|i| {
+            let e = (2 * br(i) + 1) * k % two_n;
+            let j = exp_to_idx[e];
+            debug_assert!(j != usize::MAX);
+            j
+        })
+        .collect()
+}
+
+/// Multiply by monomial X^k (k may be any integer mod 2N), coefficient
+/// domain: the TFHE rotation `X^k · a`. Negative powers via k + 2N.
+pub fn monomial_mul(a: &[u64], k: usize, q: u64) -> Vec<u64> {
+    let n = a.len();
+    let two_n = 2 * n;
+    let k = k % two_n;
+    let mut out = vec![0u64; n];
+    for (i, &c) in a.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let j = (i + k) % two_n;
+        if j < n {
+            out[j] = c;
+        } else {
+            out[j - n] = mod_neg(c, q);
+        }
+    }
+    out
+}
+
+/// `a · (X^k - 1)` — the CMUX-style rotate-and-subtract used in blind
+/// rotation (computing `(X^{a_i} - 1) · ACC` keeps noise additive).
+pub fn monomial_mul_minus_one(a: &[u64], k: usize, q: u64) -> Vec<u64> {
+    let rotated = monomial_mul(a, k, q);
+    rotated
+        .iter()
+        .zip(a.iter())
+        .map(|(&r, &x)| super::modops::mod_sub(r, x, q))
+        .collect()
+}
+
+/// Galois exponent for a CKKS rotation by `r` slots: 5^r mod 2N
+/// (negative r via the group inverse).
+pub fn rotation_to_galois(r: i64, n: usize) -> usize {
+    let two_n = 2 * n as u64;
+    let r_mod = r.rem_euclid(n as i64 / 2) as u64;
+    super::modops::mod_pow(5, r_mod, two_n) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::modops::ntt_primes;
+    use crate::math::ntt::NttTable;
+    use crate::math::sampler::Rng;
+
+    #[test]
+    fn galois_is_ring_homomorphism() {
+        // σ_k(a·b) = σ_k(a)·σ_k(b)
+        let n = 32;
+        let q = ntt_primes(30, 2 * n as u64, 1)[0];
+        let t = NttTable::new(n, q);
+        let mut rng = Rng::seeded(21);
+        let a = rng.uniform_poly(n, q);
+        let b = rng.uniform_poly(n, q);
+        for k in [3usize, 5, 25, 2 * n - 1] {
+            let lhs = galois_coeff(&t.negacyclic_mul(&a, &b), k, q);
+            let rhs = t.negacyclic_mul(&galois_coeff(&a, k, q), &galois_coeff(&b, k, q));
+            assert_eq!(lhs, rhs, "k={k}");
+        }
+    }
+
+    #[test]
+    fn galois_eval_map_matches_coeff_domain() {
+        let n = 64;
+        let q = ntt_primes(30, 2 * n as u64, 1)[0];
+        let t = NttTable::new(n, q);
+        let mut rng = Rng::seeded(22);
+        let a = rng.uniform_poly(n, q);
+        for k in [5usize, 17, 127] {
+            // path 1: coeff-domain automorphism then NTT
+            let mut p1 = galois_coeff(&a, k, q);
+            t.forward(&mut p1);
+            // path 2: NTT then eval permutation
+            let mut fa = a.clone();
+            t.forward(&mut fa);
+            let map = galois_eval_map(n, k);
+            let p2 = apply_eval_map(&fa, &map);
+            assert_eq!(p1, p2, "k={k}");
+        }
+    }
+
+    #[test]
+    fn monomial_mul_wraps_with_sign() {
+        let n = 8;
+        let q = 97u64;
+        let mut a = vec![0u64; n];
+        a[6] = 5;
+        // X^4 * 5X^6 = 5X^10 = -5X^2
+        let out = monomial_mul(&a, 4, q);
+        assert_eq!(out[2], q - 5);
+        // full circle: X^{2N} = 1
+        let round = monomial_mul(&a, 2 * n, q);
+        assert_eq!(round, a);
+        // X^N = -1
+        let half = monomial_mul(&a, n, q);
+        assert_eq!(half[6], q - 5);
+    }
+
+    #[test]
+    fn monomial_minus_one_identity() {
+        let n = 16;
+        let q = ntt_primes(30, 2 * n as u64, 1)[0];
+        let mut rng = Rng::seeded(23);
+        let a = rng.uniform_poly(n, q);
+        for k in [1usize, 7, 31] {
+            let lhs = monomial_mul_minus_one(&a, k, q);
+            let expect: Vec<u64> = monomial_mul(&a, k, q)
+                .iter()
+                .zip(a.iter())
+                .map(|(&r, &x)| crate::math::modops::mod_sub(r, x, q))
+                .collect();
+            assert_eq!(lhs, expect);
+        }
+        // k = 0 gives zero
+        assert!(monomial_mul_minus_one(&a, 0, q).iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn rotation_exponents_compose() {
+        let n = 64;
+        let k1 = rotation_to_galois(3, n);
+        let k2 = rotation_to_galois(5, n);
+        let k12 = rotation_to_galois(8, n);
+        assert_eq!(k1 * k2 % (2 * n), k12);
+    }
+}

@@ -1,0 +1,11 @@
+//! Arithmetic substrate shared by both FHE lanes: scalar modular ops,
+//! negacyclic NTT, RNS base conversion, RNS polynomials, automorphisms and
+//! deterministic sampling. Everything above (ckks/, tfhe/) and beside
+//! (hw/, sched/) builds on these types.
+
+pub mod automorph;
+pub mod modops;
+pub mod ntt;
+pub mod poly;
+pub mod rns;
+pub mod sampler;

@@ -1,0 +1,347 @@
+//! Scalar modular arithmetic over word-sized primes.
+//!
+//! The whole stack (Rust functional library, JAX/Pallas datapath, hardware
+//! model) shares one numeric regime: NTT-friendly primes `q < 2^31` so that
+//! products of two residues fit in a `u64` — exactly the operand regime the
+//! paper's configurable 32-bit FU mode targets (Table II). 64-bit FU mode is
+//! modelled in `hw::fu`; arithmetic here stays branch-light and `const`-friendly
+//! so the NTT inner loop compiles to the same mul/add/cmov mix a pipelined
+//! MMult/MAdd unit would implement.
+
+/// Modular addition: `(a + b) mod q`, assuming `a, b < q < 2^63`.
+#[inline(always)]
+pub fn mod_add(a: u64, b: u64, q: u64) -> u64 {
+    debug_assert!(a < q && b < q);
+    let s = a + b;
+    if s >= q {
+        s - q
+    } else {
+        s
+    }
+}
+
+/// Modular subtraction: `(a - b) mod q`, assuming `a, b < q`.
+#[inline(always)]
+pub fn mod_sub(a: u64, b: u64, q: u64) -> u64 {
+    debug_assert!(a < q && b < q);
+    if a >= b {
+        a - b
+    } else {
+        a + q - b
+    }
+}
+
+/// Modular negation: `(-a) mod q`.
+#[inline(always)]
+pub fn mod_neg(a: u64, q: u64) -> u64 {
+    debug_assert!(a < q);
+    if a == 0 {
+        0
+    } else {
+        q - a
+    }
+}
+
+/// Plain modular multiplication via u128 widening. Correct for any `q < 2^63`.
+#[inline(always)]
+pub fn mod_mul(a: u64, b: u64, q: u64) -> u64 {
+    ((a as u128 * b as u128) % q as u128) as u64
+}
+
+/// Modular exponentiation by squaring.
+pub fn mod_pow(mut base: u64, mut exp: u64, q: u64) -> u64 {
+    let mut acc = 1u64 % q;
+    base %= q;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = mod_mul(acc, base, q);
+        }
+        base = mod_mul(base, base, q);
+        exp >>= 1;
+    }
+    acc
+}
+
+/// Modular inverse of `a` modulo prime `q` (Fermat).
+pub fn mod_inv(a: u64, q: u64) -> u64 {
+    debug_assert!(a % q != 0, "no inverse of 0");
+    mod_pow(a, q - 2, q)
+}
+
+/// Shoup precomputed multiplication: for a *fixed* multiplicand `w`,
+/// precompute `w_shoup = floor(w << 64 / q)`; then `mul_shoup` does one
+/// `mulhi`, one `mullo`, and a conditional subtraction — the classic NTT
+/// butterfly trick, and the software analogue of the paper's pipelined
+/// MMult FU with a cached twiddle operand.
+#[inline(always)]
+pub fn shoup_precompute(w: u64, q: u64) -> u64 {
+    (((w as u128) << 64) / q as u128) as u64
+}
+
+/// `(a * w) mod q` using the Shoup precomputation of `w`. Requires `q < 2^63`.
+#[inline(always)]
+pub fn mul_shoup(a: u64, w: u64, w_shoup: u64, q: u64) -> u64 {
+    let hi = ((a as u128 * w_shoup as u128) >> 64) as u64;
+    let r = a
+        .wrapping_mul(w)
+        .wrapping_sub(hi.wrapping_mul(q));
+    if r >= q {
+        r - q
+    } else {
+        r
+    }
+}
+
+/// Barrett reducer for a fixed modulus: reduces any `x < q^2` (and in fact
+/// any `x < 2^63 * q`-ish range we use) to `x mod q` without division.
+#[derive(Debug, Clone, Copy)]
+pub struct Barrett {
+    pub q: u64,
+    /// floor(2^128 / q) truncated to 128 bits, stored as (hi, lo) — we only
+    /// need the classic floor(2^(2k)/q) with k = 64.
+    mu: u128,
+}
+
+impl Barrett {
+    pub fn new(q: u64) -> Self {
+        debug_assert!(q > 1);
+        // mu = floor(2^128 / q). Compute as ((2^128 - 1) / q) which equals
+        // floor(2^128/q) when q is not a power of two (true for odd primes),
+        // and is off by at most 1 otherwise — the reduction loop below
+        // tolerates that.
+        let mu = u128::MAX / q as u128;
+        Barrett { q, mu }
+    }
+
+    /// Reduce a full 128-bit value modulo q.
+    #[inline(always)]
+    pub fn reduce_u128(&self, x: u128) -> u64 {
+        // Estimate quotient: qhat = (x * mu) >> 128, computed via 128-bit
+        // partial products of the 64-bit halves.
+        let x_hi = (x >> 64) as u64;
+        let x_lo = x as u64;
+        let mu_hi = (self.mu >> 64) as u64;
+        let mu_lo = self.mu as u64;
+        // (x_hi*2^64 + x_lo) * (mu_hi*2^64 + mu_lo) >> 128
+        let lo_lo = (x_lo as u128 * mu_lo as u128) >> 64;
+        let mid1 = x_lo as u128 * mu_hi as u128;
+        let mid2 = x_hi as u128 * mu_lo as u128;
+        let carry = (lo_lo + (mid1 & 0xFFFF_FFFF_FFFF_FFFF) + (mid2 & 0xFFFF_FFFF_FFFF_FFFF)) >> 64;
+        let qhat = (x_hi as u128 * mu_hi as u128)
+            .wrapping_add(mid1 >> 64)
+            .wrapping_add(mid2 >> 64)
+            .wrapping_add(carry);
+        let mut r = x.wrapping_sub(qhat.wrapping_mul(self.q as u128)) as u64;
+        while r >= self.q {
+            r = r.wrapping_sub(self.q);
+        }
+        r
+    }
+
+    /// `(a * b) mod q` through the Barrett pipeline.
+    #[inline(always)]
+    pub fn mul(&self, a: u64, b: u64) -> u64 {
+        self.reduce_u128(a as u128 * b as u128)
+    }
+}
+
+/// Miller–Rabin primality test, deterministic for u64 with the standard
+/// witness set.
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for p in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n == p {
+            return true;
+        }
+        if n % p == 0 {
+            return false;
+        }
+    }
+    let mut d = n - 1;
+    let mut s = 0u32;
+    while d & 1 == 0 {
+        d >>= 1;
+        s += 1;
+    }
+    'witness: for a in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = mod_pow(a, d, n);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..s - 1 {
+            x = mod_mul(x, x, n);
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Find `count` NTT-friendly primes `p ≡ 1 (mod 2n)` with exactly `bits`
+/// bits, scanning downward from `2^bits`. These are the RNS tower primes.
+pub fn ntt_primes(bits: u32, two_n: u64, count: usize) -> Vec<u64> {
+    assert!(bits >= 8 && bits <= 61);
+    let mut out = Vec::with_capacity(count);
+    let top = 1u64 << bits;
+    // Largest candidate of the form k*2n + 1 below 2^bits.
+    let mut cand = (top - 1) / two_n * two_n + 1;
+    while out.len() < count && cand > (1 << (bits - 1)) {
+        if is_prime(cand) {
+            out.push(cand);
+        }
+        cand -= two_n;
+    }
+    assert_eq!(out.len(), count, "not enough {bits}-bit NTT primes for 2N={two_n}");
+    out
+}
+
+/// Find a primitive root modulo prime `q` (generator of the full group).
+pub fn primitive_root(q: u64) -> u64 {
+    // Factor q-1 (small trial division is plenty for our 31-bit primes).
+    let mut factors = Vec::new();
+    let mut m = q - 1;
+    let mut f = 2u64;
+    while f * f <= m {
+        if m % f == 0 {
+            factors.push(f);
+            while m % f == 0 {
+                m /= f;
+            }
+        }
+        f += 1;
+    }
+    if m > 1 {
+        factors.push(m);
+    }
+    'g: for g in 2..q {
+        for &p in &factors {
+            if mod_pow(g, (q - 1) / p, q) == 1 {
+                continue 'g;
+            }
+        }
+        return g;
+    }
+    unreachable!("prime has a primitive root");
+}
+
+/// A primitive 2n-th root of unity modulo q (requires q ≡ 1 mod 2n).
+pub fn root_of_unity(two_n: u64, q: u64) -> u64 {
+    assert_eq!((q - 1) % two_n, 0, "q ≢ 1 mod 2N");
+    let g = primitive_root(q);
+    let psi = mod_pow(g, (q - 1) / two_n, q);
+    debug_assert_eq!(mod_pow(psi, two_n, q), 1);
+    debug_assert_ne!(mod_pow(psi, two_n / 2, q), 1);
+    psi
+}
+
+/// Centered representative of `a mod q` in `(-q/2, q/2]` as i64.
+#[inline]
+pub fn centered(a: u64, q: u64) -> i64 {
+    debug_assert!(a < q);
+    if a > q / 2 {
+        a as i64 - q as i64
+    } else {
+        a as i64
+    }
+}
+
+/// Map a signed value back into `[0, q)`.
+#[inline]
+pub fn from_signed(v: i64, q: u64) -> u64 {
+    let m = v % q as i64;
+    if m < 0 {
+        (m + q as i64) as u64
+    } else {
+        m as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_sub_neg_roundtrip() {
+        let q = 0x7fffffff; // 2^31 - 1 (Mersenne, prime)
+        assert!(is_prime(q));
+        for (a, b) in [(0u64, 0u64), (1, q - 1), (q - 1, q - 1), (12345, 67890)] {
+            let s = mod_add(a, b, q);
+            assert_eq!(mod_sub(s, b, q), a);
+            assert_eq!(mod_add(a, mod_neg(a, q), q), 0);
+        }
+    }
+
+    #[test]
+    fn pow_inv() {
+        let q = 1_073_479_681u64; // found by ntt_primes below; just a prime here
+        assert!(is_prime(q));
+        for a in [1u64, 2, 17, q - 2] {
+            let inv = mod_inv(a, q);
+            assert_eq!(mod_mul(a, inv, q), 1);
+        }
+    }
+
+    #[test]
+    fn shoup_matches_plain() {
+        let q = 998_244_353u64; // classic NTT prime
+        let w = 123_456_789u64 % q;
+        let ws = shoup_precompute(w, q);
+        for a in [0u64, 1, 2, 999_999_999 % q, q - 1] {
+            assert_eq!(mul_shoup(a, w, ws, q), mod_mul(a, w, q));
+        }
+    }
+
+    #[test]
+    fn barrett_matches_plain() {
+        let q = 998_244_353u64;
+        let br = Barrett::new(q);
+        let cases = [
+            (0u64, 0u64),
+            (1, q - 1),
+            (q - 1, q - 1),
+            (123_456_789, 987_654_321 % q),
+        ];
+        for (a, b) in cases {
+            assert_eq!(br.mul(a, b), mod_mul(a, b, q));
+        }
+        assert_eq!(br.reduce_u128(u128::from(q) * u128::from(q) - 1), {
+            ((u128::from(q) * u128::from(q) - 1) % q as u128) as u64
+        });
+    }
+
+    #[test]
+    fn prime_search_finds_ntt_primes() {
+        let n = 1u64 << 12;
+        let ps = ntt_primes(30, 2 * n, 4);
+        for &p in &ps {
+            assert!(is_prime(p));
+            assert_eq!((p - 1) % (2 * n), 0);
+            assert!(p < (1 << 30) && p > (1 << 29));
+        }
+        // all distinct
+        let mut sorted = ps.clone();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ps.len());
+    }
+
+    #[test]
+    fn roots_of_unity_have_exact_order() {
+        let n = 1u64 << 10;
+        let q = ntt_primes(30, 2 * n, 1)[0];
+        let psi = root_of_unity(2 * n, q);
+        assert_eq!(mod_pow(psi, 2 * n, q), 1);
+        assert_eq!(mod_pow(psi, n, q), q - 1); // psi^N = -1 (negacyclic)
+    }
+
+    #[test]
+    fn centered_roundtrip() {
+        let q = 97u64;
+        for a in 0..q {
+            assert_eq!(from_signed(centered(a, q), q), a);
+        }
+    }
+}

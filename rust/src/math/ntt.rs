@@ -1,0 +1,256 @@
+//! Negacyclic number-theoretic transform over an NTT-friendly prime.
+//!
+//! This is the software model of the paper's pipelined (I)NTT functional
+//! unit (§IV-B(2)): an iterative Cooley–Tukey forward / Gentleman–Sande
+//! inverse transform with ψ (2N-th root) twist folded into the twiddle
+//! tables, Shoup-precomputed twiddles (one mulhi + mullo per butterfly —
+//! the same multiplier the hardware FU pipelines), and bit-reverse-free
+//! in-place scheduling (forward emits bit-reversed order, inverse consumes
+//! it; pointwise products are order-agnostic).
+
+use super::modops::{mod_add, mod_inv, mod_sub, mul_shoup, root_of_unity, shoup_precompute};
+
+/// Precomputed tables for one (q, N) pair. N must be a power of two and
+/// q ≡ 1 (mod 2N).
+#[derive(Debug, Clone)]
+pub struct NttTable {
+    pub n: usize,
+    pub q: u64,
+    /// Forward twiddles, ψ^bitrev order (CT layout): w[m + i] for stage m.
+    w: Vec<u64>,
+    w_shoup: Vec<u64>,
+    /// Inverse twiddles (GS layout).
+    wi: Vec<u64>,
+    wi_shoup: Vec<u64>,
+    /// N^{-1} mod q, with Shoup companion.
+    n_inv: u64,
+    n_inv_shoup: u64,
+}
+
+fn bit_reverse(x: usize, bits: u32) -> usize {
+    x.reverse_bits() >> (usize::BITS - bits)
+}
+
+impl NttTable {
+    pub fn new(n: usize, q: u64) -> Self {
+        assert!(n.is_power_of_two(), "N must be a power of two");
+        let psi = root_of_unity(2 * n as u64, q);
+        let psi_inv = mod_inv(psi, q);
+        let bits = n.trailing_zeros();
+        // Powers of psi in bit-reversed order: w[i] = psi^bitrev(i).
+        let mut w = vec![0u64; n];
+        let mut wi = vec![0u64; n];
+        let mut cur = 1u64;
+        let mut pows = vec![0u64; n];
+        for p in pows.iter_mut() {
+            *p = cur;
+            cur = super::modops::mod_mul(cur, psi, q);
+        }
+        let mut cur_i = 1u64;
+        let mut pows_i = vec![0u64; n];
+        for p in pows_i.iter_mut() {
+            *p = cur_i;
+            cur_i = super::modops::mod_mul(cur_i, psi_inv, q);
+        }
+        for i in 0..n {
+            w[i] = pows[bit_reverse(i, bits)];
+            wi[i] = pows_i[bit_reverse(i, bits)];
+        }
+        let w_shoup = w.iter().map(|&x| shoup_precompute(x, q)).collect();
+        let wi_shoup = wi.iter().map(|&x| shoup_precompute(x, q)).collect();
+        let n_inv = mod_inv(n as u64, q);
+        NttTable {
+            n,
+            q,
+            w,
+            w_shoup,
+            wi,
+            wi_shoup,
+            n_inv,
+            n_inv_shoup: shoup_precompute(n_inv, q),
+        }
+    }
+
+    /// Forward negacyclic NTT, in place. Input natural order, output
+    /// bit-reversed order.
+    ///
+    /// Perf (§Perf in EXPERIMENTS.md): the butterfly pair is accessed
+    /// through `split_at_mut` sub-slices so the inner loop carries no
+    /// bounds checks and auto-vectorizes.
+    pub fn forward(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.n);
+        let q = self.q;
+        let mut t = self.n;
+        let mut m = 1usize;
+        while m < self.n {
+            t >>= 1;
+            for i in 0..m {
+                let w = self.w[m + i];
+                let ws = self.w_shoup[m + i];
+                let j1 = 2 * i * t;
+                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let u = *x;
+                    let v = mul_shoup(*y, w, ws, q);
+                    *x = mod_add(u, v, q);
+                    *y = mod_sub(u, v, q);
+                }
+            }
+            m <<= 1;
+        }
+    }
+
+    /// Inverse negacyclic NTT, in place. Input bit-reversed order, output
+    /// natural order, scaled by N^{-1}.
+    pub fn inverse(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.n);
+        let q = self.q;
+        let mut t = 1usize;
+        let mut m = self.n;
+        while m > 1 {
+            let h = m >> 1;
+            let mut j1 = 0usize;
+            for i in 0..h {
+                let w = self.wi[h + i];
+                let ws = self.wi_shoup[h + i];
+                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let u = *x;
+                    let v = *y;
+                    *x = mod_add(u, v, q);
+                    *y = mul_shoup(mod_sub(u, v, q), w, ws, q);
+                }
+                j1 += 2 * t;
+            }
+            t <<= 1;
+            m = h;
+        }
+        for x in a.iter_mut() {
+            *x = mul_shoup(*x, self.n_inv, self.n_inv_shoup, q);
+        }
+    }
+
+    /// Forward twiddle table (bit-reversed ψ powers) — exported for the
+    /// PJRT artifacts, which take tables as runtime inputs.
+    pub fn forward_twiddles(&self) -> &[u64] {
+        &self.w
+    }
+
+    /// Inverse twiddle table.
+    pub fn inverse_twiddles(&self) -> &[u64] {
+        &self.wi
+    }
+
+    /// N^{-1} mod q.
+    pub fn n_inv(&self) -> u64 {
+        self.n_inv
+    }
+
+    /// Negacyclic convolution of `a` and `b` via NTT (both natural order).
+    pub fn negacyclic_mul(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        let mut fa = a.to_vec();
+        let mut fb = b.to_vec();
+        self.forward(&mut fa);
+        self.forward(&mut fb);
+        for i in 0..self.n {
+            fa[i] = super::modops::mod_mul(fa[i], fb[i], self.q);
+        }
+        self.inverse(&mut fa);
+        fa
+    }
+}
+
+/// Schoolbook negacyclic multiplication, the O(N^2) oracle used by tests
+/// (mirrors `python/compile/kernels/ref.py`).
+pub fn negacyclic_mul_naive(a: &[u64], b: &[u64], q: u64) -> Vec<u64> {
+    let n = a.len();
+    assert_eq!(b.len(), n);
+    let mut out = vec![0u64; n];
+    for i in 0..n {
+        if a[i] == 0 {
+            continue;
+        }
+        for j in 0..n {
+            let p = super::modops::mod_mul(a[i], b[j], q);
+            let k = i + j;
+            if k < n {
+                out[k] = mod_add(out[k], p, q);
+            } else {
+                out[k - n] = mod_sub(out[k - n], p, q);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::modops::ntt_primes;
+    use crate::math::sampler::Rng;
+
+    fn table(n: usize) -> NttTable {
+        let q = ntt_primes(30, 2 * n as u64, 1)[0];
+        NttTable::new(n, q)
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        for logn in [3usize, 6, 10] {
+            let n = 1 << logn;
+            let t = table(n);
+            let mut rng = Rng::seeded(42 + logn as u64);
+            let orig: Vec<u64> = (0..n).map(|_| rng.next_u64() % t.q).collect();
+            let mut a = orig.clone();
+            t.forward(&mut a);
+            assert_ne!(a, orig, "forward must change the vector");
+            t.inverse(&mut a);
+            assert_eq!(a, orig);
+        }
+    }
+
+    #[test]
+    fn convolution_matches_schoolbook() {
+        for logn in [3usize, 5, 8] {
+            let n = 1 << logn;
+            let t = table(n);
+            let mut rng = Rng::seeded(7);
+            let a: Vec<u64> = (0..n).map(|_| rng.next_u64() % t.q).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.next_u64() % t.q).collect();
+            assert_eq!(t.negacyclic_mul(&a, &b), negacyclic_mul_naive(&a, &b, t.q));
+        }
+    }
+
+    #[test]
+    fn x_times_x_n_minus_1_wraps_negatively() {
+        // X * X^{N-1} = X^N = -1 in R_q.
+        let n = 16;
+        let t = table(n);
+        let mut x = vec![0u64; n];
+        x[1] = 1;
+        let mut xn1 = vec![0u64; n];
+        xn1[n - 1] = 1;
+        let prod = t.negacyclic_mul(&x, &xn1);
+        let mut expect = vec![0u64; n];
+        expect[0] = t.q - 1;
+        assert_eq!(prod, expect);
+    }
+
+    #[test]
+    fn linearity_of_forward() {
+        let n = 64;
+        let t = table(n);
+        let mut rng = Rng::seeded(3);
+        let a: Vec<u64> = (0..n).map(|_| rng.next_u64() % t.q).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.next_u64() % t.q).collect();
+        let mut sum: Vec<u64> = (0..n).map(|i| mod_add(a[i], b[i], t.q)).collect();
+        let mut fa = a.clone();
+        let mut fb = b.clone();
+        t.forward(&mut fa);
+        t.forward(&mut fb);
+        t.forward(&mut sum);
+        for i in 0..n {
+            assert_eq!(sum[i], mod_add(fa[i], fb[i], t.q));
+        }
+    }
+}

@@ -1,0 +1,385 @@
+//! RNS polynomial: the common data type flowing through every layer.
+//!
+//! A polynomial in `R_Q = Z[X]/(X^N+1) mod Q` stored as one residue limb per
+//! RNS modulus, with an explicit evaluation/coefficient domain tag — the
+//! same representation the paper's NMC data buffer holds, where the
+//! interconnect controller tracks whether a buffered operand has already
+//! passed the (I)NTT FU.
+
+use super::modops::{mod_add, mod_mul, mod_neg, mod_sub};
+use super::rns::RnsBasis;
+use std::sync::Arc;
+
+/// Which representation the limbs are in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Domain {
+    /// Coefficient (power) basis.
+    Coeff,
+    /// NTT (evaluation) basis, bit-reversed ordering.
+    Eval,
+}
+
+/// An RNS polynomial over the first `limbs.len()` moduli of `basis`.
+/// Limbs beyond `basis.num_q` (if any) live in the special P basis.
+#[derive(Debug, Clone)]
+pub struct RnsPoly {
+    pub basis: Arc<RnsBasis>,
+    /// `limbs[i]` = coefficients mod `moduli_idx[i]`-th modulus of the basis.
+    pub limbs: Vec<Vec<u64>>,
+    /// Index into `basis.moduli` for each limb (supports dropped levels and
+    /// P-extension limbs).
+    pub moduli_idx: Vec<usize>,
+    pub domain: Domain,
+}
+
+impl RnsPoly {
+    pub fn zero(basis: &Arc<RnsBasis>, num_limbs: usize, domain: Domain) -> Self {
+        let n = basis.n;
+        RnsPoly {
+            basis: basis.clone(),
+            limbs: (0..num_limbs).map(|_| vec![0u64; n]).collect(),
+            moduli_idx: (0..num_limbs).collect(),
+            domain,
+        }
+    }
+
+    /// Build from residues of the first `num_limbs` q-moduli.
+    pub fn from_limbs(basis: &Arc<RnsBasis>, limbs: Vec<Vec<u64>>, domain: Domain) -> Self {
+        let idx = (0..limbs.len()).collect();
+        RnsPoly {
+            basis: basis.clone(),
+            limbs,
+            moduli_idx: idx,
+            domain,
+        }
+    }
+
+    /// Build with an explicit modulus-index set (e.g. a (Q_l, P) joint
+    /// basis during key switching).
+    pub fn from_limbs_idx(
+        basis: &Arc<RnsBasis>,
+        limbs: Vec<Vec<u64>>,
+        moduli_idx: Vec<usize>,
+        domain: Domain,
+    ) -> Self {
+        assert_eq!(limbs.len(), moduli_idx.len());
+        RnsPoly {
+            basis: basis.clone(),
+            limbs,
+            moduli_idx,
+            domain,
+        }
+    }
+
+    /// Zero polynomial over an explicit modulus-index set.
+    pub fn zero_idx(basis: &Arc<RnsBasis>, moduli_idx: Vec<usize>, domain: Domain) -> Self {
+        let n = basis.n;
+        RnsPoly {
+            basis: basis.clone(),
+            limbs: moduli_idx.iter().map(|_| vec![0u64; n]).collect(),
+            moduli_idx,
+            domain,
+        }
+    }
+
+    /// Restrict to the limbs whose basis indices appear in `keep`
+    /// (preserving `keep`'s order). Panics if a requested limb is missing.
+    pub fn select_limbs(&self, keep: &[usize]) -> Self {
+        let limbs = keep
+            .iter()
+            .map(|&want| {
+                let pos = self
+                    .moduli_idx
+                    .iter()
+                    .position(|&m| m == want)
+                    .expect("missing limb in select_limbs");
+                self.limbs[pos].clone()
+            })
+            .collect();
+        RnsPoly {
+            basis: self.basis.clone(),
+            limbs,
+            moduli_idx: keep.to_vec(),
+            domain: self.domain,
+        }
+    }
+
+    /// Apply a Galois eval-domain permutation to every limb (requires Eval).
+    pub fn galois_eval(&self, map: &[usize]) -> Self {
+        assert_eq!(self.domain, Domain::Eval);
+        RnsPoly {
+            basis: self.basis.clone(),
+            limbs: self
+                .limbs
+                .iter()
+                .map(|l| crate::math::automorph::apply_eval_map(l, map))
+                .collect(),
+            moduli_idx: self.moduli_idx.clone(),
+            domain: Domain::Eval,
+        }
+    }
+
+    /// Reduce a signed-coefficient polynomial into every limb.
+    pub fn from_signed(basis: &Arc<RnsBasis>, coeffs: &[i64], num_limbs: usize) -> Self {
+        assert_eq!(coeffs.len(), basis.n);
+        let limbs = (0..num_limbs)
+            .map(|i| {
+                let q = basis.moduli[i];
+                coeffs
+                    .iter()
+                    .map(|&c| super::modops::from_signed(c, q))
+                    .collect()
+            })
+            .collect();
+        Self::from_limbs(basis, limbs, Domain::Coeff)
+    }
+
+    pub fn n(&self) -> usize {
+        self.basis.n
+    }
+
+    pub fn num_limbs(&self) -> usize {
+        self.limbs.len()
+    }
+
+    pub fn modulus_of(&self, limb: usize) -> u64 {
+        self.basis.moduli[self.moduli_idx[limb]]
+    }
+
+    fn assert_compatible(&self, other: &Self) {
+        assert!(Arc::ptr_eq(&self.basis, &other.basis), "basis mismatch");
+        assert_eq!(self.moduli_idx, other.moduli_idx, "limb set mismatch");
+        assert_eq!(self.domain, other.domain, "domain mismatch");
+    }
+
+    /// In-place forward NTT on every limb.
+    pub fn to_eval(&mut self) {
+        if self.domain == Domain::Eval {
+            return;
+        }
+        for (limb, &mi) in self.limbs.iter_mut().zip(self.moduli_idx.iter()) {
+            self.basis.ntt[mi].forward(limb);
+        }
+        self.domain = Domain::Eval;
+    }
+
+    /// In-place inverse NTT on every limb.
+    pub fn to_coeff(&mut self) {
+        if self.domain == Domain::Coeff {
+            return;
+        }
+        for (limb, &mi) in self.limbs.iter_mut().zip(self.moduli_idx.iter()) {
+            self.basis.ntt[mi].inverse(limb);
+        }
+        self.domain = Domain::Coeff;
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        self.assert_compatible(other);
+        let mut out = self.clone();
+        out.add_assign(other);
+        out
+    }
+
+    pub fn add_assign(&mut self, other: &Self) {
+        self.assert_compatible(other);
+        for (l, (a, b)) in self.limbs.iter_mut().zip(other.limbs.iter()).enumerate() {
+            let q = self.basis.moduli[self.moduli_idx[l]];
+            for (x, &y) in a.iter_mut().zip(b.iter()) {
+                *x = mod_add(*x, y, q);
+            }
+        }
+    }
+
+    pub fn sub(&self, other: &Self) -> Self {
+        self.assert_compatible(other);
+        let mut out = self.clone();
+        for (l, (a, b)) in out.limbs.iter_mut().zip(other.limbs.iter()).enumerate() {
+            let q = out.basis.moduli[out.moduli_idx[l]];
+            for (x, &y) in a.iter_mut().zip(b.iter()) {
+                *x = mod_sub(*x, y, q);
+            }
+        }
+        out
+    }
+
+    pub fn neg(&self) -> Self {
+        let mut out = self.clone();
+        for (l, a) in out.limbs.iter_mut().enumerate() {
+            let q = out.basis.moduli[out.moduli_idx[l]];
+            for x in a.iter_mut() {
+                *x = mod_neg(*x, q);
+            }
+        }
+        out
+    }
+
+    /// Pointwise (Hadamard) product — both operands must be in Eval domain.
+    pub fn mul_eval(&self, other: &Self) -> Self {
+        self.assert_compatible(other);
+        assert_eq!(self.domain, Domain::Eval, "mul_eval requires Eval domain");
+        let mut out = self.clone();
+        out.mul_eval_assign(other);
+        out
+    }
+
+    pub fn mul_eval_assign(&mut self, other: &Self) {
+        self.assert_compatible(other);
+        assert_eq!(self.domain, Domain::Eval);
+        for (l, (a, b)) in self.limbs.iter_mut().zip(other.limbs.iter()).enumerate() {
+            let q = self.basis.moduli[self.moduli_idx[l]];
+            for (x, &y) in a.iter_mut().zip(b.iter()) {
+                *x = mod_mul(*x, y, q);
+            }
+        }
+    }
+
+    /// Fused multiply-accumulate in Eval domain: `self += a ∘ b`. This is
+    /// the MMult–MAdd routine (pipeline R2 of Fig. 5) in software form; the
+    /// hot loops of key switching and external products all reduce to it.
+    pub fn fma_eval(&mut self, a: &Self, b: &Self) {
+        a.assert_compatible(b);
+        assert_eq!(self.domain, Domain::Eval);
+        assert_eq!(a.domain, Domain::Eval);
+        for l in 0..self.limbs.len() {
+            let q = self.basis.moduli[self.moduli_idx[l]];
+            let dst = &mut self.limbs[l];
+            let (x, y) = (&a.limbs[l], &b.limbs[l]);
+            for k in 0..dst.len() {
+                dst[k] = mod_add(dst[k], mod_mul(x[k], y[k], q), q);
+            }
+        }
+    }
+
+    /// Multiply every limb by a per-limb scalar.
+    pub fn mul_scalar_per_limb(&mut self, scalars: &[u64]) {
+        assert_eq!(scalars.len(), self.limbs.len());
+        for (l, a) in self.limbs.iter_mut().enumerate() {
+            let q = self.basis.moduli[self.moduli_idx[l]];
+            let s = scalars[l] % q;
+            for x in a.iter_mut() {
+                *x = mod_mul(*x, s, q);
+            }
+        }
+    }
+
+    /// Multiply by a single scalar (reduced per limb).
+    pub fn mul_scalar(&mut self, s: u64) {
+        let scalars: Vec<u64> = self
+            .moduli_idx
+            .iter()
+            .map(|&i| s % self.basis.moduli[i])
+            .collect();
+        self.mul_scalar_per_limb(&scalars);
+    }
+
+    /// Drop the last limb (CKKS rescale bookkeeping uses this).
+    pub fn drop_last_limb(&mut self) {
+        self.limbs.pop();
+        self.moduli_idx.pop();
+    }
+
+    /// Full negacyclic multiplication regardless of current domains
+    /// (convenience for tests): returns result in Coeff domain.
+    pub fn mul_full(&self, other: &Self) -> Self {
+        let mut a = self.clone();
+        let mut b = other.clone();
+        a.to_eval();
+        b.to_eval();
+        let mut c = a.mul_eval(&b);
+        c.to_coeff();
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::modops::ntt_primes;
+    use crate::math::ntt::negacyclic_mul_naive;
+    use crate::math::sampler::Rng;
+
+    fn basis(n: usize, l: usize) -> Arc<RnsBasis> {
+        let q = ntt_primes(30, 2 * n as u64, l);
+        RnsBasis::new(n, &q, &[])
+    }
+
+    fn random_poly(b: &Arc<RnsBasis>, l: usize, seed: u64) -> RnsPoly {
+        let mut rng = Rng::seeded(seed);
+        let limbs = (0..l)
+            .map(|i| rng.uniform_poly(b.n, b.moduli[i]))
+            .collect();
+        RnsPoly::from_limbs(b, limbs, Domain::Coeff)
+    }
+
+    #[test]
+    fn domain_roundtrip() {
+        let b = basis(64, 2);
+        let p = random_poly(&b, 2, 1);
+        let mut q = p.clone();
+        q.to_eval();
+        assert_eq!(q.domain, Domain::Eval);
+        q.to_coeff();
+        assert_eq!(q.limbs, p.limbs);
+    }
+
+    #[test]
+    fn mul_matches_naive_per_limb() {
+        let b = basis(32, 2);
+        let x = random_poly(&b, 2, 2);
+        let y = random_poly(&b, 2, 3);
+        let z = x.mul_full(&y);
+        for l in 0..2 {
+            let q = b.moduli[l];
+            assert_eq!(z.limbs[l], negacyclic_mul_naive(&x.limbs[l], &y.limbs[l], q));
+        }
+    }
+
+    #[test]
+    fn add_sub_identity() {
+        let b = basis(32, 3);
+        let x = random_poly(&b, 3, 4);
+        let y = random_poly(&b, 3, 5);
+        let z = x.add(&y).sub(&y);
+        assert_eq!(z.limbs, x.limbs);
+        let w = x.add(&x.neg());
+        for limb in &w.limbs {
+            assert!(limb.iter().all(|&c| c == 0));
+        }
+    }
+
+    #[test]
+    fn distributivity() {
+        let b = basis(16, 2);
+        let x = random_poly(&b, 2, 6);
+        let y = random_poly(&b, 2, 7);
+        let z = random_poly(&b, 2, 8);
+        // x*(y+z) == x*y + x*z
+        let lhs = x.mul_full(&y.add(&z));
+        let rhs = x.mul_full(&y).add(&x.mul_full(&z));
+        assert_eq!(lhs.limbs, rhs.limbs);
+    }
+
+    #[test]
+    #[should_panic(expected = "domain mismatch")]
+    fn mixing_domains_panics() {
+        let b = basis(16, 1);
+        let x = random_poly(&b, 1, 9);
+        let mut y = random_poly(&b, 1, 10);
+        y.to_eval();
+        let _ = x.add(&y);
+    }
+
+    #[test]
+    fn signed_embedding() {
+        let b = basis(16, 2);
+        let coeffs: Vec<i64> = (0..16).map(|i| i - 8).collect();
+        let p = RnsPoly::from_signed(&b, &coeffs, 2);
+        for l in 0..2 {
+            let q = b.moduli[l];
+            for (k, &c) in coeffs.iter().enumerate() {
+                assert_eq!(crate::math::modops::centered(p.limbs[l][k], q), c);
+            }
+        }
+    }
+}

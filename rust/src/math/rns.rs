@@ -1,0 +1,298 @@
+//! Residue number system: basis management and fast base conversion.
+//!
+//! Implements BConv (Eq. 3), Modup (Eq. 4) and Moddown (Eq. 5) of the paper
+//! exactly as the scheduler decomposes them: BConv is an inner-product of
+//! per-limb scaled residues against precomputed `q̂_i mod p_j` constants —
+//! on the hardware side this is the MMult–MAdd routine, which is why the
+//! paper's interconnect gives it a dedicated pipeline.
+
+use super::modops::{mod_add, mod_inv, mod_mul, mod_sub, Barrett};
+use super::ntt::NttTable;
+use std::sync::Arc;
+
+/// A chain of NTT-friendly moduli `q_0 … q_{L-1}` (optionally extended by a
+/// special basis `p_0 … p_{M-1}` for hybrid key switching), with all tables
+/// needed for BConv and NTT per limb.
+#[derive(Debug)]
+pub struct RnsBasis {
+    pub n: usize,
+    /// All moduli: first `num_q` are the ciphertext tower, the rest are the
+    /// special (P) extension basis.
+    pub moduli: Vec<u64>,
+    pub num_q: usize,
+    pub ntt: Vec<Arc<NttTable>>,
+    pub barrett: Vec<Barrett>,
+}
+
+impl RnsBasis {
+    pub fn new(n: usize, q_moduli: &[u64], p_moduli: &[u64]) -> Arc<Self> {
+        let mut moduli = q_moduli.to_vec();
+        moduli.extend_from_slice(p_moduli);
+        assert!(!q_moduli.is_empty());
+        // All moduli must be distinct for CRT to hold.
+        let mut sorted = moduli.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), moduli.len(), "duplicate RNS moduli");
+        let ntt = moduli
+            .iter()
+            .map(|&q| Arc::new(NttTable::new(n, q)))
+            .collect();
+        let barrett = moduli.iter().map(|&q| Barrett::new(q)).collect();
+        Arc::new(RnsBasis {
+            n,
+            moduli,
+            num_q: q_moduli.len(),
+            ntt,
+            barrett,
+        })
+    }
+
+    pub fn q_moduli(&self) -> &[u64] {
+        &self.moduli[..self.num_q]
+    }
+
+    pub fn p_moduli(&self) -> &[u64] {
+        &self.moduli[self.num_q..]
+    }
+
+    pub fn num_p(&self) -> usize {
+        self.moduli.len() - self.num_q
+    }
+}
+
+/// Precomputed constants for converting from a source basis (subset of
+/// moduli, identified by index) into target moduli.
+#[derive(Debug, Clone)]
+pub struct BConvTable {
+    /// Source modulus values.
+    pub src: Vec<u64>,
+    /// Target modulus values.
+    pub dst: Vec<u64>,
+    /// `q̂_i^{-1} mod q_i` for each source limb i (q̂_i = Q/q_i).
+    pub qhat_inv: Vec<u64>,
+    /// `q̂_i mod p_j` for each (i, j).
+    pub qhat_mod_p: Vec<Vec<u64>>,
+}
+
+impl BConvTable {
+    pub fn new(src: &[u64], dst: &[u64]) -> Self {
+        let l = src.len();
+        let mut qhat_inv = vec![0u64; l];
+        let mut qhat_mod_p = vec![vec![0u64; dst.len()]; l];
+        for i in 0..l {
+            // q̂_i mod q_i and mod each p_j, computed incrementally to stay
+            // in u64.
+            let mut hat_mod_qi = 1u64;
+            let mut hat_mod_p: Vec<u64> = dst.iter().map(|_| 1u64).collect();
+            for (k, &qk) in src.iter().enumerate() {
+                if k == i {
+                    continue;
+                }
+                hat_mod_qi = mod_mul(hat_mod_qi, qk % src[i], src[i]);
+                for (j, &pj) in dst.iter().enumerate() {
+                    hat_mod_p[j] = mod_mul(hat_mod_p[j], qk % pj, pj);
+                }
+            }
+            qhat_inv[i] = mod_inv(hat_mod_qi, src[i]);
+            qhat_mod_p[i] = hat_mod_p;
+        }
+        BConvTable {
+            src: src.to_vec(),
+            dst: dst.to_vec(),
+            qhat_inv,
+            qhat_mod_p,
+        }
+    }
+
+    /// Fast (approximate) base conversion of one polynomial, coefficient
+    /// domain: `limbs[i][k]` is coefficient k mod src[i]. Returns limbs over
+    /// `dst`. This is Eq. (3); the small `u*Q` additive error inherent to
+    /// the fast variant is absorbed by FHE noise margins (standard practice,
+    /// cf. [37], [61]).
+    pub fn convert(&self, limbs: &[Vec<u64>]) -> Vec<Vec<u64>> {
+        assert_eq!(limbs.len(), self.src.len());
+        let n = limbs[0].len();
+        // Scale each source limb by q̂_i^{-1} first.
+        let scaled: Vec<Vec<u64>> = limbs
+            .iter()
+            .enumerate()
+            .map(|(i, limb)| {
+                let q = self.src[i];
+                let w = self.qhat_inv[i];
+                limb.iter().map(|&c| mod_mul(c, w, q)).collect()
+            })
+            .collect();
+        self.dst
+            .iter()
+            .enumerate()
+            .map(|(j, &pj)| {
+                let mut out = vec![0u64; n];
+                for (i, s) in scaled.iter().enumerate() {
+                    let w = self.qhat_mod_p[i][j];
+                    for k in 0..n {
+                        out[k] = mod_add(out[k], mod_mul(s[k] % pj, w, pj), pj);
+                    }
+                }
+                out
+            })
+            .collect()
+    }
+}
+
+/// Precomputations for Modup/Moddown between the Q tower (first `level`
+/// limbs) and the P special basis.
+#[derive(Debug)]
+pub struct ModupModdown {
+    pub q_to_p: BConvTable,
+    pub p_to_q: BConvTable,
+    /// `P^{-1} mod q_j` for each q limb.
+    pub p_inv_mod_q: Vec<u64>,
+}
+
+impl ModupModdown {
+    pub fn new(q_moduli: &[u64], p_moduli: &[u64]) -> Self {
+        let q_to_p = BConvTable::new(q_moduli, p_moduli);
+        let p_to_q = BConvTable::new(p_moduli, q_moduli);
+        let p_inv_mod_q = q_moduli
+            .iter()
+            .map(|&qj| {
+                let mut p_mod = 1u64;
+                for &p in p_moduli {
+                    p_mod = mod_mul(p_mod, p % qj, qj);
+                }
+                mod_inv(p_mod, qj)
+            })
+            .collect();
+        ModupModdown {
+            q_to_p,
+            p_to_q,
+            p_inv_mod_q,
+        }
+    }
+
+    /// Modup (Eq. 4): extend `[a]_Q` to `[a]_{Q·P}` — returns only the new P
+    /// limbs; caller keeps the Q limbs.
+    pub fn modup(&self, q_limbs: &[Vec<u64>]) -> Vec<Vec<u64>> {
+        self.q_to_p.convert(q_limbs)
+    }
+
+    /// Moddown (Eq. 5): `[a]_{q_j} = ([a]_{q_j} - BConv([a]_P, q_j)) · P^{-1}`.
+    pub fn moddown(&self, q_limbs: &[Vec<u64>], p_limbs: &[Vec<u64>]) -> Vec<Vec<u64>> {
+        let conv = self.p_to_q.convert(p_limbs);
+        q_limbs
+            .iter()
+            .zip(conv.iter())
+            .enumerate()
+            .map(|(j, (aq, cq))| {
+                let qj = self.q_to_p.src[j];
+                let pinv = self.p_inv_mod_q[j];
+                aq.iter()
+                    .zip(cq.iter())
+                    .map(|(&a, &c)| mod_mul(mod_sub(a, c, qj), pinv, qj))
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// CRT-reconstruct one coefficient (for tests / encoding): returns the value
+/// in `[0, Q)` as u128 (Q must fit; only used with few small moduli).
+pub fn crt_reconstruct(residues: &[u64], moduli: &[u64]) -> u128 {
+    let mut q_full: u128 = 1;
+    for &m in moduli {
+        q_full *= m as u128;
+    }
+    let mut acc: u128 = 0;
+    for (i, (&r, &m)) in residues.iter().zip(moduli.iter()).enumerate() {
+        let _ = i;
+        let hat = q_full / m as u128;
+        let hat_mod = (hat % m as u128) as u64;
+        let inv = mod_inv(hat_mod, m);
+        let term = (r as u128 * inv as u128) % m as u128;
+        acc = (acc + term * hat) % q_full;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::modops::ntt_primes;
+    use crate::math::sampler::Rng;
+
+    #[test]
+    fn bconv_defining_property() {
+        // Fast BConv returns residues of (a + u·Q) for some integer
+        // 0 ≤ u < L — check exactly that via CRT over the joint basis.
+        let n = 8usize;
+        let q = ntt_primes(30, 2 * n as u64, 3);
+        let p = ntt_primes(29, 2 * n as u64, 2);
+        let t = BConvTable::new(&q, &p);
+        let mut rng = Rng::seeded(1);
+        let q_full: u128 = q.iter().map(|&x| x as u128).product();
+        let vals: Vec<u128> = (0..n).map(|_| rng.next_u64() as u128 % q_full).collect();
+        let limbs: Vec<Vec<u64>> = q
+            .iter()
+            .map(|&qi| vals.iter().map(|&v| (v % qi as u128) as u64).collect())
+            .collect();
+        let out = t.convert(&limbs);
+        for k in 0..n {
+            // reconstruct output value over the P basis
+            let residues: Vec<u64> = (0..p.len()).map(|j| out[j][k]).collect();
+            let got = crt_reconstruct(&residues, &p);
+            let p_full: u128 = p.iter().map(|&x| x as u128).product();
+            // a + u*Q mod P for some u in [0, L)
+            let ok = (0..q.len() as u128 + 1).any(|u| (vals[k] + u * q_full) % p_full == got);
+            assert!(ok, "coeff {k}: got {got}, a = {}", vals[k]);
+        }
+    }
+
+    #[test]
+    fn modup_moddown_roundtrip_with_bounded_error() {
+        // moddown(modup(a) scaled by P) ≈ a: we check the defining identity
+        // moddown([P·a]_{QP}) == a exactly (P·a has exact P limbs = 0).
+        let n = 8usize;
+        let q = ntt_primes(30, 2 * n as u64, 3);
+        let p = ntt_primes(29, 2 * n as u64, 2);
+        let mm = ModupModdown::new(&q, &p);
+        let mut rng = Rng::seeded(2);
+        let vals: Vec<u64> = (0..n).map(|_| rng.uniform(1 << 24)).collect();
+        // a_limbs = residues of P*v (v small): q_limbs = (P mod qj)*v, p_limbs = 0
+        let q_limbs: Vec<Vec<u64>> = q
+            .iter()
+            .map(|&qj| {
+                let mut pm = 1u64;
+                for &pp in &p {
+                    pm = mod_mul(pm, pp % qj, qj);
+                }
+                vals.iter().map(|&v| mod_mul(v % qj, pm, qj)).collect()
+            })
+            .collect();
+        let p_limbs: Vec<Vec<u64>> = p.iter().map(|_| vec![0u64; n]).collect();
+        let down = mm.moddown(&q_limbs, &p_limbs);
+        for (j, &qj) in q.iter().enumerate() {
+            for k in 0..n {
+                assert_eq!(down[j][k], vals[k] % qj);
+            }
+        }
+    }
+
+    #[test]
+    fn crt_roundtrip() {
+        let moduli = [97u64, 101, 103];
+        let q: u128 = 97 * 101 * 103;
+        for v in [0u128, 1, 12345, q - 1] {
+            let residues: Vec<u64> = moduli.iter().map(|&m| (v % m as u128) as u64).collect();
+            assert_eq!(crt_reconstruct(&residues, &moduli), v);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_moduli_rejected() {
+        let n = 8usize;
+        let q = ntt_primes(30, 2 * n as u64, 1);
+        RnsBasis::new(n, &[q[0], q[0]], &[]);
+    }
+}

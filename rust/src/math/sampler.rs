@@ -1,0 +1,167 @@
+//! Deterministic randomness for key generation and encryption.
+//!
+//! The vendor set has no `rand` crate, so we carry our own xoshiro256++
+//! generator — deterministic seeding makes every test and benchmark
+//! reproducible, which the trace-driven hardware model relies on.
+
+/// xoshiro256++ PRNG (public-domain reference algorithm).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 expansion of a single u64 (the reference method).
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng {
+            s: [next(), next(), next(), next()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, bound)` by rejection (bound > 0).
+    #[inline]
+    pub fn uniform(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Rejection sampling on the top zone to remove modulo bias.
+        let zone = u64::MAX - (u64::MAX % bound);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % bound;
+            }
+        }
+    }
+
+    /// f64 in [0,1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform polynomial with coefficients in `[0, q)`.
+    pub fn uniform_poly(&mut self, n: usize, q: u64) -> Vec<u64> {
+        (0..n).map(|_| self.uniform(q)).collect()
+    }
+
+    /// Ternary secret in {-1, 0, 1} mapped into `[0, q)`.
+    pub fn ternary_poly(&mut self, n: usize, q: u64) -> Vec<u64> {
+        (0..n)
+            .map(|_| match self.uniform(3) {
+                0 => 0,
+                1 => 1,
+                _ => q - 1,
+            })
+            .collect()
+    }
+
+    /// Binary secret in {0, 1} (TFHE-style LWE keys).
+    pub fn binary_vec(&mut self, n: usize) -> Vec<u64> {
+        (0..n).map(|_| self.uniform(2)).collect()
+    }
+
+    /// Centered discrete Gaussian with std-dev `sigma`, folded into `[0, q)`.
+    /// Box–Muller + rounding is ample for a functional simulator (the paper's
+    /// behavioral layer does the same; hardware samplers are out of scope).
+    pub fn gaussian(&mut self, sigma: f64, q: u64) -> u64 {
+        let u1 = self.next_f64().max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        let g = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        let v = (g * sigma).round() as i64;
+        super::modops::from_signed(v, q)
+    }
+
+    /// Gaussian noise polynomial.
+    pub fn gaussian_poly(&mut self, n: usize, sigma: f64, q: u64) -> Vec<u64> {
+        (0..n).map(|_| self.gaussian(sigma, q)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::seeded(1);
+        let mut b = Rng::seeded(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::seeded(2);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_respects_bound() {
+        let mut r = Rng::seeded(9);
+        for _ in 0..10_000 {
+            assert!(r.uniform(97) < 97);
+        }
+    }
+
+    #[test]
+    fn uniform_is_roughly_flat() {
+        let mut r = Rng::seeded(5);
+        let mut buckets = [0usize; 16];
+        let trials = 160_000;
+        for _ in 0..trials {
+            buckets[r.uniform(16) as usize] += 1;
+        }
+        let expect = trials / 16;
+        for &b in &buckets {
+            assert!((b as i64 - expect as i64).unsigned_abs() < expect as u64 / 10);
+        }
+    }
+
+    #[test]
+    fn ternary_values_legal() {
+        let q = 97;
+        let mut r = Rng::seeded(11);
+        for c in r.ternary_poly(1000, q) {
+            assert!(c == 0 || c == 1 || c == q - 1);
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let q = 1u64 << 40;
+        let sigma = 3.2;
+        let mut r = Rng::seeded(13);
+        let n = 100_000;
+        let mut sum = 0i64;
+        let mut sumsq = 0i64;
+        for _ in 0..n {
+            let v = super::super::modops::centered(r.gaussian(sigma, q), q);
+            sum += v;
+            sumsq += v * v;
+        }
+        let mean = sum as f64 / n as f64;
+        let var = sumsq as f64 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.1, "mean {mean}");
+        assert!((var.sqrt() - sigma).abs() < 0.2, "std {}", var.sqrt());
+    }
+}

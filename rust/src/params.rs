@@ -1,0 +1,292 @@
+//! Parameter registry for both FHE lanes.
+//!
+//! Two regimes per scheme:
+//! * **functional** — scaled-down rings that execute in milliseconds; used
+//!   by tests, examples and the numeric hot path. Same algorithms, same
+//!   code paths.
+//! * **paper** — the evaluation parameters of §VI-B (CKKS N=2^16, L=44;
+//!   TFHE per [7],[16]) fed to the analytical hardware model, which only
+//!   needs the arithmetic shape, not live ciphertexts.
+
+use crate::math::modops::ntt_primes;
+
+/// CKKS-like parameter set (RNS-CKKS).
+#[derive(Debug, Clone)]
+pub struct CkksParams {
+    /// Ring degree N (power of two); N/2 complex slots.
+    pub n: usize,
+    /// Ciphertext tower moduli (first is the base, last is dropped first).
+    pub q_moduli: Vec<u64>,
+    /// Special basis for hybrid key switching.
+    pub p_moduli: Vec<u64>,
+    /// Encoding scale Δ.
+    pub scale: f64,
+    /// Error std-dev.
+    pub sigma: f64,
+}
+
+impl CkksParams {
+    /// Scaled-down functional set: N=2^12, 6+2 limbs of 28/29-bit primes.
+    /// Precision ≈ 20 bits after one rescale — ample for the app demos.
+    pub fn functional() -> Self {
+        let n = 1usize << 12;
+        let q = ntt_primes(28, 2 * n as u64, 6);
+        let p = ntt_primes(29, 2 * n as u64, 2);
+        CkksParams {
+            n,
+            q_moduli: q,
+            p_moduli: p,
+            scale: (1u64 << 28) as f64,
+            sigma: 3.2,
+        }
+    }
+
+    /// Tiny set for fast unit tests.
+    pub fn tiny() -> Self {
+        let n = 1usize << 10;
+        let q = ntt_primes(28, 2 * n as u64, 4);
+        let p = ntt_primes(29, 2 * n as u64, 1);
+        CkksParams {
+            n,
+            q_moduli: q,
+            p_moduli: p,
+            scale: (1u64 << 28) as f64,
+            sigma: 3.2,
+        }
+    }
+
+    /// Bootstrapping-capable functional set: deeper tower (the bootstrap
+    /// pipeline consumes ~16 levels: CtS 1 + sine 12 + recombine 2 + StC 1).
+    pub fn functional_boot() -> Self {
+        let n = 1usize << 12;
+        let q = ntt_primes(28, 2 * n as u64, 20);
+        let p = ntt_primes(29, 2 * n as u64, 2);
+        CkksParams {
+            n,
+            q_moduli: q,
+            p_moduli: p,
+            scale: (1u64 << 28) as f64,
+            sigma: 3.2,
+        }
+    }
+
+    /// The paper's evaluation shape (Table V note: N=2^16, L=44, plus
+    /// special limbs). Only the *shape* is used (hardware model input);
+    /// instantiating live ciphertexts at this size is unnecessary.
+    pub fn paper_shape() -> CkksShape {
+        CkksShape {
+            n: 1 << 16,
+            num_q: 44,
+            num_p: 4,
+            limb_bits: 28,
+        }
+    }
+
+    pub fn shape(&self) -> CkksShape {
+        CkksShape {
+            n: self.n,
+            num_q: self.q_moduli.len(),
+            num_p: self.p_moduli.len(),
+            limb_bits: 28,
+        }
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.n / 2
+    }
+}
+
+/// Arithmetic shape of a CKKS parameter set — all the hardware model needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CkksShape {
+    pub n: usize,
+    pub num_q: usize,
+    pub num_p: usize,
+    pub limb_bits: u32,
+}
+
+impl CkksShape {
+    /// Bytes of one full ciphertext (2 polys × limbs × N × 8B words).
+    pub fn ciphertext_bytes(&self) -> u64 {
+        2 * self.num_q as u64 * self.n as u64 * 8
+    }
+    /// Bytes of one key-switching key (hybrid, dnum=1 digit here): 2 polys
+    /// over Q·P basis.
+    pub fn evk_bytes(&self) -> u64 {
+        2 * (self.num_q + self.num_p) as u64 * self.n as u64 * 8
+    }
+}
+
+/// TFHE-like parameter set over an NTT-friendly prime ("NTT-TFHE" as in
+/// MATCHA [32]; see DESIGN.md shared-numeric-regime note).
+#[derive(Debug, Clone)]
+pub struct TfheParams {
+    /// LWE dimension n.
+    pub lwe_n: usize,
+    /// LWE modulus (same prime as RLWE for simplicity of switching).
+    pub lwe_q: u64,
+    /// RLWE ring degree N.
+    pub rlwe_n: usize,
+    /// RLWE modulus Q (NTT-friendly prime < 2^31).
+    pub rlwe_q: u64,
+    /// Gadget decomposition base log (bits per digit) for RGSW.
+    pub decomp_base_log: u32,
+    /// Gadget decomposition levels for RGSW.
+    pub decomp_levels: usize,
+    /// Key-switching decomposition base log.
+    pub ks_base_log: u32,
+    /// Key-switching decomposition levels.
+    pub ks_levels: usize,
+    /// LWE noise std-dev.
+    pub lwe_sigma: f64,
+    /// RLWE noise std-dev.
+    pub rlwe_sigma: f64,
+    /// Plaintext space size for message encoding (e.g. 4 ⇒ 2 bits).
+    pub plaintext_space: u64,
+}
+
+impl TfheParams {
+    /// Functional set sized for correct gate bootstrapping with the 31-bit
+    /// prime modulus. Mirrors the structure of TFHE-lib's default
+    /// (n=630, N=1024, Bg=2^7, l=3) with noise scaled to our modulus.
+    pub fn functional() -> Self {
+        let rlwe_n = 1024usize;
+        let q = ntt_primes(31, 2 * rlwe_n as u64, 1)[0];
+        TfheParams {
+            lwe_n: 512,
+            lwe_q: q,
+            rlwe_n,
+            rlwe_q: q,
+            decomp_base_log: 4,
+            decomp_levels: 7,
+            ks_base_log: 4,
+            ks_levels: 6,
+            // σ chosen so the blind-rotation accumulation stays ≪ Q/16:
+            // var/CMUX ≈ 2l·N·(B²/12)·σ² ⇒ e_GB ≈ 2^15 ≪ 2^27 (see
+            // DESIGN.md noise budget); fine even for CB-produced RGSW
+            // reused in CMUX trees (amplification ≈ √(2lN/12)·B ≈ 2^9).
+            lwe_sigma: 6.0,
+            rlwe_sigma: 3.2,
+            plaintext_space: 4,
+        }
+    }
+
+    /// Small set for fast unit tests (not cryptographically meaningful).
+    pub fn tiny() -> Self {
+        let rlwe_n = 256usize;
+        let q = ntt_primes(31, 2 * rlwe_n as u64, 1)[0];
+        TfheParams {
+            lwe_n: 128,
+            lwe_q: q,
+            rlwe_n,
+            rlwe_q: q,
+            decomp_base_log: 4,
+            decomp_levels: 7,
+            ks_base_log: 4,
+            ks_levels: 6,
+            lwe_sigma: 4.0,
+            rlwe_sigma: 3.2,
+            plaintext_space: 4,
+        }
+    }
+
+    /// The paper's evaluation shape (TFHE parameters of [7],[16]):
+    /// n=630, N=1024, Bg=2^6, l=3, t=8 KS levels — used by the hardware
+    /// model and the Table-II key-size accounting.
+    pub fn paper_shape() -> TfheShape {
+        TfheShape {
+            lwe_n: 630,
+            rlwe_n: 1024,
+            decomp_levels: 3,
+            ks_levels: 8,
+            cb_levels: 4,
+            word_bits: 32,
+        }
+    }
+
+    pub fn shape(&self) -> TfheShape {
+        TfheShape {
+            lwe_n: self.lwe_n,
+            rlwe_n: self.rlwe_n,
+            decomp_levels: self.decomp_levels,
+            ks_levels: self.ks_levels,
+            cb_levels: self.decomp_levels,
+            word_bits: 32,
+        }
+    }
+
+    /// Message scale Δ = round(Q / plaintext_space).
+    pub fn delta(&self) -> u64 {
+        self.lwe_q / self.plaintext_space
+    }
+}
+
+/// Arithmetic shape of a TFHE parameter set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TfheShape {
+    pub lwe_n: usize,
+    pub rlwe_n: usize,
+    pub decomp_levels: usize,
+    pub ks_levels: usize,
+    /// circuit-bootstrapping output gadget levels
+    pub cb_levels: usize,
+    pub word_bits: u32,
+}
+
+impl TfheShape {
+    /// Bootstrapping key bytes: n RGSW ciphertexts (2·l polys of 2 components).
+    pub fn bsk_bytes(&self) -> u64 {
+        self.lwe_n as u64 * 2 * self.decomp_levels as u64 * 2 * self.rlwe_n as u64
+            * (self.word_bits as u64 / 8)
+    }
+    /// LWE key-switching key bytes (PubKS): n_in · t · (n_out+1) words.
+    pub fn ksk_bytes(&self, n_out: usize) -> u64 {
+        self.rlwe_n as u64 * self.ks_levels as u64 * (n_out as u64 + 1)
+            * (self.word_bits as u64 / 8)
+    }
+    /// PrivKS key bytes: (n+1)·t RLWE rows per secret function, for both
+    /// CB functions (u = 1 and u = z̃) at every CB output level — the full
+    /// circuit-bootstrapping key bank the paper caches in-memory
+    /// (Table II: ~1.8 GB at paper scale; this formula lands in the same
+    /// decade, see EXPERIMENTS.md).
+    pub fn privksk_bytes(&self) -> u64 {
+        (self.rlwe_n as u64 + 1)
+            * self.ks_levels as u64
+            * 2
+            * self.rlwe_n as u64
+            * (self.word_bits as u64 / 8)
+            * 2
+            * self.cb_levels as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn functional_params_are_consistent() {
+        let c = CkksParams::functional();
+        assert!(c.n.is_power_of_two());
+        for &q in c.q_moduli.iter().chain(c.p_moduli.iter()) {
+            assert_eq!((q - 1) % (2 * c.n as u64), 0);
+            assert!(q < 1 << 31);
+        }
+        let t = TfheParams::functional();
+        assert_eq!((t.rlwe_q - 1) % (2 * t.rlwe_n as u64), 0);
+        assert!(t.delta() > 1 << 28);
+    }
+
+    #[test]
+    fn paper_shapes_match_table_ii_magnitudes() {
+        // Table II: PrivKS cached key 1.8 GB, GB key 37 MB (32-bit words).
+        let t = TfheParams::paper_shape();
+        let bsk_mb = t.bsk_bytes() as f64 / (1 << 20) as f64;
+        assert!(bsk_mb > 10.0 && bsk_mb < 80.0, "BSK {bsk_mb} MB");
+        let ck = CkksParams::paper_shape();
+        // evk ≈ 120 MB class for CMult keys at N=2^16 L=44 with digits;
+        // our single-digit hybrid evk is ~50 MB; same order.
+        let evk_mb = ck.evk_bytes() as f64 / (1 << 20) as f64;
+        assert!(evk_mb > 10.0 && evk_mb < 300.0, "evk {evk_mb} MB");
+    }
+}

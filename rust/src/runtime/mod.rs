@@ -1,0 +1,186 @@
+//! Accelerator runtime: load AOT-compiled JAX/Pallas artifacts (HLO text)
+//! and execute them on the PJRT CPU client from the L3 hot path.
+//!
+//! Python never runs here — `make artifacts` produced the HLO once; this
+//! module is the software stand-in for the paper's NMC datapath: each
+//! compiled executable is one "datapath configuration" the interconnect
+//! controller would set up (§IV-A), selected by operator name.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Parsed `artifacts/manifest.txt` entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub num_inputs: usize,
+    /// input shapes, e.g. [[14, 256], [14, 256]]
+    pub shapes: Vec<Vec<usize>>,
+    pub modulus: u64,
+}
+
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() != 5 {
+            return Err(anyhow!("manifest line {} malformed: {line}", i + 1));
+        }
+        let shapes = parts[3]
+            .split(';')
+            .map(|s| {
+                s.split('x')
+                    .map(|d| d.parse::<usize>().context("bad dim"))
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        out.push(ArtifactMeta {
+            name: parts[0].to_string(),
+            file: parts[1].to_string(),
+            num_inputs: parts[2].parse()?,
+            shapes,
+            modulus: parts[4].parse()?,
+        });
+    }
+    Ok(out)
+}
+
+/// PJRT-backed executor with a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: HashMap<String, ArtifactMeta>,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Load the manifest from an artifacts directory and create the CPU
+    /// PJRT client. Compilation is lazy per artifact.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let manifest = parse_manifest(&text)?
+            .into_iter()
+            .map(|m| (m.name.clone(), m))
+            .collect();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Locate the default artifacts directory (works from repo root and
+    /// from test/bench working directories).
+    pub fn default_dir() -> PathBuf {
+        let cands = ["artifacts", "../artifacts", "../../artifacts"];
+        for c in cands {
+            if Path::new(c).join("manifest.txt").exists() {
+                return PathBuf::from(c);
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    fn compile(&self, name: &str) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on u64 tensors (flattened row-major). Returns
+    /// the flattened u64 output of the (single-tuple) result.
+    pub fn execute_u64(&self, name: &str, inputs: &[Vec<u64>]) -> Result<Vec<u64>> {
+        self.compile(name)?;
+        let meta = &self.manifest[name];
+        if inputs.len() != meta.num_inputs {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                meta.num_inputs,
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            let dims: Vec<i64> = meta.shapes[i].iter().map(|&d| d as i64).collect();
+            let expect: usize = meta.shapes[i].iter().product();
+            if data.len() != expect {
+                return Err(anyhow!(
+                    "{name} input {i}: expected {expect} elements, got {}",
+                    data.len()
+                ));
+            }
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape: {e}"))?;
+            literals.push(lit);
+        }
+        let cache = self.cache.lock().unwrap();
+        let exe = &cache[name];
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        // aot.py lowers with return_tuple=True → single-element tuple
+        let out = lit.to_tuple1().map_err(|e| anyhow!("tuple: {e}"))?;
+        out.to_vec::<u64>().map_err(|e| anyhow!("to_vec: {e}"))
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let text = "ntt_fwd_n256 ntt_fwd_n256.hlo.txt 1 14x256 2147483137\n\
+                    ep external.hlo.txt 3 14x256;14x256;14x256 2147483137\n";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].shapes, vec![vec![14, 256]]);
+        assert_eq!(m[1].num_inputs, 3);
+        assert_eq!(m[1].shapes.len(), 3);
+        assert_eq!(m[0].modulus, 2147483137);
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        assert!(parse_manifest("too few fields\n").is_err());
+        assert!(parse_manifest("a b c 1x2 5\n").is_err()); // non-numeric count
+    }
+}

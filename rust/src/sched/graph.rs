@@ -1,0 +1,119 @@
+//! Operator DAG extraction (§III-B, §V): the scheduler's view of an FHE
+//! program — nodes are high-level operators on ciphertext handles, edges
+//! are data dependencies; key-sharing clusters drive group batching.
+
+use super::oplevel::FheOp;
+use std::collections::BTreeMap;
+
+pub type NodeId = usize;
+
+#[derive(Debug, Clone)]
+pub struct OpNode {
+    pub id: NodeId,
+    pub op: FheOp,
+    pub inputs: Vec<NodeId>,
+    /// evaluation-key identity (ops sharing a key cluster together)
+    pub key_id: Option<u32>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct OpGraph {
+    pub nodes: Vec<OpNode>,
+}
+
+impl OpGraph {
+    pub fn add(&mut self, op: FheOp, inputs: &[NodeId], key_id: Option<u32>) -> NodeId {
+        let id = self.nodes.len();
+        for &i in inputs {
+            assert!(i < id, "inputs must precede the node (DAG)");
+        }
+        self.nodes.push(OpNode {
+            id,
+            op,
+            inputs: inputs.to_vec(),
+            key_id,
+        });
+        id
+    }
+
+    /// Topological levels (nodes are appended in topo order by
+    /// construction; levelization groups independent nodes for parallel
+    /// dispatch).
+    pub fn levels(&self) -> Vec<Vec<NodeId>> {
+        let mut level_of = vec![0usize; self.nodes.len()];
+        let mut max_level = 0;
+        for node in &self.nodes {
+            let l = node
+                .inputs
+                .iter()
+                .map(|&i| level_of[i] + 1)
+                .max()
+                .unwrap_or(0);
+            level_of[node.id] = l;
+            max_level = max_level.max(l);
+        }
+        let mut out = vec![Vec::new(); max_level + 1];
+        for node in &self.nodes {
+            out[level_of[node.id]].push(node.id);
+        }
+        out
+    }
+
+    /// Key-sharing clusters within one level (§V-B): ops with the same
+    /// key_id execute back-to-back so the evk streams once.
+    pub fn key_clusters(&self, level: &[NodeId]) -> Vec<Vec<NodeId>> {
+        let mut by_key: BTreeMap<i64, Vec<NodeId>> = BTreeMap::new();
+        for &id in level {
+            let k = self.nodes[id].key_id.map(|v| v as i64).unwrap_or(-1 - id as i64);
+            by_key.entry(k).or_default().push(id);
+        }
+        by_key.into_values().collect()
+    }
+
+    /// Critical-path length in operator counts.
+    pub fn depth(&self) -> usize {
+        self.levels().len()
+    }
+
+    pub fn count(&self, op: FheOp) -> usize {
+        self.nodes.iter().filter(|n| n.op == op).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levelization_respects_dependencies() {
+        let mut g = OpGraph::default();
+        let a = g.add(FheOp::PMult, &[], Some(1));
+        let b = g.add(FheOp::PMult, &[], Some(1));
+        let c = g.add(FheOp::HAdd, &[a, b], None);
+        let d = g.add(FheOp::CMult, &[c], Some(2));
+        let levels = g.levels();
+        assert_eq!(levels.len(), 3);
+        assert_eq!(levels[0], vec![a, b]);
+        assert_eq!(levels[1], vec![c]);
+        assert_eq!(levels[2], vec![d]);
+        assert_eq!(g.depth(), 3);
+    }
+
+    #[test]
+    fn key_clusters_group_same_key() {
+        let mut g = OpGraph::default();
+        let a = g.add(FheOp::HRot, &[], Some(7));
+        let b = g.add(FheOp::HRot, &[], Some(7));
+        let c = g.add(FheOp::HRot, &[], Some(8));
+        let clusters = g.key_clusters(&[a, b, c]);
+        assert_eq!(clusters.len(), 2);
+        assert!(clusters.iter().any(|c| c.len() == 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "DAG")]
+    fn forward_references_rejected() {
+        let mut g = OpGraph::default();
+        g.add(FheOp::HAdd, &[3], None);
+    }
+}

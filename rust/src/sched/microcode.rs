@@ -1,0 +1,164 @@
+//! Micro-instruction emission (§V): the scheduler's output — a linear
+//! stream of FU-level instructions with datapath configuration directives,
+//! consumed by the DIMM workers in the coordinator.
+
+use super::oplevel::FheOp;
+use crate::hw::Routine;
+
+/// One micro-instruction for the NMC module.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MicroOp {
+    /// configure the interconnect for a routine
+    Configure(Routine),
+    /// load polynomial data into a register file (bytes)
+    Load { bytes: u64 },
+    /// forward/inverse NTT of `count` polys of degree `n`
+    Ntt { count: u64, n: u64, inverse: bool },
+    /// elementwise modmul of `elems` scalars
+    MMult { elems: u64 },
+    /// elementwise modadd of `elems` scalars
+    MAdd { elems: u64 },
+    /// automorphism of `elems` coefficients
+    Automorph { elems: u64 },
+    /// gadget decomposition of `elems` coefficients
+    Decomp { elems: u64 },
+    /// in-memory KS accumulation touching `key_bytes`
+    ImcAccumulate { key_bytes: u64 },
+    /// store result (bytes)
+    Store { bytes: u64 },
+}
+
+/// Emit the micro-op stream for a high-level operator (the Fig. 4 / Fig. 9
+/// dataflows as instruction sequences).
+pub fn emit(op: FheOp, n: u64, limbs: u64, gadget_rows: u64, key_bytes: u64) -> Vec<MicroOp> {
+    use MicroOp::*;
+    let word = 8;
+    match op {
+        FheOp::HAdd => vec![
+            Configure(Routine::R2),
+            Load { bytes: 4 * limbs * n * word },
+            MAdd { elems: 2 * limbs * n },
+            Store { bytes: 2 * limbs * n * word },
+        ],
+        FheOp::PMult => vec![
+            Configure(Routine::R2),
+            Load { bytes: (2 * limbs + limbs) * n * word },
+            MMult { elems: 2 * limbs * n },
+            Store { bytes: 2 * limbs * n * word },
+        ],
+        FheOp::Cmux => {
+            let mut v = vec![
+                Configure(Routine::R1),
+                Load { bytes: 2 * n * word },
+                Decomp { elems: 2 * n },
+                Ntt { count: gadget_rows, n, inverse: false },
+                MMult { elems: gadget_rows * n * 2 },
+                MAdd { elems: gadget_rows * n * 2 },
+                Ntt { count: 2, n, inverse: true },
+            ];
+            v.push(Store { bytes: 2 * n * word });
+            v
+        }
+        FheOp::PubKS | FheOp::PrivKS => vec![
+            ImcAccumulate { key_bytes },
+            Store { bytes: 2 * n * word },
+        ],
+        FheOp::KeySwitch | FheOp::CMult | FheOp::HRot => {
+            // the three §V-B groups, in order
+            let joint = limbs + 2;
+            let mut v = vec![Configure(Routine::R1)];
+            if op == FheOp::HRot {
+                v.push(Automorph { elems: 2 * limbs * n });
+            }
+            if op == FheOp::CMult {
+                v.push(Configure(Routine::R2));
+                v.push(MMult { elems: 4 * limbs * n });
+                v.push(Configure(Routine::R1));
+            }
+            v.extend([
+                // group 1: (I)NTT–MAdd
+                Ntt { count: limbs, n, inverse: true },
+                MAdd { elems: limbs * n },
+                // group 2: (I)NTT–MMult
+                Ntt { count: limbs * joint, n, inverse: false },
+                MMult { elems: limbs * joint * n * 2 },
+                // group 3: (I)NTT–BConv
+                Ntt { count: joint, n, inverse: true },
+                MMult { elems: 2 * limbs * n },
+                MAdd { elems: 2 * limbs * n },
+            ]);
+            v.push(Store { bytes: 2 * limbs * n * word });
+            v
+        }
+        _ => {
+            // composite ops expand through their components at schedule time
+            vec![Configure(Routine::R1)]
+        }
+    }
+}
+
+/// Sanity statistics over a stream (used by tests and the inspector CLI).
+pub fn stats(stream: &[MicroOp]) -> (u64, u64, u64) {
+    let mut ntts = 0u64;
+    let mut elems = 0u64;
+    let mut bytes = 0u64;
+    for op in stream {
+        match op {
+            MicroOp::Ntt { count, .. } => ntts += count,
+            MicroOp::MMult { elems: e } | MicroOp::MAdd { elems: e } => elems += e,
+            MicroOp::Load { bytes: b } | MicroOp::Store { bytes: b } => bytes += b,
+            MicroOp::ImcAccumulate { key_bytes } => bytes += key_bytes,
+            _ => {}
+        }
+    }
+    (ntts, elems, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hadd_uses_only_routine2() {
+        let stream = emit(FheOp::HAdd, 1 << 16, 44, 0, 0);
+        assert_eq!(stream[0], MicroOp::Configure(Routine::R2));
+        assert!(stream.iter().all(|m| !matches!(m, MicroOp::Ntt { .. })));
+    }
+
+    #[test]
+    fn cmux_follows_fig9_order() {
+        let stream = emit(FheOp::Cmux, 1024, 1, 6, 0);
+        let kinds: Vec<u8> = stream
+            .iter()
+            .map(|m| match m {
+                MicroOp::Decomp { .. } => 1,
+                MicroOp::Ntt { inverse: false, .. } => 2,
+                MicroOp::MMult { .. } => 3,
+                MicroOp::MAdd { .. } => 4,
+                MicroOp::Ntt { inverse: true, .. } => 5,
+                _ => 0,
+            })
+            .filter(|&k| k != 0)
+            .collect();
+        assert_eq!(kinds, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn keyswitch_emits_three_groups() {
+        let stream = emit(FheOp::KeySwitch, 1 << 16, 44, 0, 0);
+        let ntt_count = stream
+            .iter()
+            .filter(|m| matches!(m, MicroOp::Ntt { .. }))
+            .count();
+        assert_eq!(ntt_count, 3, "three (I)NTT groups per §V-B");
+    }
+
+    #[test]
+    fn imc_ops_touch_keys_without_compute() {
+        let stream = emit(FheOp::PrivKS, 1024, 1, 0, 1 << 31);
+        let (ntts, elems, bytes) = stats(&stream);
+        assert_eq!(ntts, 0);
+        assert_eq!(elems, 0);
+        assert!(bytes > 1 << 30);
+    }
+}

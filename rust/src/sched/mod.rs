@@ -1,0 +1,13 @@
+//! The multi-scheme operator compiler (§V): operator-level decomposition
+//! and group scheduling, task-level multi-DIMM scheduling, micro-code
+//! emission and ciphertext packing decisions.
+
+pub mod graph;
+pub mod microcode;
+pub mod oplevel;
+pub mod packing;
+pub mod tasklevel;
+
+pub use graph::{OpGraph, OpNode};
+pub use oplevel::{profile_op, FheOp, OpShapes};
+pub use tasklevel::{schedule_tasks, DimmAssignment, Task};

@@ -1,0 +1,83 @@
+//! Ciphertext packing and parallelism extraction (§V-C, Fig. 10):
+//! the Eq. (10) LWE→RLWE packing decision and the vertical / horizontal /
+//! mixed RLWE placement strategies across DIMMs.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Packing {
+    Vertical,
+    Horizontal,
+    Mixed,
+}
+
+/// Eq. (10): pack t LWEs into one RLWE iff
+/// `T_pack + T_transfer(RLWE) ≤ t · T_transfer(LWE)`.
+pub fn should_pack(
+    t: u64,
+    pack_cost_s: f64,
+    rlwe_bytes: u64,
+    lwe_bytes: u64,
+    bw: f64,
+) -> bool {
+    let rlwe_t = rlwe_bytes as f64 / bw;
+    let lwe_t = lwe_bytes as f64 / bw;
+    pack_cost_s + rlwe_t <= t as f64 * lwe_t
+}
+
+/// Choose a packing strategy from the workload shape (Fig. 10 guidance).
+/// `samples` × `features`, `per_dim_analysis`: whether the computation
+/// compares across samples within a feature dimension.
+pub fn choose_packing(samples: usize, features: usize, slots: usize, per_dim_analysis: bool) -> Packing {
+    if per_dim_analysis {
+        Packing::Vertical
+    } else if samples <= slots / features.max(1) {
+        // multiple whole samples fit one ciphertext
+        Packing::Horizontal
+    } else {
+        Packing::Mixed
+    }
+}
+
+/// Communication bytes of the aggregation phase for each strategy,
+/// normalized per k-means-style iteration (§V-C discussion).
+pub fn aggregation_bytes(p: Packing, samples: u64, features: u64, rlwe_bytes: u64) -> u64 {
+    match p {
+        // one partial result per feature dimension
+        Packing::Vertical => features * rlwe_bytes,
+        // all-pairs style traffic if the app demands cross-sample distances
+        Packing::Horizontal => samples * rlwe_bytes / 2,
+        // sub-matrix partials
+        Packing::Mixed => (features + samples / 2) * rlwe_bytes / 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq10_threshold_behaviour() {
+        let bw = 30e9;
+        let rlwe = 64 * 1024u64;
+        let lwe = 4 * 1024u64;
+        // packing 1 LWE is never worth it
+        assert!(!should_pack(1, 1e-6, rlwe, lwe, bw));
+        // packing 512 clearly is (transfer dominates)
+        assert!(should_pack(512, 1e-6, rlwe, lwe, bw));
+    }
+
+    #[test]
+    fn strategy_selection() {
+        assert_eq!(choose_packing(8192, 16, 2048, true), Packing::Vertical);
+        assert_eq!(choose_packing(64, 16, 2048, false), Packing::Horizontal);
+        assert_eq!(choose_packing(100_000, 128, 2048, false), Packing::Mixed);
+    }
+
+    #[test]
+    fn vertical_scales_with_features_not_samples() {
+        let a = aggregation_bytes(Packing::Vertical, 1 << 20, 16, 1 << 16);
+        let b = aggregation_bytes(Packing::Vertical, 1 << 10, 16, 1 << 16);
+        assert_eq!(a, b);
+        let h = aggregation_bytes(Packing::Horizontal, 1 << 20, 16, 1 << 16);
+        assert!(h > a);
+    }
+}

@@ -1,0 +1,172 @@
+//! TFHE gate/programmable bootstrapping: blind rotation + sample extract +
+//! key switch. The blind-rotation inner loop is the Fig. 9 dataflow:
+//! decompose → NTT → MMult against BK rows → MAdd accumulate → INTT.
+
+use super::keyswitch::{key_switch, LweKeySwitchKey};
+use super::lwe::{LweCiphertext, LweSecretKey};
+use super::rgsw::{cmux, RgswCiphertext};
+use super::rlwe::{extracted_lwe_key, RlweCiphertext, RlweSecretKey};
+use super::TfheCtx;
+use crate::math::sampler::Rng;
+use std::sync::Arc;
+
+/// Bootstrapping key: one RGSW encryption of each LWE secret bit, plus the
+/// key-switching key back from the extracted key to the LWE key.
+pub struct BootstrapKey {
+    pub bk: Vec<RgswCiphertext>,
+    pub ksk: LweKeySwitchKey,
+}
+
+impl BootstrapKey {
+    pub fn generate(
+        ctx: &Arc<TfheCtx>,
+        lwe_key: &LweSecretKey,
+        rlwe_key: &RlweSecretKey,
+        rng: &mut Rng,
+    ) -> Self {
+        let bk = lwe_key
+            .s
+            .iter()
+            .map(|&si| RgswCiphertext::encrypt_bit(ctx, rlwe_key, si, ctx.params.rlwe_sigma, rng))
+            .collect();
+        let big_key = extracted_lwe_key(rlwe_key, ctx.q());
+        let ksk = LweKeySwitchKey::generate(ctx, &big_key, lwe_key, rng);
+        BootstrapKey { bk, ksk }
+    }
+
+    /// Table II accounting: RGSW rows × 2 polys × N words.
+    pub fn bsk_bytes(&self, ctx: &TfheCtx) -> u64 {
+        self.bk.len() as u64
+            * (2 * ctx.params.decomp_levels) as u64
+            * 2
+            * ctx.n_poly() as u64
+            * 8
+    }
+}
+
+/// Blind rotation: returns `ACC = X^{-φ̃} · tv` as an RLWE ciphertext, where
+/// `φ̃` is the input phase switched to `Z_{2N}` and `tv` the test vector.
+pub fn blind_rotate(
+    ctx: &Arc<TfheCtx>,
+    bk: &[RgswCiphertext],
+    c: &LweCiphertext,
+    test_vector: &[u64],
+) -> RlweCiphertext {
+    let q = ctx.q();
+    let n = ctx.n_poly();
+    let two_n = 2 * n as u64;
+    let (a_tilde, b_tilde) = c.mod_switch(two_n);
+    // ACC = X^{-b̃} · tv (trivial)
+    let neg_b = (two_n - b_tilde) as usize % (two_n as usize);
+    let mut acc = RlweCiphertext::trivial(ctx, test_vector).monomial_mul(neg_b, q);
+    for (i, &ai) in a_tilde.iter().enumerate() {
+        if ai == 0 {
+            continue;
+        }
+        // ACC ← CMUX(BK_i; ACC, X^{-ã_i}·ACC): selects the rotated branch
+        // when s_i = 1, accumulating X^{-ã_i·s_i}.
+        let neg_ai = (two_n - ai) as usize % (two_n as usize);
+        let rotated = acc.monomial_mul(neg_ai, q);
+        acc = cmux(ctx, &bk[i], &acc, &rotated);
+    }
+    acc
+}
+
+/// Programmable bootstrap against an arbitrary negacyclic test vector:
+/// output LWE (dim N, extracted key) whose phase is
+/// `tv[φ̃]` for `φ̃ ∈ [0, N)` and `-tv[φ̃-N]` for `φ̃ ∈ [N, 2N)`.
+pub fn programmable_bootstrap_extract(
+    ctx: &Arc<TfheCtx>,
+    bk: &BootstrapKey,
+    c: &LweCiphertext,
+    test_vector: &[u64],
+) -> LweCiphertext {
+    let acc = blind_rotate(ctx, &bk.bk, c, test_vector);
+    acc.sample_extract_q(0, ctx.q())
+}
+
+/// Full gate-style bootstrap: blind rotate with a constant test vector
+/// `μ` (so the result phase is `±μ`), extract, and key-switch back to the
+/// small LWE key. Refreshes noise to the bootstrap floor.
+pub fn bootstrap_to_sign(
+    ctx: &Arc<TfheCtx>,
+    bk: &BootstrapKey,
+    c: &LweCiphertext,
+    mu: u64,
+) -> LweCiphertext {
+    let tv = vec![mu % ctx.q(); ctx.n_poly()];
+    let extracted = programmable_bootstrap_extract(ctx, bk, c, &tv);
+    key_switch(ctx, &bk.ksk, &extracted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::modops::{centered, mod_neg, mod_sub};
+    use crate::params::TfheParams;
+
+    fn setup() -> (Arc<TfheCtx>, LweSecretKey, RlweSecretKey, BootstrapKey, Rng) {
+        let ctx = TfheCtx::new(TfheParams::tiny());
+        let mut rng = Rng::seeded(500);
+        let lwe_key = LweSecretKey::generate(&ctx, &mut rng);
+        let rlwe_key = RlweSecretKey::generate(&ctx, &mut rng);
+        let bk = BootstrapKey::generate(&ctx, &lwe_key, &rlwe_key, &mut rng);
+        (ctx, lwe_key, rlwe_key, bk, rng)
+    }
+
+    #[test]
+    fn blind_rotate_lands_on_expected_coefficient() {
+        let (ctx, lwe_key, rlwe_key, bk, mut rng) = setup();
+        let q = ctx.q();
+        let n = ctx.n_poly();
+        // staircase test vector tv[k] = k·step with step ≫ bootstrap noise,
+        // so coeff0 of the result reveals the rotation index φ̃.
+        let step = q / (4 * n as u64);
+        let tv: Vec<u64> = (0..n as u64).map(|k| k * step).collect();
+        // phase = Q/4 → φ̃ = N/2 → coeff0 = tv[N/2] = (N/2)·step
+        let c = LweCiphertext::encrypt_phase(&lwe_key, q / 4, ctx.params.lwe_sigma, &mut rng);
+        let acc = blind_rotate(&ctx, &bk.bk, &c, &tv);
+        let extracted = acc.sample_extract_q(0, q);
+        let big_key = extracted_lwe_key(&rlwe_key, q);
+        let phase = extracted.phase(&big_key);
+        let expect = (n as u64 / 2) * step;
+        let err = centered(mod_sub(phase, expect, q), q).unsigned_abs();
+        // allow a few index positions of mod-switch drift + noise
+        assert!(err < 8 * step, "phase {phase} expect {expect} err {err}");
+    }
+
+    #[test]
+    fn bootstrap_sign_positive_and_negative() {
+        let (ctx, lwe_key, _rlwe_key, bk, mut rng) = setup();
+        let q = ctx.q();
+        let mu = q / 8;
+        // phase +Q/4 (positive half) → +μ
+        let c_pos = LweCiphertext::encrypt_phase(&lwe_key, q / 4, ctx.params.lwe_sigma, &mut rng);
+        let out_pos = bootstrap_to_sign(&ctx, &bk, &c_pos, mu);
+        let err_pos = centered(mod_sub(out_pos.phase(&lwe_key), mu, q), q).unsigned_abs();
+        assert!(err_pos < q / 64, "pos err {err_pos}");
+        // phase -Q/4 (negative half) → -μ
+        let c_neg = LweCiphertext::encrypt_phase(
+            &lwe_key,
+            mod_neg(q / 4, q),
+            ctx.params.lwe_sigma,
+            &mut rng,
+        );
+        let out_neg = bootstrap_to_sign(&ctx, &bk, &c_neg, mu);
+        let err_neg =
+            centered(mod_sub(out_neg.phase(&lwe_key), mod_neg(mu, q), q), q).unsigned_abs();
+        assert!(err_neg < q / 64, "neg err {err_neg}");
+    }
+
+    #[test]
+    fn bootstrap_output_noise_below_floor() {
+        // Bootstrapped noise must be far below the gate margin Q/16.
+        let (ctx, lwe_key, _r, bk, mut rng) = setup();
+        let q = ctx.q();
+        let mu = q / 8;
+        let c = LweCiphertext::encrypt_phase(&lwe_key, q / 4, ctx.params.lwe_sigma, &mut rng);
+        let out = bootstrap_to_sign(&ctx, &bk, &c, mu);
+        let err = centered(mod_sub(out.phase(&lwe_key), mu, q), q).unsigned_abs();
+        assert!(err < q / 256, "bootstrap noise {err} vs floor {}", q / 256);
+    }
+}

@@ -1,0 +1,158 @@
+//! Circuit bootstrapping (CB): LWE(bool) → RGSW(bit), the expensive
+//! TFHE operator that powers CMUX trees (VSP [48], HE3DB [7]).
+//!
+//! Per gadget level j: one programmable bootstrap produces
+//! `LWE(m · w_j)` under the extracted key; PrivKS with `u = 1` turns it
+//! into the b-row `RLWE(m·w_j)` and PrivKS with `u = z̃` into the a-row
+//! `RLWE(m·w_j·z̃)`. Assembling 2l rows yields RGSW(m).
+//!
+//! Table II row "Circuit Boot.": ≥ l blind rotations + 2l PrivKS, cached
+//! key ≈ 196 MB at paper scale — the reason APACHE pins the PrivKS keys
+//! at the in-memory level.
+
+use super::bootstrap::{programmable_bootstrap_extract, BootstrapKey};
+use super::keyswitch::{private_functional_key_switch, PrivateKeySwitchKey};
+use super::lwe::{LweCiphertext, LweSecretKey};
+use super::rgsw::{RgswCiphertext, RlweEval};
+use super::rlwe::RlweSecretKey;
+use super::TfheCtx;
+use crate::math::sampler::Rng;
+use std::sync::Arc;
+
+/// Keys for circuit bootstrapping: a gate-bootstrapping key plus the two
+/// private key-switching keys (u = 1 and u = z̃).
+pub struct CircuitBootstrapKey {
+    pub bk: BootstrapKey,
+    pub pksk_one: PrivateKeySwitchKey,
+    pub pksk_z: PrivateKeySwitchKey,
+}
+
+impl CircuitBootstrapKey {
+    pub fn generate(
+        ctx: &Arc<TfheCtx>,
+        lwe_key: &LweSecretKey,
+        rlwe_key: &RlweSecretKey,
+        rng: &mut Rng,
+    ) -> Self {
+        let bk = BootstrapKey::generate(ctx, lwe_key, rlwe_key, rng);
+        let big_key = super::rlwe::extracted_lwe_key(rlwe_key, ctx.q());
+        let mut one = vec![0u64; ctx.n_poly()];
+        one[0] = 1;
+        let pksk_one = PrivateKeySwitchKey::generate(ctx, &big_key, rlwe_key, &one, rng);
+        let pksk_z = PrivateKeySwitchKey::generate(ctx, &big_key, rlwe_key, &rlwe_key.z, rng);
+        CircuitBootstrapKey { bk, pksk_one, pksk_z }
+    }
+
+    /// Total PrivKS key bytes (×2 for both functions) — the paper's
+    /// "Cached Key Size" for CB.
+    pub fn privks_bytes(&self, ctx: &TfheCtx) -> u64 {
+        2 * self.pksk_one.size_bytes(ctx.n_poly())
+    }
+}
+
+/// Circuit-bootstrap one boolean LWE ciphertext (±Q/8 encoding) into an
+/// RGSW encryption of the bit.
+pub fn circuit_bootstrap(
+    ctx: &Arc<TfheCtx>,
+    cbk: &CircuitBootstrapKey,
+    c: &LweCiphertext,
+) -> RgswCiphertext {
+    let q = ctx.q();
+    let l = ctx.params.decomp_levels;
+    let n = ctx.n_poly();
+    let mut b_rows: Vec<RlweEval> = Vec::with_capacity(l);
+    let mut a_rows: Vec<RlweEval> = Vec::with_capacity(l);
+    for j in 0..l {
+        let w = ctx.gadget[j];
+        // Programmable bootstrap with constant tv w/2: phase(out) = ±w/2;
+        // add w/2 ⇒ {0, w} = m·w_j (m = 1 when input phase is positive).
+        let tv = vec![w / 2; n];
+        let extracted = programmable_bootstrap_extract(ctx, &cbk.bk, c, &tv).add_const(w / 2);
+        // b-row: RLWE(m·w_j)
+        let row_b = private_functional_key_switch(ctx, &cbk.pksk_one, &extracted);
+        // a-row: RLWE(m·w_j·z̃)
+        let row_a = private_functional_key_switch(ctx, &cbk.pksk_z, &extracted);
+        let lift = |r: super::rlwe::RlweCiphertext| {
+            let mut b = r.b;
+            let mut a = r.a;
+            ctx.ntt.forward(&mut b);
+            ctx.ntt.forward(&mut a);
+            RlweEval { b, a }
+        };
+        b_rows.push(lift(row_b));
+        a_rows.push(lift(row_a));
+    }
+    b_rows.extend(a_rows);
+    let _ = q;
+    RgswCiphertext::from_rows(b_rows, l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TfheParams;
+    use crate::tfhe::gates::encrypt_bool;
+    use crate::tfhe::rgsw::cmux;
+    use crate::tfhe::rlwe::RlweCiphertext;
+
+    fn setup() -> (
+        Arc<TfheCtx>,
+        LweSecretKey,
+        RlweSecretKey,
+        CircuitBootstrapKey,
+        Rng,
+    ) {
+        let ctx = TfheCtx::new(TfheParams::tiny());
+        let mut rng = Rng::seeded(700);
+        let lwe_key = LweSecretKey::generate(&ctx, &mut rng);
+        let rlwe_key = RlweSecretKey::generate(&ctx, &mut rng);
+        let cbk = CircuitBootstrapKey::generate(&ctx, &lwe_key, &rlwe_key, &mut rng);
+        (ctx, lwe_key, rlwe_key, cbk, rng)
+    }
+
+    #[test]
+    fn circuit_bootstrap_then_cmux_selects() {
+        let (ctx, lwe_key, rlwe_key, cbk, mut rng) = setup();
+        let t = ctx.params.plaintext_space;
+        let delta = ctx.params.delta();
+        let mu0: Vec<u64> = (0..ctx.n_poly()).map(|_| delta).collect();
+        let mu1: Vec<u64> = (0..ctx.n_poly()).map(|_| 3 * delta).collect();
+        for bit in [false, true] {
+            let c_bool = encrypt_bool(&ctx, &lwe_key, bit, &mut rng);
+            let rgsw = circuit_bootstrap(&ctx, &cbk, &c_bool);
+            let c0 = RlweCiphertext::encrypt_phase(&ctx, &rlwe_key, &mu0, ctx.params.rlwe_sigma, &mut rng);
+            let c1 = RlweCiphertext::encrypt_phase(&ctx, &rlwe_key, &mu1, ctx.params.rlwe_sigma, &mut rng);
+            let out = cmux(&ctx, &rgsw, &c0, &c1);
+            let dec = out.decrypt(&ctx, &rlwe_key, delta, t);
+            let expect = if bit { 3 } else { 1 };
+            let correct = dec.iter().filter(|&&d| d == expect).count();
+            assert!(
+                correct == ctx.n_poly(),
+                "bit={bit}: {}/{} coefficients correct, head {:?}",
+                correct,
+                ctx.n_poly(),
+                &dec[..8]
+            );
+        }
+    }
+
+    #[test]
+    fn cb_rgsw_survives_a_cmux_chain() {
+        // The CB output must be reusable across a small CMUX tree — the VSP
+        // RAM/ROM addressing pattern.
+        let (ctx, lwe_key, rlwe_key, cbk, mut rng) = setup();
+        let t = ctx.params.plaintext_space;
+        let delta = ctx.params.delta();
+        let c_bool = encrypt_bool(&ctx, &lwe_key, true, &mut rng);
+        let rgsw = circuit_bootstrap(&ctx, &cbk, &c_bool);
+        let mu: Vec<u64> = (0..ctx.n_poly()).map(|_| 2 * delta).collect();
+        let mut acc =
+            RlweCiphertext::encrypt_phase(&ctx, &rlwe_key, &mu, ctx.params.rlwe_sigma, &mut rng);
+        for _ in 0..4 {
+            // cmux(acc, acc) = acc regardless of the selector value
+            acc = cmux(&ctx, &rgsw, &acc, &acc);
+        }
+        let dec = acc.decrypt(&ctx, &rlwe_key, delta, t);
+        assert!(dec.iter().all(|&d| d == 2), "head {:?}", &dec[..8]);
+    }
+}

@@ -1,0 +1,213 @@
+//! Homomorphic boolean gates (HomGate) built on gate bootstrapping.
+//! Booleans use the TFHE phase encoding: true ↦ +Q/8, false ↦ -Q/8.
+
+use super::bootstrap::{bootstrap_to_sign, BootstrapKey};
+use super::lwe::{LweCiphertext, LweSecretKey};
+use super::TfheCtx;
+use crate::math::modops::mod_neg;
+use crate::math::sampler::Rng;
+use std::sync::Arc;
+
+/// Encode and encrypt one boolean.
+pub fn encrypt_bool(ctx: &Arc<TfheCtx>, key: &LweSecretKey, v: bool, rng: &mut Rng) -> LweCiphertext {
+    let q = ctx.q();
+    let mu = if v { q / 8 } else { mod_neg(q / 8, q) };
+    LweCiphertext::encrypt_phase(key, mu, ctx.params.lwe_sigma, rng)
+}
+
+/// Decrypt a boolean: phase in the positive half-torus ⇒ true.
+pub fn decrypt_bool(key: &LweSecretKey, c: &LweCiphertext) -> bool {
+    let phase = c.phase(key);
+    phase < c.q / 2
+}
+
+fn gate_bootstrap(ctx: &Arc<TfheCtx>, bk: &BootstrapKey, pre: &LweCiphertext) -> LweCiphertext {
+    bootstrap_to_sign(ctx, bk, pre, ctx.q() / 8)
+}
+
+/// HomNAND: bootstrap((0, Q/8) - c1 - c2).
+pub fn hom_nand(
+    ctx: &Arc<TfheCtx>,
+    bk: &BootstrapKey,
+    c1: &LweCiphertext,
+    c2: &LweCiphertext,
+) -> LweCiphertext {
+    let q = ctx.q();
+    let pre = LweCiphertext::trivial(q / 8, c1.dim(), q).sub(c1).sub(c2);
+    gate_bootstrap(ctx, bk, &pre)
+}
+
+/// HomAND: bootstrap((0, -Q/8) + c1 + c2).
+pub fn hom_and(
+    ctx: &Arc<TfheCtx>,
+    bk: &BootstrapKey,
+    c1: &LweCiphertext,
+    c2: &LweCiphertext,
+) -> LweCiphertext {
+    let q = ctx.q();
+    let pre = LweCiphertext::trivial(mod_neg(q / 8, q), c1.dim(), q)
+        .add(c1)
+        .add(c2);
+    gate_bootstrap(ctx, bk, &pre)
+}
+
+/// HomOR: bootstrap((0, Q/8) + c1 + c2).
+pub fn hom_or(
+    ctx: &Arc<TfheCtx>,
+    bk: &BootstrapKey,
+    c1: &LweCiphertext,
+    c2: &LweCiphertext,
+) -> LweCiphertext {
+    let q = ctx.q();
+    let pre = LweCiphertext::trivial(q / 8, c1.dim(), q).add(c1).add(c2);
+    gate_bootstrap(ctx, bk, &pre)
+}
+
+/// HomNOR: bootstrap((0, -Q/8) - c1 - c2).
+pub fn hom_nor(
+    ctx: &Arc<TfheCtx>,
+    bk: &BootstrapKey,
+    c1: &LweCiphertext,
+    c2: &LweCiphertext,
+) -> LweCiphertext {
+    let q = ctx.q();
+    let pre = LweCiphertext::trivial(mod_neg(q / 8, q), c1.dim(), q)
+        .sub(c1)
+        .sub(c2);
+    gate_bootstrap(ctx, bk, &pre)
+}
+
+/// HomXOR: bootstrap((0, Q/4) + 2(c1 + c2)).
+pub fn hom_xor(
+    ctx: &Arc<TfheCtx>,
+    bk: &BootstrapKey,
+    c1: &LweCiphertext,
+    c2: &LweCiphertext,
+) -> LweCiphertext {
+    let q = ctx.q();
+    let pre = LweCiphertext::trivial(q / 4, c1.dim(), q).add(&c1.add(c2).mul_scalar(2));
+    gate_bootstrap(ctx, bk, &pre)
+}
+
+/// HomXNOR: bootstrap((0, -Q/4) + 2(c1 + c2)).
+pub fn hom_xnor(
+    ctx: &Arc<TfheCtx>,
+    bk: &BootstrapKey,
+    c1: &LweCiphertext,
+    c2: &LweCiphertext,
+) -> LweCiphertext {
+    let q = ctx.q();
+    let pre =
+        LweCiphertext::trivial(mod_neg(q / 4, q), c1.dim(), q).add(&c1.add(c2).mul_scalar(2));
+    gate_bootstrap(ctx, bk, &pre)
+}
+
+/// HomNOT: negation — no bootstrap needed.
+pub fn hom_not(c: &LweCiphertext) -> LweCiphertext {
+    c.neg()
+}
+
+/// HomMUX(sel, a, b) = sel ? a : b, via OR(AND(sel, a), AND(¬sel, b))
+/// — three bootstraps, as in the TFHE gate library.
+pub fn hom_mux(
+    ctx: &Arc<TfheCtx>,
+    bk: &BootstrapKey,
+    sel: &LweCiphertext,
+    a: &LweCiphertext,
+    b: &LweCiphertext,
+) -> LweCiphertext {
+    let t1 = hom_and(ctx, bk, sel, a);
+    let t2 = hom_and(ctx, bk, &hom_not(sel), b);
+    hom_or(ctx, bk, &t1, &t2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TfheParams;
+    use crate::tfhe::rlwe::RlweSecretKey;
+
+    struct Fixture {
+        ctx: Arc<TfheCtx>,
+        key: LweSecretKey,
+        bk: BootstrapKey,
+        rng: Rng,
+    }
+
+    fn setup() -> Fixture {
+        let ctx = TfheCtx::new(TfheParams::tiny());
+        let mut rng = Rng::seeded(600);
+        let key = LweSecretKey::generate(&ctx, &mut rng);
+        let rlwe_key = RlweSecretKey::generate(&ctx, &mut rng);
+        let bk = BootstrapKey::generate(&ctx, &key, &rlwe_key, &mut rng);
+        Fixture { ctx, key, bk, rng }
+    }
+
+    #[test]
+    fn all_two_input_gates_full_truth_table() {
+        let mut f = setup();
+        type GateFn = fn(
+            &Arc<TfheCtx>,
+            &BootstrapKey,
+            &LweCiphertext,
+            &LweCiphertext,
+        ) -> LweCiphertext;
+        let gates: Vec<(&str, GateFn, fn(bool, bool) -> bool)> = vec![
+            ("NAND", hom_nand, |a, b| !(a && b)),
+            ("AND", hom_and, |a, b| a && b),
+            ("OR", hom_or, |a, b| a || b),
+            ("NOR", hom_nor, |a, b| !(a || b)),
+            ("XOR", hom_xor, |a, b| a ^ b),
+            ("XNOR", hom_xnor, |a, b| !(a ^ b)),
+        ];
+        for (name, gate, model) in gates {
+            for (va, vb) in [(false, false), (false, true), (true, false), (true, true)] {
+                let ca = encrypt_bool(&f.ctx, &f.key, va, &mut f.rng);
+                let cb = encrypt_bool(&f.ctx, &f.key, vb, &mut f.rng);
+                let out = gate(&f.ctx, &f.bk, &ca, &cb);
+                assert_eq!(
+                    decrypt_bool(&f.key, &out),
+                    model(va, vb),
+                    "{name}({va},{vb})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn not_gate_is_free_and_correct() {
+        let mut f = setup();
+        for v in [false, true] {
+            let c = encrypt_bool(&f.ctx, &f.key, v, &mut f.rng);
+            assert_eq!(decrypt_bool(&f.key, &hom_not(&c)), !v);
+        }
+    }
+
+    #[test]
+    fn mux_selects() {
+        let mut f = setup();
+        for sel in [false, true] {
+            let cs = encrypt_bool(&f.ctx, &f.key, sel, &mut f.rng);
+            let ca = encrypt_bool(&f.ctx, &f.key, true, &mut f.rng);
+            let cb = encrypt_bool(&f.ctx, &f.key, false, &mut f.rng);
+            let out = hom_mux(&f.ctx, &f.bk, &cs, &ca, &cb);
+            assert_eq!(decrypt_bool(&f.key, &out), sel, "sel={sel}");
+        }
+    }
+
+    #[test]
+    fn gate_outputs_compose_deep_circuits() {
+        // ripple of 6 chained gates keeps decrypting correctly — the whole
+        // point of bootstrapped gates.
+        let mut f = setup();
+        let mut acc = encrypt_bool(&f.ctx, &f.key, true, &mut f.rng);
+        let mut model = true;
+        for i in 0..6 {
+            let v = i % 2 == 0;
+            let c = encrypt_bool(&f.ctx, &f.key, v, &mut f.rng);
+            acc = hom_xor(&f.ctx, &f.bk, &acc, &c);
+            model ^= v;
+        }
+        assert_eq!(decrypt_bool(&f.key, &acc), model);
+    }
+}

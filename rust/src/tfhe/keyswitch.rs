@@ -1,0 +1,324 @@
+//! TFHE key switching: public functional (PubKS, Eq. 6) and private
+//! functional (PrivKS, Eq. 7).
+//!
+//! These are the paper's flagship *data-heavy* operators (Table II): huge
+//! key material (up to 1.8 GB for PrivKS at paper scale), but only
+//! multiply-accumulate circuits a couple of adders deep — which is exactly
+//! why APACHE pushes them to the in-memory computing level (§III-B③,
+//! modelled in `hw::imc`).
+
+use super::lwe::{LweCiphertext, LweSecretKey};
+use super::rlwe::{RlweCiphertext, RlweSecretKey};
+use super::TfheCtx;
+use crate::math::modops::{from_signed, mod_add, mod_mul};
+use crate::math::sampler::Rng;
+use std::sync::Arc;
+
+/// LWE→LWE key-switching key: `ksk[i][j] = LWE_dst(src_i · w_j)` where
+/// `w_j = round(Q / B_ks^(j+1))`.
+pub struct LweKeySwitchKey {
+    pub rows: Vec<Vec<LweCiphertext>>,
+    pub dst_dim: usize,
+}
+
+impl LweKeySwitchKey {
+    pub fn generate(
+        ctx: &Arc<TfheCtx>,
+        src: &LweSecretKey,
+        dst: &LweSecretKey,
+        rng: &mut Rng,
+    ) -> Self {
+        let rows = src
+            .s
+            .iter()
+            .map(|&si| {
+                ctx.ks_gadget
+                    .iter()
+                    .map(|&w| {
+                        LweCiphertext::encrypt_phase(
+                            dst,
+                            mod_mul(si, w, ctx.q()),
+                            ctx.params.lwe_sigma,
+                            rng,
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        LweKeySwitchKey {
+            rows,
+            dst_dim: dst.dim(),
+        }
+    }
+
+    /// Total key bytes (Table II "Cached Key Size" accounting).
+    pub fn size_bytes(&self) -> u64 {
+        self.rows.len() as u64 * self.rows[0].len() as u64 * (self.dst_dim as u64 + 1) * 8
+    }
+}
+
+/// Plain LWE key switch (PubKS with f = identity, p = 1).
+pub fn key_switch(ctx: &Arc<TfheCtx>, ksk: &LweKeySwitchKey, c: &LweCiphertext) -> LweCiphertext {
+    public_functional_key_switch(ctx, ksk, &[c.clone()], &|v| v[0])
+}
+
+/// PubKS (Eq. 6): apply a public Z-linear (1-Lipschitz) morphism `f` to `p`
+/// LWE ciphertexts while switching to the destination key.
+/// `out = (f(b^(1..p)), 0…) + Σ_i Σ_j d_{i,j} · KS_{i,j}` with
+/// `d = ks_decompose(f(a_i^(1..p)))`.
+pub fn public_functional_key_switch(
+    ctx: &Arc<TfheCtx>,
+    ksk: &LweKeySwitchKey,
+    cts: &[LweCiphertext],
+    f: &dyn Fn(&[u64]) -> u64,
+) -> LweCiphertext {
+    let q = ctx.q();
+    let src_dim = ksk.rows.len();
+    for c in cts {
+        assert_eq!(c.dim(), src_dim, "input dim must match ksk source dim");
+    }
+    let bs: Vec<u64> = cts.iter().map(|c| c.b).collect();
+    let mut out = LweCiphertext::trivial(f(&bs) % q, ksk.dst_dim, q);
+    let mut ai = vec![0u64; cts.len()];
+    for i in 0..src_dim {
+        for (z, c) in cts.iter().enumerate() {
+            ai[z] = c.a[i];
+        }
+        let a_hat = f(&ai) % q;
+        if a_hat == 0 {
+            continue;
+        }
+        let digits = ctx.ks_decompose_scalar(a_hat);
+        for (j, &d) in digits.iter().enumerate() {
+            if d == 0 {
+                continue;
+            }
+            let du = from_signed(d, q);
+            let row = &ksk.rows[i][j];
+            for (o, &r) in out.a.iter_mut().zip(row.a.iter()) {
+                *o = mod_add(*o, mod_mul(du, r, q), q);
+            }
+            out.b = mod_add(out.b, mod_mul(du, row.b, q), q);
+        }
+    }
+    out
+}
+
+/// LWE→RLWE private functional key-switching key for a secret Z-linear
+/// morphism `u ∈ R_Q` (the TFHE `f` is folded into key generation; Eq. 7):
+/// `rows[i][j] = RLWE_z(u · ŝ_i · w_j)` over the *extended* source key
+/// `ŝ = (s_1, …, s_m, 1)` — the final row group handles the `b` term.
+pub struct PrivateKeySwitchKey {
+    pub rows: Vec<Vec<RlweCiphertext>>,
+}
+
+impl PrivateKeySwitchKey {
+    pub fn generate(
+        ctx: &Arc<TfheCtx>,
+        src: &LweSecretKey,
+        dst: &RlweSecretKey,
+        u: &[u64],
+        rng: &mut Rng,
+    ) -> Self {
+        let q = ctx.q();
+        let n = ctx.n_poly();
+        assert_eq!(u.len(), n);
+        let mut extended: Vec<u64> = src.s.clone();
+        extended.push(1); // the b term
+        let rows = extended
+            .iter()
+            .map(|&si| {
+                ctx.ks_gadget
+                    .iter()
+                    .map(|&w| {
+                        let scale = mod_mul(si, w, q);
+                        let mu: Vec<u64> = u.iter().map(|&uc| mod_mul(uc, scale, q)).collect();
+                        RlweCiphertext::encrypt_phase(ctx, dst, &mu, ctx.params.rlwe_sigma, rng)
+                    })
+                    .collect()
+            })
+            .collect();
+        PrivateKeySwitchKey { rows }
+    }
+
+    pub fn size_bytes(&self, n_poly: usize) -> u64 {
+        self.rows.len() as u64 * self.rows[0].len() as u64 * 2 * n_poly as u64 * 8
+    }
+}
+
+/// PrivKS (Eq. 7): produce `RLWE_z(u · phase(c))`.
+pub fn private_functional_key_switch(
+    ctx: &Arc<TfheCtx>,
+    pksk: &PrivateKeySwitchKey,
+    c: &LweCiphertext,
+) -> RlweCiphertext {
+    let q = ctx.q();
+    let m = pksk.rows.len() - 1;
+    assert_eq!(c.dim(), m, "input dim must match pksk source dim");
+    let n = ctx.n_poly();
+    let mut out = RlweCiphertext {
+        b: vec![0u64; n],
+        a: vec![0u64; n],
+    };
+    let mut accumulate = |coef: u64, rows: &Vec<RlweCiphertext>| {
+        if coef == 0 {
+            return;
+        }
+        let digits = ctx.ks_decompose_scalar(coef);
+        for (j, &d) in digits.iter().enumerate() {
+            if d == 0 {
+                continue;
+            }
+            let du = from_signed(d, q);
+            let row = &rows[j];
+            for k in 0..n {
+                out.b[k] = mod_add(out.b[k], mod_mul(du, row.b[k], q), q);
+                out.a[k] = mod_add(out.a[k], mod_mul(du, row.a[k], q), q);
+            }
+        }
+    };
+    for i in 0..m {
+        accumulate(c.a[i], &pksk.rows[i]);
+    }
+    accumulate(c.b, &pksk.rows[m]);
+    out
+}
+
+/// Bandwidth accounting for the in-memory KS path (§VI-C): bytes of key
+/// material touched vs bytes crossing external I/O for one operation.
+pub struct KsIoProfile {
+    pub key_bytes_touched: u64,
+    pub io_bytes_external: u64,
+}
+
+impl KsIoProfile {
+    /// PubKS on one LWE: touches the whole KSK; externally only the input
+    /// and output LWE vectors move.
+    pub fn pubks(src_dim: usize, dst_dim: usize, levels: usize) -> Self {
+        KsIoProfile {
+            key_bytes_touched: src_dim as u64 * levels as u64 * (dst_dim as u64 + 1) * 8,
+            io_bytes_external: (src_dim as u64 + 1 + dst_dim as u64 + 1) * 8,
+        }
+    }
+
+    /// PrivKS on one LWE.
+    pub fn privks(src_dim: usize, n_poly: usize, levels: usize) -> Self {
+        KsIoProfile {
+            key_bytes_touched: (src_dim as u64 + 1) * levels as u64 * 2 * n_poly as u64 * 8,
+            io_bytes_external: (src_dim as u64 + 1 + 2 * n_poly as u64) * 8,
+        }
+    }
+
+    pub fn reduction_factor(&self) -> f64 {
+        self.key_bytes_touched as f64 / self.io_bytes_external as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::modops::{centered, mod_sub};
+    use crate::params::TfheParams;
+    use crate::tfhe::rlwe::extracted_lwe_key;
+
+    fn setup() -> (Arc<TfheCtx>, LweSecretKey, RlweSecretKey, Rng) {
+        let ctx = TfheCtx::new(TfheParams::tiny());
+        let mut rng = Rng::seeded(400);
+        let lwe_key = LweSecretKey::generate(&ctx, &mut rng);
+        let rlwe_key = RlweSecretKey::generate(&ctx, &mut rng);
+        (ctx, lwe_key, rlwe_key, rng)
+    }
+
+    #[test]
+    fn lwe_keyswitch_preserves_message() {
+        let (ctx, lwe_key, rlwe_key, mut rng) = setup();
+        let q = ctx.q();
+        // switch from the extracted (dim N) key to the small LWE key
+        let big_key = extracted_lwe_key(&rlwe_key, q);
+        let ksk = LweKeySwitchKey::generate(&ctx, &big_key, &lwe_key, &mut rng);
+        let t = ctx.params.plaintext_space;
+        let delta = ctx.params.delta();
+        for m in 0..t {
+            let c = LweCiphertext::encrypt_phase(&big_key, m * delta, ctx.params.lwe_sigma, &mut rng);
+            let switched = key_switch(&ctx, &ksk, &c);
+            assert_eq!(switched.dim(), ctx.params.lwe_n);
+            assert_eq!(switched.decrypt(&lwe_key, delta, t), m, "m={m}");
+        }
+    }
+
+    #[test]
+    fn pubks_weighted_sum_function() {
+        let (ctx, lwe_key, rlwe_key, mut rng) = setup();
+        let q = ctx.q();
+        let big_key = extracted_lwe_key(&rlwe_key, q);
+        let ksk = LweKeySwitchKey::generate(&ctx, &big_key, &lwe_key, &mut rng);
+        let delta = ctx.params.delta();
+        let t = ctx.params.plaintext_space;
+        // f(x, y) = x + 2y (Z-linear, 3-Lipschitz — still inside margins)
+        let f = |v: &[u64]| mod_add(v[0], mod_mul(2, v[1], q), q);
+        let c1 = LweCiphertext::encrypt_phase(&big_key, delta, ctx.params.lwe_sigma, &mut rng);
+        let c2 = LweCiphertext::encrypt_phase(&big_key, delta, ctx.params.lwe_sigma, &mut rng);
+        let out = public_functional_key_switch(&ctx, &ksk, &[c1, c2], &f);
+        assert_eq!(out.decrypt(&lwe_key, delta, t), 3); // 1 + 2·1
+    }
+
+    #[test]
+    fn privks_with_u_equals_one() {
+        let (ctx, _lwe_key, rlwe_key, mut rng) = setup();
+        let q = ctx.q();
+        let big_key = extracted_lwe_key(&rlwe_key, q);
+        let mut u = vec![0u64; ctx.n_poly()];
+        u[0] = 1; // u = 1 → RLWE(phase) in constant term
+        let pksk = PrivateKeySwitchKey::generate(&ctx, &big_key, &rlwe_key, &u, &mut rng);
+        let delta = ctx.params.delta();
+        let c = LweCiphertext::encrypt_phase(&big_key, delta, ctx.params.lwe_sigma, &mut rng);
+        let out = private_functional_key_switch(&ctx, &pksk, &c);
+        let phase = out.phase(&ctx, &rlwe_key);
+        // constant coefficient carries Δ·1; all coefficients of u·phase with
+        // u = 1 (constant) equal phase·1 → only coeff 0 is Δ, rest noise.
+        let err0 = centered(mod_sub(phase[0], delta, q), q).unsigned_abs();
+        assert!(err0 < delta / 8, "err {err0}");
+        for k in 1..8 {
+            let e = centered(phase[k], q).unsigned_abs();
+            assert!(e < delta / 8, "coeff {k} leak {e}");
+        }
+    }
+
+    #[test]
+    fn privks_with_secret_u_poly() {
+        let (ctx, _lwe, rlwe_key, mut rng) = setup();
+        let q = ctx.q();
+        let big_key = extracted_lwe_key(&rlwe_key, q);
+        // u = z̃ (the RLWE secret itself) — the circuit-bootstrapping case.
+        let u = rlwe_key.z.clone();
+        let pksk = PrivateKeySwitchKey::generate(&ctx, &big_key, &rlwe_key, &u, &mut rng);
+        let delta = ctx.params.delta();
+        let c = LweCiphertext::encrypt_phase(&big_key, delta, ctx.params.lwe_sigma, &mut rng);
+        let out = private_functional_key_switch(&ctx, &pksk, &c);
+        // phase(out) ≈ z̃ · Δ: compare against Δ·z̃ coefficientwise.
+        let phase = out.phase(&ctx, &rlwe_key);
+        for k in 0..8 {
+            let expect = mod_mul(delta, rlwe_key.z[k], q);
+            let e = centered(mod_sub(phase[k], expect, q), q).unsigned_abs();
+            assert!(e < delta / 8, "coeff {k}: err {e}");
+        }
+    }
+
+    #[test]
+    fn io_reduction_factor_matches_paper_order() {
+        // Paper §VI-C: PrivKS I/O reduction 3.15×10^5, PubKS 3.05×10^4.
+        let shape = TfheParams::paper_shape();
+        let priv_prof = KsIoProfile::privks(shape.rlwe_n, shape.rlwe_n, shape.ks_levels);
+        let pub_prof = KsIoProfile::pubks(shape.rlwe_n, shape.lwe_n, shape.ks_levels);
+        assert!(
+            priv_prof.reduction_factor() > 1e3 && priv_prof.reduction_factor() < 1e7,
+            "privks reduction {}",
+            priv_prof.reduction_factor()
+        );
+        assert!(
+            pub_prof.reduction_factor() > 1e2 && pub_prof.reduction_factor() < 1e6,
+            "pubks reduction {}",
+            pub_prof.reduction_factor()
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! LWE ciphertexts (Eq. 1 of the paper) and their linear algebra.
+
+use super::TfheCtx;
+use crate::math::modops::{from_signed, mod_add, mod_mul, mod_neg, mod_sub};
+use crate::math::sampler::Rng;
+use std::sync::Arc;
+
+/// LWE secret key `s ∈ B^n`.
+#[derive(Debug, Clone)]
+pub struct LweSecretKey {
+    pub s: Vec<u64>,
+    pub q: u64,
+}
+
+impl LweSecretKey {
+    pub fn generate(ctx: &Arc<TfheCtx>, rng: &mut Rng) -> Self {
+        LweSecretKey {
+            s: rng.binary_vec(ctx.params.lwe_n),
+            q: ctx.params.lwe_q,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.s.len()
+    }
+}
+
+/// `LWE_s(μ) = (b, a)` with `b = μ + e - <a, s>`, so `phase = b + <a,s>`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LweCiphertext {
+    pub a: Vec<u64>,
+    pub b: u64,
+    pub q: u64,
+}
+
+impl LweCiphertext {
+    /// Encrypt a raw phase value μ (callers apply their own encoding).
+    pub fn encrypt_phase(key: &LweSecretKey, mu: u64, sigma: f64, rng: &mut Rng) -> Self {
+        let q = key.q;
+        let a: Vec<u64> = (0..key.dim()).map(|_| rng.uniform(q)).collect();
+        let mut dot = 0u64;
+        for (ai, si) in a.iter().zip(key.s.iter()) {
+            dot = mod_add(dot, mod_mul(*ai, *si, q), q);
+        }
+        let e = rng.gaussian(sigma, q);
+        let b = mod_sub(mod_add(mu % q, e, q), dot, q);
+        LweCiphertext { a, b, q }
+    }
+
+    /// Phase = b + <a, s>: decryption up to noise.
+    pub fn phase(&self, key: &LweSecretKey) -> u64 {
+        let q = self.q;
+        let mut acc = self.b;
+        for (ai, si) in self.a.iter().zip(key.s.iter()) {
+            acc = mod_add(acc, mod_mul(*ai, *si, q), q);
+        }
+        acc
+    }
+
+    /// Decrypt a message encoded at scale Δ: `round(phase / Δ) mod t`.
+    pub fn decrypt(&self, key: &LweSecretKey, delta: u64, t: u64) -> u64 {
+        let phase = self.phase(key);
+        (((phase as u128 + delta as u128 / 2) / delta as u128) % t as u128) as u64
+    }
+
+    /// Trivial (noiseless, keyless) ciphertext of μ.
+    pub fn trivial(mu: u64, dim: usize, q: u64) -> Self {
+        LweCiphertext {
+            a: vec![0u64; dim],
+            b: mu % q,
+            q,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        assert_eq!(self.q, other.q);
+        assert_eq!(self.dim(), other.dim());
+        LweCiphertext {
+            a: self
+                .a
+                .iter()
+                .zip(other.a.iter())
+                .map(|(&x, &y)| mod_add(x, y, self.q))
+                .collect(),
+            b: mod_add(self.b, other.b, self.q),
+            q: self.q,
+        }
+    }
+
+    pub fn sub(&self, other: &Self) -> Self {
+        assert_eq!(self.q, other.q);
+        LweCiphertext {
+            a: self
+                .a
+                .iter()
+                .zip(other.a.iter())
+                .map(|(&x, &y)| mod_sub(x, y, self.q))
+                .collect(),
+            b: mod_sub(self.b, other.b, self.q),
+            q: self.q,
+        }
+    }
+
+    pub fn neg(&self) -> Self {
+        LweCiphertext {
+            a: self.a.iter().map(|&x| mod_neg(x, self.q)).collect(),
+            b: mod_neg(self.b, self.q),
+            q: self.q,
+        }
+    }
+
+    /// Multiply by a small signed integer constant.
+    pub fn mul_scalar(&self, k: i64) -> Self {
+        let ku = from_signed(k, self.q);
+        LweCiphertext {
+            a: self.a.iter().map(|&x| mod_mul(x, ku, self.q)).collect(),
+            b: mod_mul(self.b, ku, self.q),
+            q: self.q,
+        }
+    }
+
+    /// Add a plaintext constant to the phase.
+    pub fn add_const(&self, mu: u64) -> Self {
+        LweCiphertext {
+            a: self.a.clone(),
+            b: mod_add(self.b, mu % self.q, self.q),
+            q: self.q,
+        }
+    }
+
+    /// Switch the modulus of every component to `2N` by rounding — the
+    /// first step of blind rotation. Returns values in `[0, 2N)`.
+    pub fn mod_switch(&self, two_n: u64) -> (Vec<u64>, u64) {
+        let q = self.q as u128;
+        let round = |x: u64| -> u64 { ((x as u128 * two_n as u128 + q / 2) / q) as u64 % two_n };
+        (self.a.iter().map(|&x| round(x)).collect(), round(self.b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TfheParams;
+
+    fn setup() -> (Arc<TfheCtx>, LweSecretKey, Rng) {
+        let ctx = TfheCtx::new(TfheParams::tiny());
+        let mut rng = Rng::seeded(100);
+        let key = LweSecretKey::generate(&ctx, &mut rng);
+        (ctx, key, rng)
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let (ctx, key, mut rng) = setup();
+        let t = ctx.params.plaintext_space;
+        let delta = ctx.params.delta();
+        for m in 0..t {
+            let c = LweCiphertext::encrypt_phase(&key, m * delta, ctx.params.lwe_sigma, &mut rng);
+            assert_eq!(c.decrypt(&key, delta, t), m);
+        }
+    }
+
+    #[test]
+    fn homomorphic_addition() {
+        let (ctx, key, mut rng) = setup();
+        let t = ctx.params.plaintext_space;
+        let delta = ctx.params.delta();
+        let c1 = LweCiphertext::encrypt_phase(&key, delta, ctx.params.lwe_sigma, &mut rng);
+        let c2 = LweCiphertext::encrypt_phase(&key, 2 * delta, ctx.params.lwe_sigma, &mut rng);
+        assert_eq!(c1.add(&c2).decrypt(&key, delta, t), 3);
+        assert_eq!(c2.sub(&c1).decrypt(&key, delta, t), 1);
+        assert_eq!(c1.neg().decrypt(&key, delta, t), t - 1);
+        assert_eq!(c1.mul_scalar(3).decrypt(&key, delta, t), 3);
+        assert_eq!(c1.add_const(delta).decrypt(&key, delta, t), 2);
+    }
+
+    #[test]
+    fn trivial_has_exact_phase() {
+        let (ctx, key, _) = setup();
+        let c = LweCiphertext::trivial(12345, ctx.params.lwe_n, ctx.q());
+        assert_eq!(c.phase(&key), 12345);
+    }
+
+    #[test]
+    fn mod_switch_preserves_phase_approximately() {
+        let (ctx, key, mut rng) = setup();
+        let q = ctx.q();
+        let two_n = 2 * ctx.n_poly() as u64;
+        let mu = q / 4;
+        let c = LweCiphertext::encrypt_phase(&key, mu, ctx.params.lwe_sigma, &mut rng);
+        let (a2, b2) = c.mod_switch(two_n);
+        // recompute phase in the 2N domain
+        let mut acc = b2;
+        for (ai, si) in a2.iter().zip(key.s.iter()) {
+            acc = (acc + ai * si) % two_n;
+        }
+        let expect = two_n / 4;
+        let dist = (acc as i64 - expect as i64)
+            .rem_euclid(two_n as i64)
+            .min((expect as i64 - acc as i64).rem_euclid(two_n as i64));
+        // drift stays well inside an eighth of the torus
+        assert!(dist < (two_n / 16) as i64, "dist={dist}");
+    }
+}

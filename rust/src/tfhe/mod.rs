@@ -1,0 +1,187 @@
+//! TFHE-like scheme over an NTT-friendly prime modulus ("NTT-TFHE", as in
+//! MATCHA [32] — see DESIGN.md). Implements every operator of Table II's
+//! TFHE row: CMUX, PubKS, PrivKS, gate bootstrapping and circuit
+//! bootstrapping, plus the homomorphic gate library built on them.
+//!
+//! Phase convention: `phase(c) = b + <a, s> (mod Q)`; a message μ is
+//! carried as `phase ≈ μ + e`. Boolean gates use the TFHE ±Q/8 encoding.
+
+pub mod bootstrap;
+pub mod circuit_bootstrap;
+pub mod gates;
+pub mod keyswitch;
+pub mod lwe;
+pub mod rgsw;
+pub mod rlwe;
+
+use crate::math::ntt::NttTable;
+use crate::params::TfheParams;
+use std::sync::Arc;
+
+/// Shared context: parameters + NTT table + gadget constants.
+#[derive(Debug, Clone)]
+pub struct TfheCtx {
+    pub params: TfheParams,
+    pub ntt: Arc<NttTable>,
+    /// RGSW gadget weights `B^j`, j = 0..l (exact radix decomposition).
+    pub gadget: Vec<u64>,
+    /// Key-switching gadget weights `round(Q / B_ks^j)`, j = 1..t
+    /// (approximate MSB-first decomposition).
+    pub ks_gadget: Vec<u64>,
+}
+
+impl TfheCtx {
+    pub fn new(params: TfheParams) -> Arc<Self> {
+        // Weights are B^(j+1): the radix-B LSB digit is dropped as bounded
+        // error (|ε| ≤ B/2 per coefficient), so l+1 digits must cover Q.
+        assert!(
+            (1u128 << (params.decomp_base_log as u128 * (params.decomp_levels as u128 + 1)))
+                >= params.rlwe_q as u128,
+            "RGSW gadget must cover Q (B^(l+1) >= Q)"
+        );
+        let ntt = Arc::new(NttTable::new(params.rlwe_n, params.rlwe_q));
+        let gadget = (0..params.decomp_levels)
+            .map(|j| 1u64 << (params.decomp_base_log * (j as u32 + 1)))
+            .collect();
+        let ks_gadget = (1..=params.ks_levels)
+            .map(|j| {
+                let denom = 1u128 << (params.ks_base_log as u128 * j as u128);
+                ((params.rlwe_q as u128 + denom / 2) / denom) as u64
+            })
+            .collect();
+        Arc::new(TfheCtx {
+            params,
+            ntt,
+            gadget,
+            ks_gadget,
+        })
+    }
+
+    pub fn q(&self) -> u64 {
+        self.params.rlwe_q
+    }
+
+    pub fn n_poly(&self) -> usize {
+        self.params.rlwe_n
+    }
+
+    /// Signed radix-B decomposition of a centered residue against the
+    /// gadget weights `B^(j+1)`, j = 0..l. The radix LSB digit is dropped:
+    /// `Σ d_j·B^(j+1) ≡ v - ε (mod Q)` with `|ε| ≤ B/2`.
+    /// Digits satisfy `d_j ∈ [-B/2, B/2]`.
+    pub fn gadget_decompose_scalar(&self, v: u64) -> Vec<i64> {
+        let q = self.q();
+        let b = 1i128 << self.params.decomp_base_log;
+        let half = b / 2;
+        let c = crate::math::modops::centered(v, q) as i128;
+        // round to the nearest multiple of B (drops the LSB digit), then
+        // peel signed digits of c/B.
+        let mut rem = (c + if c >= 0 { half } else { -half }) / b;
+        let mut digits = vec![0i64; self.params.decomp_levels];
+        for d in digits.iter_mut() {
+            let mut digit = rem % b;
+            rem /= b;
+            if digit > half {
+                digit -= b;
+                rem += 1;
+            } else if digit < -half {
+                digit += b;
+                rem -= 1;
+            }
+            *d = digit as i64;
+        }
+        debug_assert!(
+            rem == 0,
+            "decomposition must terminate (B^(l+1) >= Q); v={v} rem={rem}"
+        );
+        digits
+    }
+
+    /// Approximate MSB-first decomposition for key switching:
+    /// `v ≈ Σ_j d_j · ks_gadget[j]`, digits in `[-B/2, B/2]`, error
+    /// `|ε| ≤ ks_gadget[t-1] / 2`.
+    pub fn ks_decompose_scalar(&self, v: u64) -> Vec<i64> {
+        let q = self.q();
+        let beta = self.params.ks_base_log;
+        let t = self.params.ks_levels;
+        // Round v to t·beta fractional bits of v/Q, then peel digits.
+        let scale = 1u128 << (beta as u128 * t as u128);
+        let c = crate::math::modops::centered(v, q);
+        let scaled = ((c as i128 * scale as i128) + (q as i128) / 2).div_euclid(q as i128);
+        let b = 1i128 << beta;
+        let half = b / 2;
+        let mut rem = scaled;
+        let mut digits = vec![0i64; t];
+        // rem = Σ_{j=1..t} d_j · B^{t-j}; peel from LSB
+        for j in (0..t).rev() {
+            let mut digit = rem % b;
+            rem /= b;
+            if digit > half {
+                digit -= b;
+                rem += 1;
+            } else if digit < -half {
+                digit += b;
+                rem -= 1;
+            }
+            digits[j] = digit as i64;
+        }
+        // rem may be ±1 from the top carry; fold into the first digit (its
+        // weight is ~Q/B so a carry of B maps back into range mod Q).
+        digits[0] += (rem as i64) << beta;
+        digits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::modops::{from_signed, mod_add, mod_mul};
+    use crate::math::sampler::Rng;
+
+    #[test]
+    fn gadget_decompose_exact_up_to_dropped_lsb() {
+        let ctx = TfheCtx::new(TfheParams::tiny());
+        let q = ctx.q();
+        let half_b = 1u64 << (ctx.params.decomp_base_log - 1);
+        let mut rng = Rng::seeded(1);
+        for _ in 0..200 {
+            let v = rng.uniform(q);
+            let digits = ctx.gadget_decompose_scalar(v);
+            let mut acc = 0u64;
+            for (j, &d) in digits.iter().enumerate() {
+                let term = mod_mul(from_signed(d, q), ctx.gadget[j], q);
+                acc = mod_add(acc, term, q);
+            }
+            let err = crate::math::modops::centered(
+                crate::math::modops::mod_sub(acc, v, q),
+                q,
+            )
+            .unsigned_abs();
+            assert!(err <= half_b, "v={v} err={err} digits={digits:?}");
+            let half = half_b as i64;
+            assert!(digits.iter().all(|&d| d.abs() <= half));
+        }
+    }
+
+    #[test]
+    fn ks_decompose_small_error() {
+        let ctx = TfheCtx::new(TfheParams::tiny());
+        let q = ctx.q();
+        let max_err = ctx.ks_gadget[ctx.params.ks_levels - 1]; // ~Q/B^t
+        let mut rng = Rng::seeded(2);
+        for _ in 0..200 {
+            let v = rng.uniform(q);
+            let digits = ctx.ks_decompose_scalar(v);
+            let mut acc = 0u64;
+            for (j, &d) in digits.iter().enumerate() {
+                acc = mod_add(acc, mod_mul(from_signed(d, q), ctx.ks_gadget[j], q), q);
+            }
+            let err = crate::math::modops::centered(
+                crate::math::modops::mod_sub(acc, v, q),
+                q,
+            )
+            .unsigned_abs();
+            assert!(err <= max_err, "v={v} err={err} max={max_err}");
+        }
+    }
+}

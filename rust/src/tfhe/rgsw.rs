@@ -1,0 +1,247 @@
+//! RGSW ciphertexts, the external product ⊡ and CMUX (§II-D(2)).
+//!
+//! An RGSW ciphertext is 2l RLWE rows: `C = Z + m·G` with `Z` rows RLWE(0)
+//! and gadget `G` placing `m·B^j` on the b-component (rows 0..l) and on the
+//! a-component (rows l..2l). The external product decomposes the input
+//! RLWE pair into 2l digit polynomials, lifts them to the NTT domain, and
+//! runs the (I)NTT–MMult–MAdd routine against the key rows — exactly the
+//! Fig. 9 dataflow the APACHE NMC module pipelines.
+
+use super::rlwe::{RlweCiphertext, RlweSecretKey};
+use super::TfheCtx;
+use crate::math::modops::{from_signed, mod_add, mod_mul};
+use crate::math::sampler::Rng;
+use std::sync::Arc;
+
+/// One RLWE row kept in NTT (eval) domain for fast pointwise products.
+#[derive(Debug, Clone)]
+pub struct RlweEval {
+    pub b: Vec<u64>,
+    pub a: Vec<u64>,
+}
+
+/// RGSW ciphertext: 2l rows in eval domain.
+/// Rows `0..l`: phase `m·B^j`; rows `l..2l`: phase `m·z̃·B^j`.
+#[derive(Debug, Clone)]
+pub struct RgswCiphertext {
+    pub rows: Vec<RlweEval>,
+    pub levels: usize,
+}
+
+impl RgswCiphertext {
+    /// Encrypt a small polynomial message m̃ (typically a constant 0/1 or a
+    /// monomial) as RGSW.
+    pub fn encrypt_poly(
+        ctx: &Arc<TfheCtx>,
+        key: &RlweSecretKey,
+        m: &[u64],
+        sigma: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        let q = ctx.q();
+        let n = ctx.n_poly();
+        let l = ctx.params.decomp_levels;
+        assert_eq!(m.len(), n);
+        let mut rows = Vec::with_capacity(2 * l);
+        for part in 0..2 {
+            for j in 0..l {
+                // z-row: RLWE(0)
+                let zero = vec![0u64; n];
+                let mut row =
+                    RlweCiphertext::encrypt_phase(ctx, key, &zero, sigma, rng);
+                // add m·B^j to the chosen component
+                let w = ctx.gadget[j];
+                let target = if part == 0 { &mut row.b } else { &mut row.a };
+                for (t, &mi) in target.iter_mut().zip(m.iter()) {
+                    *t = mod_add(*t, mod_mul(mi, w, q), q);
+                }
+                // lift to eval domain
+                let mut b = row.b;
+                let mut a = row.a;
+                ctx.ntt.forward(&mut b);
+                ctx.ntt.forward(&mut a);
+                rows.push(RlweEval { b, a });
+            }
+        }
+        RgswCiphertext { rows, levels: l }
+    }
+
+    /// Encrypt a scalar bit (constant polynomial).
+    pub fn encrypt_bit(
+        ctx: &Arc<TfheCtx>,
+        key: &RlweSecretKey,
+        bit: u64,
+        sigma: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        let mut m = vec![0u64; ctx.n_poly()];
+        m[0] = bit % ctx.q();
+        Self::encrypt_poly(ctx, key, &m, sigma, rng)
+    }
+
+    /// Assemble an RGSW from externally produced rows (circuit
+    /// bootstrapping output path).
+    pub fn from_rows(rows: Vec<RlweEval>, levels: usize) -> Self {
+        assert_eq!(rows.len(), 2 * levels);
+        RgswCiphertext { rows, levels }
+    }
+}
+
+/// Gadget-decompose a polynomial into `l` signed-digit polynomials, each
+/// mapped back into `[0, q)`.
+pub fn gadget_decompose_poly(ctx: &TfheCtx, poly: &[u64]) -> Vec<Vec<u64>> {
+    let l = ctx.params.decomp_levels;
+    let q = ctx.q();
+    let n = poly.len();
+    let mut out = vec![vec![0u64; n]; l];
+    for (k, &c) in poly.iter().enumerate() {
+        let digits = ctx.gadget_decompose_scalar(c);
+        for (j, &d) in digits.iter().enumerate() {
+            out[j][k] = from_signed(d, q);
+        }
+    }
+    out
+}
+
+/// External product `C ⊡ c`: RGSW × RLWE → RLWE, phase(out) ≈ m·phase(c).
+pub fn external_product(
+    ctx: &Arc<TfheCtx>,
+    rgsw: &RgswCiphertext,
+    c: &RlweCiphertext,
+) -> RlweCiphertext {
+    let q = ctx.q();
+    let n = ctx.n_poly();
+    let l = rgsw.levels;
+    // Decompose b then a; the digit order must match row order.
+    let decomp_b = gadget_decompose_poly(ctx, &c.b);
+    let decomp_a = gadget_decompose_poly(ctx, &c.a);
+    let mut acc_b = vec![0u64; n];
+    let mut acc_a = vec![0u64; n];
+    // Perf (§Perf): the decomposition output is owned — NTT the digit
+    // polynomials in place instead of cloning each one (saves 2l allocs +
+    // copies per external product).
+    let mut apply = |digits: Vec<Vec<u64>>, rows: &[RlweEval], acc_b: &mut [u64], acc_a: &mut [u64]| {
+        for (j, mut d) in digits.into_iter().enumerate() {
+            ctx.ntt.forward(&mut d);
+            let row = &rows[j];
+            for k in 0..n {
+                acc_b[k] = mod_add(acc_b[k], mod_mul(d[k], row.b[k], q), q);
+                acc_a[k] = mod_add(acc_a[k], mod_mul(d[k], row.a[k], q), q);
+            }
+        }
+    };
+    apply(decomp_b, &rgsw.rows[..l], &mut acc_b, &mut acc_a);
+    apply(decomp_a, &rgsw.rows[l..], &mut acc_b, &mut acc_a);
+    ctx.ntt.inverse(&mut acc_b);
+    ctx.ntt.inverse(&mut acc_a);
+    RlweCiphertext { b: acc_b, a: acc_a }
+}
+
+/// CMUX: `out = c0 + C ⊡ (c1 - c0)` — selects c1 when the RGSW bit is 1.
+pub fn cmux(
+    ctx: &Arc<TfheCtx>,
+    sel: &RgswCiphertext,
+    c0: &RlweCiphertext,
+    c1: &RlweCiphertext,
+) -> RlweCiphertext {
+    let diff = c1.sub(c0, ctx.q());
+    let prod = external_product(ctx, sel, &diff);
+    c0.add(&prod, ctx.q())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TfheParams;
+
+    fn setup() -> (Arc<TfheCtx>, RlweSecretKey, Rng) {
+        let ctx = TfheCtx::new(TfheParams::tiny());
+        let mut rng = Rng::seeded(300);
+        let key = RlweSecretKey::generate(&ctx, &mut rng);
+        (ctx, key, rng)
+    }
+
+    #[test]
+    fn external_product_by_one_preserves_message() {
+        let (ctx, key, mut rng) = setup();
+        let t = ctx.params.plaintext_space;
+        let delta = ctx.params.delta();
+        let msg: Vec<u64> = (0..ctx.n_poly() as u64).map(|i| i % t).collect();
+        let mu: Vec<u64> = msg.iter().map(|&m| m * delta).collect();
+        let c = RlweCiphertext::encrypt_phase(&ctx, &key, &mu, ctx.params.rlwe_sigma, &mut rng);
+        let one = RgswCiphertext::encrypt_bit(&ctx, &key, 1, ctx.params.rlwe_sigma, &mut rng);
+        let out = external_product(&ctx, &one, &c);
+        assert_eq!(out.decrypt(&ctx, &key, delta, t), msg);
+    }
+
+    #[test]
+    fn external_product_by_zero_kills_message() {
+        let (ctx, key, mut rng) = setup();
+        let t = ctx.params.plaintext_space;
+        let delta = ctx.params.delta();
+        let mu: Vec<u64> = (0..ctx.n_poly()).map(|_| delta).collect();
+        let c = RlweCiphertext::encrypt_phase(&ctx, &key, &mu, ctx.params.rlwe_sigma, &mut rng);
+        let zero = RgswCiphertext::encrypt_bit(&ctx, &key, 0, ctx.params.rlwe_sigma, &mut rng);
+        let out = external_product(&ctx, &zero, &c);
+        let dec = out.decrypt(&ctx, &key, delta, t);
+        assert!(dec.iter().all(|&d| d == 0), "nonzero leak: {:?}", &dec[..8]);
+    }
+
+    #[test]
+    fn external_product_by_monomial_rotates() {
+        let (ctx, key, mut rng) = setup();
+        let t = ctx.params.plaintext_space;
+        let delta = ctx.params.delta();
+        let mut mu = vec![0u64; ctx.n_poly()];
+        mu[0] = delta;
+        let c = RlweCiphertext::encrypt_phase(&ctx, &key, &mu, ctx.params.rlwe_sigma, &mut rng);
+        // RGSW(X^3)
+        let mut m = vec![0u64; ctx.n_poly()];
+        m[3] = 1;
+        let mono = RgswCiphertext::encrypt_poly(&ctx, &key, &m, ctx.params.rlwe_sigma, &mut rng);
+        let out = external_product(&ctx, &mono, &c);
+        let dec = out.decrypt(&ctx, &key, delta, t);
+        assert_eq!(dec[3], 1);
+        assert!(dec.iter().enumerate().all(|(i, &v)| i == 3 || v == 0));
+    }
+
+    #[test]
+    fn cmux_selects_correct_branch() {
+        let (ctx, key, mut rng) = setup();
+        let t = ctx.params.plaintext_space;
+        let delta = ctx.params.delta();
+        let mu0: Vec<u64> = (0..ctx.n_poly()).map(|_| delta).collect(); // all 1s
+        let mu1: Vec<u64> = (0..ctx.n_poly()).map(|_| 2 * delta).collect(); // all 2s
+        let c0 = RlweCiphertext::encrypt_phase(&ctx, &key, &mu0, ctx.params.rlwe_sigma, &mut rng);
+        let c1 = RlweCiphertext::encrypt_phase(&ctx, &key, &mu1, ctx.params.rlwe_sigma, &mut rng);
+        for bit in [0u64, 1] {
+            let sel = RgswCiphertext::encrypt_bit(&ctx, &key, bit, ctx.params.rlwe_sigma, &mut rng);
+            let out = cmux(&ctx, &sel, &c0, &c1);
+            let dec = out.decrypt(&ctx, &key, delta, t);
+            let expect = if bit == 1 { 2 } else { 1 };
+            assert!(
+                dec.iter().all(|&d| d == expect),
+                "bit={bit} got {:?}",
+                &dec[..8]
+            );
+        }
+    }
+
+    #[test]
+    fn cmux_chain_noise_stays_bounded() {
+        // 8 chained CMUXes still decrypt correctly (noise growth is additive).
+        let (ctx, key, mut rng) = setup();
+        let t = ctx.params.plaintext_space;
+        let delta = ctx.params.delta();
+        let mu: Vec<u64> = (0..ctx.n_poly()).map(|_| delta).collect();
+        let mut acc = RlweCiphertext::encrypt_phase(&ctx, &key, &mu, ctx.params.rlwe_sigma, &mut rng);
+        for i in 0..8 {
+            let bit = (i % 2) as u64;
+            let sel = RgswCiphertext::encrypt_bit(&ctx, &key, bit, ctx.params.rlwe_sigma, &mut rng);
+            // cmux(acc, acc) keeps the same message regardless of bit
+            acc = cmux(&ctx, &sel, &acc, &acc);
+        }
+        let dec = acc.decrypt(&ctx, &key, delta, t);
+        assert!(dec.iter().all(|&d| d == 1));
+    }
+}

@@ -1,0 +1,225 @@
+//! RLWE ciphertexts over `R_Q = Z_Q[X]/(X^N+1)` (Eq. 2 of the paper),
+//! single-modulus flavour used by the TFHE lane.
+
+use super::lwe::LweCiphertext;
+use super::TfheCtx;
+use crate::math::modops::{mod_add, mod_neg, mod_sub};
+use crate::math::sampler::Rng;
+use std::sync::Arc;
+
+/// RLWE secret key: a binary polynomial z̃.
+#[derive(Debug, Clone)]
+pub struct RlweSecretKey {
+    pub z: Vec<u64>,
+}
+
+impl RlweSecretKey {
+    pub fn generate(ctx: &Arc<TfheCtx>, rng: &mut Rng) -> Self {
+        RlweSecretKey {
+            z: rng.binary_vec(ctx.n_poly()),
+        }
+    }
+}
+
+/// `RLWE_z(m̃) = (b̃, ã)` with `b̃ = m̃ + ẽ - ã·z̃`, so `phase = b̃ + ã·z̃`.
+/// Both polynomials are kept in coefficient domain unless stated.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RlweCiphertext {
+    pub b: Vec<u64>,
+    pub a: Vec<u64>,
+}
+
+impl RlweCiphertext {
+    pub fn encrypt_phase(
+        ctx: &Arc<TfheCtx>,
+        key: &RlweSecretKey,
+        mu: &[u64],
+        sigma: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        let q = ctx.q();
+        let n = ctx.n_poly();
+        assert_eq!(mu.len(), n);
+        let a = rng.uniform_poly(n, q);
+        let az = ctx.ntt.negacyclic_mul(&a, &key.z);
+        let e = rng.gaussian_poly(n, sigma, q);
+        let b: Vec<u64> = (0..n)
+            .map(|i| mod_sub(mod_add(mu[i], e[i], q), az[i], q))
+            .collect();
+        RlweCiphertext { b, a }
+    }
+
+    /// Noiseless, keyless ciphertext with phase m̃.
+    pub fn trivial(ctx: &Arc<TfheCtx>, mu: &[u64]) -> Self {
+        assert_eq!(mu.len(), ctx.n_poly());
+        RlweCiphertext {
+            b: mu.to_vec(),
+            a: vec![0u64; ctx.n_poly()],
+        }
+    }
+
+    pub fn zero(ctx: &Arc<TfheCtx>) -> Self {
+        RlweCiphertext {
+            b: vec![0u64; ctx.n_poly()],
+            a: vec![0u64; ctx.n_poly()],
+        }
+    }
+
+    /// phase = b̃ + ã·z̃.
+    pub fn phase(&self, ctx: &Arc<TfheCtx>, key: &RlweSecretKey) -> Vec<u64> {
+        let q = ctx.q();
+        let az = ctx.ntt.negacyclic_mul(&self.a, &key.z);
+        self.b
+            .iter()
+            .zip(az.iter())
+            .map(|(&bi, &azi)| mod_add(bi, azi, q))
+            .collect()
+    }
+
+    /// Decrypt a message vector encoded at scale Δ over Z_t.
+    pub fn decrypt(&self, ctx: &Arc<TfheCtx>, key: &RlweSecretKey, delta: u64, t: u64) -> Vec<u64> {
+        self.phase(ctx, key)
+            .iter()
+            .map(|&p| (((p as u128 + delta as u128 / 2) / delta as u128) % t as u128) as u64)
+            .collect()
+    }
+
+    pub fn add(&self, other: &Self, q: u64) -> Self {
+        RlweCiphertext {
+            b: zip_mod(&self.b, &other.b, q, mod_add),
+            a: zip_mod(&self.a, &other.a, q, mod_add),
+        }
+    }
+
+    pub fn sub(&self, other: &Self, q: u64) -> Self {
+        RlweCiphertext {
+            b: zip_mod(&self.b, &other.b, q, mod_sub),
+            a: zip_mod(&self.a, &other.a, q, mod_sub),
+        }
+    }
+
+    pub fn neg(&self, q: u64) -> Self {
+        RlweCiphertext {
+            b: self.b.iter().map(|&x| mod_neg(x, q)).collect(),
+            a: self.a.iter().map(|&x| mod_neg(x, q)).collect(),
+        }
+    }
+
+    /// Multiply both components by the monomial X^k (blind-rotation step).
+    pub fn monomial_mul(&self, k: usize, q: u64) -> Self {
+        RlweCiphertext {
+            b: crate::math::automorph::monomial_mul(&self.b, k, q),
+            a: crate::math::automorph::monomial_mul(&self.a, k, q),
+        }
+    }
+
+    /// Multiply by a plaintext polynomial (both in coeff domain).
+    pub fn mul_plain(&self, ctx: &Arc<TfheCtx>, p: &[u64]) -> Self {
+        RlweCiphertext {
+            b: ctx.ntt.negacyclic_mul(&self.b, p),
+            a: ctx.ntt.negacyclic_mul(&self.a, p),
+        }
+    }
+
+    /// SampleExtract: the LWE ciphertext of phase coefficient `idx`, under
+    /// the key `z` viewed as an LWE key of dimension N.
+    /// `phase_idx = b_idx + Σ_i a'_i z_i` with `a'_i = a_{idx-i}` for
+    /// `i ≤ idx` and `-a_{N+idx-i}` for `i > idx`.
+    pub fn sample_extract_q(&self, idx: usize, q: u64) -> LweCiphertext {
+        let n = self.a.len();
+        assert!(idx < n);
+        let mut a_out = vec![0u64; n];
+        for i in 0..n {
+            if i <= idx {
+                a_out[i] = self.a[idx - i];
+            } else {
+                a_out[i] = mod_neg(self.a[n + idx - i], q);
+            }
+        }
+        LweCiphertext {
+            a: a_out,
+            b: self.b[idx],
+            q,
+        }
+    }
+}
+
+fn zip_mod(x: &[u64], y: &[u64], q: u64, f: fn(u64, u64, u64) -> u64) -> Vec<u64> {
+    x.iter().zip(y.iter()).map(|(&a, &b)| f(a, b, q)).collect()
+}
+
+/// The RLWE key viewed as an LWE key of dimension N (for extracted samples).
+pub fn extracted_lwe_key(key: &RlweSecretKey, q: u64) -> super::lwe::LweSecretKey {
+    super::lwe::LweSecretKey { s: key.z.clone(), q }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TfheParams;
+
+    fn setup() -> (Arc<TfheCtx>, RlweSecretKey, Rng) {
+        let ctx = TfheCtx::new(TfheParams::tiny());
+        let mut rng = Rng::seeded(200);
+        let key = RlweSecretKey::generate(&ctx, &mut rng);
+        (ctx, key, rng)
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let (ctx, key, mut rng) = setup();
+        let t = ctx.params.plaintext_space;
+        let delta = ctx.params.delta();
+        let msg: Vec<u64> = (0..ctx.n_poly() as u64).map(|i| i % t).collect();
+        let mu: Vec<u64> = msg.iter().map(|&m| m * delta).collect();
+        let c = RlweCiphertext::encrypt_phase(&ctx, &key, &mu, ctx.params.rlwe_sigma, &mut rng);
+        assert_eq!(c.decrypt(&ctx, &key, delta, t), msg);
+    }
+
+    #[test]
+    fn linear_ops() {
+        let (ctx, key, mut rng) = setup();
+        let q = ctx.q();
+        let t = ctx.params.plaintext_space;
+        let delta = ctx.params.delta();
+        let m1: Vec<u64> = (0..ctx.n_poly() as u64).map(|i| i % 2).collect();
+        let m2: Vec<u64> = (0..ctx.n_poly() as u64).map(|i| (i / 2) % 2).collect();
+        let mu = |m: &[u64]| -> Vec<u64> { m.iter().map(|&x| x * delta).collect() };
+        let c1 = RlweCiphertext::encrypt_phase(&ctx, &key, &mu(&m1), ctx.params.rlwe_sigma, &mut rng);
+        let c2 = RlweCiphertext::encrypt_phase(&ctx, &key, &mu(&m2), ctx.params.rlwe_sigma, &mut rng);
+        let sum = c1.add(&c2, q);
+        let expect: Vec<u64> = m1.iter().zip(m2.iter()).map(|(&a, &b)| (a + b) % t).collect();
+        assert_eq!(sum.decrypt(&ctx, &key, delta, t), expect);
+    }
+
+    #[test]
+    fn monomial_rotation_of_trivial() {
+        let (ctx, key, _) = setup();
+        let q = ctx.q();
+        let delta = ctx.params.delta();
+        let t = ctx.params.plaintext_space;
+        let mut mu = vec![0u64; ctx.n_poly()];
+        mu[0] = delta;
+        let c = RlweCiphertext::trivial(&ctx, &mu);
+        let rotated = c.monomial_mul(5, q);
+        let dec = rotated.decrypt(&ctx, &key, delta, t);
+        assert_eq!(dec[5], 1);
+        assert!(dec.iter().enumerate().all(|(i, &v)| i == 5 || v == 0));
+    }
+
+    #[test]
+    fn sample_extract_matches_poly_phase() {
+        let (ctx, key, mut rng) = setup();
+        let q = ctx.q();
+        let delta = ctx.params.delta();
+        let t = ctx.params.plaintext_space;
+        let msg: Vec<u64> = (0..ctx.n_poly() as u64).map(|i| (3 * i + 1) % t).collect();
+        let mu: Vec<u64> = msg.iter().map(|&m| m * delta).collect();
+        let c = RlweCiphertext::encrypt_phase(&ctx, &key, &mu, ctx.params.rlwe_sigma, &mut rng);
+        let lwe_key = extracted_lwe_key(&key, q);
+        for idx in [0usize, 1, 7, ctx.n_poly() - 1] {
+            let lwe = c.sample_extract_q(idx, q);
+            assert_eq!(lwe.decrypt(&lwe_key, delta, t), msg[idx], "idx {idx}");
+        }
+    }
+}

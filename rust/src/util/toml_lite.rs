@@ -1,0 +1,220 @@
+//! A small TOML-subset parser for the coordinator config system (no `serde`
+//! in the vendor set). Supports: `[section]` headers, `key = value` with
+//! string / integer / float / bool / homogeneous arrays, `#` comments.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parsed document: `section.key -> value`; top-level keys use section "".
+#[derive(Debug, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<(String, String), Value>,
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_int(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn get_float(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+}
+
+fn parse_value(raw: &str, line: usize) -> Result<Value, ParseError> {
+    let raw = raw.trim();
+    let err = |msg: &str| ParseError {
+        line,
+        msg: msg.to_string(),
+    };
+    if raw.is_empty() {
+        return Err(err("empty value"));
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if raw == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = raw.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err("unterminated array"))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part, line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    let clean = raw.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(&format!("unrecognized value `{raw}`")))
+}
+
+pub fn parse(text: &str) -> Result<Doc, ParseError> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (idx, raw_line) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        // strip comments outside strings (strings in our configs never
+        // contain '#', keep it simple)
+        let line = match raw_line.find('#') {
+            Some(pos) => &raw_line[..pos],
+            None => raw_line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let name = inner.strip_suffix(']').ok_or(ParseError {
+                line: line_no,
+                msg: "unterminated section header".into(),
+            })?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or(ParseError {
+            line: line_no,
+            msg: "expected `key = value`".into(),
+        })?;
+        let key = line[..eq].trim().to_string();
+        if key.is_empty() {
+            return Err(ParseError {
+                line: line_no,
+                msg: "empty key".into(),
+            });
+        }
+        let value = parse_value(&line[eq + 1..], line_no)?;
+        doc.entries.insert((section.clone(), key), value);
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = parse(
+            r#"
+# apache config
+name = "apache"
+[dimm]
+count = 4
+ranks = 8
+clock_ghz = 1.0
+imc_ks = true
+moduli_bits = [28, 28, 29]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("", "name", "?"), "apache");
+        assert_eq!(doc.get_int("dimm", "count", 0), 4);
+        assert_eq!(doc.get_float("dimm", "clock_ghz", 0.0), 1.0);
+        assert!(doc.get_bool("dimm", "imc_ks", false));
+        let arr = doc.get("dimm", "moduli_bits").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let doc = parse("").unwrap();
+        assert_eq!(doc.get_int("x", "y", 7), 7);
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let e = parse("a = 1\nb ~ 2").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let doc = parse("big = 1_000_000").unwrap();
+        assert_eq!(doc.get_int("", "big", 0), 1_000_000);
+    }
+}

@@ -1,0 +1,177 @@
+//! Property-based integration tests over cross-module invariants,
+//! driven by the in-repo proptest_lite harness.
+
+use apache_fhe::math::modops::{
+    centered, from_signed, mod_add, mod_inv, mod_mul, mod_sub, ntt_primes, Barrett,
+};
+use apache_fhe::math::ntt::{negacyclic_mul_naive, NttTable};
+use apache_fhe::math::poly::{Domain, RnsPoly};
+use apache_fhe::math::rns::{crt_reconstruct, RnsBasis};
+use apache_fhe::util::proptest_lite::{run_prop, GenExt};
+
+#[test]
+fn prop_modops_field_axioms() {
+    run_prop("field-axioms", 64, |rng, _| {
+        let q = 998_244_353u64;
+        let a = rng.uniform(q);
+        let b = rng.uniform(q);
+        let c = rng.uniform(q);
+        // associativity + commutativity + distributivity
+        assert_eq!(mod_add(mod_add(a, b, q), c, q), mod_add(a, mod_add(b, c, q), q));
+        assert_eq!(mod_mul(a, b, q), mod_mul(b, a, q));
+        assert_eq!(
+            mod_mul(a, mod_add(b, c, q), q),
+            mod_add(mod_mul(a, b, q), mod_mul(a, c, q), q)
+        );
+        // inverse (nonzero)
+        if a != 0 {
+            assert_eq!(mod_mul(a, mod_inv(a, q), q), 1);
+        }
+        // barrett agrees
+        let br = Barrett::new(q);
+        assert_eq!(br.mul(a, b), mod_mul(a, b, q));
+        // centered roundtrip
+        assert_eq!(from_signed(centered(a, q), q), a);
+    });
+}
+
+#[test]
+fn prop_ntt_is_ring_isomorphism() {
+    run_prop("ntt-ring-iso", 24, |rng, _| {
+        let n = rng.gen_pow2(3, 7);
+        let q = ntt_primes(30, 2 * n as u64, 1)[0];
+        let t = NttTable::new(n, q);
+        let a = rng.gen_vec(n, q);
+        let b = rng.gen_vec(n, q);
+        // conv(a,b) via NTT equals schoolbook
+        assert_eq!(t.negacyclic_mul(&a, &b), negacyclic_mul_naive(&a, &b, q));
+        // additivity in eval domain
+        let mut fa = a.clone();
+        let mut fb = b.clone();
+        t.forward(&mut fa);
+        t.forward(&mut fb);
+        let mut sum: Vec<u64> = a.iter().zip(&b).map(|(&x, &y)| mod_add(x, y, q)).collect();
+        t.forward(&mut sum);
+        for k in 0..n {
+            assert_eq!(sum[k], mod_add(fa[k], fb[k], q));
+        }
+    });
+}
+
+#[test]
+fn prop_rns_poly_ring_axioms() {
+    run_prop("rnspoly-ring", 16, |rng, _| {
+        let n = rng.gen_pow2(3, 5);
+        let limbs = 1 + rng.uniform(3) as usize;
+        let q = ntt_primes(30, 2 * n as u64, limbs);
+        let basis = RnsBasis::new(n, &q, &[]);
+        let rand_poly = |rng: &mut apache_fhe::math::sampler::Rng| {
+            let l: Vec<Vec<u64>> = (0..limbs).map(|i| rng.gen_vec(n, q[i])).collect();
+            RnsPoly::from_limbs(&basis, l, Domain::Coeff)
+        };
+        let x = rand_poly(rng);
+        let y = rand_poly(rng);
+        let z = rand_poly(rng);
+        // (x+y)*z == x*z + y*z
+        let lhs = x.add(&y).mul_full(&z);
+        let rhs = x.mul_full(&z).add(&y.mul_full(&z));
+        assert_eq!(lhs.limbs, rhs.limbs);
+        // x - x == 0
+        let zero = x.sub(&x);
+        assert!(zero.limbs.iter().all(|l| l.iter().all(|&c| c == 0)));
+    });
+}
+
+#[test]
+fn prop_crt_bijection() {
+    run_prop("crt-bijection", 64, |rng, _| {
+        let moduli = [97u64, 101, 103, 107];
+        let q: u128 = moduli.iter().map(|&m| m as u128).product();
+        let v = (rng.next_u64() as u128) % q;
+        let residues: Vec<u64> = moduli.iter().map(|&m| (v % m as u128) as u64).collect();
+        assert_eq!(crt_reconstruct(&residues, &moduli), v);
+    });
+}
+
+#[test]
+fn prop_tfhe_lwe_linear_homomorphism() {
+    use apache_fhe::params::TfheParams;
+    use apache_fhe::tfhe::lwe::{LweCiphertext, LweSecretKey};
+    use apache_fhe::tfhe::TfheCtx;
+    run_prop("lwe-linear", 8, |rng, _| {
+        let ctx = TfheCtx::new(TfheParams::tiny());
+        let key = LweSecretKey::generate(&ctx, rng);
+        let t = ctx.params.plaintext_space;
+        let delta = ctx.params.delta();
+        let m1 = rng.uniform(t);
+        let m2 = rng.uniform(t);
+        let c1 = LweCiphertext::encrypt_phase(&key, m1 * delta, ctx.params.lwe_sigma, rng);
+        let c2 = LweCiphertext::encrypt_phase(&key, m2 * delta, ctx.params.lwe_sigma, rng);
+        assert_eq!(c1.add(&c2).decrypt(&key, delta, t), (m1 + m2) % t);
+        assert_eq!(c1.sub(&c2).decrypt(&key, delta, t), (m1 + t - m2) % t);
+        let k = 1 + rng.uniform(3) as i64;
+        assert_eq!(
+            c1.mul_scalar(k).decrypt(&key, delta, t),
+            (m1 * k as u64) % t
+        );
+    });
+}
+
+#[test]
+fn prop_scheduler_conservation() {
+    use apache_fhe::hw::DimmConfig;
+    use apache_fhe::params::{CkksParams, TfheParams};
+    use apache_fhe::sched::oplevel::OpShapes;
+    use apache_fhe::sched::tasklevel::{cmux_tree_task, schedule_tasks};
+    run_prop("sched-conservation", 8, |rng, case| {
+        let n_tasks = 1 + rng.uniform(12) as usize;
+        let dimms = 1 + rng.uniform(8) as usize;
+        let tasks: Vec<_> = (0..n_tasks)
+            .map(|i| cmux_tree_task(&format!("c{case}-t{i}"), 3 + rng.uniform(12) as usize))
+            .collect();
+        let shapes = OpShapes {
+            ckks: CkksParams::paper_shape(),
+            tfhe: TfheParams::paper_shape(),
+        };
+        let a = schedule_tasks(&tasks, &shapes, &DimmConfig::paper(), dimms, 30e9);
+        // every task exactly once
+        let mut seen: Vec<usize> = a.per_dimm.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n_tasks).collect::<Vec<_>>());
+        // makespan >= max busy, <= sum busy + transfer
+        let max_busy = a.dimm_busy_s.iter().cloned().fold(0.0, f64::max);
+        let sum_busy: f64 = a.dimm_busy_s.iter().sum();
+        assert!(a.makespan_s >= max_busy);
+        assert!(a.makespan_s <= sum_busy + a.host_transfer_s + 1e-9);
+    });
+}
+
+#[test]
+fn prop_galois_group_closure() {
+    use apache_fhe::math::automorph::{galois_coeff, rotation_to_galois};
+    run_prop("galois-closure", 16, |rng, _| {
+        let n = 64usize;
+        let q = ntt_primes(30, 2 * n as u64, 1)[0];
+        let a = rng.gen_vec(n, q);
+        let r1 = rng.uniform(16) as i64;
+        let r2 = rng.uniform(16) as i64;
+        let k1 = rotation_to_galois(r1, n);
+        let k2 = rotation_to_galois(r2, n);
+        // σ_{k2}(σ_{k1}(a)) == σ_{k1·k2 mod 2N}(a)
+        let lhs = galois_coeff(&galois_coeff(&a, k1, q), k2, q);
+        let rhs = galois_coeff(&a, k1 * k2 % (2 * n), q);
+        assert_eq!(lhs, rhs);
+    });
+}
+
+#[test]
+fn prop_mod_sub_matches_signed_arithmetic() {
+    run_prop("modsub-signed", 64, |rng, _| {
+        let q = ntt_primes(30, 2048, 1)[0];
+        let a = rng.uniform(q);
+        let b = rng.uniform(q);
+        let s = mod_sub(a, b, q);
+        let expect = (a as i128 - b as i128).rem_euclid(q as i128) as u64;
+        assert_eq!(s, expect);
+    });
+}

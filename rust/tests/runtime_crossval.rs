@@ -1,0 +1,145 @@
+//! Cross-validation: the AOT JAX/Pallas artifacts must agree bit-for-bit
+//! with the Rust functional library on the same primes and twiddle layout.
+//! This is the integration seam of the whole three-layer architecture.
+
+use apache_fhe::math::modops::ntt_primes;
+use apache_fhe::math::ntt::NttTable;
+use apache_fhe::math::sampler::Rng;
+use apache_fhe::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    match Runtime::new(&dir) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping runtime tests ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifact_prime_matches_rust_prime() {
+    let Some(rt) = runtime() else { return };
+    for (n, name) in [(256usize, "ntt_fwd_n256"), (1024, "ntt_fwd_n1024")] {
+        let q_rust = ntt_primes(31, 2 * n as u64, 1)[0];
+        assert_eq!(rt.manifest[name].modulus, q_rust, "prime mismatch at N={n}");
+    }
+}
+
+#[test]
+fn pallas_ntt_matches_rust_ntt() {
+    let Some(rt) = runtime() else { return };
+    let n = 256usize;
+    let q = ntt_primes(31, 2 * n as u64, 1)[0];
+    let table = NttTable::new(n, q);
+    let mut rng = Rng::seeded(42);
+    // batch of 14 polys, flattened
+    let polys: Vec<Vec<u64>> = (0..14).map(|_| rng.uniform_poly(n, q)).collect();
+    let flat: Vec<u64> = polys.iter().flatten().copied().collect();
+    let out = rt
+        .execute_u64("ntt_fwd_n256", &[flat, table.forward_twiddles().to_vec()])
+        .unwrap();
+    for (i, poly) in polys.iter().enumerate() {
+        let mut expect = poly.clone();
+        table.forward(&mut expect);
+        assert_eq!(&out[i * n..(i + 1) * n], &expect[..], "poly {i}");
+    }
+}
+
+#[test]
+fn pallas_intt_matches_rust_intt() {
+    let Some(rt) = runtime() else { return };
+    let n = 256usize;
+    let q = ntt_primes(31, 2 * n as u64, 1)[0];
+    let table = NttTable::new(n, q);
+    let mut rng = Rng::seeded(43);
+    let polys: Vec<Vec<u64>> = (0..2).map(|_| rng.uniform_poly(n, q)).collect();
+    let flat: Vec<u64> = polys.iter().flatten().copied().collect();
+    let out = rt
+        .execute_u64(
+            "ntt_inv_n256",
+            &[flat, table.inverse_twiddles().to_vec(), vec![table.n_inv()]],
+        )
+        .unwrap();
+    for (i, poly) in polys.iter().enumerate() {
+        let mut expect = poly.clone();
+        table.inverse(&mut expect);
+        assert_eq!(&out[i * n..(i + 1) * n], &expect[..], "poly {i}");
+    }
+}
+
+#[test]
+fn artifact_external_product_matches_rust() {
+    // Full Fig. 9 dataflow: decompose in Rust, heavy math via PJRT artifact,
+    // compare against the pure-Rust external product accumulation.
+    use apache_fhe::math::modops::{mod_add, mod_mul};
+    let Some(rt) = runtime() else { return };
+    let n = 256usize;
+    let q = ntt_primes(31, 2 * n as u64, 1)[0];
+    let table = NttTable::new(n, q);
+    let rows = 14usize;
+    let mut rng = Rng::seeded(44);
+    let digits: Vec<Vec<u64>> = (0..rows).map(|_| {
+        (0..n).map(|_| rng.uniform(256)).collect()
+    }).collect();
+    let rows_b_coeff: Vec<Vec<u64>> = (0..rows).map(|_| rng.uniform_poly(n, q)).collect();
+    let rows_a_coeff: Vec<Vec<u64>> = (0..rows).map(|_| rng.uniform_poly(n, q)).collect();
+    // eval-domain rows for the artifact
+    let to_eval_flat = |polys: &[Vec<u64>]| -> Vec<u64> {
+        polys.iter().flat_map(|p| {
+            let mut e = p.clone();
+            table.forward(&mut e);
+            e
+        }).collect()
+    };
+    let out = rt.execute_u64("external_product_n256", &[
+        digits.iter().flatten().copied().collect(),
+        to_eval_flat(&rows_b_coeff),
+        to_eval_flat(&rows_a_coeff),
+        table.forward_twiddles().to_vec(),
+        table.inverse_twiddles().to_vec(),
+        vec![table.n_inv()],
+    ]).unwrap();
+    // rust-native accumulation
+    let mut expect_b = vec![0u64; n];
+    let mut expect_a = vec![0u64; n];
+    for j in 0..rows {
+        let pb = table.negacyclic_mul(&digits[j], &rows_b_coeff[j]);
+        let pa = table.negacyclic_mul(&digits[j], &rows_a_coeff[j]);
+        for k in 0..n {
+            expect_b[k] = mod_add(expect_b[k], pb[k], q);
+            expect_a[k] = mod_add(expect_a[k], pa[k], q);
+        }
+    }
+    let _ = mod_mul;
+    assert_eq!(&out[..n], &expect_b[..]);
+    assert_eq!(&out[n..], &expect_a[..]);
+}
+
+#[test]
+fn routine2_matches_scalar_model() {
+    use apache_fhe::math::modops::{mod_add, mod_mul};
+    let Some(rt) = runtime() else { return };
+    let n = 256usize;
+    let rows = 14usize;
+    let q = rt.manifest["routine2_n256"].modulus;
+    let mut rng = Rng::seeded(45);
+    let gen = |rng: &mut Rng| -> Vec<u64> { (0..rows * n).map(|_| rng.uniform(q)).collect() };
+    let (a, b, c) = (gen(&mut rng), gen(&mut rng), gen(&mut rng));
+    let out = rt
+        .execute_u64("routine2_n256", &[a.clone(), b.clone(), c.clone()])
+        .unwrap();
+    for k in 0..rows * n {
+        assert_eq!(out[k], mod_add(mod_mul(a[k], b[k], q), c[k], q));
+    }
+}
+
+#[test]
+fn wrong_input_shape_is_rejected() {
+    let Some(rt) = runtime() else { return };
+    let err = rt.execute_u64("ntt_fwd_n256", &[vec![1u64; 17], vec![1u64; 17]]);
+    assert!(err.is_err());
+    let err2 = rt.execute_u64("no_such_artifact", &[vec![]]);
+    assert!(err2.is_err());
+}
