@@ -1,0 +1,17 @@
+# Build-time targets. `artifacts` lowers the JAX/Pallas operator graphs to
+# HLO text + manifest for the PJRT runtime backend (feature `pjrt`); the
+# default Rust build needs none of this — it runs on the ReferenceBackend.
+
+ARTIFACTS_DIR := artifacts
+
+.PHONY: artifacts test clean
+
+artifacts:
+	cd python && python3 -m compile.aot --out $(abspath $(ARTIFACTS_DIR))
+
+test:
+	cargo build --release && cargo test -q
+	cd python && python3 -m pytest tests -q
+
+clean:
+	rm -rf $(ARTIFACTS_DIR) target

@@ -7,7 +7,9 @@
 //! DIMM time, per-op counts, and artifact invocations. Recorded in
 //! EXPERIMENTS.md.
 //!
-//! Run: `make artifacts && cargo run --release --example e2e_serving`
+//! Run: `cargo run --release --example e2e_serving`
+//! (hermetic: executes through the ReferenceBackend; run `make artifacts`
+//! and build with `--features pjrt` to execute the AOT PJRT path instead)
 
 use apache_fhe::apps;
 use apache_fhe::coordinator::{ApacheConfig, Coordinator, TaskRequest};

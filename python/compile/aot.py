@@ -75,6 +75,25 @@ def artifact_registry():
                 q,
             )
         )
+        registry.append(
+            (f"automorph_n{n}", model.make_automorph(n, q), [u64((rows, n)), tw], q)
+        )
+        registry.append(
+            (
+                f"pointwise_mul_n{n}",
+                model.make_pointwise_mul(q),
+                [u64((rows, n)), u64((rows, n))],
+                q,
+            )
+        )
+        registry.append(
+            (
+                f"pointwise_add_n{n}",
+                model.make_pointwise_add(q),
+                [u64((rows, n)), u64((rows, n))],
+                q,
+            )
+        )
     return registry
 
 

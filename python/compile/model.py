@@ -68,6 +68,37 @@ def make_external_product(n: int, q: int, rows: int):
     return external_product
 
 
+def make_automorph(n: int, q: int):
+    """Eval-domain Galois permutation (the Automorph FU, §IV-B(3)):
+    out[:, k] = x[:, perm[k]]. The permutation is a runtime input computed
+    by the Rust coordinator (math::automorph::galois_eval_map)."""
+
+    def automorph(x, perm):
+        return (jnp.take(x, perm.astype(jnp.int64), axis=1),)
+
+    return automorph
+
+
+def make_pointwise_mul(q: int):
+    """Eval-domain Hadamard product (MMult lane of R2)."""
+    qq = jnp.uint64(q)
+
+    def pointwise_mul(a, b):
+        return ((a * b) % qq,)
+
+    return pointwise_mul
+
+
+def make_pointwise_add(q: int):
+    """Residue-wise addition (MAdd lane of R2)."""
+    qq = jnp.uint64(q)
+
+    def pointwise_add(a, b):
+        return ((a + b) % qq,)
+
+    return pointwise_add
+
+
 def make_ntt_batch(n: int, q: int):
     """Standalone batched forward NTT (for cross-validation vs Rust)."""
 

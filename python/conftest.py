@@ -1,0 +1,7 @@
+"""Make `compile` importable however pytest is invoked (repo root or
+python/): the package root is this directory."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

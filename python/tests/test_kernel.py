@@ -5,7 +5,9 @@ exactly (integer arithmetic — no tolerance)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="hypothesis not in the vendor set")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from compile.kernels import ref
 from compile.kernels.common import ntt_prime, twiddles, root_of_unity

@@ -60,10 +60,40 @@ def test_routine2_shapes_and_values():
     np.testing.assert_array_equal(np.asarray(got), ref.fma_mod(a, b, c, q))
 
 
+def test_automorph_graph_is_a_pure_permutation():
+    n, q = 64, ntt_prime(31, 128)
+    auto = model.make_automorph(n, q)
+    rng = np.random.default_rng(10)
+    x = rng.integers(0, q, size=(3, n), dtype=np.uint64)
+    perm = np.array(rng.permutation(n), dtype=np.uint64)
+    (got,) = auto(x, perm)
+    np.testing.assert_array_equal(np.asarray(got), x[:, perm.astype(np.int64)])
+
+
+def test_pointwise_graphs_match_reference():
+    q = ntt_prime(31, 128)
+    rng = np.random.default_rng(11)
+    a = rng.integers(0, q, size=(2, 64), dtype=np.uint64)
+    b = rng.integers(0, q, size=(2, 64), dtype=np.uint64)
+    (mul,) = model.make_pointwise_mul(q)(a, b)
+    np.testing.assert_array_equal(np.asarray(mul), ref.pointwise_mod(a, b, q))
+    (add,) = model.make_pointwise_add(q)(a, b)
+    np.testing.assert_array_equal(np.asarray(add), (a + b) % np.uint64(q))
+
+
 def test_aot_registry_covers_both_rings():
     from compile.aot import artifact_registry
 
     names = [r[0] for r in artifact_registry()]
     for n in (256, 1024):
-        for kind in ("ntt_fwd", "ntt_inv", "external_product", "routine1", "routine2"):
+        for kind in (
+            "ntt_fwd",
+            "ntt_inv",
+            "external_product",
+            "routine1",
+            "routine2",
+            "automorph",
+            "pointwise_mul",
+            "pointwise_add",
+        ):
             assert f"{kind}_n{n}" in names

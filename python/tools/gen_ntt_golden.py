@@ -1,0 +1,156 @@
+"""Regenerate the NTT golden-vector digests committed in
+rust/tests/ntt_golden.rs.
+
+Run from the repository root:
+
+    python python/tools/gen_ntt_golden.py
+
+The script is the Python mirror of the Rust test: it re-implements the
+repo's xoshiro256++ sampler (rust/src/math/sampler.rs) bit-exactly,
+generates the fixed-seed input polynomials, runs the forward negacyclic
+NTT with the twiddle layout of python/compile/kernels/common.py (the same
+layout rust NttTable uses), cross-checks one small case against the
+schoolbook oracle in python/compile/kernels/ref.py, and prints the FNV-1a
+digests of inputs and outputs. Paste the printed rows into the GOLDEN
+table of rust/tests/ntt_golden.rs whenever the twiddle layout or the
+sampler changes (they should not — that is the point of the test).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.kernels.common import ntt_prime, twiddles  # noqa: E402
+
+MASK = (1 << 64) - 1
+
+
+class Xoshiro256pp:
+    """Bit-exact port of rust/src/math/sampler.rs `Rng`."""
+
+    def __init__(self, seed: int):
+        s = []
+        sm = seed & MASK
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    @staticmethod
+    def _rotl(x: int, k: int) -> int:
+        return ((x << k) | (x >> (64 - k))) & MASK
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (self._rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    def uniform(self, bound: int) -> int:
+        zone = MASK - (MASK % bound)
+        while True:
+            v = self.next_u64()
+            if v < zone:
+                return v % bound
+
+    def uniform_poly(self, n: int, q: int):
+        return [self.uniform(q) for _ in range(n)]
+
+
+def ntt_forward(a, w, q):
+    """Iterative CT forward negacyclic NTT, natural → bit-reversed order —
+    the exact loop of rust NttTable::forward (and kernels/ntt.py)."""
+    a = list(a)
+    n = len(a)
+    t = n
+    m = 1
+    while m < n:
+        t >>= 1
+        for i in range(m):
+            wi = w[m + i]
+            j1 = 2 * i * t
+            for j in range(j1, j1 + t):
+                u = a[j]
+                v = a[j + t] * wi % q
+                a[j] = (u + v) % q
+                a[j + t] = (u - v) % q
+        m <<= 1
+    return a
+
+
+def fnv1a64(vals):
+    """FNV-1a over the little-endian u64 byte stream."""
+    h = 0xCBF29CE484222325
+    for v in vals:
+        for byte in int(v).to_bytes(8, "little"):
+            h = ((h ^ byte) * 0x100000001B3) & MASK
+    return h
+
+
+def self_check():
+    """The NTT loop must agree with the ref.py schoolbook oracle."""
+    import numpy as np
+
+    from compile.kernels import ref
+
+    n = 32
+    q = ntt_prime(31, 2 * n)
+    w, wi, n_inv = twiddles(n, q)
+    rng = Xoshiro256pp(7)
+    a = rng.uniform_poly(n, q)
+    b = rng.uniform_poly(n, q)
+    fa = ntt_forward(a, w, q)
+    fb = ntt_forward(b, w, q)
+    # pointwise product, then inverse via the forward of the conjugate
+    # layout: use the GS inverse loop inline (mirror of NttTable::inverse)
+    prod = [x * y % q for x, y in zip(fa, fb)]
+    t = 1
+    m = n
+    x = prod
+    while m > 1:
+        h = m >> 1
+        j1 = 0
+        for i in range(h):
+            wv = wi[h + i]
+            for j in range(j1, j1 + t):
+                u = x[j]
+                v = x[j + t]
+                x[j] = (u + v) % q
+                x[j + t] = (u - v) * wv % q
+            j1 += 2 * t
+        t <<= 1
+        m = h
+    x = [v * n_inv % q for v in x]
+    oracle = ref.negacyclic_mul_naive(
+        np.array(a, dtype=np.uint64), np.array(b, dtype=np.uint64), q
+    )
+    assert [int(v) for v in oracle] == x, "NTT loop diverges from ref.py oracle"
+
+
+def main():
+    self_check()
+    print("# case: (n, seed, q, input_digest, output_digest)")
+    for n, seed in [(256, 0x5EED0100), (1024, 0x5EED0400)]:
+        q = ntt_prime(31, 2 * n)
+        w, _, _ = twiddles(n, q)
+        rng = Xoshiro256pp(seed)
+        poly = rng.uniform_poly(n, q)
+        out = ntt_forward(poly, w, q)
+        print(
+            f"(n={n}, seed=0x{seed:X}, q={q}, "
+            f"input=0x{fnv1a64(poly):016X}, output=0x{fnv1a64(out):016X})"
+        )
+
+
+if __name__ == "__main__":
+    main()

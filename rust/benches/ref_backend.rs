@@ -1,0 +1,79 @@
+//! Reference-backend throughput: the pure-Rust datapath executing the
+//! artifact manifest (the hermetic stand-in for PJRT). Establishes the
+//! software baseline the accelerator model is compared against, and
+//! watches for regressions in the batched NTT / external-product hot
+//! loops behind the Backend seam.
+
+use apache_fhe::math::ntt::NttTable;
+use apache_fhe::math::sampler::Rng;
+use apache_fhe::runtime::Runtime;
+use apache_fhe::util::benchkit::{bench, fmt_duration, fmt_rate, Table};
+
+fn main() {
+    let rt = Runtime::reference();
+    let mut rng = Rng::seeded(3);
+    let mut t = Table::new(&["artifact", "median", "throughput"]);
+
+    for n in [256usize, 1024] {
+        let name = format!("ntt_fwd_n{n}");
+        let q = rt.manifest[&name].modulus;
+        let table = NttTable::new(n, q);
+        let rows = 14usize;
+        let flat: Vec<u64> = (0..rows * n).map(|_| rng.uniform(q)).collect();
+        let tw = table.forward_twiddles().to_vec();
+        let st = bench(&name, || {
+            std::hint::black_box(rt.execute_u64(&name, &[flat.clone(), tw.clone()]).unwrap());
+        });
+        t.row(&[
+            format!("{name} (batch 14)"),
+            fmt_duration(st.median),
+            fmt_rate(st.ops_per_sec()),
+        ]);
+    }
+
+    {
+        let name = "external_product_n256";
+        let n = 256usize;
+        let rows = 14usize;
+        let q = rt.manifest[name].modulus;
+        let table = NttTable::new(n, q);
+        let inputs = vec![
+            (0..rows * n).map(|_| rng.uniform(256)).collect::<Vec<u64>>(),
+            (0..rows * n).map(|_| rng.uniform(q)).collect(),
+            (0..rows * n).map(|_| rng.uniform(q)).collect(),
+            table.forward_twiddles().to_vec(),
+            table.inverse_twiddles().to_vec(),
+            vec![table.n_inv()],
+        ];
+        let st = bench(name, || {
+            std::hint::black_box(rt.execute_u64(name, &inputs).unwrap());
+        });
+        t.row(&[
+            name.to_string(),
+            fmt_duration(st.median),
+            fmt_rate(st.ops_per_sec()),
+        ]);
+    }
+
+    {
+        let name = "routine2_n256";
+        let q = rt.manifest[name].modulus;
+        let len = 14 * 256;
+        let gen = |rng: &mut Rng| -> Vec<u64> { (0..len).map(|_| rng.uniform(q)).collect() };
+        let inputs = vec![gen(&mut rng), gen(&mut rng), gen(&mut rng)];
+        let st = bench(name, || {
+            std::hint::black_box(rt.execute_u64(name, &inputs).unwrap());
+        });
+        t.row(&[
+            format!("{name} (R2 fma)"),
+            fmt_duration(st.median),
+            fmt_rate(st.ops_per_sec()),
+        ]);
+    }
+
+    t.print(&format!(
+        "reference backend hot paths (backend: {})",
+        rt.backend_name()
+    ));
+    assert!(rt.artifact_names().len() >= 16);
+}

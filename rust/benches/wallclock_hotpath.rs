@@ -65,31 +65,30 @@ fn main() {
     });
     t.row(&["CKKS CMult+rescale (N=1024, L=4)".into(), apache_fhe::util::benchkit::fmt_duration(st.median), fmt_rate(st.ops_per_sec())]);
 
-    // PJRT artifact round trip
-    match Runtime::new(Runtime::default_dir()) {
-        Ok(rt) => {
-            let q = rt.manifest["external_product_n256"].modulus;
-            let table = NttTable::new(256, q);
-            let mk = |rng: &mut Rng, bound: u64, len: usize| -> Vec<u64> {
-                (0..len).map(|_| rng.uniform(bound)).collect()
-            };
-            let digits = mk(&mut rng, 256, 14 * 256);
-            let rows_b = mk(&mut rng, q, 14 * 256);
-            let rows_a = mk(&mut rng, q, 14 * 256);
-            let inputs = vec![
-                digits,
-                rows_b,
-                rows_a,
-                table.forward_twiddles().to_vec(),
-                table.inverse_twiddles().to_vec(),
-                vec![table.n_inv()],
-            ];
-            let st = bench("pjrt-external-product", || {
-                std::hint::black_box(rt.execute_u64("external_product_n256", &inputs).unwrap());
-            });
-            t.row(&["PJRT external_product_n256".into(), apache_fhe::util::benchkit::fmt_duration(st.median), fmt_rate(st.ops_per_sec())]);
-        }
-        Err(e) => eprintln!("skipping PJRT bench: {e}"),
+    // runtime artifact round trip (PJRT when artifacts + feature are
+    // present, the hermetic ReferenceBackend otherwise)
+    {
+        let rt = Runtime::new(Runtime::default_dir()).unwrap_or_else(|_| Runtime::reference());
+        let q = rt.manifest["external_product_n256"].modulus;
+        let table = NttTable::new(256, q);
+        let mk = |rng: &mut Rng, bound: u64, len: usize| -> Vec<u64> {
+            (0..len).map(|_| rng.uniform(bound)).collect()
+        };
+        let digits = mk(&mut rng, 256, 14 * 256);
+        let rows_b = mk(&mut rng, q, 14 * 256);
+        let rows_a = mk(&mut rng, q, 14 * 256);
+        let inputs = vec![
+            digits,
+            rows_b,
+            rows_a,
+            table.forward_twiddles().to_vec(),
+            table.inverse_twiddles().to_vec(),
+            vec![table.n_inv()],
+        ];
+        let st = bench("runtime-external-product", || {
+            std::hint::black_box(rt.execute_u64("external_product_n256", &inputs).unwrap());
+        });
+        t.row(&[format!("{} external_product_n256", rt.backend_name()), apache_fhe::util::benchkit::fmt_duration(st.median), fmt_rate(st.ops_per_sec())]);
     }
     t.print("wall-clock hot paths (this machine)");
 }

@@ -1,8 +1,8 @@
 //! Coordinator configuration: TOML-subset file + CLI overrides.
 
 use crate::hw::{DimmConfig, DramTiming};
+use crate::util::error::{Error, Result};
 use crate::util::toml_lite;
-use anyhow::{anyhow, Result};
 
 /// Full system configuration (one file drives the launcher, the hardware
 /// model and the scheduler).
@@ -34,7 +34,7 @@ impl ApacheConfig {
     /// Parse from TOML-subset text. Unknown keys are ignored (forward
     /// compatibility); malformed values error.
     pub fn from_toml(text: &str) -> Result<Self> {
-        let doc = toml_lite::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let doc = toml_lite::parse(text).map_err(Error::from)?;
         let mut cfg = ApacheConfig::default();
         cfg.dimms = doc.get_int("system", "dimms", cfg.dimms as i64) as usize;
         cfg.host_bw = doc.get_float("system", "host_bw_gbs", 30.0) * 1e9;
@@ -56,7 +56,7 @@ impl ApacheConfig {
         d.routine2 = doc.get_bool("dimm", "routine2", d.routine2);
         d.timing = DramTiming::ddr4_3200();
         if cfg.dimms == 0 {
-            return Err(anyhow!("system.dimms must be >= 1"));
+            return Err(Error::new("system.dimms must be >= 1"));
         }
         Ok(cfg)
     }

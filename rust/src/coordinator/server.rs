@@ -3,8 +3,10 @@
 //! Workers consume scheduled tasks (Fig. 8(c)/(d) overlap: each DIMM runs
 //! its queue back-to-back, so pipelines never idle waiting for another
 //! task's host round-trip). Each task advances the hardware model; when
-//! `use_runtime` is on, workers additionally execute the operator's
-//! numeric hot loop through the PJRT artifacts to prove the datapath.
+//! `use_runtime` is on, the leader additionally executes the operator's
+//! numeric hot loop through the runtime backend (PJRT artifacts when
+//! available, the pure-Rust ReferenceBackend otherwise) to prove the
+//! datapath.
 
 use super::config::ApacheConfig;
 use super::metrics::Metrics;
@@ -16,8 +18,9 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-// The xla PJRT client is !Send (Rc + raw pointers), so artifact execution
-// lives on the leader thread; workers model the DIMMs concurrently.
+// Backend handles may be !Send (the PJRT client is Rc + raw pointers), so
+// artifact execution lives on the leader thread; workers model the DIMMs
+// concurrently.
 
 /// A client request: one homomorphic task.
 pub struct TaskRequest {
@@ -46,7 +49,10 @@ impl Coordinator {
     pub fn new(cfg: ApacheConfig) -> Self {
         let runtime = if cfg.use_runtime {
             match Runtime::new(&cfg.artifacts_dir) {
-                Ok(rt) => Some(rt),
+                Ok(rt) => {
+                    eprintln!("[coordinator] runtime backend: {}", rt.backend_name());
+                    Some(rt)
+                }
                 Err(e) => {
                     eprintln!("[coordinator] runtime disabled: {e}");
                     None
@@ -119,9 +125,10 @@ impl Coordinator {
             out.sort_by(|a, b| a.name.cmp(&b.name));
             out
         });
-        // numeric hot path through PJRT: the accelerator datapath runs on
-        // the leader (PJRT handles are !Send); one artifact invocation per
-        // task proves the AOT executables compose at request time.
+        // numeric hot path through the runtime backend: the accelerator
+        // datapath runs on the leader (backend handles may be !Send); one
+        // artifact invocation per task proves the executables compose at
+        // request time.
         if let Some(rt) = &self.runtime {
             let n = 256usize;
             let rows = 14usize;

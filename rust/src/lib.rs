@@ -11,8 +11,10 @@
 //!   area/power (§III, §IV, §VI-A(2,3)).
 //! * [`sched`] — the multi-scheme operator compiler: operator-level group
 //!   scheduling, task-level multi-DIMM scheduling, packing (§V).
-//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas kernels
-//!   (`artifacts/*.hlo.txt`), the accelerator datapath.
+//! * [`runtime`] — the accelerator datapath behind a pluggable `Backend`
+//!   trait: a pure-Rust `ReferenceBackend` (hermetic default) and a PJRT
+//!   executor of AOT-compiled JAX/Pallas kernels (`artifacts/*.hlo.txt`,
+//!   feature `pjrt`).
 //! * [`coordinator`] — the L3 leader: config, task queue, DIMM workers,
 //!   metrics, serving loop.
 //! * [`apps`] — paper benchmark workload generators (Lola-MNIST, HELR,

@@ -1,11 +1,12 @@
 //! `apache` — the launcher CLI.
 //!
 //! Subcommands:
-//!   serve    — run the coordinator on a synthetic mixed batch
-//!   inspect  — print the schedule/microcode for an operator
-//!   profile  — print the hardware profile of every operator
-//!   area     — print the Table-IV area/power roll-up
-//!   config   — dump the effective configuration
+//!   serve     — run the coordinator on a synthetic mixed batch
+//!   inspect   — print the schedule/microcode for an operator
+//!   profile   — print the hardware profile of every operator
+//!   area      — print the Table-IV area/power roll-up
+//!   config    — dump the effective configuration
+//!   artifacts — list the runtime's artifact manifest + active backend
 
 use apache_fhe::baseline;
 use apache_fhe::coordinator::{ApacheConfig, Coordinator, TaskRequest};
@@ -133,9 +134,24 @@ fn main() {
                 println!("{}: {:?}", b.name, b.ops);
             }
         }
+        Some("artifacts") => {
+            let cfg = load_config(&args);
+            let rt = apache_fhe::runtime::Runtime::new(&cfg.artifacts_dir).unwrap_or_else(|e| {
+                eprintln!("artifacts dir unusable ({e}); using reference backend");
+                apache_fhe::runtime::Runtime::reference()
+            });
+            println!("backend: {}", rt.backend_name());
+            for name in rt.artifact_names() {
+                let m = &rt.manifest[&name];
+                println!(
+                    "{name:<24} inputs={} shapes={:?} q={}",
+                    m.num_inputs, m.shapes, m.modulus
+                );
+            }
+        }
         _ => {
             eprintln!(
-                "usage: apache <serve|profile|inspect|area|config|baselines> \
+                "usage: apache <serve|profile|inspect|area|config|baselines|artifacts> \
                  [--config file.toml] [--dimms N] [--tasks N] [--runtime]"
             );
             std::process::exit(2);

@@ -1,15 +1,30 @@
-//! Accelerator runtime: load AOT-compiled JAX/Pallas artifacts (HLO text)
-//! and execute them on the PJRT CPU client from the L3 hot path.
+//! Accelerator runtime: execute the AOT-compiled operator artifacts from
+//! the L3 hot path, behind a pluggable [`Backend`].
 //!
-//! Python never runs here — `make artifacts` produced the HLO once; this
-//! module is the software stand-in for the paper's NMC datapath: each
-//! compiled executable is one "datapath configuration" the interconnect
-//! controller would set up (§IV-A), selected by operator name.
+//! The artifact *manifest* (operator name, input shapes, modulus) is the
+//! contract between the Python compile layer (`python/compile/aot.py`) and
+//! this runtime: each entry is one "datapath configuration" the paper's
+//! interconnect controller would set up (§IV-A), selected by operator
+//! name. Two backends implement that contract:
+//!
+//! * [`ReferenceBackend`] — pure Rust, always available. Executes every
+//!   manifest op (batched NTT fwd/inv, external product, the R1/R2
+//!   pipeline routines, automorphism, pointwise mul/add) bit-for-bit via
+//!   [`crate::math::ntt`] / [`crate::math::modops`], so the cross-layer
+//!   seam is exercised hermetically on every `cargo test`.
+//! * `PjrtBackend` (feature `pjrt`) — loads the HLO-text artifacts that
+//!   `make artifacts` produced and executes them on the PJRT CPU client;
+//!   Python never runs at request time. Requires vendoring the `xla`
+//!   crate (see rust/Cargo.toml).
+//!
+//! Future GPU/Pallas backends slot in behind the same trait.
 
-use anyhow::{anyhow, Context, Result};
+use crate::math::modops::{mod_add, mod_mul, ntt_primes};
+use crate::math::ntt::NttTable;
+use crate::util::error::{Context, Error, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Parsed `artifacts/manifest.txt` entry.
 #[derive(Debug, Clone)]
@@ -31,7 +46,10 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
         }
         let parts: Vec<&str> = line.split_whitespace().collect();
         if parts.len() != 5 {
-            return Err(anyhow!("manifest line {} malformed: {line}", i + 1));
+            return Err(Error::new(format!(
+                "manifest line {} malformed: {line}",
+                i + 1
+            )));
         }
         let shapes = parts[3]
             .split(';')
@@ -41,10 +59,19 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
                     .collect::<Result<Vec<_>>>()
             })
             .collect::<Result<Vec<_>>>()?;
+        let num_inputs: usize = parts[2].parse()?;
+        if num_inputs != shapes.len() {
+            return Err(Error::new(format!(
+                "manifest line {}: input count {} does not match {} shapes",
+                i + 1,
+                num_inputs,
+                shapes.len()
+            )));
+        }
         out.push(ArtifactMeta {
             name: parts[0].to_string(),
             file: parts[1].to_string(),
-            num_inputs: parts[2].parse()?,
+            num_inputs,
             shapes,
             modulus: parts[4].parse()?,
         });
@@ -52,32 +79,350 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
     Ok(out)
 }
 
-/// PJRT-backed executor with a compiled-executable cache.
-pub struct Runtime {
+/// The manifest `python/compile/aot.py::artifact_registry()` emits,
+/// constructed in-process so the hermetic build needs no artifacts on
+/// disk. Shapes follow the functional TFHE parameter sets: N ∈ {256,
+/// 1024}, l = 7 gadget levels → 14 RGSW rows; q is the same 31-bit NTT
+/// prime both layers scan for (`ntt_primes` ↔ `common.ntt_prime`).
+pub fn builtin_manifest() -> Vec<ArtifactMeta> {
+    let rows = 14usize;
+    let mut out = Vec::new();
+    for n in [256usize, 1024] {
+        let q = ntt_primes(31, 2 * n as u64, 1)[0];
+        let mut push = |name: String, shapes: Vec<Vec<usize>>| {
+            out.push(ArtifactMeta {
+                file: format!("{name}.hlo.txt"),
+                num_inputs: shapes.len(),
+                name,
+                shapes,
+                modulus: q,
+            });
+        };
+        let batch = vec![rows, n];
+        let tw = vec![n];
+        let ninv = vec![1];
+        push(format!("ntt_fwd_n{n}"), vec![batch.clone(), tw.clone()]);
+        push(
+            format!("ntt_inv_n{n}"),
+            vec![vec![2, n], tw.clone(), ninv.clone()],
+        );
+        push(
+            format!("external_product_n{n}"),
+            vec![
+                batch.clone(),
+                batch.clone(),
+                batch.clone(),
+                tw.clone(),
+                tw.clone(),
+                ninv.clone(),
+            ],
+        );
+        push(
+            format!("routine1_n{n}"),
+            vec![batch.clone(), batch.clone(), batch.clone(), tw.clone()],
+        );
+        push(
+            format!("routine2_n{n}"),
+            vec![batch.clone(), batch.clone(), batch.clone()],
+        );
+        push(format!("automorph_n{n}"), vec![batch.clone(), tw.clone()]);
+        push(
+            format!("pointwise_mul_n{n}"),
+            vec![batch.clone(), batch.clone()],
+        );
+        push(format!("pointwise_add_n{n}"), vec![batch.clone(), batch]);
+    }
+    out
+}
+
+/// An execution engine for manifest artifacts. Implementations receive
+/// pre-validated inputs (arity and element counts already checked by
+/// [`Runtime::execute_u64`]).
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[Vec<u64>]) -> Result<Vec<u64>>;
+}
+
+/// Pure-Rust execution of the artifact contract via the functional math
+/// library — the hermetic stand-in for the PJRT datapath, bit-identical
+/// because both sides derive twiddles from the same prime scan and
+/// bit-reversed ψ-power layout.
+#[derive(Default)]
+pub struct ReferenceBackend {
+    tables: Mutex<HashMap<(usize, u64), Arc<NttTable>>>,
+}
+
+impl ReferenceBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn table(&self, n: usize, q: u64) -> Arc<NttTable> {
+        let mut cache = self.tables.lock().unwrap();
+        cache
+            .entry((n, q))
+            .or_insert_with(|| Arc::new(NttTable::new(n, q)))
+            .clone()
+    }
+
+    /// The artifact contract says twiddle tables are *runtime inputs*
+    /// generated by the caller from the same (n, q); reject divergent
+    /// tables instead of silently using ours.
+    fn check_tables(name: &str, what: &str, got: &[u64], expect: &[u64]) -> Result<()> {
+        if got != expect {
+            return Err(Error::new(format!(
+                "{name}: {what} table does not match the canonical NttTable layout"
+            )));
+        }
+        Ok(())
+    }
+
+    /// The manifest's declared arity must match what this op consumes —
+    /// a divergent on-disk manifest becomes an Err, not an index panic.
+    fn check_arity(name: &str, inputs: &[Vec<u64>], want: usize) -> Result<()> {
+        if inputs.len() != want {
+            return Err(Error::new(format!(
+                "{name}: reference backend expects {want} inputs, manifest declares {}",
+                inputs.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[Vec<u64>]) -> Result<Vec<u64>> {
+        let name = meta.name.as_str();
+        let q = meta.modulus;
+        if meta.shapes[0].len() != 2 {
+            return Err(Error::new(format!(
+                "{name}: reference backend expects a (rows, N) first input, got shape {:?}",
+                meta.shapes[0]
+            )));
+        }
+        let rows = meta.shapes[0][0];
+        let n = meta.shapes[0][1];
+        if name.starts_with("ntt_fwd") {
+            Self::check_arity(name, inputs, 2)?;
+            let t = self.table(n, q);
+            Self::check_tables(name, "forward twiddle", &inputs[1], t.forward_twiddles())?;
+            let mut out: Vec<u64> = inputs[0].iter().map(|&v| v % q).collect();
+            for r in 0..rows {
+                t.forward(&mut out[r * n..(r + 1) * n]);
+            }
+            Ok(out)
+        } else if name.starts_with("ntt_inv") {
+            Self::check_arity(name, inputs, 3)?;
+            let t = self.table(n, q);
+            Self::check_tables(name, "inverse twiddle", &inputs[1], t.inverse_twiddles())?;
+            Self::check_tables(name, "n_inv", &inputs[2], &[t.n_inv()])?;
+            let mut out: Vec<u64> = inputs[0].iter().map(|&v| v % q).collect();
+            for r in 0..rows {
+                t.inverse(&mut out[r * n..(r + 1) * n]);
+            }
+            Ok(out)
+        } else if name.starts_with("external_product") {
+            Self::check_arity(name, inputs, 6)?;
+            let t = self.table(n, q);
+            Self::check_tables(name, "forward twiddle", &inputs[3], t.forward_twiddles())?;
+            Self::check_tables(name, "inverse twiddle", &inputs[4], t.inverse_twiddles())?;
+            Self::check_tables(name, "n_inv", &inputs[5], &[t.n_inv()])?;
+            let (digits, rows_b, rows_a) = (&inputs[0], &inputs[1], &inputs[2]);
+            let mut acc_b = vec![0u64; n];
+            let mut acc_a = vec![0u64; n];
+            for j in 0..rows {
+                let mut d: Vec<u64> = digits[j * n..(j + 1) * n].iter().map(|&v| v % q).collect();
+                t.forward(&mut d);
+                for k in 0..n {
+                    acc_b[k] = mod_add(acc_b[k], mod_mul(d[k], rows_b[j * n + k] % q, q), q);
+                    acc_a[k] = mod_add(acc_a[k], mod_mul(d[k], rows_a[j * n + k] % q, q), q);
+                }
+            }
+            t.inverse(&mut acc_b);
+            t.inverse(&mut acc_a);
+            acc_b.extend_from_slice(&acc_a);
+            Ok(acc_b)
+        } else if name.starts_with("routine1") {
+            // R1: out = NTT(x) ∘ key + acc (Fig. 5 pipeline R1)
+            Self::check_arity(name, inputs, 4)?;
+            let t = self.table(n, q);
+            Self::check_tables(name, "forward twiddle", &inputs[3], t.forward_twiddles())?;
+            let (x, key, acc) = (&inputs[0], &inputs[1], &inputs[2]);
+            let mut out = vec![0u64; rows * n];
+            for r in 0..rows {
+                let mut xr: Vec<u64> = x[r * n..(r + 1) * n].iter().map(|&v| v % q).collect();
+                t.forward(&mut xr);
+                for k in 0..n {
+                    let i = r * n + k;
+                    out[i] = mod_add(mod_mul(xr[k], key[i] % q, q), acc[i] % q, q);
+                }
+            }
+            Ok(out)
+        } else if name.starts_with("routine2") {
+            // R2: out = a ∘ b + c (NTT-independent MMult–MAdd traffic)
+            Self::check_arity(name, inputs, 3)?;
+            let (a, b, c) = (&inputs[0], &inputs[1], &inputs[2]);
+            Ok((0..rows * n)
+                .map(|i| mod_add(mod_mul(a[i] % q, b[i] % q, q), c[i] % q, q))
+                .collect())
+        } else if name.starts_with("automorph") {
+            // eval-domain Galois permutation: out[r][k] = x[r][map[k]]
+            Self::check_arity(name, inputs, 2)?;
+            let (x, map) = (&inputs[0], &inputs[1]);
+            let mut out = vec![0u64; rows * n];
+            for (k, &src) in map.iter().enumerate() {
+                let src = src as usize;
+                if src >= n {
+                    return Err(Error::new(format!(
+                        "{name}: permutation index {src} out of range (n={n})"
+                    )));
+                }
+                for r in 0..rows {
+                    out[r * n + k] = x[r * n + src];
+                }
+            }
+            Ok(out)
+        } else if name.starts_with("pointwise_mul") {
+            Self::check_arity(name, inputs, 2)?;
+            let (a, b) = (&inputs[0], &inputs[1]);
+            Ok((0..rows * n)
+                .map(|i| mod_mul(a[i] % q, b[i] % q, q))
+                .collect())
+        } else if name.starts_with("pointwise_add") {
+            Self::check_arity(name, inputs, 2)?;
+            let (a, b) = (&inputs[0], &inputs[1]);
+            Ok((0..rows * n)
+                .map(|i| mod_add(a[i] % q, b[i] % q, q))
+                .collect())
+        } else {
+            Err(Error::new(format!(
+                "reference backend has no implementation for artifact `{name}`"
+            )))
+        }
+    }
+}
+
+/// PJRT execution of the on-disk HLO-text artifacts. Compiles lazily per
+/// artifact; the client handles are !Send, so the Runtime stays on the
+/// leader thread (see coordinator::server).
+#[cfg(feature = "pjrt")]
+pub struct PjrtBackend {
     client: xla::PjRtClient,
     dir: PathBuf,
-    pub manifest: HashMap<String, ArtifactMeta>,
     cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
-impl Runtime {
-    /// Load the manifest from an artifacts directory and create the CPU
-    /// PJRT client. Compilation is lazy per artifact.
-    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let text = std::fs::read_to_string(dir.join("manifest.txt"))
-            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
-        let manifest = parse_manifest(&text)?
-            .into_iter()
-            .map(|m| (m.name.clone(), m))
-            .collect();
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
-        Ok(Runtime {
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    pub fn new(dir: PathBuf) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| Error::new(format!("pjrt: {e}")))?;
+        Ok(PjrtBackend {
             client,
             dir,
-            manifest,
             cache: Mutex::new(HashMap::new()),
         })
+    }
+
+    fn compile(&self, meta: &ArtifactMeta) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(&meta.name) {
+            return Ok(());
+        }
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::new("bad path"))?,
+        )
+        .map_err(|e| Error::new(format!("parse {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::new(format!("compile {}: {e}", meta.name)))?;
+        cache.insert(meta.name.clone(), exe);
+        Ok(())
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[Vec<u64>]) -> Result<Vec<u64>> {
+        self.compile(meta)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            let dims: Vec<i64> = meta.shapes[i].iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| Error::new(format!("reshape: {e}")))?;
+            literals.push(lit);
+        }
+        let cache = self.cache.lock().unwrap();
+        let exe = &cache[&meta.name];
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::new(format!("execute {}: {e}", meta.name)))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::new(format!("fetch: {e}")))?;
+        // aot.py lowers with return_tuple=True → single-element tuple
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| Error::new(format!("tuple: {e}")))?;
+        out.to_vec::<u64>()
+            .map_err(|e| Error::new(format!("to_vec: {e}")))
+    }
+}
+
+/// Backend-agnostic executor: manifest + validation + dispatch.
+pub struct Runtime {
+    pub manifest: HashMap<String, ArtifactMeta>,
+    backend: Box<dyn Backend>,
+}
+
+impl Runtime {
+    /// With the `pjrt` feature, load and execute on-disk artifacts when a
+    /// manifest exists in `dir`; in every other case return
+    /// [`Runtime::reference`]. The hermetic build deliberately ignores
+    /// on-disk manifests — the reference backend cannot execute HLO
+    /// files, and a stale manifest would only narrow the builtin op set.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        #[cfg(feature = "pjrt")]
+        {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest_path = dir.join("manifest.txt");
+            if manifest_path.exists() {
+                let text = std::fs::read_to_string(&manifest_path)
+                    .with_context(|| format!("reading manifest in {dir:?}"))?;
+                let metas = parse_manifest(&text)?;
+                return Ok(Self::from_parts(metas, Box::new(PjrtBackend::new(dir)?)));
+            }
+        }
+        let _ = dir;
+        Ok(Self::reference())
+    }
+
+    /// The hermetic runtime: built-in manifest on the pure-Rust backend.
+    pub fn reference() -> Self {
+        Self::from_parts(builtin_manifest(), Box::new(ReferenceBackend::new()))
+    }
+
+    /// Assemble from explicit parts (tests, future backends).
+    pub fn from_parts(metas: Vec<ArtifactMeta>, backend: Box<dyn Backend>) -> Self {
+        Runtime {
+            manifest: metas.into_iter().map(|m| (m.name.clone(), m)).collect(),
+            backend,
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Locate the default artifacts directory (works from repo root and
@@ -92,67 +437,30 @@ impl Runtime {
         PathBuf::from("artifacts")
     }
 
-    fn compile(&self, name: &str) -> Result<()> {
-        let mut cache = self.cache.lock().unwrap();
-        if cache.contains_key(name) {
-            return Ok(());
-        }
+    /// Execute an artifact on u64 tensors (flattened row-major). Returns
+    /// the flattened u64 output.
+    pub fn execute_u64(&self, name: &str, inputs: &[Vec<u64>]) -> Result<Vec<u64>> {
         let meta = self
             .manifest
             .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
-        let path = self.dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e}"))?;
-        cache.insert(name.to_string(), exe);
-        Ok(())
-    }
-
-    /// Execute an artifact on u64 tensors (flattened row-major). Returns
-    /// the flattened u64 output of the (single-tuple) result.
-    pub fn execute_u64(&self, name: &str, inputs: &[Vec<u64>]) -> Result<Vec<u64>> {
-        self.compile(name)?;
-        let meta = &self.manifest[name];
+            .ok_or_else(|| Error::new(format!("unknown artifact `{name}`")))?;
         if inputs.len() != meta.num_inputs {
-            return Err(anyhow!(
+            return Err(Error::new(format!(
                 "{name}: expected {} inputs, got {}",
                 meta.num_inputs,
                 inputs.len()
-            ));
+            )));
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (i, data) in inputs.iter().enumerate() {
-            let dims: Vec<i64> = meta.shapes[i].iter().map(|&d| d as i64).collect();
             let expect: usize = meta.shapes[i].iter().product();
             if data.len() != expect {
-                return Err(anyhow!(
+                return Err(Error::new(format!(
                     "{name} input {i}: expected {expect} elements, got {}",
                     data.len()
-                ));
+                )));
             }
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .map_err(|e| anyhow!("reshape: {e}"))?;
-            literals.push(lit);
         }
-        let cache = self.cache.lock().unwrap();
-        let exe = &cache[name];
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch: {e}"))?;
-        // aot.py lowers with return_tuple=True → single-element tuple
-        let out = lit.to_tuple1().map_err(|e| anyhow!("tuple: {e}"))?;
-        out.to_vec::<u64>().map_err(|e| anyhow!("to_vec: {e}"))
+        self.backend.execute_u64(meta, inputs)
     }
 
     pub fn artifact_names(&self) -> Vec<String> {
@@ -165,6 +473,7 @@ impl Runtime {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::math::sampler::Rng;
 
     #[test]
     fn manifest_parsing() {
@@ -182,5 +491,91 @@ mod tests {
     fn malformed_manifest_rejected() {
         assert!(parse_manifest("too few fields\n").is_err());
         assert!(parse_manifest("a b c 1x2 5\n").is_err()); // non-numeric count
+        // declared input count must match the shape list
+        assert!(parse_manifest("a f 2 14x256 7\n").is_err());
+    }
+
+    #[test]
+    fn reference_rejects_wrong_arity_manifest() {
+        // a hand-built meta that under-declares inputs must Err, not panic
+        let meta = ArtifactMeta {
+            name: "ntt_fwd_n8".into(),
+            file: "x".into(),
+            num_inputs: 1,
+            shapes: vec![vec![2, 8]],
+            modulus: ntt_primes(31, 16, 1)[0],
+        };
+        let rt = Runtime::from_parts(vec![meta], Box::new(ReferenceBackend::new()));
+        let err = rt.execute_u64("ntt_fwd_n8", &[vec![0u64; 16]]);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("inputs"));
+    }
+
+    #[test]
+    fn builtin_manifest_mirrors_aot_registry() {
+        let names: Vec<String> = builtin_manifest().iter().map(|m| m.name.clone()).collect();
+        for n in [256, 1024] {
+            for kind in [
+                "ntt_fwd",
+                "ntt_inv",
+                "external_product",
+                "routine1",
+                "routine2",
+                "automorph",
+                "pointwise_mul",
+                "pointwise_add",
+            ] {
+                assert!(
+                    names.contains(&format!("{kind}_n{n}")),
+                    "missing {kind}_n{n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reference_runtime_always_available() {
+        let rt = Runtime::reference();
+        assert_eq!(rt.backend_name(), "reference");
+        assert!(rt.artifact_names().len() >= 16);
+        // new() on a directory without artifacts falls back to reference
+        let rt2 = Runtime::new("definitely/not/a/real/dir").unwrap();
+        assert!(rt2.manifest.contains_key("routine2_n256"));
+    }
+
+    #[test]
+    fn reference_routine2_matches_scalar_model() {
+        let rt = Runtime::reference();
+        let q = rt.manifest["routine2_n256"].modulus;
+        let mut rng = Rng::seeded(7);
+        let gen = |rng: &mut Rng| -> Vec<u64> { (0..14 * 256).map(|_| rng.uniform(q)).collect() };
+        let (a, b, c) = (gen(&mut rng), gen(&mut rng), gen(&mut rng));
+        let out = rt
+            .execute_u64("routine2_n256", &[a.clone(), b.clone(), c.clone()])
+            .unwrap();
+        for k in 0..14 * 256 {
+            assert_eq!(out[k], mod_add(mod_mul(a[k], b[k], q), c[k], q));
+        }
+    }
+
+    #[test]
+    fn reference_rejects_divergent_twiddles() {
+        let rt = Runtime::reference();
+        let n = 256;
+        let bad_tw = vec![1u64; n];
+        let polys = vec![0u64; 14 * n];
+        let err = rt.execute_u64("ntt_fwd_n256", &[polys, bad_tw]);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("twiddle"));
+    }
+
+    #[test]
+    fn input_validation_is_backend_independent() {
+        let rt = Runtime::reference();
+        assert!(rt.execute_u64("no_such_artifact", &[vec![]]).is_err());
+        assert!(rt
+            .execute_u64("ntt_fwd_n256", &[vec![1u64; 17], vec![1u64; 17]])
+            .is_err());
+        assert!(rt.execute_u64("ntt_fwd_n256", &[vec![0u64; 14 * 256]]).is_err());
     }
 }

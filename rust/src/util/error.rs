@@ -1,0 +1,135 @@
+//! `anyhow`-lite: a string-carrying error type with context chaining (the
+//! vendor set has no `anyhow`). Used by the fallible edges of the stack —
+//! config parsing, manifest loading, artifact execution — where the caller
+//! wants a readable message rather than a typed error tree.
+
+use std::fmt;
+
+/// A boxed-free dynamic error: one message, optionally a chain of context
+/// frames prepended via [`Context`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+
+    /// Prepend a context frame: `context: original`.
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::new(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Error::new(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Error::new(e.to_string())
+    }
+}
+
+impl From<super::toml_lite::ParseError> for Error {
+    fn from(e: super::toml_lite::ParseError) -> Self {
+        Error::new(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// `anyhow::Context`-style extension: attach a lazily-built context frame
+/// to a `Result` or upgrade an `Option` into a `Result`.
+pub trait Context<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::new(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.ok_or_else(|| Error::new(f().to_string()))
+    }
+}
+
+/// `anyhow!`-style one-liner.
+#[macro_export]
+macro_rules! app_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::new(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_chains() {
+        let e = Error::new("file not found").context("reading manifest");
+        assert_eq!(e.to_string(), "reading manifest: file not found");
+    }
+
+    #[test]
+    fn result_and_option_ext() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let e = r.context("opening config").unwrap_err();
+        assert!(e.to_string().starts_with("opening config: "));
+        let o: Option<u32> = None;
+        assert_eq!(
+            o.context("missing key").unwrap_err().to_string(),
+            "missing key"
+        );
+        let some: Option<u32> = Some(7);
+        assert_eq!(some.with_context(|| "never built").unwrap(), 7);
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = app_err!("bad value {} at line {}", 42, 7);
+        assert_eq!(e.to_string(), "bad value 42 at line 7");
+    }
+
+    #[test]
+    fn parse_errors_convert() {
+        let e: Error = "abc".parse::<u64>().unwrap_err().into();
+        assert!(!e.to_string().is_empty());
+    }
+}

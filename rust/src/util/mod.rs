@@ -1,10 +1,11 @@
 //! In-repo replacements for crates unavailable in the offline vendor set:
 //! property testing (`proptest_lite`), benchmarking (`benchkit`), config
-//! parsing (`toml_lite`), CLI parsing (`cli`) and structured output
-//! (`jsonw`).
+//! parsing (`toml_lite`), CLI parsing (`cli`), structured output
+//! (`jsonw`) and error plumbing (`error`, the `anyhow` stand-in).
 
 pub mod benchkit;
 pub mod cli;
+pub mod error;
 pub mod jsonw;
 pub mod proptest_lite;
 pub mod toml_lite;

@@ -1,0 +1,109 @@
+//! Golden-vector regression tests for the negacyclic NTT.
+//!
+//! Fixed-seed inputs for N ∈ {256, 1024}, with FNV-1a digests of the
+//! input polynomial and its forward transform committed below. The
+//! digests are cross-checked against the Python compile layer: regenerate
+//! (and re-verify against the `python/compile/kernels/ref.py` schoolbook
+//! oracle) with
+//!
+//!     python python/tools/gen_ntt_golden.py
+//!
+//! run from the repository root, then paste the printed rows into
+//! `GOLDEN`. A digest change means the twiddle layout, prime scan, or
+//! sampler stream changed — all three are cross-layer contracts (the AOT
+//! artifacts and the hardware-model traces assume them), so a change here
+//! must be deliberate and coordinated, never incidental.
+
+use apache_fhe::math::modops::ntt_primes;
+use apache_fhe::math::ntt::NttTable;
+use apache_fhe::math::sampler::Rng;
+
+/// (n, seed, q, input_digest, output_digest) — from gen_ntt_golden.py.
+const GOLDEN: [(usize, u64, u64, u64, u64); 2] = [
+    (
+        256,
+        0x5EED0100,
+        2147483137,
+        0x6427D1F5648D740E,
+        0xC9A07C256ACDD097,
+    ),
+    (
+        1024,
+        0x5EED0400,
+        2147473409,
+        0x910A028357469D4C,
+        0x285FC57178C9830F,
+    ),
+];
+
+/// FNV-1a over the little-endian u64 byte stream (mirrored in
+/// gen_ntt_golden.py).
+fn fnv1a64(vals: &[u64]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for v in vals {
+        for byte in v.to_le_bytes() {
+            h = (h ^ byte as u64).wrapping_mul(0x1_0000_0001_B3);
+        }
+    }
+    h
+}
+
+#[test]
+fn golden_primes_match_python_prime_scan() {
+    for (n, _seed, q, _in, _out) in GOLDEN {
+        assert_eq!(
+            ntt_primes(31, 2 * n as u64, 1)[0],
+            q,
+            "prime scan diverged from common.ntt_prime at N={n}"
+        );
+    }
+}
+
+#[test]
+fn golden_input_stream_is_stable() {
+    // Guards the sampler stream independently of the NTT, so a digest
+    // mismatch can be attributed to the right layer.
+    for (n, seed, q, input_digest, _out) in GOLDEN {
+        let mut rng = Rng::seeded(seed);
+        let poly = rng.uniform_poly(n, q);
+        assert_eq!(
+            fnv1a64(&poly),
+            input_digest,
+            "xoshiro/uniform stream changed at N={n} seed={seed:#X}"
+        );
+    }
+}
+
+#[test]
+fn golden_forward_ntt_digests() {
+    for (n, seed, q, input_digest, output_digest) in GOLDEN {
+        let table = NttTable::new(n, q);
+        let mut rng = Rng::seeded(seed);
+        let mut poly = rng.uniform_poly(n, q);
+        assert_eq!(fnv1a64(&poly), input_digest, "input stream at N={n}");
+        table.forward(&mut poly);
+        assert_eq!(
+            fnv1a64(&poly),
+            output_digest,
+            "forward NTT output changed at N={n} — twiddle layout or \
+             butterfly order diverged from the committed golden vector"
+        );
+        // and the inverse must take us back to the digested input
+        table.inverse(&mut poly);
+        assert_eq!(fnv1a64(&poly), input_digest, "inverse(forward) at N={n}");
+    }
+}
+
+#[test]
+fn fnv_digest_is_the_documented_function() {
+    // Pin the digest function itself (empty + one-word vectors) so the
+    // Python mirror cannot silently drift.
+    assert_eq!(fnv1a64(&[]), 0xCBF2_9CE4_8422_2325);
+    assert_eq!(fnv1a64(&[0]), {
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        for _ in 0..8 {
+            h = h.wrapping_mul(0x1_0000_0001_B3);
+        }
+        h
+    });
+}

@@ -175,3 +175,109 @@ fn prop_mod_sub_matches_signed_arithmetic() {
         assert_eq!(s, expect);
     });
 }
+
+// ---- cross-scheme coverage: CKKS and TFHE through their full
+// encrypt→compute→decrypt pipelines ----
+
+fn ckks_max_err(
+    a: &[apache_fhe::ckks::encoding::C64],
+    b: &[apache_fhe::ckks::encoding::C64],
+) -> f64 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| x.sub(*y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn prop_ckks_encode_decode_roundtrip_within_noise_bound() {
+    use apache_fhe::ckks::ciphertext::{decrypt, encrypt};
+    use apache_fhe::ckks::encoding::C64;
+    use apache_fhe::ckks::keys::CkksSecretKey;
+    use apache_fhe::ckks::CkksCtx;
+    use apache_fhe::params::CkksParams;
+    let ctx = CkksCtx::new(CkksParams::tiny());
+    run_prop("ckks-roundtrip", 4, |rng, _| {
+        let sk = CkksSecretKey::generate(&ctx, rng);
+        let slots = ctx.params.num_slots();
+        let z: Vec<C64> = (0..slots)
+            .map(|_| C64::new(rng.next_f64() - 0.5, rng.next_f64() - 0.5))
+            .collect();
+        let ct = encrypt(&ctx, &sk, &z, ctx.params.scale, ctx.max_level(), rng);
+        let back = decrypt(&ctx, &sk, &ct);
+        let err = ckks_max_err(&back, &z);
+        assert!(err < 1e-4, "roundtrip err {err}");
+    });
+}
+
+#[test]
+fn prop_ckks_mul_rescale_on_random_slots() {
+    use apache_fhe::ckks::ciphertext::{decrypt, encrypt};
+    use apache_fhe::ckks::encoding::C64;
+    use apache_fhe::ckks::keys::CkksKeys;
+    use apache_fhe::ckks::{ops, CkksCtx};
+    use apache_fhe::params::CkksParams;
+    let ctx = CkksCtx::new(CkksParams::tiny());
+    let mut keyrng = apache_fhe::math::sampler::Rng::seeded(0xC0FFEE);
+    let keys = CkksKeys::generate(&ctx, &[], false, &mut keyrng);
+    run_prop("ckks-mul-rescale", 3, |rng, _| {
+        let slots = ctx.params.num_slots();
+        let z1: Vec<C64> = (0..slots)
+            .map(|_| C64::new(rng.next_f64() - 0.5, 0.5 * rng.next_f64()))
+            .collect();
+        let z2: Vec<C64> = (0..slots)
+            .map(|_| C64::new(0.8 * rng.next_f64() - 0.4, rng.next_f64() - 0.5))
+            .collect();
+        let level = ctx.max_level();
+        let c1 = encrypt(&ctx, &keys.sk, &z1, ctx.params.scale, level, rng);
+        let c2 = encrypt(&ctx, &keys.sk, &z2, ctx.params.scale, level, rng);
+        let prod = ops::rescale(&ctx, &ops::mul(&ctx, &keys, &c1, &c2));
+        assert_eq!(prod.level, level - 1, "rescale must drop one level");
+        let got = decrypt(&ctx, &keys.sk, &prod);
+        let expect: Vec<C64> = z1.iter().zip(z2.iter()).map(|(a, b)| a.mul(*b)).collect();
+        let err = ckks_max_err(&got, &expect);
+        assert!(err < 1e-2, "CMult err {err}");
+    });
+}
+
+#[test]
+fn prop_tfhe_gate_truth_tables_via_bootstrap() {
+    use apache_fhe::params::TfheParams;
+    use apache_fhe::tfhe::bootstrap::BootstrapKey;
+    use apache_fhe::tfhe::gates::{
+        decrypt_bool, encrypt_bool, hom_and, hom_nand, hom_or, hom_xor,
+    };
+    use apache_fhe::tfhe::lwe::{LweCiphertext, LweSecretKey};
+    use apache_fhe::tfhe::rlwe::RlweSecretKey;
+    use apache_fhe::tfhe::TfheCtx;
+    type GateFn = fn(
+        &std::sync::Arc<TfheCtx>,
+        &BootstrapKey,
+        &LweCiphertext,
+        &LweCiphertext,
+    ) -> LweCiphertext;
+    let ctx = TfheCtx::new(TfheParams::tiny());
+    run_prop("tfhe-gate-tables", 2, |rng, _| {
+        let lwe_key = LweSecretKey::generate(&ctx, rng);
+        let rlwe_key = RlweSecretKey::generate(&ctx, rng);
+        let bk = BootstrapKey::generate(&ctx, &lwe_key, &rlwe_key, rng);
+        let gates: [(&str, GateFn, fn(bool, bool) -> bool); 4] = [
+            ("AND", hom_and, |a, b| a && b),
+            ("OR", hom_or, |a, b| a || b),
+            ("XOR", hom_xor, |a, b| a ^ b),
+            ("NAND", hom_nand, |a, b| !(a && b)),
+        ];
+        for (name, gate, model) in gates {
+            for (va, vb) in [(false, false), (false, true), (true, false), (true, true)] {
+                let ca = encrypt_bool(&ctx, &lwe_key, va, rng);
+                let cb = encrypt_bool(&ctx, &lwe_key, vb, rng);
+                let out = gate(&ctx, &bk, &ca, &cb);
+                assert_eq!(
+                    decrypt_bool(&lwe_key, &out),
+                    model(va, vb),
+                    "{name}({va},{vb})"
+                );
+            }
+        }
+    });
+}

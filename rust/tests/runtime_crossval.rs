@@ -1,26 +1,42 @@
-//! Cross-validation: the AOT JAX/Pallas artifacts must agree bit-for-bit
-//! with the Rust functional library on the same primes and twiddle layout.
-//! This is the integration seam of the whole three-layer architecture.
+//! Cross-validation: the runtime backend (PJRT artifacts when present,
+//! the pure-Rust ReferenceBackend otherwise) must agree bit-for-bit with
+//! the Rust functional library on the same primes and twiddle layout.
+//! This is the integration seam of the whole three-layer architecture,
+//! and it runs on every plain `cargo test` — no artifacts required.
 
+use apache_fhe::math::automorph::galois_eval_map;
 use apache_fhe::math::modops::ntt_primes;
 use apache_fhe::math::ntt::NttTable;
 use apache_fhe::math::sampler::Rng;
 use apache_fhe::runtime::Runtime;
 
-fn runtime() -> Option<Runtime> {
+/// On-disk artifacts when built with `--features pjrt` after
+/// `make artifacts`; the hermetic reference runtime otherwise. Never
+/// skips.
+fn runtime() -> Runtime {
     let dir = Runtime::default_dir();
     match Runtime::new(&dir) {
-        Ok(r) => Some(r),
+        Ok(rt) => rt,
         Err(e) => {
-            eprintln!("skipping runtime tests ({e}); run `make artifacts`");
-            None
+            eprintln!("on-disk artifacts unusable ({e}); using reference backend");
+            Runtime::reference()
         }
     }
 }
 
 #[test]
+fn runtime_is_always_available() {
+    let rt = runtime();
+    assert!(
+        !rt.artifact_names().is_empty(),
+        "backend {} must expose artifacts",
+        rt.backend_name()
+    );
+}
+
+#[test]
 fn artifact_prime_matches_rust_prime() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     for (n, name) in [(256usize, "ntt_fwd_n256"), (1024, "ntt_fwd_n1024")] {
         let q_rust = ntt_primes(31, 2 * n as u64, 1)[0];
         assert_eq!(rt.manifest[name].modulus, q_rust, "prime mismatch at N={n}");
@@ -29,7 +45,7 @@ fn artifact_prime_matches_rust_prime() {
 
 #[test]
 fn pallas_ntt_matches_rust_ntt() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let n = 256usize;
     let q = ntt_primes(31, 2 * n as u64, 1)[0];
     let table = NttTable::new(n, q);
@@ -49,7 +65,7 @@ fn pallas_ntt_matches_rust_ntt() {
 
 #[test]
 fn pallas_intt_matches_rust_intt() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let n = 256usize;
     let q = ntt_primes(31, 2 * n as u64, 1)[0];
     let table = NttTable::new(n, q);
@@ -70,37 +86,66 @@ fn pallas_intt_matches_rust_intt() {
 }
 
 #[test]
+fn ntt_roundtrip_through_runtime_at_n1024() {
+    // fwd through the runtime, inverse through the library — exercises
+    // the larger ring end of the manifest.
+    let rt = runtime();
+    let n = 1024usize;
+    let q = ntt_primes(31, 2 * n as u64, 1)[0];
+    let table = NttTable::new(n, q);
+    let mut rng = Rng::seeded(46);
+    let polys: Vec<Vec<u64>> = (0..14).map(|_| rng.uniform_poly(n, q)).collect();
+    let flat: Vec<u64> = polys.iter().flatten().copied().collect();
+    let out = rt
+        .execute_u64("ntt_fwd_n1024", &[flat, table.forward_twiddles().to_vec()])
+        .unwrap();
+    for (i, poly) in polys.iter().enumerate() {
+        let mut back = out[i * n..(i + 1) * n].to_vec();
+        table.inverse(&mut back);
+        assert_eq!(&back[..], &poly[..], "poly {i}");
+    }
+}
+
+#[test]
 fn artifact_external_product_matches_rust() {
-    // Full Fig. 9 dataflow: decompose in Rust, heavy math via PJRT artifact,
-    // compare against the pure-Rust external product accumulation.
-    use apache_fhe::math::modops::{mod_add, mod_mul};
-    let Some(rt) = runtime() else { return };
+    // Full Fig. 9 dataflow: decompose in Rust, heavy math via the runtime
+    // backend, compare against the pure-Rust external product accumulation.
+    use apache_fhe::math::modops::mod_add;
+    let rt = runtime();
     let n = 256usize;
     let q = ntt_primes(31, 2 * n as u64, 1)[0];
     let table = NttTable::new(n, q);
     let rows = 14usize;
     let mut rng = Rng::seeded(44);
-    let digits: Vec<Vec<u64>> = (0..rows).map(|_| {
-        (0..n).map(|_| rng.uniform(256)).collect()
-    }).collect();
+    let digits: Vec<Vec<u64>> = (0..rows)
+        .map(|_| (0..n).map(|_| rng.uniform(256)).collect())
+        .collect();
     let rows_b_coeff: Vec<Vec<u64>> = (0..rows).map(|_| rng.uniform_poly(n, q)).collect();
     let rows_a_coeff: Vec<Vec<u64>> = (0..rows).map(|_| rng.uniform_poly(n, q)).collect();
     // eval-domain rows for the artifact
     let to_eval_flat = |polys: &[Vec<u64>]| -> Vec<u64> {
-        polys.iter().flat_map(|p| {
-            let mut e = p.clone();
-            table.forward(&mut e);
-            e
-        }).collect()
+        polys
+            .iter()
+            .flat_map(|p| {
+                let mut e = p.clone();
+                table.forward(&mut e);
+                e
+            })
+            .collect()
     };
-    let out = rt.execute_u64("external_product_n256", &[
-        digits.iter().flatten().copied().collect(),
-        to_eval_flat(&rows_b_coeff),
-        to_eval_flat(&rows_a_coeff),
-        table.forward_twiddles().to_vec(),
-        table.inverse_twiddles().to_vec(),
-        vec![table.n_inv()],
-    ]).unwrap();
+    let out = rt
+        .execute_u64(
+            "external_product_n256",
+            &[
+                digits.iter().flatten().copied().collect(),
+                to_eval_flat(&rows_b_coeff),
+                to_eval_flat(&rows_a_coeff),
+                table.forward_twiddles().to_vec(),
+                table.inverse_twiddles().to_vec(),
+                vec![table.n_inv()],
+            ],
+        )
+        .unwrap();
     // rust-native accumulation
     let mut expect_b = vec![0u64; n];
     let mut expect_a = vec![0u64; n];
@@ -112,15 +157,46 @@ fn artifact_external_product_matches_rust() {
             expect_a[k] = mod_add(expect_a[k], pa[k], q);
         }
     }
-    let _ = mod_mul;
     assert_eq!(&out[..n], &expect_b[..]);
     assert_eq!(&out[n..], &expect_a[..]);
 }
 
 #[test]
+fn routine1_matches_library_composition() {
+    use apache_fhe::math::modops::{mod_add, mod_mul};
+    let rt = runtime();
+    let n = 256usize;
+    let rows = 14usize;
+    let q = rt.manifest["routine1_n256"].modulus;
+    let table = NttTable::new(n, q);
+    let mut rng = Rng::seeded(47);
+    let gen = |rng: &mut Rng| -> Vec<u64> { (0..rows * n).map(|_| rng.uniform(q)).collect() };
+    let (x, key, acc) = (gen(&mut rng), gen(&mut rng), gen(&mut rng));
+    let out = rt
+        .execute_u64(
+            "routine1_n256",
+            &[
+                x.clone(),
+                key.clone(),
+                acc.clone(),
+                table.forward_twiddles().to_vec(),
+            ],
+        )
+        .unwrap();
+    for r in 0..rows {
+        let mut xr = x[r * n..(r + 1) * n].to_vec();
+        table.forward(&mut xr);
+        for k in 0..n {
+            let i = r * n + k;
+            assert_eq!(out[i], mod_add(mod_mul(xr[k], key[i], q), acc[i], q));
+        }
+    }
+}
+
+#[test]
 fn routine2_matches_scalar_model() {
     use apache_fhe::math::modops::{mod_add, mod_mul};
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let n = 256usize;
     let rows = 14usize;
     let q = rt.manifest["routine2_n256"].modulus;
@@ -136,8 +212,59 @@ fn routine2_matches_scalar_model() {
 }
 
 #[test]
+fn automorph_matches_library_permutation() {
+    // Only assert when the manifest carries the automorph artifact (the
+    // reference/builtin manifest always does; pre-existing on-disk
+    // manifests may predate it).
+    let rt = runtime();
+    if !rt.manifest.contains_key("automorph_n256") {
+        eprintln!("manifest has no automorph_n256 (old artifacts); skipping");
+        return;
+    }
+    let n = 256usize;
+    let rows = 14usize;
+    let q = rt.manifest["automorph_n256"].modulus;
+    let mut rng = Rng::seeded(48);
+    let x: Vec<u64> = (0..rows * n).map(|_| rng.uniform(q)).collect();
+    let map = galois_eval_map(n, 5);
+    let map_u64: Vec<u64> = map.iter().map(|&m| m as u64).collect();
+    let out = rt.execute_u64("automorph_n256", &[x.clone(), map_u64]).unwrap();
+    for r in 0..rows {
+        let expect =
+            apache_fhe::math::automorph::apply_eval_map(&x[r * n..(r + 1) * n], &map);
+        assert_eq!(&out[r * n..(r + 1) * n], &expect[..], "row {r}");
+    }
+}
+
+#[test]
+fn pointwise_ops_match_modops() {
+    use apache_fhe::math::modops::{mod_add, mod_mul};
+    let rt = runtime();
+    if !rt.manifest.contains_key("pointwise_mul_n256") {
+        eprintln!("manifest has no pointwise artifacts (old artifacts); skipping");
+        return;
+    }
+    let n = 256usize;
+    let rows = 14usize;
+    let q = rt.manifest["pointwise_mul_n256"].modulus;
+    let mut rng = Rng::seeded(49);
+    let gen = |rng: &mut Rng| -> Vec<u64> { (0..rows * n).map(|_| rng.uniform(q)).collect() };
+    let (a, b) = (gen(&mut rng), gen(&mut rng));
+    let mul = rt
+        .execute_u64("pointwise_mul_n256", &[a.clone(), b.clone()])
+        .unwrap();
+    let add = rt
+        .execute_u64("pointwise_add_n256", &[a.clone(), b.clone()])
+        .unwrap();
+    for k in 0..rows * n {
+        assert_eq!(mul[k], mod_mul(a[k], b[k], q));
+        assert_eq!(add[k], mod_add(a[k], b[k], q));
+    }
+}
+
+#[test]
 fn wrong_input_shape_is_rejected() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let err = rt.execute_u64("ntt_fwd_n256", &[vec![1u64; 17], vec![1u64; 17]]);
     assert!(err.is_err());
     let err2 = rt.execute_u64("no_such_artifact", &[vec![]]);
