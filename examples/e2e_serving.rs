@@ -56,12 +56,13 @@ fn main() {
     let results = coord.serve_batch(reqs);
     let wall = t0.elapsed().as_secs_f64();
 
-    let mut table = Table::new(&["task", "dimm", "ops", "modelled"]);
+    let mut table = Table::new(&["task", "dimm", "ops", "invoked", "modelled"]);
     for r in &results {
         table.row(&[
             r.name.clone(),
             r.dimm.to_string(),
             r.ops.to_string(),
+            r.runtime_invocations.to_string(),
             fmt_duration(r.modelled_s),
         ]);
     }
@@ -89,7 +90,15 @@ fn main() {
     assert_eq!(results.len(), n);
     assert!(
         coord.metrics.counter("runtime.invocations") as usize >= n,
-        "hot path must execute through PJRT artifacts"
+        "hot path must execute through the runtime backend"
     );
+    for r in &results {
+        assert!(
+            r.runtime_error.is_none(),
+            "{}: unexpected runtime error {:?}",
+            r.name,
+            r.runtime_error
+        );
+    }
     println!("\ne2e_serving OK");
 }

@@ -16,11 +16,20 @@ fn main() {
         ("no routine-2", { let mut c = base.clone(); c.routine2 = false; c }),
         ("no dual-32", { let mut c = base.clone(); c.dual32 = false; c }),
         ("no IMC-KS", { let mut c = base.clone(); c.imc_ks = false; c }),
-        ("none (fixed)", { let mut c = base.clone(); c.routine2 = false; c.dual32 = false; c.imc_ks = false; c }),
+        ("none (fixed)", {
+            let mut c = base.clone();
+            c.routine2 = false;
+            c.dual32 = false;
+            c.imc_ks = false;
+            c
+        }),
     ];
     let ops = [FheOp::CMult, FheOp::HomGate, FheOp::CircuitBootstrap, FheOp::PMult];
     let mut t = Table::new(&["variant", "CMult", "HomGate", "CircuitBoot", "PMult"]);
-    let full: Vec<f64> = ops.iter().map(|&op| profile_op(op, &shapes, &base).latency_s(&base)).collect();
+    let full: Vec<f64> = ops
+        .iter()
+        .map(|&op| profile_op(op, &shapes, &base).latency_s(&base))
+        .collect();
     for (name, cfg) in &variants {
         let cells: Vec<String> = ops
             .iter()
@@ -30,7 +39,13 @@ fn main() {
                 format!("{:.2}x", lat / full[i])
             })
             .collect();
-        t.row(&[name.to_string(), cells[0].clone(), cells[1].clone(), cells[2].clone(), cells[3].clone()]);
+        t.row(&[
+            name.to_string(),
+            cells[0].clone(),
+            cells[1].clone(),
+            cells[2].clone(),
+            cells[3].clone(),
+        ]);
     }
     t.print("ablation: latency vs full APACHE (1.00x = full)");
 
@@ -43,7 +58,15 @@ fn main() {
     }
 
     // DIMM scaling on a mixed batch
-    let batch: Vec<Task> = (0..16).map(|i| if i % 2 == 0 { apps::lola_mnist(false) } else { apps::he3db_q6(4096) }).collect();
+    let batch: Vec<Task> = (0..16)
+        .map(|i| {
+            if i % 2 == 0 {
+                apps::lola_mnist(false)
+            } else {
+                apps::he3db_q6(4096)
+            }
+        })
+        .collect();
     let mut s = Table::new(&["DIMMs", "makespan (s)", "scaling"]);
     let base_make = schedule_tasks(&batch, &shapes, &base, 1, 30e9).makespan_s;
     for d in [1usize, 2, 4, 8] {

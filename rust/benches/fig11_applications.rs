@@ -35,7 +35,11 @@ fn main() {
 
     // reproduce the speedup table against the fixed-pipeline baseline
     let fixed = baseline::hbm_fixed_pipeline_config();
-    let mut s = Table::new(&["application", "APACHE xN / fixed-pipeline x1", "paper claim vs best ASIC"]);
+    let mut s = Table::new(&[
+        "application",
+        "APACHE xN / fixed-pipeline x1",
+        "paper claim vs best ASIC",
+    ]);
     let claims = baseline::application_claims();
     for (task, dimms) in &workloads {
         let a = {
@@ -48,7 +52,10 @@ fn main() {
         };
         let claim = claims
             .iter()
-            .find(|(_, bench, _)| task.name.starts_with(&bench.to_lowercase().replace(' ', "-")) || bench.contains("HE3DB") && task.name.starts_with("he3db"))
+            .find(|(_, bench, _)| {
+                task.name.starts_with(&bench.to_lowercase().replace(' ', "-"))
+                    || bench.contains("HE3DB") && task.name.starts_with("he3db")
+            })
             .map(|(b, _, v)| format!("{v:.1}x vs {b}"))
             .unwrap_or_else(|| "-".into());
         s.row(&[task.name.clone(), format!("{:.2}x", f / a), claim]);

@@ -14,7 +14,12 @@ fn main() {
         FheOp::Cmux, FheOp::PubKS, FheOp::PrivKS, FheOp::GateBootstrap,
         FheOp::CircuitBootstrap, FheOp::CkksBootstrap,
     ];
-    let mut t = Table::new(&["operator", "class", "bytes/op (all levels)", "BW to keep pipeline fed"]);
+    let mut t = Table::new(&[
+        "operator",
+        "class",
+        "bytes/op (all levels)",
+        "BW to keep pipeline fed",
+    ]);
     for op in ops {
         let p = profile_op(op, &shapes, &cfg);
         let bytes = p.io_external + p.io_internal + p.io_bank;

@@ -7,7 +7,11 @@ use apache_fhe::hw::DimmConfig;
 use apache_fhe::sched::oplevel::{profile_op, FheOp};
 use apache_fhe::util::benchkit::Table;
 
-fn breakdown(task: &apache_fhe::sched::tasklevel::Task, shapes: &apache_fhe::sched::oplevel::OpShapes, cfg: &DimmConfig) -> (f64, f64) {
+fn breakdown(
+    task: &apache_fhe::sched::tasklevel::Task,
+    shapes: &apache_fhe::sched::oplevel::OpShapes,
+    cfg: &DimmConfig,
+) -> (f64, f64) {
     let mut tfhe = 0.0;
     let mut ckks = 0.0;
     for node in &task.graph.nodes {

@@ -21,7 +21,8 @@ fn main() {
     ];
     for (op, key, class) in rows {
         let stream = emit(op, ck.n as u64, ck.num_q as u64, 2 * tf.decomp_levels as u64, key);
-        let has = |f: &dyn Fn(&MicroOp) -> bool| if stream.iter().any(|m| f(m)) { "Y" } else { "-" };
+        let has =
+            |f: &dyn Fn(&MicroOp) -> bool| if stream.iter().any(|m| f(m)) { "Y" } else { "-" };
         t.row(&[
             format!("{op:?}"),
             has(&|m| matches!(m, MicroOp::Ntt { .. })).into(),

@@ -20,7 +20,14 @@ fn main() {
         ("HomGate-II", FheOp::HomGate), // 110-bit security row: same op, see note
         ("CircuitBoot", FheOp::CircuitBootstrap),
     ];
-    let mut t = Table::new(&["operator", "x2 ops/s", "x4 ops/s", "x8 ops/s", "paper x2", "paper x4"]);
+    let mut t = Table::new(&[
+        "operator",
+        "x2 ops/s",
+        "x4 ops/s",
+        "x8 ops/s",
+        "paper x2",
+        "paper x4",
+    ]);
     let reported = baseline::apache_reported();
     for (name, op) in &ops {
         let p = profile_op(*op, &shapes, &cfg);

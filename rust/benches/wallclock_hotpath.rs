@@ -33,7 +33,11 @@ fn main() {
             table.forward(&mut a);
             std::hint::black_box(&a);
         });
-        t.row(&[format!("NTT N={n}"), apache_fhe::util::benchkit::fmt_duration(st.median), fmt_rate(st.ops_per_sec())]);
+        t.row(&[
+            format!("NTT N={n}"),
+            apache_fhe::util::benchkit::fmt_duration(st.median),
+            fmt_rate(st.ops_per_sec()),
+        ]);
     }
 
     // TFHE external product + gate bootstrap (tiny params)
@@ -41,18 +45,32 @@ fn main() {
     let sk = LweSecretKey::generate(&ctx, &mut rng);
     let zk = RlweSecretKey::generate(&ctx, &mut rng);
     let rgsw = RgswCiphertext::encrypt_bit(&ctx, &zk, 1, ctx.params.rlwe_sigma, &mut rng);
-    let ct = RlweCiphertext::encrypt_phase(&ctx, &zk, &vec![0u64; ctx.n_poly()], ctx.params.rlwe_sigma, &mut rng);
+    let ct = RlweCiphertext::encrypt_phase(
+        &ctx,
+        &zk,
+        &vec![0u64; ctx.n_poly()],
+        ctx.params.rlwe_sigma,
+        &mut rng,
+    );
     let st = bench("external-product", || {
         std::hint::black_box(external_product(&ctx, &rgsw, &ct));
     });
-    t.row(&["TFHE external product (N=256)".into(), apache_fhe::util::benchkit::fmt_duration(st.median), fmt_rate(st.ops_per_sec())]);
+    t.row(&[
+        "TFHE external product (N=256)".into(),
+        apache_fhe::util::benchkit::fmt_duration(st.median),
+        fmt_rate(st.ops_per_sec()),
+    ]);
 
     let bk = BootstrapKey::generate(&ctx, &sk, &zk, &mut rng);
     let c = encrypt_bool(&ctx, &sk, true, &mut rng);
     let st = bench_once("gate-bootstrap", || {
         std::hint::black_box(bootstrap_to_sign(&ctx, &bk, &c, ctx.q() / 8));
     });
-    t.row(&["TFHE gate bootstrap (tiny)".into(), apache_fhe::util::benchkit::fmt_duration(st.median), fmt_rate(st.ops_per_sec())]);
+    t.row(&[
+        "TFHE gate bootstrap (tiny)".into(),
+        apache_fhe::util::benchkit::fmt_duration(st.median),
+        fmt_rate(st.ops_per_sec()),
+    ]);
 
     // CKKS CMult (tiny)
     let cctx = CkksCtx::new(CkksParams::tiny());
@@ -63,7 +81,11 @@ fn main() {
     let st = bench_once("ckks-cmult", || {
         std::hint::black_box(ops::rescale(&cctx, &ops::square(&cctx, &keys, &a)));
     });
-    t.row(&["CKKS CMult+rescale (N=1024, L=4)".into(), apache_fhe::util::benchkit::fmt_duration(st.median), fmt_rate(st.ops_per_sec())]);
+    t.row(&[
+        "CKKS CMult+rescale (N=1024, L=4)".into(),
+        apache_fhe::util::benchkit::fmt_duration(st.median),
+        fmt_rate(st.ops_per_sec()),
+    ]);
 
     // runtime artifact round trip (PJRT when artifacts + feature are
     // present, the hermetic ReferenceBackend otherwise)
@@ -88,7 +110,11 @@ fn main() {
         let st = bench("runtime-external-product", || {
             std::hint::black_box(rt.execute_u64("external_product_n256", &inputs).unwrap());
         });
-        t.row(&[format!("{} external_product_n256", rt.backend_name()), apache_fhe::util::benchkit::fmt_duration(st.median), fmt_rate(st.ops_per_sec())]);
+        t.row(&[
+            format!("{} external_product_n256", rt.backend_name()),
+            apache_fhe::util::benchkit::fmt_duration(st.median),
+            fmt_rate(st.ops_per_sec()),
+        ]);
     }
     t.print("wall-clock hot paths (this machine)");
 }

@@ -242,7 +242,12 @@ pub fn key_switch_core(
 
 /// CMult with relinearization: tensor product then KeySwith of the `c1·c1'`
 /// term. Output scale is the product; callers rescale.
-pub fn mul(ctx: &Arc<CkksCtx>, keys: &CkksKeys, a: &CkksCiphertext, b: &CkksCiphertext) -> CkksCiphertext {
+pub fn mul(
+    ctx: &Arc<CkksCtx>,
+    keys: &CkksKeys,
+    a: &CkksCiphertext,
+    b: &CkksCiphertext,
+) -> CkksCiphertext {
     // Unlike add, multiplication tolerates unequal operand scales —
     // the result scale is simply the product.
     assert_eq!(a.level, b.level, "level mismatch");

@@ -16,6 +16,15 @@ pub struct Metrics {
     inner: Mutex<Inner>,
 }
 
+/// Sorted copy of the observations with NaNs (either sign — 0.0/0.0
+/// yields -NaN on x86_64) dropped: a NaN can neither panic a sort nor
+/// occupy a percentile rank or poison a mean.
+fn sorted_finite(v: &[f64]) -> Vec<f64> {
+    let mut s: Vec<f64> = v.iter().copied().filter(|x| !x.is_nan()).collect();
+    s.sort_by(f64::total_cmp);
+    s
+}
+
 impl Metrics {
     pub fn incr(&self, name: &str, by: u64) {
         let mut g = self.inner.lock().unwrap();
@@ -37,8 +46,10 @@ impl Metrics {
         if v.is_empty() {
             return None;
         }
-        let mut s = v.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = sorted_finite(v);
+        if s.is_empty() {
+            return None;
+        }
         let idx = ((s.len() - 1) as f64 * p).round() as usize;
         Some(s[idx])
     }
@@ -51,13 +62,16 @@ impl Metrics {
         }
         let mut lats = Json::obj();
         for (k, v) in &g.latencies {
-            let mut s = v.clone();
-            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let mean = s.iter().sum::<f64>() / s.len().max(1) as f64;
+            let s = sorted_finite(v);
+            if s.is_empty() {
+                lats = lats.put(k, Json::obj().put("count", v.len()));
+                continue;
+            }
+            let mean = s.iter().sum::<f64>() / s.len() as f64;
             lats = lats.put(
                 k,
                 Json::obj()
-                    .put("count", s.len())
+                    .put("count", v.len())
                     .put("mean_s", mean)
                     .put("p50_s", s[s.len() / 2])
                     .put("p99_s", s[(s.len() - 1) * 99 / 100]),
@@ -85,5 +99,29 @@ mod tests {
         assert!(m.percentile("missing", 0.5).is_none());
         let js = m.to_json().render();
         assert!(js.contains("\"ops\":5"));
+    }
+
+    #[test]
+    fn nan_observation_does_not_panic_or_skew() {
+        // regression: partial_cmp(..).unwrap() panicked the metrics
+        // reader the moment any latency observation was NaN. NaNs of
+        // either sign (0.0/0.0 yields -NaN on x86_64) are dropped from
+        // the statistics: they occupy no percentile rank and cannot
+        // poison the mean.
+        let m = Metrics::default();
+        m.observe("lat", 0.010);
+        m.observe("lat", f64::NAN);
+        m.observe("lat", -f64::NAN);
+        m.observe("lat", 0.020);
+        m.observe("lat", 0.030);
+        assert_eq!(m.percentile("lat", 0.0).unwrap(), 0.010);
+        assert_eq!(m.percentile("lat", 0.5).unwrap(), 0.020);
+        assert_eq!(m.percentile("lat", 1.0).unwrap(), 0.030);
+        let js = m.to_json().render();
+        assert!(js.contains("lat"));
+        assert!(!js.contains("NaN"), "NaN must never reach the JSON: {js}");
+        // a metric with only NaN observations reports no percentile
+        m.observe("allnan", f64::NAN);
+        assert!(m.percentile("allnan", 0.5).is_none());
     }
 }

@@ -3,15 +3,18 @@
 //! Workers consume scheduled tasks (Fig. 8(c)/(d) overlap: each DIMM runs
 //! its queue back-to-back, so pipelines never idle waiting for another
 //! task's host round-trip). Each task advances the hardware model; when
-//! `use_runtime` is on, the leader additionally executes the operator's
-//! numeric hot loop through the runtime backend (PJRT artifacts when
-//! available, the pure-Rust ReferenceBackend otherwise) to prove the
-//! datapath.
+//! `use_runtime` is on, the leader additionally lowers every task's op
+//! graph to artifact invocations (`sched::lowering`) and dispatches the
+//! whole batch through [`Runtime::execute_batch_u64`] — PJRT artifacts
+//! when available, the pure-Rust ReferenceBackend otherwise — so the
+//! numeric hot path is derived from the graphs it serves, with per-task
+//! error capture instead of a panicking leader.
 
 use super::config::ApacheConfig;
 use super::metrics::Metrics;
 use crate::params::{CkksParams, TfheParams};
-use crate::runtime::Runtime;
+use crate::runtime::{Invocation, Runtime};
+use crate::sched::lowering::Lowerer;
 use crate::sched::oplevel::{profile_op, OpShapes};
 use crate::sched::tasklevel::{schedule_tasks, Task};
 use std::sync::mpsc;
@@ -35,6 +38,12 @@ pub struct TaskResult {
     pub modelled_s: f64,
     pub wall_s: f64,
     pub ops: usize,
+    /// artifact invocations dispatched for this task's op graph (0 when
+    /// the runtime backend is disabled)
+    pub runtime_invocations: usize,
+    /// first runtime failure attributed to this task, if any; a failed
+    /// invocation never aborts the batch
+    pub runtime_error: Option<String>,
 }
 
 /// The leader: owns the queue, scheduler, worker pool and metrics.
@@ -61,6 +70,12 @@ impl Coordinator {
         } else {
             None
         };
+        Self::with_runtime(cfg, runtime)
+    }
+
+    /// Assemble with an explicit runtime (tests, custom manifests,
+    /// alternative backends).
+    pub fn with_runtime(cfg: ApacheConfig, runtime: Option<Runtime>) -> Self {
         let shapes = OpShapes {
             ckks: CkksParams::paper_shape(),
             tfhe: TfheParams::paper_shape(),
@@ -89,8 +104,8 @@ impl Coordinator {
             self.cfg.dimms,
             self.cfg.host_bw,
         );
-        let (tx, rx) = mpsc::channel::<TaskResult>();
-        let results = std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::channel::<(usize, TaskResult)>();
+        let mut results: Vec<Option<TaskResult>> = std::thread::scope(|scope| {
             for (dimm, queue) in assignment.per_dimm.iter().enumerate() {
                 let tx = tx.clone();
                 let tasks = &tasks;
@@ -107,46 +122,95 @@ impl Coordinator {
                             modelled += prof.latency_s(&cfg.dimm);
                             metrics.incr(&format!("op.{}", prof.name), 1);
                         }
+                        let wall_s = t0.elapsed().as_secs_f64();
                         metrics.observe("task.modelled_s", modelled);
-                        metrics.observe("task.wall_s", t0.elapsed().as_secs_f64());
+                        metrics.observe("task.wall_s", wall_s);
                         metrics.incr("tasks.completed", 1);
-                        let _ = tx.send(TaskResult {
-                            name: task.name.clone(),
-                            dimm,
-                            modelled_s: modelled,
-                            wall_s: t0.elapsed().as_secs_f64(),
-                            ops: task.graph.nodes.len(),
-                        });
+                        let _ = tx.send((
+                            ti,
+                            TaskResult {
+                                name: task.name.clone(),
+                                dimm,
+                                modelled_s: modelled,
+                                wall_s,
+                                ops: task.graph.nodes.len(),
+                                runtime_invocations: 0,
+                                runtime_error: None,
+                            },
+                        ));
                     }
                 });
             }
             drop(tx);
-            let mut out: Vec<TaskResult> = rx.iter().collect();
-            out.sort_by(|a, b| a.name.cmp(&b.name));
+            let mut out: Vec<Option<TaskResult>> = tasks.iter().map(|_| None).collect();
+            for (ti, r) in rx {
+                out[ti] = Some(r);
+            }
             out
         });
-        // numeric hot path through the runtime backend: the accelerator
-        // datapath runs on the leader (backend handles may be !Send); one
-        // artifact invocation per task proves the executables compose at
-        // request time.
-        if let Some(rt) = &self.runtime {
-            let n = 256usize;
-            let rows = 14usize;
-            let q = rt.manifest["routine2_n256"].modulus;
-            let data = vec![1u64 % q; rows * n];
-            for _ in 0..results.len() {
-                rt.execute_u64("routine2_n256", &[data.clone(), data.clone(), data.clone()])
-                    .expect("artifact execution");
-                self.metrics.incr("runtime.invocations", 1);
+        self.dispatch_runtime(&tasks, &mut results);
+        let mut out: Vec<TaskResult> = results.into_iter().flatten().collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    /// The numeric hot path through the runtime backend: lower each
+    /// task's op graph to artifact invocations, dispatch the whole batch
+    /// through [`Runtime::execute_batch_u64`], and splice per-task
+    /// outcomes back. Runs on the leader thread (backend handles may be
+    /// !Send). A failing invocation marks its own task's result and the
+    /// `runtime.errors` counter — it never aborts the serving loop.
+    fn dispatch_runtime(&self, tasks: &[Task], results: &mut [Option<TaskResult>]) {
+        let rt = match &self.runtime {
+            Some(rt) => rt,
+            None => return,
+        };
+        let mut lowerer = Lowerer::new();
+        let mut batch: Vec<Invocation> = Vec::new();
+        let mut spans: Vec<(usize, std::ops::Range<usize>)> = Vec::new();
+        for (ti, task) in tasks.iter().enumerate() {
+            match lowerer.lower_graph(&task.graph, &self.shapes, rt) {
+                Ok(invs) => {
+                    let start = batch.len();
+                    batch.extend(invs);
+                    spans.push((ti, start..batch.len()));
+                }
+                Err(e) => {
+                    self.metrics.incr("runtime.errors", 1);
+                    if let Some(r) = results[ti].as_mut() {
+                        r.runtime_error = Some(format!("lowering: {e}"));
+                    }
+                }
             }
         }
-        results
+        let outs = rt.execute_batch_u64(&batch);
+        for (ti, span) in spans {
+            let r = match results[ti].as_mut() {
+                Some(r) => r,
+                None => continue,
+            };
+            r.runtime_invocations = span.len();
+            for out in &outs[span] {
+                match out {
+                    Ok(_) => self.metrics.incr("runtime.invocations", 1),
+                    Err(e) => {
+                        self.metrics.incr("runtime.errors", 1);
+                        if r.runtime_error.is_none() {
+                            r.runtime_error = Some(e.to_string());
+                        }
+                    }
+                }
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::builtin_manifest;
+    use crate::sched::graph::OpGraph;
+    use crate::sched::oplevel::FheOp;
     use crate::sched::tasklevel::cmux_tree_task;
 
     #[test]
@@ -180,5 +244,84 @@ mod tests {
         assert_eq!(results.len(), 1);
         let js = coord.metrics.to_json().render();
         assert!(js.contains("tasks.completed"));
+    }
+
+    #[test]
+    fn runtime_invocations_match_graph_lowering() {
+        let coord = Coordinator::with_runtime(ApacheConfig::default(), Some(Runtime::reference()));
+        let reqs: Vec<TaskRequest> = (0..3)
+            .map(|i| TaskRequest {
+                task: cmux_tree_task(&format!("t{i}"), 3),
+            })
+            .collect();
+        let expected: Vec<usize> = (0..3)
+            .map(|i| {
+                let rt = Runtime::reference();
+                Lowerer::new()
+                    .lower_graph(&cmux_tree_task(&format!("t{i}"), 3).graph, &coord.shapes(), &rt)
+                    .unwrap()
+                    .len()
+            })
+            .collect();
+        let results = coord.serve_batch(reqs);
+        assert_eq!(results.len(), 3);
+        let mut total = 0usize;
+        for (r, want) in results.iter().zip(&expected) {
+            assert!(r.runtime_error.is_none(), "unexpected: {:?}", r.runtime_error);
+            assert_eq!(r.runtime_invocations, *want, "task {}", r.name);
+            total += r.runtime_invocations;
+        }
+        assert_eq!(coord.metrics.counter("runtime.invocations"), total as u64);
+        assert_eq!(coord.metrics.counter("runtime.errors"), 0);
+    }
+
+    #[test]
+    fn failed_invocation_marks_task_not_batch() {
+        // corrupt one artifact's declared shape: the CMUX task's external
+        // product fails validation, the sibling pointwise task completes.
+        let mut metas = builtin_manifest();
+        for m in &mut metas {
+            if m.name == "external_product_n1024" {
+                m.shapes[0] = vec![1, 8];
+            }
+        }
+        let rt = Runtime::from_parts(metas, Box::new(crate::runtime::ReferenceBackend::new()));
+        let coord = Coordinator::with_runtime(ApacheConfig::default(), Some(rt));
+        let mut add_graph = OpGraph::default();
+        add_graph.add(FheOp::HAdd, &[], None);
+        let reqs = vec![
+            TaskRequest {
+                task: cmux_tree_task("a-cmux", 3),
+            },
+            TaskRequest {
+                task: Task {
+                    name: "b-add".into(),
+                    graph: add_graph,
+                    state_bytes: 1 << 12,
+                },
+            },
+        ];
+        let results = coord.serve_batch(reqs);
+        assert_eq!(results.len(), 2);
+        let cmux = results.iter().find(|r| r.name == "a-cmux").unwrap();
+        let add = results.iter().find(|r| r.name == "b-add").unwrap();
+        assert!(cmux.runtime_error.is_some(), "shape corruption must surface");
+        assert!(add.runtime_error.is_none());
+        assert_eq!(add.runtime_invocations, 1);
+        assert!(coord.metrics.counter("runtime.errors") > 0);
+        // both tasks still completed through the model path
+        assert_eq!(coord.metrics.counter("tasks.completed"), 2);
+    }
+
+    #[test]
+    fn wall_s_metric_agrees_with_result() {
+        let coord = Coordinator::new(ApacheConfig::default());
+        let results = coord.serve_batch(vec![TaskRequest {
+            task: cmux_tree_task("only", 3),
+        }]);
+        // the single observation and the returned result are the same
+        // sample, not two divergent t0.elapsed() reads
+        let p50 = coord.metrics.percentile("task.wall_s", 0.5).unwrap();
+        assert_eq!(p50, results[0].wall_s);
     }
 }

@@ -22,7 +22,7 @@
 use crate::math::modops::{mod_add, mod_mul, ntt_primes};
 use crate::math::ntt::NttTable;
 use crate::util::error::{Context, Error, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
@@ -135,13 +135,77 @@ pub fn builtin_manifest() -> Vec<ArtifactMeta> {
     out
 }
 
+/// One artifact call within a batch. Operands are `Arc`-shared so the
+/// same twiddle table or evk-style input can back many invocations; the
+/// reference backend detects that sharing by pointer identity and
+/// validates each shared table once per worker chunk instead of once per
+/// call — the dispatch-layer mirror of §V-B's evk-streaming amortization.
+#[derive(Debug, Clone)]
+pub struct Invocation {
+    pub artifact: String,
+    pub inputs: Vec<Arc<Vec<u64>>>,
+}
+
+impl Invocation {
+    pub fn new(artifact: impl Into<String>, inputs: Vec<Arc<Vec<u64>>>) -> Self {
+        Invocation {
+            artifact: artifact.into(),
+            inputs,
+        }
+    }
+
+    /// Wrap owned, unshared operands (one-off calls and tests).
+    pub fn from_owned(artifact: impl Into<String>, inputs: Vec<Vec<u64>>) -> Self {
+        Invocation {
+            artifact: artifact.into(),
+            inputs: inputs.into_iter().map(Arc::new).collect(),
+        }
+    }
+}
+
+/// A resolved batch entry handed to [`Backend::execute_batch`]: manifest
+/// metadata plus `Arc`-shared operands, arity/shape-validated up front by
+/// [`Runtime::execute_batch_u64`].
+pub struct BatchItem<'a> {
+    pub meta: &'a ArtifactMeta,
+    pub inputs: &'a [Arc<Vec<u64>>],
+}
+
 /// An execution engine for manifest artifacts. Implementations receive
 /// pre-validated inputs (arity and element counts already checked by
-/// [`Runtime::execute_u64`]).
+/// [`Runtime::execute_u64`] / [`Runtime::execute_batch_u64`]) as
+/// borrowed slices, so neither entry point copies operand data.
 pub trait Backend {
     fn name(&self) -> &'static str;
-    fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[Vec<u64>]) -> Result<Vec<u64>>;
+    fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[&[u64]]) -> Result<Vec<u64>>;
+
+    /// Execute a pre-validated batch, returning one result per item in
+    /// order. The default falls back to per-item [`Backend::execute_u64`]
+    /// calls; backends override it to amortize dispatch and operand
+    /// handling across the batch. A failed item must not abort its
+    /// siblings.
+    fn execute_batch(&self, items: &[BatchItem<'_>]) -> Vec<Result<Vec<u64>>> {
+        items
+            .iter()
+            .map(|it| {
+                let refs: Vec<&[u64]> = it.inputs.iter().map(|a| a.as_slice()).collect();
+                self.execute_u64(it.meta, &refs)
+            })
+            .collect()
+    }
 }
+
+/// Operand tables already validated within one batch, keyed by (operand
+/// data pointer, operand length, ring n, modulus, table kind). Pointer
+/// identity is stable for the lifetime of a batch because every operand
+/// stays alive behind its `Arc` for the whole call, so a twiddle table
+/// shared across invocations is checked against the canonical layout
+/// exactly once.
+type TableMemo = HashSet<(usize, usize, usize, u64, u8)>;
+
+const TW_FWD: u8 = 0;
+const TW_INV: u8 = 1;
+const TW_NINV: u8 = 2;
 
 /// Pure-Rust execution of the artifact contract via the functional math
 /// library — the hermetic stand-in for the PJRT datapath, bit-identical
@@ -177,9 +241,45 @@ impl ReferenceBackend {
         Ok(())
     }
 
+    /// [`Self::check_tables`] with per-batch memoization: a table operand
+    /// already validated against the same canonical (n, q, kind) table in
+    /// this batch is accepted by pointer identity, hoisting the O(n)
+    /// comparison out of every call that shares the operand.
+    #[allow(clippy::too_many_arguments)]
+    fn check_tables_memo(
+        name: &str,
+        what: &str,
+        got: &[u64],
+        expect: &[u64],
+        n: usize,
+        q: u64,
+        kind: u8,
+        memo: &mut TableMemo,
+    ) -> Result<()> {
+        let key = (got.as_ptr() as usize, got.len(), n, q, kind);
+        if memo.contains(&key) {
+            return Ok(());
+        }
+        Self::check_tables(name, what, got, expect)?;
+        memo.insert(key);
+        Ok(())
+    }
+
+    /// Execute a contiguous slice of a batch with one shared table memo.
+    fn exec_chunk(&self, chunk: &[BatchItem<'_>]) -> Vec<Result<Vec<u64>>> {
+        let mut memo = TableMemo::default();
+        chunk
+            .iter()
+            .map(|it| {
+                let refs: Vec<&[u64]> = it.inputs.iter().map(|a| a.as_slice()).collect();
+                self.exec(it.meta, &refs, &mut memo)
+            })
+            .collect()
+    }
+
     /// The manifest's declared arity must match what this op consumes —
     /// a divergent on-disk manifest becomes an Err, not an index panic.
-    fn check_arity(name: &str, inputs: &[Vec<u64>], want: usize) -> Result<()> {
+    fn check_arity(name: &str, inputs: &[&[u64]], want: usize) -> Result<()> {
         if inputs.len() != want {
             return Err(Error::new(format!(
                 "{name}: reference backend expects {want} inputs, manifest declares {}",
@@ -190,26 +290,42 @@ impl ReferenceBackend {
     }
 }
 
-impl Backend for ReferenceBackend {
-    fn name(&self) -> &'static str {
-        "reference"
-    }
-
-    fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[Vec<u64>]) -> Result<Vec<u64>> {
+impl ReferenceBackend {
+    /// One artifact execution against borrowed operands. `memo` carries
+    /// table validations already performed earlier in the same batch (a
+    /// fresh memo makes this the plain single-call path).
+    fn exec(
+        &self,
+        meta: &ArtifactMeta,
+        inputs: &[&[u64]],
+        memo: &mut TableMemo,
+    ) -> Result<Vec<u64>> {
         let name = meta.name.as_str();
         let q = meta.modulus;
-        if meta.shapes[0].len() != 2 {
+        let first = meta
+            .shapes
+            .first()
+            .ok_or_else(|| Error::new(format!("{name}: artifact declares no inputs")))?;
+        if first.len() != 2 {
             return Err(Error::new(format!(
-                "{name}: reference backend expects a (rows, N) first input, got shape {:?}",
-                meta.shapes[0]
+                "{name}: reference backend expects a (rows, N) first input, got shape {first:?}"
             )));
         }
-        let rows = meta.shapes[0][0];
-        let n = meta.shapes[0][1];
+        let rows = first[0];
+        let n = first[1];
         if name.starts_with("ntt_fwd") {
             Self::check_arity(name, inputs, 2)?;
             let t = self.table(n, q);
-            Self::check_tables(name, "forward twiddle", &inputs[1], t.forward_twiddles())?;
+            Self::check_tables_memo(
+                name,
+                "forward twiddle",
+                inputs[1],
+                t.forward_twiddles(),
+                n,
+                q,
+                TW_FWD,
+                memo,
+            )?;
             let mut out: Vec<u64> = inputs[0].iter().map(|&v| v % q).collect();
             for r in 0..rows {
                 t.forward(&mut out[r * n..(r + 1) * n]);
@@ -218,8 +334,17 @@ impl Backend for ReferenceBackend {
         } else if name.starts_with("ntt_inv") {
             Self::check_arity(name, inputs, 3)?;
             let t = self.table(n, q);
-            Self::check_tables(name, "inverse twiddle", &inputs[1], t.inverse_twiddles())?;
-            Self::check_tables(name, "n_inv", &inputs[2], &[t.n_inv()])?;
+            Self::check_tables_memo(
+                name,
+                "inverse twiddle",
+                inputs[1],
+                t.inverse_twiddles(),
+                n,
+                q,
+                TW_INV,
+                memo,
+            )?;
+            Self::check_tables_memo(name, "n_inv", inputs[2], &[t.n_inv()], n, q, TW_NINV, memo)?;
             let mut out: Vec<u64> = inputs[0].iter().map(|&v| v % q).collect();
             for r in 0..rows {
                 t.inverse(&mut out[r * n..(r + 1) * n]);
@@ -228,10 +353,28 @@ impl Backend for ReferenceBackend {
         } else if name.starts_with("external_product") {
             Self::check_arity(name, inputs, 6)?;
             let t = self.table(n, q);
-            Self::check_tables(name, "forward twiddle", &inputs[3], t.forward_twiddles())?;
-            Self::check_tables(name, "inverse twiddle", &inputs[4], t.inverse_twiddles())?;
-            Self::check_tables(name, "n_inv", &inputs[5], &[t.n_inv()])?;
-            let (digits, rows_b, rows_a) = (&inputs[0], &inputs[1], &inputs[2]);
+            Self::check_tables_memo(
+                name,
+                "forward twiddle",
+                inputs[3],
+                t.forward_twiddles(),
+                n,
+                q,
+                TW_FWD,
+                memo,
+            )?;
+            Self::check_tables_memo(
+                name,
+                "inverse twiddle",
+                inputs[4],
+                t.inverse_twiddles(),
+                n,
+                q,
+                TW_INV,
+                memo,
+            )?;
+            Self::check_tables_memo(name, "n_inv", inputs[5], &[t.n_inv()], n, q, TW_NINV, memo)?;
+            let (digits, rows_b, rows_a) = (inputs[0], inputs[1], inputs[2]);
             let mut acc_b = vec![0u64; n];
             let mut acc_a = vec![0u64; n];
             for j in 0..rows {
@@ -250,8 +393,17 @@ impl Backend for ReferenceBackend {
             // R1: out = NTT(x) ∘ key + acc (Fig. 5 pipeline R1)
             Self::check_arity(name, inputs, 4)?;
             let t = self.table(n, q);
-            Self::check_tables(name, "forward twiddle", &inputs[3], t.forward_twiddles())?;
-            let (x, key, acc) = (&inputs[0], &inputs[1], &inputs[2]);
+            Self::check_tables_memo(
+                name,
+                "forward twiddle",
+                inputs[3],
+                t.forward_twiddles(),
+                n,
+                q,
+                TW_FWD,
+                memo,
+            )?;
+            let (x, key, acc) = (inputs[0], inputs[1], inputs[2]);
             let mut out = vec![0u64; rows * n];
             for r in 0..rows {
                 let mut xr: Vec<u64> = x[r * n..(r + 1) * n].iter().map(|&v| v % q).collect();
@@ -265,14 +417,14 @@ impl Backend for ReferenceBackend {
         } else if name.starts_with("routine2") {
             // R2: out = a ∘ b + c (NTT-independent MMult–MAdd traffic)
             Self::check_arity(name, inputs, 3)?;
-            let (a, b, c) = (&inputs[0], &inputs[1], &inputs[2]);
+            let (a, b, c) = (inputs[0], inputs[1], inputs[2]);
             Ok((0..rows * n)
                 .map(|i| mod_add(mod_mul(a[i] % q, b[i] % q, q), c[i] % q, q))
                 .collect())
         } else if name.starts_with("automorph") {
             // eval-domain Galois permutation: out[r][k] = x[r][map[k]]
             Self::check_arity(name, inputs, 2)?;
-            let (x, map) = (&inputs[0], &inputs[1]);
+            let (x, map) = (inputs[0], inputs[1]);
             let mut out = vec![0u64; rows * n];
             for (k, &src) in map.iter().enumerate() {
                 let src = src as usize;
@@ -288,13 +440,13 @@ impl Backend for ReferenceBackend {
             Ok(out)
         } else if name.starts_with("pointwise_mul") {
             Self::check_arity(name, inputs, 2)?;
-            let (a, b) = (&inputs[0], &inputs[1]);
+            let (a, b) = (inputs[0], inputs[1]);
             Ok((0..rows * n)
                 .map(|i| mod_mul(a[i] % q, b[i] % q, q))
                 .collect())
         } else if name.starts_with("pointwise_add") {
             Self::check_arity(name, inputs, 2)?;
-            let (a, b) = (&inputs[0], &inputs[1]);
+            let (a, b) = (inputs[0], inputs[1]);
             Ok((0..rows * n)
                 .map(|i| mod_add(a[i] % q, b[i] % q, q))
                 .collect())
@@ -306,9 +458,63 @@ impl Backend for ReferenceBackend {
     }
 }
 
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[&[u64]]) -> Result<Vec<u64>> {
+        self.exec(meta, inputs, &mut TableMemo::default())
+    }
+
+    /// Batched execution: items are split into contiguous chunks executed
+    /// on scoped threads (one per available core), and each chunk shares
+    /// one table memo so `Arc`-shared twiddle/constant operands are
+    /// validated once per chunk rather than once per invocation. Item
+    /// order is preserved; a failed item only fails its own slot.
+    fn execute_batch(&self, items: &[BatchItem<'_>]) -> Vec<Result<Vec<u64>>> {
+        if items.is_empty() {
+            return Vec::new();
+        }
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(items.len());
+        if workers <= 1 {
+            return self.exec_chunk(items);
+        }
+        let chunk = (items.len() + workers - 1) / workers;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = items
+                .chunks(chunk)
+                .map(|c| s.spawn(move || self.exec_chunk(c)))
+                .collect();
+            handles
+                .into_iter()
+                .zip(items.chunks(chunk))
+                .flat_map(|(h, c)| match h.join() {
+                    Ok(outs) => outs,
+                    // a panicking chunk fails its own items, not the batch
+                    Err(_) => c
+                        .iter()
+                        .map(|it| {
+                            Err(Error::new(format!(
+                                "{}: batch chunk worker panicked",
+                                it.meta.name
+                            )))
+                        })
+                        .collect(),
+                })
+                .collect()
+        })
+    }
+}
+
 /// PJRT execution of the on-disk HLO-text artifacts. Compiles lazily per
 /// artifact; the client handles are !Send, so the Runtime stays on the
-/// leader thread (see coordinator::server).
+/// leader thread (see coordinator::server). Batches go through the
+/// default per-item [`Backend::execute_batch`] fallback until the PJRT
+/// path grows multi-executable dispatch.
 #[cfg(feature = "pjrt")]
 pub struct PjrtBackend {
     client: xla::PjRtClient,
@@ -353,12 +559,12 @@ impl Backend for PjrtBackend {
         "pjrt"
     }
 
-    fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[Vec<u64>]) -> Result<Vec<u64>> {
+    fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[&[u64]]) -> Result<Vec<u64>> {
         self.compile(meta)?;
         let mut literals = Vec::with_capacity(inputs.len());
         for (i, data) in inputs.iter().enumerate() {
             let dims: Vec<i64> = meta.shapes[i].iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
+            let lit = xla::Literal::vec1(*data)
                 .reshape(&dims)
                 .map_err(|e| Error::new(format!("reshape: {e}")))?;
             literals.push(lit);
@@ -437,30 +643,73 @@ impl Runtime {
         PathBuf::from("artifacts")
     }
 
-    /// Execute an artifact on u64 tensors (flattened row-major). Returns
-    /// the flattened u64 output.
-    pub fn execute_u64(&self, name: &str, inputs: &[Vec<u64>]) -> Result<Vec<u64>> {
+    /// Manifest lookup + arity/shape validation shared by the single-call
+    /// and batched entry points.
+    fn validate(&self, name: &str, input_lens: &[usize]) -> Result<&ArtifactMeta> {
         let meta = self
             .manifest
             .get(name)
             .ok_or_else(|| Error::new(format!("unknown artifact `{name}`")))?;
-        if inputs.len() != meta.num_inputs {
+        if input_lens.len() != meta.num_inputs {
             return Err(Error::new(format!(
                 "{name}: expected {} inputs, got {}",
                 meta.num_inputs,
-                inputs.len()
+                input_lens.len()
             )));
         }
-        for (i, data) in inputs.iter().enumerate() {
+        for (i, len) in input_lens.iter().enumerate() {
             let expect: usize = meta.shapes[i].iter().product();
-            if data.len() != expect {
+            if *len != expect {
                 return Err(Error::new(format!(
-                    "{name} input {i}: expected {expect} elements, got {}",
-                    data.len()
+                    "{name} input {i}: expected {expect} elements, got {len}"
                 )));
             }
         }
-        self.backend.execute_u64(meta, inputs)
+        Ok(meta)
+    }
+
+    /// Execute an artifact on u64 tensors (flattened row-major). Returns
+    /// the flattened u64 output.
+    pub fn execute_u64(&self, name: &str, inputs: &[Vec<u64>]) -> Result<Vec<u64>> {
+        let lens: Vec<usize> = inputs.iter().map(|v| v.len()).collect();
+        let meta = self.validate(name, &lens)?;
+        let refs: Vec<&[u64]> = inputs.iter().map(|v| v.as_slice()).collect();
+        self.backend.execute_u64(meta, &refs)
+    }
+
+    /// Execute a batch of artifact invocations, returning one result per
+    /// invocation in order. Arities and shapes of *every* item are
+    /// validated up front; an invalid item fails in its own slot without
+    /// aborting its siblings, and the valid items are handed to the
+    /// backend as one batch so it can amortize operand handling shared
+    /// across invocations (twiddles, evk-style inputs) instead of paying
+    /// it once per call.
+    pub fn execute_batch_u64(&self, invocations: &[Invocation]) -> Vec<Result<Vec<u64>>> {
+        let mut slots: Vec<Option<Result<Vec<u64>>>> = Vec::with_capacity(invocations.len());
+        let mut valid_idx: Vec<usize> = Vec::new();
+        let mut items: Vec<BatchItem<'_>> = Vec::new();
+        for (i, inv) in invocations.iter().enumerate() {
+            let lens: Vec<usize> = inv.inputs.iter().map(|v| v.len()).collect();
+            match self.validate(&inv.artifact, &lens) {
+                Ok(meta) => {
+                    valid_idx.push(i);
+                    items.push(BatchItem {
+                        meta,
+                        inputs: &inv.inputs,
+                    });
+                    slots.push(None);
+                }
+                Err(e) => slots.push(Some(Err(e))),
+            }
+        }
+        let outs = self.backend.execute_batch(&items);
+        for (i, out) in valid_idx.into_iter().zip(outs) {
+            slots[i] = Some(out);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.unwrap_or_else(|| Err(Error::new("backend returned too few batch results"))))
+            .collect()
     }
 
     pub fn artifact_names(&self) -> Vec<String> {
@@ -577,5 +826,101 @@ mod tests {
             .execute_u64("ntt_fwd_n256", &[vec![1u64; 17], vec![1u64; 17]])
             .is_err());
         assert!(rt.execute_u64("ntt_fwd_n256", &[vec![0u64; 14 * 256]]).is_err());
+    }
+
+    #[test]
+    fn batch_matches_per_call_and_isolates_failures() {
+        let rt = Runtime::reference();
+        let n = 256usize;
+        let rows = 14usize;
+        let q = rt.manifest["routine2_n256"].modulus;
+        let mut rng = Rng::seeded(11);
+        let gen = |rng: &mut Rng| -> Vec<u64> { (0..rows * n).map(|_| rng.uniform(q)).collect() };
+        let (a, b, c) = (
+            Arc::new(gen(&mut rng)),
+            Arc::new(gen(&mut rng)),
+            Arc::new(gen(&mut rng)),
+        );
+        let invs = vec![
+            Invocation::new("routine2_n256", vec![a.clone(), b.clone(), c.clone()]),
+            // invalid: unknown artifact
+            Invocation::new("no_such_artifact", vec![a.clone()]),
+            // invalid: wrong element count
+            Invocation::from_owned("routine2_n256", vec![vec![1u64; 3]; 3]),
+            Invocation::new("pointwise_add_n256", vec![a.clone(), b.clone()]),
+        ];
+        let outs = rt.execute_batch_u64(&invs);
+        assert_eq!(outs.len(), 4);
+        assert_eq!(
+            outs[0].as_ref().unwrap(),
+            &rt.execute_u64("routine2_n256", &[(*a).clone(), (*b).clone(), (*c).clone()])
+                .unwrap()
+        );
+        assert!(outs[1].is_err());
+        assert!(outs[2].is_err());
+        assert_eq!(
+            outs[3].as_ref().unwrap(),
+            &rt.execute_u64("pointwise_add_n256", &[(*a).clone(), (*b).clone()])
+                .unwrap()
+        );
+    }
+
+    #[test]
+    fn shared_twiddles_are_hoisted_not_bypassed() {
+        // sharing the twiddle Arc across a batch must still validate it
+        // (once): a divergent shared table fails every item that uses it.
+        let rt = Runtime::reference();
+        let n = 256usize;
+        let rows = 14usize;
+        let q = rt.manifest["ntt_fwd_n256"].modulus;
+        let t = NttTable::new(n, q);
+        let good_tw = Arc::new(t.forward_twiddles().to_vec());
+        let bad_tw = Arc::new(vec![1u64; n]);
+        let poly = Arc::new(vec![0u64; rows * n]);
+        let good = vec![
+            Invocation::new("ntt_fwd_n256", vec![poly.clone(), good_tw.clone()]),
+            Invocation::new("ntt_fwd_n256", vec![poly.clone(), good_tw.clone()]),
+        ];
+        assert!(rt.execute_batch_u64(&good).iter().all(|r| r.is_ok()));
+        let bad = vec![
+            Invocation::new("ntt_fwd_n256", vec![poly.clone(), bad_tw.clone()]),
+            Invocation::new("ntt_fwd_n256", vec![poly.clone(), bad_tw.clone()]),
+        ];
+        assert!(rt.execute_batch_u64(&bad).iter().all(|r| r.is_err()));
+    }
+
+    #[test]
+    fn default_trait_fallback_executes_per_item() {
+        // a backend that only implements execute_u64 still serves batches
+        // through the default per-item fallback.
+        struct Doubler;
+        impl Backend for Doubler {
+            fn name(&self) -> &'static str {
+                "doubler"
+            }
+            fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[&[u64]]) -> Result<Vec<u64>> {
+                if meta.name.contains("fail") {
+                    return Err(Error::new("doubler: induced failure"));
+                }
+                Ok(inputs[0].iter().map(|&v| v * 2).collect())
+            }
+        }
+        let meta = |name: &str| ArtifactMeta {
+            name: name.into(),
+            file: "x".into(),
+            num_inputs: 1,
+            shapes: vec![vec![4]],
+            modulus: 17,
+        };
+        let rt = Runtime::from_parts(vec![meta("dbl"), meta("dbl_fail")], Box::new(Doubler));
+        let invs = vec![
+            Invocation::from_owned("dbl", vec![vec![1, 2, 3, 4]]),
+            Invocation::from_owned("dbl_fail", vec![vec![1, 2, 3, 4]]),
+            Invocation::from_owned("dbl", vec![vec![5, 6, 7, 8]]),
+        ];
+        let outs = rt.execute_batch_u64(&invs);
+        assert_eq!(outs[0].as_ref().unwrap(), &vec![2, 4, 6, 8]);
+        assert!(outs[1].is_err());
+        assert_eq!(outs[2].as_ref().unwrap(), &vec![10, 12, 14, 16]);
     }
 }

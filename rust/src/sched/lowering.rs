@@ -1,0 +1,390 @@
+//! Lowering from scheduler operators to runtime artifact invocations —
+//! the seam where the op graph (§V) meets the Backend datapath (§IV).
+//!
+//! For each [`FheOp`] node the lowerer derives the sequence of manifest
+//! artifacts that exercises the operator's numeric hot loop: (I)NTT
+//! passes, the R1/R2 pipeline routines, the external-product-backed CMUX
+//! and the automorphism permutation. Composite operators (bootstraps)
+//! lower to one representative group iteration — the hardware model
+//! carries their full modelled cost; the runtime invocation proves the
+//! datapath composes.
+//!
+//! Operands are pooled per ring and `Arc`-shared across every invocation
+//! lowered onto that ring: twiddle/constant tables ring-wide, evk-style
+//! key rows per `key_id` (ops clustered on a shared key reuse the same
+//! buffer, mirroring §V-B's evk-streaming amortization at the dispatch
+//! layer). Batch backends hoist those shared operands once per worker
+//! chunk instead of once per invocation.
+//!
+//! The paper ring of a lane may exceed the fixed-shape artifact set (the
+//! CKKS ring is far larger than the compiled N ∈ {256, 1024} kernels);
+//! the lowerer then selects the largest manifest ring that fits, so each
+//! invocation is one per-limb tile of the operator.
+
+use crate::math::automorph::galois_eval_map;
+use crate::math::ntt::NttTable;
+use crate::math::sampler::Rng;
+use crate::runtime::{Invocation, Runtime};
+use crate::sched::graph::OpGraph;
+use crate::sched::oplevel::{FheOp, OpShapes};
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Operand pool for one ring size: every buffer is `Arc`-shared across
+/// all invocations lowered onto this ring.
+struct RingOperands {
+    n: usize,
+    rows: usize,
+    fwd_tw: Arc<Vec<u64>>,
+    inv_tw: Arc<Vec<u64>>,
+    n_inv: Arc<Vec<u64>>,
+    /// eval-domain Galois permutation for the canonical rotation σ_5
+    auto_map: Arc<Vec<u64>>,
+    /// ciphertext-like data operand, `rows × n`
+    poly: Arc<Vec<u64>>,
+    /// two-row operand (INTT input / external-product output shape)
+    poly2: Arc<Vec<u64>>,
+    /// small-norm gadget-decomposition digits, `rows × n`
+    digits: Arc<Vec<u64>>,
+    /// evk-style row buffers, shared per (key identity, role)
+    keys: HashMap<(i64, u8), Arc<Vec<u64>>>,
+    q: u64,
+}
+
+impl RingOperands {
+    fn new(n: usize, rows: usize, q: u64) -> Self {
+        let table = NttTable::new(n, q);
+        let mut rng = Rng::seeded(0x10_0000 + n as u64);
+        let fill = |rng: &mut Rng, len: usize, bound: u64| -> Vec<u64> {
+            (0..len).map(|_| rng.uniform(bound)).collect()
+        };
+        let auto_map: Vec<u64> = galois_eval_map(n, 5).iter().map(|&m| m as u64).collect();
+        RingOperands {
+            n,
+            rows,
+            fwd_tw: Arc::new(table.forward_twiddles().to_vec()),
+            inv_tw: Arc::new(table.inverse_twiddles().to_vec()),
+            n_inv: Arc::new(vec![table.n_inv()]),
+            auto_map: Arc::new(auto_map),
+            poly: Arc::new(fill(&mut rng, rows * n, q)),
+            poly2: Arc::new(fill(&mut rng, 2 * n, q)),
+            digits: Arc::new(fill(&mut rng, rows * n, 256)),
+            keys: HashMap::new(),
+            q,
+        }
+    }
+
+    /// The evk-style operand for `key_id` in a given role (0 = b-rows,
+    /// 1 = a-rows): ops sharing a key share the buffer; keyless ops share
+    /// one anonymous buffer per role.
+    fn key(&mut self, key_id: Option<u32>, role: u8) -> Arc<Vec<u64>> {
+        let id = key_id.map(|k| k as i64).unwrap_or(-1);
+        let (rows, n, q) = (self.rows, self.n, self.q);
+        self.keys
+            .entry((id, role))
+            .or_insert_with(|| {
+                let salt = (0x20_0000u64 + n as u64 + role as u64)
+                    .wrapping_add((id as u64).wrapping_mul(31));
+                let mut rng = Rng::seeded(salt);
+                Arc::new((0..rows * n).map(|_| rng.uniform(q)).collect())
+            })
+            .clone()
+    }
+}
+
+/// Stateful `FheOp -> Vec<Invocation>` lowering over a runtime manifest.
+/// Reuse one lowerer per served batch so operand pools (and therefore
+/// batch-level operand sharing) span all tasks in the batch.
+#[derive(Default)]
+pub struct Lowerer {
+    rings: HashMap<usize, RingOperands>,
+    ring_choice: HashMap<usize, usize>,
+}
+
+impl Lowerer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ring sizes the manifest can execute (an `ntt_fwd_n*` entry marks a
+    /// compiled ring), sorted ascending.
+    fn manifest_rings(rt: &Runtime) -> Vec<usize> {
+        let mut rings: Vec<usize> = rt
+            .manifest
+            .values()
+            .filter_map(|m| m.name.strip_prefix("ntt_fwd_n").and_then(|s| s.parse().ok()))
+            .collect();
+        rings.sort_unstable();
+        rings
+    }
+
+    /// Largest manifest ring ≤ the lane's ring (per-limb tiling), else
+    /// the smallest available ring.
+    fn ring_for(&mut self, want: usize, rt: &Runtime) -> Result<usize> {
+        if let Some(&r) = self.ring_choice.get(&want) {
+            return Ok(r);
+        }
+        let rings = Self::manifest_rings(rt);
+        let chosen = rings
+            .iter()
+            .rev()
+            .find(|&&r| r <= want)
+            .or_else(|| rings.first())
+            .copied()
+            .ok_or_else(|| Error::new("manifest exposes no ntt_fwd_n* ring to lower onto"))?;
+        self.ring_choice.insert(want, chosen);
+        Ok(chosen)
+    }
+
+    fn operands(&mut self, ring: usize, rt: &Runtime) -> Result<&mut RingOperands> {
+        if !self.rings.contains_key(&ring) {
+            let meta = rt
+                .manifest
+                .get(&format!("ntt_fwd_n{ring}"))
+                .ok_or_else(|| Error::new(format!("manifest has no ntt_fwd_n{ring}")))?;
+            if meta.shapes[0].len() != 2 {
+                return Err(Error::new(format!(
+                    "ntt_fwd_n{ring}: expected a (rows, N) first input, got {:?}",
+                    meta.shapes[0]
+                )));
+            }
+            let operands = RingOperands::new(ring, meta.shapes[0][0], meta.modulus);
+            self.rings.insert(ring, operands);
+        }
+        Ok(self.rings.get_mut(&ring).expect("just inserted"))
+    }
+
+    /// Lower one operator to its artifact invocation sequence.
+    pub fn lower_op(
+        &mut self,
+        op: FheOp,
+        key_id: Option<u32>,
+        shapes: &OpShapes,
+        rt: &Runtime,
+    ) -> Result<Vec<Invocation>> {
+        let want = match op {
+            FheOp::Cmux
+            | FheOp::PubKS
+            | FheOp::PrivKS
+            | FheOp::GateBootstrap
+            | FheOp::CircuitBootstrap
+            | FheOp::HomGate => shapes.tfhe.rlwe_n,
+            _ => shapes.ckks.n,
+        };
+        let ring = self.ring_for(want, rt)?;
+        let ops = self.operands(ring, rt)?;
+        // evk-style pools are only materialized for ops that consume them
+        // (role 1, the RGSW a-rows, only feeds the external product)
+        let uses_ep = matches!(
+            op,
+            FheOp::Cmux | FheOp::GateBootstrap | FheOp::CircuitBootstrap | FheOp::HomGate
+        );
+        let uses_key = uses_ep
+            || matches!(
+                op,
+                FheOp::KeySwitch
+                    | FheOp::CMult
+                    | FheOp::HRot
+                    | FheOp::CkksBootstrap
+                    | FheOp::PubKS
+                    | FheOp::PrivKS
+            );
+        let key_b = if uses_key { Some(ops.key(key_id, 0)) } else { None };
+        let key_a = if uses_ep { Some(ops.key(key_id, 1)) } else { None };
+        let key_b = move || key_b.as_ref().expect("key operand for keyed op").clone();
+        let key_a = move || key_a.as_ref().expect("a-rows operand for external product").clone();
+        // invocation builders: only the ones the op's arm names are built
+        let art = |kind: &str| format!("{kind}_n{ring}");
+        let ntt_fwd =
+            || Invocation::new(art("ntt_fwd"), vec![ops.poly.clone(), ops.fwd_tw.clone()]);
+        let ntt_inv = || {
+            Invocation::new(
+                art("ntt_inv"),
+                vec![ops.poly2.clone(), ops.inv_tw.clone(), ops.n_inv.clone()],
+            )
+        };
+        let routine1 = || {
+            Invocation::new(
+                art("routine1"),
+                vec![
+                    ops.poly.clone(),
+                    key_b(),
+                    ops.poly.clone(),
+                    ops.fwd_tw.clone(),
+                ],
+            )
+        };
+        let routine2 = || {
+            Invocation::new(
+                art("routine2"),
+                vec![ops.poly.clone(), key_b(), ops.poly.clone()],
+            )
+        };
+        let external_product = || {
+            Invocation::new(
+                art("external_product"),
+                vec![
+                    ops.digits.clone(),
+                    key_b(),
+                    key_a(),
+                    ops.fwd_tw.clone(),
+                    ops.inv_tw.clone(),
+                    ops.n_inv.clone(),
+                ],
+            )
+        };
+        let automorph =
+            || Invocation::new(art("automorph"), vec![ops.poly.clone(), ops.auto_map.clone()]);
+        let pointwise_mul =
+            || Invocation::new(art("pointwise_mul"), vec![ops.poly.clone(), ops.poly.clone()]);
+        let pointwise_add =
+            || Invocation::new(art("pointwise_add"), vec![ops.poly.clone(), ops.poly.clone()]);
+        Ok(match op {
+            FheOp::HAdd => vec![pointwise_add()],
+            FheOp::PMult => vec![pointwise_mul()],
+            // Moddown INTT + scale by q_l^{-1}
+            FheOp::Rescale => vec![ntt_inv(), pointwise_mul()],
+            // Modup NTT → evk accumulate (R1) → Moddown INTT
+            FheOp::KeySwitch => vec![ntt_fwd(), routine1(), ntt_inv()],
+            // tensor product + relinearization key switch
+            FheOp::CMult => vec![pointwise_mul(), routine1(), ntt_inv()],
+            // Galois rotation + key switch back to the base key
+            FheOp::HRot => vec![automorph(), routine1(), ntt_inv()],
+            // one representative CtS/EvalSine/StC group iteration
+            FheOp::CkksBootstrap => {
+                vec![automorph(), routine1(), pointwise_mul(), routine2(), ntt_inv()]
+            }
+            // Fig. 9: gadget digits against the bootstrap-key RGSW rows
+            FheOp::Cmux => vec![external_product()],
+            // in-memory key switches are MMult–MAdd (R2) bank traffic
+            FheOp::PubKS => vec![routine2()],
+            FheOp::PrivKS => vec![routine2()],
+            // one blind-rotation CMUX step + the trailing PubKS traffic
+            FheOp::GateBootstrap => vec![external_product(), routine2()],
+            // one per-level CMUX + PrivKS pair of the circuit bootstrap
+            FheOp::CircuitBootstrap => vec![external_product(), routine1(), routine2()],
+            // linear pre-combination + one gate-bootstrap CMUX step
+            FheOp::HomGate => vec![pointwise_add(), external_product()],
+        })
+    }
+
+    /// Lower a whole task graph, level by level with same-key operators
+    /// clustered back-to-back (§V-B), into one flat invocation sequence.
+    pub fn lower_graph(
+        &mut self,
+        graph: &OpGraph,
+        shapes: &OpShapes,
+        rt: &Runtime,
+    ) -> Result<Vec<Invocation>> {
+        let mut out = Vec::new();
+        for level in graph.levels() {
+            for cluster in graph.key_clusters(&level) {
+                for id in cluster {
+                    let node = &graph.nodes[id];
+                    out.extend(self.lower_op(node.op, node.key_id, shapes, rt)?);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{CkksParams, TfheParams};
+    use crate::sched::tasklevel::cmux_tree_task;
+
+    fn shapes() -> OpShapes {
+        OpShapes {
+            ckks: CkksParams::paper_shape(),
+            tfhe: TfheParams::paper_shape(),
+        }
+    }
+
+    fn all_ops() -> Vec<FheOp> {
+        vec![
+            FheOp::HAdd,
+            FheOp::PMult,
+            FheOp::CMult,
+            FheOp::HRot,
+            FheOp::KeySwitch,
+            FheOp::CkksBootstrap,
+            FheOp::Rescale,
+            FheOp::Cmux,
+            FheOp::PubKS,
+            FheOp::PrivKS,
+            FheOp::GateBootstrap,
+            FheOp::CircuitBootstrap,
+            FheOp::HomGate,
+        ]
+    }
+
+    #[test]
+    fn every_op_lowers_to_executable_invocations() {
+        let rt = Runtime::reference();
+        let s = shapes();
+        let mut low = Lowerer::new();
+        for op in all_ops() {
+            let invs = low.lower_op(op, Some(1), &s, &rt).unwrap();
+            assert!(!invs.is_empty(), "{op:?} lowered to nothing");
+            for (r, out) in invs.iter().zip(rt.execute_batch_u64(&invs)) {
+                assert!(out.is_ok(), "{op:?} -> {}: {}", r.artifact, out.unwrap_err());
+            }
+        }
+    }
+
+    #[test]
+    fn cmux_lowers_to_external_product_on_the_tfhe_ring() {
+        let rt = Runtime::reference();
+        let s = shapes();
+        let mut low = Lowerer::new();
+        let invs = low.lower_op(FheOp::Cmux, Some(3), &s, &rt).unwrap();
+        assert_eq!(invs.len(), 1);
+        assert_eq!(
+            invs[0].artifact,
+            format!("external_product_n{}", s.tfhe.rlwe_n)
+        );
+    }
+
+    #[test]
+    fn shared_key_ops_share_the_evk_operand() {
+        let rt = Runtime::reference();
+        let s = shapes();
+        let mut low = Lowerer::new();
+        let a = low.lower_op(FheOp::Cmux, Some(9), &s, &rt).unwrap();
+        let b = low.lower_op(FheOp::Cmux, Some(9), &s, &rt).unwrap();
+        let c = low.lower_op(FheOp::Cmux, Some(10), &s, &rt).unwrap();
+        // input 1 is the b-rows evk operand of the external product
+        assert!(Arc::ptr_eq(&a[0].inputs[1], &b[0].inputs[1]));
+        assert!(!Arc::ptr_eq(&a[0].inputs[1], &c[0].inputs[1]));
+        // twiddles are ring-wide shared regardless of key
+        assert!(Arc::ptr_eq(&a[0].inputs[3], &c[0].inputs[3]));
+    }
+
+    #[test]
+    fn graph_lowering_is_deterministic_and_covers_all_nodes() {
+        let rt = Runtime::reference();
+        let s = shapes();
+        let task = cmux_tree_task("t", 7);
+        let n1 = Lowerer::new().lower_graph(&task.graph, &s, &rt).unwrap();
+        let n2 = Lowerer::new().lower_graph(&task.graph, &s, &rt).unwrap();
+        assert_eq!(n1.len(), n2.len());
+        // a CMUX tree lowers one external product per node
+        assert_eq!(n1.len(), task.graph.nodes.len());
+        let names1: Vec<&str> = n1.iter().map(|i| i.artifact.as_str()).collect();
+        let names2: Vec<&str> = n2.iter().map(|i| i.artifact.as_str()).collect();
+        assert_eq!(names1, names2);
+    }
+
+    #[test]
+    fn ckks_lane_tiles_onto_the_largest_manifest_ring() {
+        let rt = Runtime::reference();
+        let s = shapes();
+        let mut low = Lowerer::new();
+        let invs = low.lower_op(FheOp::HAdd, None, &s, &rt).unwrap();
+        // paper CKKS ring exceeds every compiled kernel: tile on n=1024
+        assert_eq!(invs[0].artifact, "pointwise_add_n1024");
+    }
+}

@@ -3,11 +3,13 @@
 //! emission and ciphertext packing decisions.
 
 pub mod graph;
+pub mod lowering;
 pub mod microcode;
 pub mod oplevel;
 pub mod packing;
 pub mod tasklevel;
 
 pub use graph::{OpGraph, OpNode};
+pub use lowering::Lowerer;
 pub use oplevel::{profile_op, FheOp, OpShapes};
 pub use tasklevel::{schedule_tasks, DimmAssignment, Task};

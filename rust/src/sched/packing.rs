@@ -26,7 +26,12 @@ pub fn should_pack(
 /// Choose a packing strategy from the workload shape (Fig. 10 guidance).
 /// `samples` × `features`, `per_dim_analysis`: whether the computation
 /// compares across samples within a feature dimension.
-pub fn choose_packing(samples: usize, features: usize, slots: usize, per_dim_analysis: bool) -> Packing {
+pub fn choose_packing(
+    samples: usize,
+    features: usize,
+    slots: usize,
+    per_dim_analysis: bool,
+) -> Packing {
     if per_dim_analysis {
         Packing::Vertical
     } else if samples <= slots / features.max(1) {

@@ -47,16 +47,23 @@ pub fn schedule_tasks(
     let mut lat: Vec<(usize, f64)> = tasks
         .iter()
         .enumerate()
-        .map(|(i, t)| (i, task_latency(t, shapes, cfg)))
+        .map(|(i, t)| {
+            let l = task_latency(t, shapes, cfg);
+            // a NaN latency (degenerate hardware config) must neither
+            // panic the sort below nor poison the `busy` accumulator —
+            // schedule the task as zero-cost instead
+            (i, if l.is_nan() { 0.0 } else { l })
+        })
         .collect();
-    lat.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    // total_cmp keeps the comparator total even for ±inf latencies
+    lat.sort_by(|a, b| b.1.total_cmp(&a.1));
     let mut per_dimm = vec![Vec::new(); dimms];
     let mut busy = vec![0.0f64; dimms];
     for (i, l) in lat {
         let target = busy
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .map(|(d, _)| d)
             .unwrap();
         per_dimm[target].push(i);
@@ -145,5 +152,42 @@ mod tests {
         let mut seen: Vec<usize> = a.per_dimm.iter().flatten().copied().collect();
         seen.sort_unstable();
         assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn nan_latency_does_not_panic_or_poison_scheduler() {
+        // regression: a degenerate config (zero external bus) makes
+        // latency_s return NaN (0 bytes / 0 bandwidth) for any op without
+        // external I/O. The scheduler must neither panic (the old
+        // partial_cmp unwraps) nor let a NaN poison the busy accumulator
+        // and collapse load balancing for the finite tasks.
+        use crate::sched::graph::OpGraph;
+        let mut cfg = DimmConfig::paper();
+        cfg.mts = 0;
+        let mut g = OpGraph::default();
+        g.add(FheOp::HAdd, &[], None);
+        let s = shapes();
+        let nan_task = |i: usize| Task {
+            name: format!("nan{i}"),
+            graph: g.clone(),
+            state_bytes: 0,
+        };
+        assert!(
+            task_latency(&nan_task(0), &s, &cfg).is_nan(),
+            "test premise: degenerate config must yield NaN latency"
+        );
+        // NaN tasks mixed with CMUX-tree tasks (also degenerate under
+        // mts=0 — every latency here is NaN or inf)
+        let mut tasks: Vec<Task> = (0..2).map(nan_task).collect();
+        tasks.extend((0..4).map(|i| cmux_tree_task(&format!("t{i}"), 7)));
+        let a = schedule_tasks(&tasks, &s, &cfg, 2, 30e9);
+        let mut seen: Vec<usize> = a.per_dimm.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+        assert!(
+            a.dimm_busy_s.iter().all(|b| !b.is_nan()),
+            "busy accumulator must stay NaN-free: {:?}",
+            a.dimm_busy_s
+        );
     }
 }

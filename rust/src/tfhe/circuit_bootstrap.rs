@@ -120,8 +120,20 @@ mod tests {
         for bit in [false, true] {
             let c_bool = encrypt_bool(&ctx, &lwe_key, bit, &mut rng);
             let rgsw = circuit_bootstrap(&ctx, &cbk, &c_bool);
-            let c0 = RlweCiphertext::encrypt_phase(&ctx, &rlwe_key, &mu0, ctx.params.rlwe_sigma, &mut rng);
-            let c1 = RlweCiphertext::encrypt_phase(&ctx, &rlwe_key, &mu1, ctx.params.rlwe_sigma, &mut rng);
+            let c0 = RlweCiphertext::encrypt_phase(
+                &ctx,
+                &rlwe_key,
+                &mu0,
+                ctx.params.rlwe_sigma,
+                &mut rng,
+            );
+            let c1 = RlweCiphertext::encrypt_phase(
+                &ctx,
+                &rlwe_key,
+                &mu1,
+                ctx.params.rlwe_sigma,
+                &mut rng,
+            );
             let out = cmux(&ctx, &rgsw, &c0, &c1);
             let dec = out.decrypt(&ctx, &rlwe_key, delta, t);
             let expect = if bit { 3 } else { 1 };

@@ -9,7 +9,12 @@ use crate::math::sampler::Rng;
 use std::sync::Arc;
 
 /// Encode and encrypt one boolean.
-pub fn encrypt_bool(ctx: &Arc<TfheCtx>, key: &LweSecretKey, v: bool, rng: &mut Rng) -> LweCiphertext {
+pub fn encrypt_bool(
+    ctx: &Arc<TfheCtx>,
+    key: &LweSecretKey,
+    v: bool,
+    rng: &mut Rng,
+) -> LweCiphertext {
     let q = ctx.q();
     let mu = if v { q / 8 } else { mod_neg(q / 8, q) };
     LweCiphertext::encrypt_phase(key, mu, ctx.params.lwe_sigma, rng)

@@ -239,7 +239,8 @@ mod tests {
         let t = ctx.params.plaintext_space;
         let delta = ctx.params.delta();
         for m in 0..t {
-            let c = LweCiphertext::encrypt_phase(&big_key, m * delta, ctx.params.lwe_sigma, &mut rng);
+            let c =
+                LweCiphertext::encrypt_phase(&big_key, m * delta, ctx.params.lwe_sigma, &mut rng);
             let switched = key_switch(&ctx, &ksk, &c);
             assert_eq!(switched.dim(), ctx.params.lwe_n);
             assert_eq!(switched.decrypt(&lwe_key, delta, t), m, "m={m}");

@@ -120,16 +120,17 @@ pub fn external_product(
     // Perf (§Perf): the decomposition output is owned — NTT the digit
     // polynomials in place instead of cloning each one (saves 2l allocs +
     // copies per external product).
-    let mut apply = |digits: Vec<Vec<u64>>, rows: &[RlweEval], acc_b: &mut [u64], acc_a: &mut [u64]| {
-        for (j, mut d) in digits.into_iter().enumerate() {
-            ctx.ntt.forward(&mut d);
-            let row = &rows[j];
-            for k in 0..n {
-                acc_b[k] = mod_add(acc_b[k], mod_mul(d[k], row.b[k], q), q);
-                acc_a[k] = mod_add(acc_a[k], mod_mul(d[k], row.a[k], q), q);
+    let mut apply =
+        |digits: Vec<Vec<u64>>, rows: &[RlweEval], acc_b: &mut [u64], acc_a: &mut [u64]| {
+            for (j, mut d) in digits.into_iter().enumerate() {
+                ctx.ntt.forward(&mut d);
+                let row = &rows[j];
+                for k in 0..n {
+                    acc_b[k] = mod_add(acc_b[k], mod_mul(d[k], row.b[k], q), q);
+                    acc_a[k] = mod_add(acc_a[k], mod_mul(d[k], row.a[k], q), q);
+                }
             }
-        }
-    };
+        };
     apply(decomp_b, &rgsw.rows[..l], &mut acc_b, &mut acc_a);
     apply(decomp_a, &rgsw.rows[l..], &mut acc_b, &mut acc_a);
     ctx.ntt.inverse(&mut acc_b);
@@ -234,7 +235,8 @@ mod tests {
         let t = ctx.params.plaintext_space;
         let delta = ctx.params.delta();
         let mu: Vec<u64> = (0..ctx.n_poly()).map(|_| delta).collect();
-        let mut acc = RlweCiphertext::encrypt_phase(&ctx, &key, &mu, ctx.params.rlwe_sigma, &mut rng);
+        let mut acc =
+            RlweCiphertext::encrypt_phase(&ctx, &key, &mu, ctx.params.rlwe_sigma, &mut rng);
         for i in 0..8 {
             let bit = (i % 2) as u64;
             let sel = RgswCiphertext::encrypt_bit(&ctx, &key, bit, ctx.params.rlwe_sigma, &mut rng);

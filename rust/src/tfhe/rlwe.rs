@@ -185,8 +185,10 @@ mod tests {
         let m1: Vec<u64> = (0..ctx.n_poly() as u64).map(|i| i % 2).collect();
         let m2: Vec<u64> = (0..ctx.n_poly() as u64).map(|i| (i / 2) % 2).collect();
         let mu = |m: &[u64]| -> Vec<u64> { m.iter().map(|&x| x * delta).collect() };
-        let c1 = RlweCiphertext::encrypt_phase(&ctx, &key, &mu(&m1), ctx.params.rlwe_sigma, &mut rng);
-        let c2 = RlweCiphertext::encrypt_phase(&ctx, &key, &mu(&m2), ctx.params.rlwe_sigma, &mut rng);
+        let c1 =
+            RlweCiphertext::encrypt_phase(&ctx, &key, &mu(&m1), ctx.params.rlwe_sigma, &mut rng);
+        let c2 =
+            RlweCiphertext::encrypt_phase(&ctx, &key, &mu(&m2), ctx.params.rlwe_sigma, &mut rng);
         let sum = c1.add(&c2, q);
         let expect: Vec<u64> = m1.iter().zip(m2.iter()).map(|(&a, &b)| (a + b) % t).collect();
         assert_eq!(sum.decrypt(&ctx, &key, delta, t), expect);

@@ -263,6 +263,98 @@ fn pointwise_ops_match_modops() {
 }
 
 #[test]
+fn execute_batch_is_bit_identical_to_per_call() {
+    // the batched entry point must be a pure grouping of the singleton
+    // path: same artifacts, same operands (twiddles Arc-shared across the
+    // batch), bitwise-equal outputs in order.
+    use apache_fhe::runtime::Invocation;
+    use std::sync::Arc;
+    let rt = runtime();
+    let n = 256usize;
+    let rows = 14usize;
+    let q = rt.manifest["ntt_fwd_n256"].modulus;
+    let table = NttTable::new(n, q);
+    let fwd_tw = Arc::new(table.forward_twiddles().to_vec());
+    let inv_tw = Arc::new(table.inverse_twiddles().to_vec());
+    let n_inv = Arc::new(vec![table.n_inv()]);
+    let map: Arc<Vec<u64>> = Arc::new(galois_eval_map(n, 5).iter().map(|&m| m as u64).collect());
+    let mut rng = Rng::seeded(50);
+    let mut gen = |len: usize, bound: u64| -> Arc<Vec<u64>> {
+        Arc::new((0..len).map(|_| rng.uniform(bound)).collect())
+    };
+    let poly_a = gen(rows * n, q);
+    let poly_b = gen(rows * n, q);
+    let poly2 = gen(2 * n, q);
+    let digits = gen(rows * n, 256);
+    let invs = vec![
+        Invocation::new("ntt_fwd_n256", vec![poly_a.clone(), fwd_tw.clone()]),
+        Invocation::new(
+            "ntt_inv_n256",
+            vec![poly2.clone(), inv_tw.clone(), n_inv.clone()],
+        ),
+        Invocation::new(
+            "external_product_n256",
+            vec![
+                digits.clone(),
+                poly_a.clone(),
+                poly_b.clone(),
+                fwd_tw.clone(),
+                inv_tw.clone(),
+                n_inv.clone(),
+            ],
+        ),
+        Invocation::new(
+            "routine1_n256",
+            vec![
+                poly_a.clone(),
+                poly_b.clone(),
+                poly_a.clone(),
+                fwd_tw.clone(),
+            ],
+        ),
+        Invocation::new(
+            "routine2_n256",
+            vec![poly_a.clone(), poly_b.clone(), poly_a.clone()],
+        ),
+        Invocation::new("automorph_n256", vec![poly_a.clone(), map.clone()]),
+        Invocation::new("pointwise_mul_n256", vec![poly_a.clone(), poly_b.clone()]),
+        Invocation::new("pointwise_add_n256", vec![poly_a.clone(), poly_b.clone()]),
+    ];
+    let outs = rt.execute_batch_u64(&invs);
+    assert_eq!(outs.len(), invs.len());
+    for (inv, out) in invs.iter().zip(&outs) {
+        let owned: Vec<Vec<u64>> = inv.inputs.iter().map(|a| a.as_ref().clone()).collect();
+        let single = rt.execute_u64(&inv.artifact, &owned).unwrap();
+        assert_eq!(
+            out.as_ref().unwrap(),
+            &single,
+            "batched {} diverged from singleton",
+            inv.artifact
+        );
+    }
+}
+
+#[test]
+fn batch_failures_stay_in_their_slot() {
+    use apache_fhe::runtime::Invocation;
+    let rt = runtime();
+    let rows_n = 14 * 256;
+    let q = rt.manifest["routine2_n256"].modulus;
+    let mut rng = Rng::seeded(51);
+    let gen = |rng: &mut Rng| -> Vec<u64> { (0..rows_n).map(|_| rng.uniform(q)).collect() };
+    let good = Invocation::from_owned(
+        "routine2_n256",
+        vec![gen(&mut rng), gen(&mut rng), gen(&mut rng)],
+    );
+    let unknown = Invocation::from_owned("no_such_artifact", vec![vec![0u64; 4]]);
+    let misshaped = Invocation::from_owned("routine2_n256", vec![vec![0u64; 4]; 3]);
+    let outs = rt.execute_batch_u64(&[good, unknown, misshaped]);
+    assert!(outs[0].is_ok(), "sibling of failed items must complete");
+    assert!(outs[1].is_err());
+    assert!(outs[2].is_err());
+}
+
+#[test]
 fn wrong_input_shape_is_rejected() {
     let rt = runtime();
     let err = rt.execute_u64("ntt_fwd_n256", &[vec![1u64; 17], vec![1u64; 17]]);
