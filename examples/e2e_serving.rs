@@ -4,8 +4,9 @@
 //! the numeric hot path executing through the AOT PJRT artifacts.
 //!
 //! Reports: wall-clock latency/throughput of the serving loop, modelled
-//! DIMM time, per-op counts, and artifact invocations. Recorded in
-//! EXPERIMENTS.md.
+//! DIMM time, per-op counts, and artifact invocations — then replays the
+//! same mix through the `pnm` near-memory backend and prints its hardware
+//! cost trace (`pnm.*` metrics). Recorded in EXPERIMENTS.md.
 //!
 //! Run: `cargo run --release --example e2e_serving`
 //! (hermetic: executes through the ReferenceBackend; run `make artifacts`
@@ -13,22 +14,12 @@
 
 use apache_fhe::apps;
 use apache_fhe::coordinator::{ApacheConfig, Coordinator, TaskRequest};
-use apache_fhe::util::benchkit::{fmt_duration, fmt_rate, Table};
+use apache_fhe::util::benchkit::{fmt_bytes, fmt_duration, fmt_rate, Table};
 use std::time::Instant;
 
-fn main() {
-    let mut cfg = ApacheConfig {
-        dimms: 4,
-        use_runtime: true,
-        ..Default::default()
-    };
-    cfg.artifacts_dir = apache_fhe::runtime::Runtime::default_dir()
-        .to_string_lossy()
-        .into_owned();
-    let coord = Coordinator::new(cfg);
-
-    // mixed batch: 8 MNIST inferences, 4 Q6 queries, 4 HELR iterations,
-    // 2 VSP cycles — the multi-scheme mix the paper targets
+// mixed batch: 8 MNIST inferences, 4 Q6 queries, 4 HELR iterations,
+// 2 VSP cycles — the multi-scheme mix the paper targets
+fn build_requests() -> Vec<TaskRequest> {
     let mut reqs = Vec::new();
     for i in 0..8 {
         let mut t = apps::lola_mnist(i % 2 == 0);
@@ -50,6 +41,21 @@ fn main() {
         t.name = format!("{}-{i}", t.name);
         reqs.push(TaskRequest { task: t });
     }
+    reqs
+}
+
+fn main() {
+    let mut cfg = ApacheConfig {
+        dimms: 4,
+        use_runtime: true,
+        ..Default::default()
+    };
+    cfg.artifacts_dir = apache_fhe::runtime::Runtime::default_dir()
+        .to_string_lossy()
+        .into_owned();
+    let coord = Coordinator::new(cfg);
+
+    let reqs = build_requests();
     let n = reqs.len();
 
     let t0 = Instant::now();
@@ -100,5 +106,45 @@ fn main() {
             r.runtime_error
         );
     }
+
+    // ---- near-memory pass: the same mix through the PnmBackend ----
+    let pnm_cfg = ApacheConfig {
+        dimms: 4,
+        use_runtime: true,
+        backend: "pnm".into(),
+        ..Default::default()
+    };
+    let rt = apache_fhe::runtime::Runtime::for_backend("pnm", &pnm_cfg.dimm).expect("pnm");
+    let pnm = Coordinator::with_runtime(pnm_cfg, Some(rt));
+    let pnm_results = pnm.serve_batch(build_requests());
+    assert_eq!(pnm_results.len(), n);
+    for r in &pnm_results {
+        assert!(
+            r.runtime_error.is_none(),
+            "{}: unexpected pnm runtime error {:?}",
+            r.name,
+            r.runtime_error
+        );
+    }
+    println!("\n== pnm cost trace (one device dispatch for the batch) ==");
+    println!("dispatches          : {}", pnm.metrics.counter("pnm.dispatches"));
+    println!("device cycles       : {}", pnm.metrics.counter("pnm.cycles"));
+    println!(
+        "rank-level traffic  : {}",
+        fmt_bytes(pnm.metrics.counter("pnm.bytes_rank") as f64)
+    );
+    println!(
+        "bank-level traffic  : {}",
+        fmt_bytes(pnm.metrics.counter("pnm.bytes_bank") as f64)
+    );
+    println!(
+        "NTT utilization p50 : {:.1}%",
+        100.0 * pnm.metrics.percentile("pnm.ntt_utilization", 0.5).unwrap_or(0.0)
+    );
+    assert_eq!(
+        pnm.metrics.counter("pnm.dispatches"),
+        1,
+        "a served batch is one device dispatch"
+    );
     println!("\ne2e_serving OK");
 }

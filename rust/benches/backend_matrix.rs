@@ -1,0 +1,147 @@
+//! Backend matrix: reference vs pnm throughput through the same
+//! `Runtime::execute_batch_u64` seam at batch 1/16/64, plus the pnm cost
+//! trace — the per-commit perf trajectory CI records as the
+//! `BENCH_backend_matrix.json` artifact (uploaded by the workflow instead
+//! of discarded).
+//!
+//! The pnm backend must stay bit-identical to the reference backend (the
+//! crossval suite asserts it exhaustively; this bench spot-checks one
+//! batch) while paying only the device-model bookkeeping on top of the
+//! same kernels, and must issue exactly one device dispatch per batch.
+
+use apache_fhe::hw::DimmConfig;
+use apache_fhe::math::ntt::NttTable;
+use apache_fhe::math::sampler::Rng;
+use apache_fhe::runtime::{Invocation, Runtime};
+use apache_fhe::util::benchkit::{bench, fmt_rate, Table};
+use apache_fhe::util::jsonw::Json;
+use std::sync::Arc;
+
+/// The batch_dispatch operand mix: an evk-sharing group where every
+/// invocation owns its data operand and shares the ring tables + one
+/// key-rows buffer — pool-tagged the way the lowerer would.
+fn mixed_batch(rng: &mut Rng, rt: &Runtime, batch: usize) -> Vec<Invocation> {
+    let n = 256usize;
+    let rows = 14usize;
+    let q = rt.manifest["ntt_fwd_n256"].modulus;
+    let table = NttTable::new(n, q);
+    let fwd_tw = Arc::new(table.forward_twiddles().to_vec());
+    let inv_tw = Arc::new(table.inverse_twiddles().to_vec());
+    let n_inv = Arc::new(vec![table.n_inv()]);
+    let key_rows: Arc<Vec<u64>> = Arc::new((0..rows * n).map(|_| rng.uniform(q)).collect());
+    (0..batch)
+        .map(|i| {
+            let data: Arc<Vec<u64>> = Arc::new((0..rows * n).map(|_| rng.uniform(q)).collect());
+            let inv = match i % 3 {
+                0 => Invocation::new("ntt_fwd_n256", vec![data, fwd_tw.clone()]),
+                1 => Invocation::new(
+                    "routine1_n256",
+                    vec![data.clone(), key_rows.clone(), data, fwd_tw.clone()],
+                ),
+                _ => Invocation::new(
+                    "external_product_n256",
+                    vec![
+                        Arc::new((0..rows * n).map(|_| rng.uniform(256)).collect()),
+                        key_rows.clone(),
+                        key_rows.clone(),
+                        fwd_tw.clone(),
+                        inv_tw.clone(),
+                        n_inv.clone(),
+                    ],
+                ),
+            };
+            // cluster tag: one pool per shared-key group (§V-B)
+            inv.with_pool((i % 3) as u64)
+        })
+        .collect()
+}
+
+fn main() {
+    let reference = Runtime::reference();
+    let pnm = Runtime::for_backend("pnm", &DimmConfig::paper()).expect("pnm backend");
+    // the recorded trace comes from a separate runtime that executes each
+    // batch exactly once: the timed runtime's trace accumulates across
+    // bench repetitions of identical operands, which would saturate the
+    // row-hit rate regardless of placement quality
+    let pnm_cold = Runtime::for_backend("pnm", &DimmConfig::paper()).expect("pnm backend");
+    let mut rng = Rng::seeded(23);
+
+    // sanity: the two backends are bit-identical on a mixed batch
+    let check = mixed_batch(&mut rng, &reference, 6);
+    let ref_outs = reference.execute_batch_u64(&check);
+    let pnm_outs = pnm.execute_batch_u64(&check);
+    for ((inv, r), p) in check.iter().zip(&ref_outs).zip(&pnm_outs) {
+        let r = r.as_ref().expect("reference must execute the mix");
+        let p = p.as_ref().expect("pnm must execute the mix");
+        assert_eq!(r, p, "{}: pnm diverged from reference", inv.artifact);
+    }
+
+    let mut t = Table::new(&["batch", "reference", "pnm", "pnm/ref"]);
+    let mut rows_json: Vec<Json> = Vec::new();
+    for batch in [1usize, 16, 64] {
+        let invs = mixed_batch(&mut rng, &reference, batch);
+        for r in pnm_cold.execute_batch_u64(&invs) {
+            r.unwrap();
+        }
+        let st_ref = bench(&format!("reference x{batch}"), || {
+            for r in std::hint::black_box(reference.execute_batch_u64(&invs)) {
+                r.unwrap();
+            }
+        });
+        let st_pnm = bench(&format!("pnm       x{batch}"), || {
+            for r in std::hint::black_box(pnm.execute_batch_u64(&invs)) {
+                r.unwrap();
+            }
+        });
+        let tput_ref = batch as f64 / st_ref.median;
+        let tput_pnm = batch as f64 / st_pnm.median;
+        t.row(&[
+            batch.to_string(),
+            fmt_rate(tput_ref),
+            fmt_rate(tput_pnm),
+            format!("{:.2}x", tput_pnm / tput_ref),
+        ]);
+        rows_json.push(
+            Json::obj()
+                .put("batch", batch)
+                .put("reference_ops_per_s", tput_ref)
+                .put("pnm_ops_per_s", tput_pnm)
+                .put("pnm_over_reference", tput_pnm / tput_ref),
+        );
+    }
+    t.print("backend matrix: reference vs pnm dispatch throughput");
+
+    let tr = pnm_cold.cost_trace().expect("pnm exposes a cost trace");
+    assert_eq!(tr.dispatches, 3, "one device dispatch per cold batch");
+    assert_eq!(tr.invocations, 1 + 16 + 64);
+    println!(
+        "pnm trace: {} dispatches, {} invocations, {} cycles, \
+         NTT utilization {:.1}%, row-hit rate {:.1}%, {:.3} J",
+        tr.dispatches,
+        tr.invocations,
+        tr.cycles,
+        100.0 * tr.ntt_utilization(),
+        100.0 * tr.row_hit_rate(),
+        tr.energy_j
+    );
+
+    let doc = Json::obj()
+        .put("bench", "backend_matrix")
+        .put("batches", Json::Arr(rows_json))
+        .put(
+            "pnm_trace",
+            Json::obj()
+                .put("dispatches", tr.dispatches)
+                .put("invocations", tr.invocations)
+                .put("cycles", tr.cycles)
+                .put("ntt_utilization", tr.ntt_utilization())
+                .put("bytes_rank", tr.profile.io_internal)
+                .put("bytes_bank", tr.profile.io_bank)
+                .put("row_hit_rate", tr.row_hit_rate())
+                .put("energy_j", tr.energy_j),
+        );
+    let path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_backend_matrix.json".to_string());
+    std::fs::write(&path, doc.render() + "\n").expect("write bench artifact");
+    println!("wrote {path}");
+}

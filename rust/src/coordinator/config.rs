@@ -12,8 +12,15 @@ pub struct ApacheConfig {
     pub host_bw: f64,
     pub dimm: DimmConfig,
     pub artifacts_dir: String,
-    /// execute the numeric hot path through PJRT artifacts
+    /// execute the numeric hot path through the runtime backend
     pub use_runtime: bool,
+    /// which [`crate::runtime::Backend`] serves the hot path:
+    /// `"reference"` (pure Rust / PJRT artifacts) or `"pnm"` (the
+    /// near-memory device model with its cycle/energy trace). The
+    /// `apache` CLI resolves precedence as `--backend` > the
+    /// `APACHE_BACKEND` environment variable (the CI matrix dimension)
+    /// > this config key.
+    pub backend: String,
     pub worker_threads: usize,
 }
 
@@ -25,6 +32,7 @@ impl Default for ApacheConfig {
             dimm: DimmConfig::paper(),
             artifacts_dir: "artifacts".into(),
             use_runtime: false,
+            backend: "reference".into(),
             worker_threads: 2,
         }
     }
@@ -35,16 +43,8 @@ impl ApacheConfig {
     /// compatibility); malformed values error.
     pub fn from_toml(text: &str) -> Result<Self> {
         let doc = toml_lite::parse(text).map_err(Error::from)?;
-        let mut cfg = ApacheConfig::default();
-        cfg.dimms = doc.get_int("system", "dimms", cfg.dimms as i64) as usize;
-        cfg.host_bw = doc.get_float("system", "host_bw_gbs", 30.0) * 1e9;
-        cfg.use_runtime = doc.get_bool("system", "use_runtime", cfg.use_runtime);
-        cfg.worker_threads =
-            doc.get_int("system", "worker_threads", cfg.worker_threads as i64) as usize;
-        cfg.artifacts_dir = doc
-            .get_str("system", "artifacts_dir", &cfg.artifacts_dir)
-            .to_string();
-        let d = &mut cfg.dimm;
+        let def = ApacheConfig::default();
+        let mut d = def.dimm.clone();
         d.ranks = doc.get_int("dimm", "ranks", d.ranks as i64) as usize;
         d.mts = doc.get_int("dimm", "mts", d.mts as i64) as u64;
         d.clock_hz = (doc.get_float("dimm", "clock_ghz", 1.0) * 1e9) as u64;
@@ -55,8 +55,26 @@ impl ApacheConfig {
         d.dual32 = doc.get_bool("dimm", "dual32", d.dual32);
         d.routine2 = doc.get_bool("dimm", "routine2", d.routine2);
         d.timing = DramTiming::ddr4_3200();
+        let cfg = ApacheConfig {
+            dimms: doc.get_int("system", "dimms", def.dimms as i64) as usize,
+            host_bw: doc.get_float("system", "host_bw_gbs", 30.0) * 1e9,
+            dimm: d,
+            artifacts_dir: doc
+                .get_str("system", "artifacts_dir", &def.artifacts_dir)
+                .to_string(),
+            use_runtime: doc.get_bool("system", "use_runtime", def.use_runtime),
+            backend: doc.get_str("system", "backend", &def.backend).to_string(),
+            worker_threads: doc.get_int("system", "worker_threads", def.worker_threads as i64)
+                as usize,
+        };
         if cfg.dimms == 0 {
             return Err(Error::new("system.dimms must be >= 1"));
+        }
+        if cfg.backend != "reference" && cfg.backend != "pnm" {
+            return Err(Error::new(format!(
+                "system.backend must be `reference` or `pnm`, got `{}`",
+                cfg.backend
+            )));
         }
         Ok(cfg)
     }
@@ -104,5 +122,15 @@ imc_ks = false
     fn defaults_on_empty() {
         let cfg = ApacheConfig::from_toml("").unwrap();
         assert_eq!(cfg.dimms, 2);
+        assert_eq!(cfg.backend, "reference");
+    }
+
+    #[test]
+    fn backend_selection_parses_and_validates() {
+        let cfg = ApacheConfig::from_toml("[system]\nbackend = \"pnm\"\n").unwrap();
+        assert_eq!(cfg.backend, "pnm");
+        let err = ApacheConfig::from_toml("[system]\nbackend = \"gpu\"\n");
+        assert!(err.is_err(), "unknown backends must be rejected");
+        assert!(err.unwrap_err().to_string().contains("backend"));
     }
 }

@@ -13,7 +13,7 @@
 use super::config::ApacheConfig;
 use super::metrics::Metrics;
 use crate::params::{CkksParams, TfheParams};
-use crate::runtime::{Invocation, Runtime};
+use crate::runtime::{CostTrace, Invocation, OpClass, Runtime};
 use crate::sched::lowering::Lowerer;
 use crate::sched::oplevel::{profile_op, OpShapes};
 use crate::sched::tasklevel::{schedule_tasks, Task};
@@ -57,7 +57,13 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(cfg: ApacheConfig) -> Self {
         let runtime = if cfg.use_runtime {
-            match Runtime::new(&cfg.artifacts_dir) {
+            let built = if cfg.backend == "reference" {
+                // the reference path may upgrade to on-disk PJRT artifacts
+                Runtime::new(&cfg.artifacts_dir)
+            } else {
+                Runtime::for_backend(&cfg.backend, &cfg.dimm)
+            };
+            match built {
                 Ok(rt) => {
                     eprintln!("[coordinator] runtime backend: {}", rt.backend_name());
                     Some(rt)
@@ -183,6 +189,7 @@ impl Coordinator {
                 }
             }
         }
+        let before = rt.cost_trace().unwrap_or_default();
         let outs = rt.execute_batch_u64(&batch);
         for (ti, span) in spans {
             let r = match results[ti].as_mut() {
@@ -202,6 +209,35 @@ impl Coordinator {
                 }
             }
         }
+        if let Some(after) = rt.cost_trace() {
+            let d = after.delta_since(&before);
+            // an empty batch never reached the device; recording its
+            // all-zero delta would skew the utilization/energy histograms
+            if d.dispatches > 0 {
+                self.record_cost(d);
+            }
+        }
+    }
+
+    /// Surface one served batch's hardware cost (the pnm backend's trace
+    /// delta) in the metrics registry: dispatch/cycle counters, bytes
+    /// moved per memory level, cycles per artifact class, utilization %
+    /// and energy.
+    fn record_cost(&self, d: CostTrace) {
+        self.metrics.incr("pnm.dispatches", d.dispatches);
+        self.metrics.incr("pnm.cycles", d.cycles);
+        self.metrics.incr("pnm.bytes_rank", d.profile.io_internal);
+        self.metrics.incr("pnm.bytes_bank", d.profile.io_bank);
+        self.metrics.incr("pnm.row_hits", d.row_hits);
+        self.metrics.incr("pnm.row_misses", d.row_misses);
+        for class in OpClass::ALL {
+            let c = d.class_cycles(class);
+            if c > 0 {
+                self.metrics.incr(&format!("pnm.cycles.{}", class.name()), c);
+            }
+        }
+        self.metrics.observe("pnm.ntt_utilization", d.ntt_utilization());
+        self.metrics.observe("pnm.energy_j", d.energy_j);
     }
 }
 
@@ -273,6 +309,38 @@ mod tests {
         }
         assert_eq!(coord.metrics.counter("runtime.invocations"), total as u64);
         assert_eq!(coord.metrics.counter("runtime.errors"), 0);
+    }
+
+    #[test]
+    fn pnm_backend_surfaces_cost_trace_metrics() {
+        let cfg = ApacheConfig {
+            backend: "pnm".into(),
+            ..Default::default()
+        };
+        let rt = Runtime::for_backend("pnm", &cfg.dimm).unwrap();
+        let coord = Coordinator::with_runtime(cfg, Some(rt));
+        let reqs: Vec<TaskRequest> = (0..4)
+            .map(|i| TaskRequest {
+                task: cmux_tree_task(&format!("t{i}"), 3),
+            })
+            .collect();
+        let results = coord.serve_batch(reqs);
+        assert_eq!(results.len(), 4);
+        for r in &results {
+            assert!(r.runtime_error.is_none(), "{:?}", r.runtime_error);
+            assert!(r.runtime_invocations > 0);
+        }
+        // the whole served batch was one device dispatch with a cost trace
+        assert_eq!(coord.metrics.counter("pnm.dispatches"), 1);
+        assert!(coord.metrics.counter("pnm.cycles") > 0);
+        assert!(coord.metrics.counter("pnm.cycles.external_product") > 0);
+        assert!(coord.metrics.counter("pnm.bytes_rank") > 0);
+        assert!(coord.metrics.percentile("pnm.energy_j", 0.5).unwrap() > 0.0);
+        // a second served batch is a second dispatch
+        coord.serve_batch(vec![TaskRequest {
+            task: cmux_tree_task("again", 3),
+        }]);
+        assert_eq!(coord.metrics.counter("pnm.dispatches"), 2);
     }
 
     #[test]

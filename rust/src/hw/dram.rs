@@ -105,9 +105,16 @@ impl Rank {
         clocks
     }
 
-    pub fn hit_rate(&self) -> f64 {
+    /// Cumulative (row hits, row misses) across this rank's banks — the
+    /// raw counters the device-model cost trace snapshots per dispatch.
+    pub fn counters(&self) -> (u64, u64) {
         let hits: u64 = self.banks.iter().map(|b| b.row_hits).sum();
         let misses: u64 = self.banks.iter().map(|b| b.row_misses).sum();
+        (hits, misses)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let (hits, misses) = self.counters();
         if hits + misses == 0 {
             return 0.0;
         }

@@ -1,7 +1,27 @@
 //! Area / thermal-design-power roll-up (Table IV, 22 nm Synopsys DC
-//! estimates reproduced as per-component constants).
+//! estimates reproduced as per-component constants), plus the dynamic
+//! energy accounting the near-memory device model accrues per dispatch.
 
 use super::DimmConfig;
+
+/// Transfer energy of one byte streamed through the rank-level NMC data
+/// buffer (order-of-magnitude DDR4 on-DIMM figure).
+pub const PJ_PER_RANK_BYTE: f64 = 6.0;
+
+/// Transfer energy of one byte of in-bank accumulation traffic (the
+/// §III-B③ key-switch adders never leave the DRAM die).
+pub const PJ_PER_BANK_BYTE: f64 = 1.2;
+
+/// Energy (joules) of one modeled device interval: the NMC module drawing
+/// its Table-IV power for `cycles` of logic time, plus per-byte transfer
+/// energy at the rank and bank levels. This is what the `PnmBackend`
+/// accrues into its cost trace on every dispatch.
+pub fn dynamic_energy_j(cfg: &DimmConfig, cycles: u64, rank_bytes: u64, bank_bytes: u64) -> f64 {
+    let logic = AreaPower::of(cfg).total_power() * cycles as f64 / cfg.clock_hz as f64;
+    logic
+        + rank_bytes as f64 * PJ_PER_RANK_BYTE * 1e-12
+        + bank_bytes as f64 * PJ_PER_BANK_BYTE * 1e-12
+}
 
 /// Per-component area (mm²) and power (W) of one NMC module.
 #[derive(Debug, Clone)]
@@ -81,6 +101,21 @@ mod tests {
             "power {}",
             ap.total_power()
         );
+    }
+
+    #[test]
+    fn dynamic_energy_scales_with_cycles_and_bytes() {
+        let cfg = DimmConfig::paper();
+        let idle = dynamic_energy_j(&cfg, 0, 0, 0);
+        assert_eq!(idle, 0.0);
+        // 1 ms of logic at ~13.14 W ≈ 13.14 mJ
+        let logic = dynamic_energy_j(&cfg, 1_000_000, 0, 0);
+        assert!((logic - 13.14e-3).abs() / 13.14e-3 < 0.05, "{logic}");
+        // byte traffic adds on top, and bank bytes are cheaper than rank
+        let rank = dynamic_energy_j(&cfg, 0, 1 << 30, 0);
+        let bank = dynamic_energy_j(&cfg, 0, 0, 1 << 30);
+        assert!(rank > bank);
+        assert!(dynamic_energy_j(&cfg, 1_000_000, 1 << 30, 1 << 30) > logic + bank);
     }
 
     #[test]

@@ -12,9 +12,10 @@
 //! * [`sched`] — the multi-scheme operator compiler: operator-level group
 //!   scheduling, task-level multi-DIMM scheduling, packing (§V).
 //! * [`runtime`] — the accelerator datapath behind a pluggable `Backend`
-//!   trait: a pure-Rust `ReferenceBackend` (hermetic default) and a PJRT
-//!   executor of AOT-compiled JAX/Pallas kernels (`artifacts/*.hlo.txt`,
-//!   feature `pjrt`).
+//!   trait: a pure-Rust `ReferenceBackend` (hermetic default), the
+//!   `PnmBackend` near-memory device model (one dispatch per batch with
+//!   a cycle/energy cost trace), and a PJRT executor of AOT-compiled
+//!   JAX/Pallas kernels (`artifacts/*.hlo.txt`, feature `pjrt`).
 //! * [`coordinator`] — the L3 leader: config, task queue, DIMM workers,
 //!   metrics, serving loop.
 //! * [`apps`] — paper benchmark workload generators (Lola-MNIST, HELR,

@@ -39,6 +39,12 @@ fn load_config(args: &Args) -> ApacheConfig {
     if args.flag("runtime") {
         cfg.use_runtime = true;
     }
+    // backend precedence: --backend > APACHE_BACKEND > config file
+    if let Some(b) = args.opt("backend") {
+        cfg.backend = b.to_string();
+    } else if let Some(b) = apache_fhe::runtime::Runtime::env_backend() {
+        cfg.backend = b;
+    }
     cfg
 }
 
@@ -136,10 +142,18 @@ fn main() {
         }
         Some("artifacts") => {
             let cfg = load_config(&args);
-            let rt = apache_fhe::runtime::Runtime::new(&cfg.artifacts_dir).unwrap_or_else(|e| {
-                eprintln!("artifacts dir unusable ({e}); using reference backend");
-                apache_fhe::runtime::Runtime::reference()
-            });
+            let rt = if cfg.backend == "reference" {
+                apache_fhe::runtime::Runtime::new(&cfg.artifacts_dir).unwrap_or_else(|e| {
+                    eprintln!("artifacts dir unusable ({e}); using reference backend");
+                    apache_fhe::runtime::Runtime::reference()
+                })
+            } else {
+                apache_fhe::runtime::Runtime::for_backend(&cfg.backend, &cfg.dimm)
+                    .unwrap_or_else(|e| {
+                        eprintln!("backend `{}` unusable ({e}); using reference", cfg.backend);
+                        apache_fhe::runtime::Runtime::reference()
+                    })
+            };
             println!("backend: {}", rt.backend_name());
             for name in rt.artifact_names() {
                 let m = &rt.manifest[&name];
@@ -152,7 +166,8 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: apache <serve|profile|inspect|area|config|baselines|artifacts> \
-                 [--config file.toml] [--dimms N] [--tasks N] [--runtime]"
+                 [--config file.toml] [--dimms N] [--tasks N] [--runtime] \
+                 [--backend reference|pnm]"
             );
             std::process::exit(2);
         }

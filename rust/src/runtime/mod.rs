@@ -12,6 +12,12 @@
 //!   pipeline routines, automorphism, pointwise mul/add) bit-for-bit via
 //!   [`crate::math::ntt`] / [`crate::math::modops`], so the cross-layer
 //!   seam is exercised hermetically on every `cargo test`.
+//! * [`PnmBackend`] — the near-memory device model (`pnm.rs`): one
+//!   device dispatch per invocation batch, partitioned across a modeled
+//!   DIMM rank topology, executing the same kernels bit-for-bit while
+//!   accruing a cycle/energy [`CostTrace`] through the `hw` model.
+//!   Selected with `backend = "pnm"` in the coordinator config or the
+//!   `APACHE_BACKEND` environment variable (the CI matrix dimension).
 //! * `PjrtBackend` (feature `pjrt`) — loads the HLO-text artifacts that
 //!   `make artifacts` produced and executes them on the PJRT CPU client;
 //!   Python never runs at request time. Requires vendoring the `xla`
@@ -19,6 +25,11 @@
 //!
 //! Future GPU/Pallas backends slot in behind the same trait.
 
+pub mod pnm;
+
+pub use pnm::{CostTrace, OpClass, PnmBackend};
+
+use crate::hw::DimmConfig;
 use crate::math::modops::{mod_add, mod_mul, ntt_primes};
 use crate::math::ntt::NttTable;
 use crate::util::error::{Context, Error, Result};
@@ -144,6 +155,12 @@ pub fn builtin_manifest() -> Vec<ArtifactMeta> {
 pub struct Invocation {
     pub artifact: String,
     pub inputs: Vec<Arc<Vec<u64>>>,
+    /// Operand-pool id stamped by `sched::lowering`: invocations in one
+    /// §V-B key cluster share an id, and placement-aware backends (the
+    /// pnm rank partitioner) keep a pool on one device partition. `None`
+    /// for hand-built invocations — backends then fall back to operand
+    /// identity.
+    pub pool: Option<u64>,
 }
 
 impl Invocation {
@@ -151,6 +168,7 @@ impl Invocation {
         Invocation {
             artifact: artifact.into(),
             inputs,
+            pool: None,
         }
     }
 
@@ -159,16 +177,26 @@ impl Invocation {
         Invocation {
             artifact: artifact.into(),
             inputs: inputs.into_iter().map(Arc::new).collect(),
+            pool: None,
         }
+    }
+
+    /// Tag with an operand-pool id (see [`Invocation::pool`]).
+    pub fn with_pool(mut self, pool: u64) -> Self {
+        self.pool = Some(pool);
+        self
     }
 }
 
 /// A resolved batch entry handed to [`Backend::execute_batch`]: manifest
 /// metadata plus `Arc`-shared operands, arity/shape-validated up front by
 /// [`Runtime::execute_batch_u64`].
+#[derive(Clone, Copy)]
 pub struct BatchItem<'a> {
     pub meta: &'a ArtifactMeta,
     pub inputs: &'a [Arc<Vec<u64>>],
+    /// see [`Invocation::pool`]
+    pub pool: Option<u64>,
 }
 
 /// An execution engine for manifest artifacts. Implementations receive
@@ -192,6 +220,13 @@ pub trait Backend {
                 self.execute_u64(it.meta, &refs)
             })
             .collect()
+    }
+
+    /// Cumulative hardware cost accrued by this backend, if it models
+    /// one. The default (reference/PJRT execution) has no device model
+    /// and returns `None`; the pnm backend returns its [`CostTrace`].
+    fn cost_trace(&self) -> Option<CostTrace> {
+        None
     }
 }
 
@@ -483,7 +518,7 @@ impl Backend for ReferenceBackend {
         if workers <= 1 {
             return self.exec_chunk(items);
         }
-        let chunk = (items.len() + workers - 1) / workers;
+        let chunk = items.len().div_ceil(workers);
         std::thread::scope(|s| {
             let handles: Vec<_> = items
                 .chunks(chunk)
@@ -619,6 +654,33 @@ impl Runtime {
         Self::from_parts(builtin_manifest(), Box::new(ReferenceBackend::new()))
     }
 
+    /// Construct the runtime for a named backend: `reference` (pure
+    /// Rust) or `pnm` (the near-memory device model over the same
+    /// kernels, parameterized by the DIMM configuration).
+    pub fn for_backend(name: &str, dimm: &DimmConfig) -> Result<Self> {
+        match name {
+            "reference" => Ok(Self::reference()),
+            "pnm" => Ok(Self::from_parts(
+                builtin_manifest(),
+                Box::new(PnmBackend::new(dimm.clone())),
+            )),
+            other => Err(Error::new(format!(
+                "unknown backend `{other}` (expected `reference` or `pnm`)"
+            ))),
+        }
+    }
+
+    /// Backend override from the `APACHE_BACKEND` environment variable —
+    /// the CI matrix dimension. `None` when unset or empty.
+    pub fn env_backend() -> Option<String> {
+        std::env::var("APACHE_BACKEND").ok().filter(|s| !s.is_empty())
+    }
+
+    /// The backend's cumulative hardware cost trace, when it models one.
+    pub fn cost_trace(&self) -> Option<CostTrace> {
+        self.backend.cost_trace()
+    }
+
     /// Assemble from explicit parts (tests, future backends).
     pub fn from_parts(metas: Vec<ArtifactMeta>, backend: Box<dyn Backend>) -> Self {
         Runtime {
@@ -696,6 +758,7 @@ impl Runtime {
                     items.push(BatchItem {
                         meta,
                         inputs: &inv.inputs,
+                        pool: inv.pool,
                     });
                     slots.push(None);
                 }
@@ -919,8 +982,8 @@ mod tests {
             Invocation::from_owned("dbl", vec![vec![5, 6, 7, 8]]),
         ];
         let outs = rt.execute_batch_u64(&invs);
-        assert_eq!(outs[0].as_ref().unwrap(), &vec![2, 4, 6, 8]);
+        assert_eq!(outs[0].as_ref().unwrap().as_slice(), &[2, 4, 6, 8]);
         assert!(outs[1].is_err());
-        assert_eq!(outs[2].as_ref().unwrap(), &vec![10, 12, 14, 16]);
+        assert_eq!(outs[2].as_ref().unwrap().as_slice(), &[10, 12, 14, 16]);
     }
 }

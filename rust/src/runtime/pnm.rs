@@ -1,0 +1,654 @@
+//! Near-memory device-model backend: the second consumer of
+//! [`Backend::execute_batch`], standing in for the paper's DIMM datapath
+//! (§III–§IV) the way the `ReferenceBackend` stands in for PJRT.
+//!
+//! Each invocation batch is **one device dispatch**: the backend
+//! partitions the batch across a modeled DIMM topology (rank-level FU
+//! clusters from [`crate::hw`]), executes the same
+//! [`crate::math::ntt`]/[`crate::math::modops`] kernels per partition —
+//! bit-identical to the reference backend because the numerics *are* the
+//! reference kernels — and advances the hardware model alongside:
+//! pipelined FU occupancy through [`Interconnect`], DRAM row-buffer
+//! behaviour through [`Rank`], and dynamic energy through
+//! [`energy::dynamic_energy_j`]. The accrued [`CostTrace`] is what the
+//! coordinator surfaces as `pnm.*` metrics and what calibrated the
+//! `decomp_pass` overlap constant
+//! ([`crate::hw::fu::DECOMP_NTT_OVERLAP_CYCLES`]).
+//!
+//! Placement: invocations sharing an operand pool (the `pool` id stamped
+//! by `sched::lowering`, which assigns one id per (ring, evk identity)
+//! cluster — §V-B) land on the same rank, so a key's rows stream into one
+//! rank's row buffers and the scheduler's key-cluster ordering turns into
+//! DRAM row hits instead of ping-ponging across ranks.
+
+use crate::hw::dram::Rank;
+use crate::hw::energy;
+use crate::hw::{DimmConfig, ImcKs, Interconnect, OpProfile};
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::{ArtifactMeta, Backend, BatchItem, ReferenceBackend};
+
+/// Banks per modeled rank (matches [`DimmConfig::bank_bw`]).
+const BANKS_PER_RANK: usize = 16;
+/// Row-buffer bytes per bank (8 KB typical DDR4).
+const ROW_BYTES: u64 = 8192;
+
+/// Artifact classes the cost trace attributes cycles to — one per
+/// manifest operator family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    NttFwd,
+    NttInv,
+    ExternalProduct,
+    Routine1,
+    Routine2,
+    Automorph,
+    PointwiseMul,
+    PointwiseAdd,
+    Other,
+}
+
+impl OpClass {
+    pub const COUNT: usize = 9;
+    pub const ALL: [OpClass; Self::COUNT] = [
+        OpClass::NttFwd,
+        OpClass::NttInv,
+        OpClass::ExternalProduct,
+        OpClass::Routine1,
+        OpClass::Routine2,
+        OpClass::Automorph,
+        OpClass::PointwiseMul,
+        OpClass::PointwiseAdd,
+        OpClass::Other,
+    ];
+
+    /// Classify a manifest artifact by its name prefix (the same
+    /// dispatch rule the reference backend executes by).
+    pub fn of(artifact: &str) -> OpClass {
+        if artifact.starts_with("ntt_fwd") {
+            OpClass::NttFwd
+        } else if artifact.starts_with("ntt_inv") {
+            OpClass::NttInv
+        } else if artifact.starts_with("external_product") {
+            OpClass::ExternalProduct
+        } else if artifact.starts_with("routine1") {
+            OpClass::Routine1
+        } else if artifact.starts_with("routine2") {
+            OpClass::Routine2
+        } else if artifact.starts_with("automorph") {
+            OpClass::Automorph
+        } else if artifact.starts_with("pointwise_mul") {
+            OpClass::PointwiseMul
+        } else if artifact.starts_with("pointwise_add") {
+            OpClass::PointwiseAdd
+        } else {
+            OpClass::Other
+        }
+    }
+
+    pub fn index(self) -> usize {
+        Self::ALL.iter().position(|c| *c == self).expect("in ALL")
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::NttFwd => "ntt_fwd",
+            OpClass::NttInv => "ntt_inv",
+            OpClass::ExternalProduct => "external_product",
+            OpClass::Routine1 => "routine1",
+            OpClass::Routine2 => "routine2",
+            OpClass::Automorph => "automorph",
+            OpClass::PointwiseMul => "pointwise_mul",
+            OpClass::PointwiseAdd => "pointwise_add",
+            OpClass::Other => "other",
+        }
+    }
+}
+
+/// Cumulative hardware cost accrued by a [`PnmBackend`]: one entry per
+/// quantity the coordinator reports. All counters are monotone; take a
+/// snapshot before and after a dispatch and [`CostTrace::delta_since`]
+/// yields that batch's cost.
+#[derive(Debug, Clone, Default)]
+pub struct CostTrace {
+    /// device dispatches issued (exactly one per non-empty batch)
+    pub dispatches: u64,
+    /// invocations executed across all dispatches
+    pub invocations: u64,
+    /// modeled device cycles on the critical path: ranks run in
+    /// parallel, so each dispatch contributes its slowest rank partition
+    pub cycles: u64,
+    /// per-FU busy cycles and bytes moved, summed over all invocations
+    /// (`io_internal` = rank-level stream bytes, `io_bank` = in-bank
+    /// key-switch traffic)
+    pub profile: OpProfile,
+    /// critical-path cycles attributed per artifact class
+    pub cycles_by_class: [u64; OpClass::COUNT],
+    /// modeled rank-level FU clusters (the parallelism denominator for
+    /// utilization)
+    pub fu_clusters: u64,
+    /// cumulative DRAM row-buffer hits/misses across all modeled ranks
+    pub row_hits: u64,
+    pub row_misses: u64,
+    /// accrued dynamic energy (joules) via [`energy::dynamic_energy_j`]
+    pub energy_j: f64,
+}
+
+impl CostTrace {
+    /// NTT-FU utilization: busy cycles over the critical-path cycles of
+    /// every rank cluster (the Eq. (8)/(9) numerator/denominator shape).
+    pub fn ntt_utilization(&self) -> f64 {
+        if self.cycles == 0 || self.fu_clusters == 0 {
+            return 0.0;
+        }
+        self.profile.ntt_busy as f64 / (self.cycles * self.fu_clusters) as f64
+    }
+
+    pub fn row_hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.row_hits as f64 / total as f64
+    }
+
+    pub fn class_cycles(&self, class: OpClass) -> u64 {
+        self.cycles_by_class[class.index()]
+    }
+
+    /// The cost accrued since `prev` was snapshotted (both from the same
+    /// backend; counters are monotone).
+    pub fn delta_since(&self, prev: &CostTrace) -> CostTrace {
+        let mut d = CostTrace {
+            dispatches: self.dispatches.saturating_sub(prev.dispatches),
+            invocations: self.invocations.saturating_sub(prev.invocations),
+            cycles: self.cycles.saturating_sub(prev.cycles),
+            profile: OpProfile {
+                name: self.profile.name.clone(),
+                cycles: self.profile.cycles.saturating_sub(prev.profile.cycles),
+                ntt_busy: self.profile.ntt_busy.saturating_sub(prev.profile.ntt_busy),
+                mmult_busy: self.profile.mmult_busy.saturating_sub(prev.profile.mmult_busy),
+                madd_busy: self.profile.madd_busy.saturating_sub(prev.profile.madd_busy),
+                auto_busy: self.profile.auto_busy.saturating_sub(prev.profile.auto_busy),
+                decomp_busy: self.profile.decomp_busy.saturating_sub(prev.profile.decomp_busy),
+                io_external: self.profile.io_external.saturating_sub(prev.profile.io_external),
+                io_internal: self.profile.io_internal.saturating_sub(prev.profile.io_internal),
+                io_bank: self.profile.io_bank.saturating_sub(prev.profile.io_bank),
+            },
+            cycles_by_class: [0; OpClass::COUNT],
+            fu_clusters: self.fu_clusters,
+            row_hits: self.row_hits.saturating_sub(prev.row_hits),
+            row_misses: self.row_misses.saturating_sub(prev.row_misses),
+            energy_j: (self.energy_j - prev.energy_j).max(0.0),
+        };
+        for (i, slot) in d.cycles_by_class.iter_mut().enumerate() {
+            *slot = self.cycles_by_class[i].saturating_sub(prev.cycles_by_class[i]);
+        }
+        d
+    }
+}
+
+/// The near-memory device-model backend. Numerics delegate to an inner
+/// [`ReferenceBackend`] (bit-identity by construction); the surrounding
+/// machinery models where those numerics would run on the DIMM and what
+/// they would cost.
+pub struct PnmBackend {
+    inner: ReferenceBackend,
+    cfg: DimmConfig,
+    ic: Interconnect,
+    /// §III-B③ in-memory KS adders: when enabled, routine2-class traffic
+    /// (the PubKS/PrivKS lowering target) is charged at bank level
+    imc_ks: bool,
+    /// persistent per-rank bank state, so row-buffer locality spans
+    /// dispatches the way an open row would
+    ranks: Mutex<Vec<Rank>>,
+    trace: Mutex<CostTrace>,
+}
+
+impl PnmBackend {
+    pub fn new(cfg: DimmConfig) -> Self {
+        let nranks = cfg.ranks.max(1);
+        let ranks = vec![Rank::new(BANKS_PER_RANK, ROW_BYTES); nranks];
+        PnmBackend {
+            inner: ReferenceBackend::new(),
+            ic: Interconnect::from_config(&cfg),
+            imc_ks: ImcKs::from_config(&cfg).enabled,
+            ranks: Mutex::new(ranks),
+            trace: Mutex::new(CostTrace {
+                fu_clusters: nranks as u64,
+                ..Default::default()
+            }),
+            cfg,
+        }
+    }
+
+    /// The paper's Table-III DIMM.
+    pub fn paper() -> Self {
+        Self::new(DimmConfig::paper())
+    }
+
+    /// Snapshot of the cumulative cost trace.
+    pub fn trace(&self) -> CostTrace {
+        self.trace.lock().unwrap().clone()
+    }
+
+    /// Rank placement for a batch: items sharing an operand pool (the
+    /// lowering-stamped `pool` id, else the identity of their largest
+    /// operand) are placed on the same rank; distinct pools round-robin
+    /// across ranks in first-appearance order. Deterministic given the
+    /// batch order the scheduler produced.
+    pub fn placement(&self, items: &[BatchItem<'_>]) -> Vec<usize> {
+        let nranks = self.cfg.ranks.max(1);
+        let mut by_pool: HashMap<u64, usize> = HashMap::new();
+        let mut next = 0usize;
+        items
+            .iter()
+            .map(|it| {
+                *by_pool.entry(Self::pool_key(it)).or_insert_with(|| {
+                    let r = next % nranks;
+                    next += 1;
+                    r
+                })
+            })
+            .collect()
+    }
+
+    fn pool_key(item: &BatchItem<'_>) -> u64 {
+        if let Some(p) = item.pool {
+            return p;
+        }
+        // untagged invocations pool by the identity of their largest
+        // operand — the evk-style rows / twiddle tables that define reuse
+        let largest = item.inputs.iter().max_by_key(|a| a.len());
+        largest.map(|a| a.as_ptr() as u64).unwrap_or(0)
+    }
+
+    /// Advance the device model for one invocation placed on `rank`:
+    /// FU occupancy for the compute, row-buffer-aware streaming for the
+    /// operands, overlap of the two on the critical path.
+    fn account(
+        &self,
+        meta: &ArtifactMeta,
+        operands: &[(u64, usize)],
+        rank: &mut Rank,
+    ) -> (OpProfile, OpClass) {
+        let class = OpClass::of(&meta.name);
+        let (rows, n) = match meta.shapes.first() {
+            Some(s) if s.len() == 2 => (s[0] as u64, s[1] as u64),
+            Some(s) => (1, s.iter().product::<usize>() as u64),
+            None => (1, 0),
+        };
+        let elems = rows * n;
+        let ic = &self.ic;
+        let mut p = OpProfile {
+            name: meta.name.clone(),
+            ..Default::default()
+        };
+        match class {
+            OpClass::NttFwd | OpClass::NttInv => {
+                let c = ic.ntt.ntt_cycles(n.max(2), ic.width) * rows;
+                p.cycles += c;
+                p.ntt_busy += c;
+            }
+            OpClass::ExternalProduct => {
+                // Fig. 9: decompose (hidden in the fill) → per-row NTT
+                // feeding MMult/MAdd (R1) → two output INTTs (b, a)
+                ic.decomp_pass(&mut p, elems);
+                ic.r1_pass(&mut p, rows, n.max(2));
+                let c = ic.ntt.ntt_cycles(n.max(2), ic.width) * 2;
+                p.cycles += c;
+                p.ntt_busy += c;
+            }
+            OpClass::Routine1 => ic.r1_pass(&mut p, rows, n.max(2)),
+            OpClass::Routine2 | OpClass::Other => ic.r2_pass(&mut p, elems),
+            OpClass::Automorph => ic.auto_pass(&mut p, elems),
+            OpClass::PointwiseMul => {
+                let c = ic.mmult.cycles(elems, ic.width);
+                p.cycles += c;
+                p.mmult_busy += c;
+            }
+            OpClass::PointwiseAdd => {
+                let c = ic.madd.cycles(elems, ic.width);
+                p.cycles += c;
+                p.madd_busy += c;
+            }
+        }
+        // operand streaming through this rank's banks: operand identity
+        // doubles as the address, so a pool's shared rows re-open the
+        // same DRAM rows (the locality the placement exists to create)
+        let mut mem_clocks = 0u64;
+        let mut bytes = 0u64;
+        for &(addr, len) in operands {
+            let b = (len * 8) as u64;
+            mem_clocks += rank.stream(addr, b, &self.cfg.timing);
+            bytes += b;
+        }
+        // result write-back: counted as traffic; writes combine at burst
+        // rate without re-opening operand rows
+        bytes += match class {
+            OpClass::ExternalProduct => 2 * n * 8,
+            _ => elems * 8,
+        };
+        if self.imc_ks && class == OpClass::Routine2 {
+            p.io_bank += bytes;
+        } else {
+            p.io_internal += bytes;
+        }
+        // memory clocks → NMC cycles; streaming overlaps compute, so the
+        // critical path is the slower of the two
+        let mem_cycles =
+            mem_clocks * self.cfg.clock_hz / (self.cfg.timing.clock_mhz * 1_000_000);
+        p.cycles = p.cycles.max(mem_cycles);
+        (p, class)
+    }
+
+    /// Fold one dispatch's partition profiles into the cumulative trace.
+    fn accrue(
+        &self,
+        per_rank_cycles: &[u64],
+        total: OpProfile,
+        by_class: [u64; OpClass::COUNT],
+        invocations: u64,
+    ) {
+        let device_cycles = per_rank_cycles.iter().copied().max().unwrap_or(0);
+        let (hits, misses) = {
+            let ranks = self.ranks.lock().unwrap();
+            ranks.iter().fold((0u64, 0u64), |(h, m), r| {
+                let (rh, rm) = r.counters();
+                (h + rh, m + rm)
+            })
+        };
+        let energy =
+            energy::dynamic_energy_j(&self.cfg, device_cycles, total.io_internal, total.io_bank);
+        let mut tr = self.trace.lock().unwrap();
+        tr.dispatches += 1;
+        tr.invocations += invocations;
+        tr.cycles += device_cycles;
+        tr.energy_j += energy;
+        tr.profile.absorb(&total, 1);
+        for (slot, c) in tr.cycles_by_class.iter_mut().zip(by_class) {
+            *slot += c;
+        }
+        tr.row_hits = hits;
+        tr.row_misses = misses;
+    }
+}
+
+impl Backend for PnmBackend {
+    fn name(&self) -> &'static str {
+        "pnm"
+    }
+
+    fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[&[u64]]) -> Result<Vec<u64>> {
+        // a lone invocation is still one device dispatch, on rank 0
+        let operands: Vec<(u64, usize)> = inputs
+            .iter()
+            .map(|s| (s.as_ptr() as u64, s.len()))
+            .collect();
+        let (p, class) = {
+            let mut ranks = self.ranks.lock().unwrap();
+            self.account(meta, &operands, &mut ranks[0])
+        };
+        let cycles = p.cycles;
+        let mut by_class = [0u64; OpClass::COUNT];
+        by_class[class.index()] = cycles;
+        self.accrue(&[cycles], p, by_class, 1);
+        self.inner.execute_u64(meta, inputs)
+    }
+
+    /// One device dispatch for the whole batch: partition across ranks by
+    /// operand pool, execute every partition's kernels on its own scoped
+    /// thread (rank parallelism), and advance the cost model. Item order
+    /// is preserved; a failed item only fails its own slot.
+    fn execute_batch(&self, items: &[BatchItem<'_>]) -> Vec<Result<Vec<u64>>> {
+        if items.is_empty() {
+            return Vec::new();
+        }
+        let nranks = self.cfg.ranks.max(1);
+        let placement = self.placement(items);
+        let mut parts: Vec<Vec<usize>> = vec![Vec::new(); nranks];
+        for (i, &r) in placement.iter().enumerate() {
+            parts[r].push(i);
+        }
+        // only occupied ranks get a worker — a small batch must not pay
+        // spawn/join for ranks it never touches
+        let occupied: Vec<usize> = (0..nranks).filter(|&r| !parts[r].is_empty()).collect();
+        let part_items: Vec<Vec<BatchItem<'_>>> = occupied
+            .iter()
+            .map(|&r| parts[r].iter().map(|&i| items[i]).collect())
+            .collect();
+        // numerics: the reference kernels, one worker per occupied rank
+        // (a single-partition batch executes inline)
+        let part_outs: Vec<Vec<Result<Vec<u64>>>> = if part_items.len() <= 1 {
+            part_items.iter().map(|c| self.inner.exec_chunk(c)).collect()
+        } else {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = part_items
+                    .iter()
+                    .map(|chunk| s.spawn(move || self.inner.exec_chunk(chunk)))
+                    .collect();
+                handles
+                    .into_iter()
+                    .zip(&part_items)
+                    .map(|(h, chunk)| {
+                        h.join().unwrap_or_else(|_| {
+                            chunk
+                                .iter()
+                                .map(|it| {
+                                    Err(Error::new(format!(
+                                        "{}: pnm rank worker panicked",
+                                        it.meta.name
+                                    )))
+                                })
+                                .collect()
+                        })
+                    })
+                    .collect()
+            })
+        };
+        // device model: per-rank serial occupancy, ranks in parallel
+        let mut per_rank_cycles = vec![0u64; nranks];
+        let mut total = OpProfile::default();
+        let mut by_class = [0u64; OpClass::COUNT];
+        {
+            let mut ranks = self.ranks.lock().unwrap();
+            for (r, ixs) in parts.iter().enumerate() {
+                for &i in ixs {
+                    let inputs = items[i].inputs;
+                    let operands: Vec<(u64, usize)> = inputs
+                        .iter()
+                        .map(|a| (a.as_ptr() as u64, a.len()))
+                        .collect();
+                    let (p, class) = self.account(items[i].meta, &operands, &mut ranks[r]);
+                    per_rank_cycles[r] += p.cycles;
+                    by_class[class.index()] += p.cycles;
+                    total.absorb(&p, 1);
+                }
+            }
+        }
+        self.accrue(&per_rank_cycles, total, by_class, items.len() as u64);
+        // scatter partition results back into batch order
+        let mut slots: Vec<Option<Result<Vec<u64>>>> = items.iter().map(|_| None).collect();
+        for (&r, outs) in occupied.iter().zip(part_outs) {
+            for (&i, out) in parts[r].iter().zip(outs) {
+                slots[i] = Some(out);
+            }
+        }
+        slots
+            .into_iter()
+            .map(|s| s.unwrap_or_else(|| Err(Error::new("pnm: missing partition result"))))
+            .collect()
+    }
+
+    fn cost_trace(&self) -> Option<CostTrace> {
+        Some(self.trace())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::math::modops::ntt_primes;
+    use crate::math::ntt::NttTable;
+    use crate::math::sampler::Rng;
+    use crate::runtime::{builtin_manifest, Invocation, Runtime};
+    use std::sync::Arc;
+
+    use super::*;
+
+    fn pnm_runtime() -> Runtime {
+        Runtime::from_parts(builtin_manifest(), Box::new(PnmBackend::paper()))
+    }
+
+    fn routine2_invs(count: usize, seed: u64) -> Vec<Invocation> {
+        let q = ntt_primes(31, 512, 1)[0];
+        let mut rng = Rng::seeded(seed);
+        let mut gen = || -> Vec<u64> { (0..14 * 256).map(|_| rng.uniform(q)).collect() };
+        (0..count)
+            .map(|_| Invocation::from_owned("routine2_n256", vec![gen(), gen(), gen()]))
+            .collect()
+    }
+
+    #[test]
+    fn one_dispatch_per_batch_and_per_single_call() {
+        let rt = pnm_runtime();
+        assert_eq!(rt.backend_name(), "pnm");
+        let tr0 = rt.cost_trace().unwrap();
+        assert_eq!(tr0.dispatches, 0);
+        let outs = rt.execute_batch_u64(&routine2_invs(8, 3));
+        assert!(outs.iter().all(|r| r.is_ok()));
+        let tr1 = rt.cost_trace().unwrap();
+        assert_eq!(tr1.dispatches, 1, "a batch is one device dispatch");
+        assert_eq!(tr1.invocations, 8);
+        let single = routine2_invs(1, 4).remove(0);
+        let owned: Vec<Vec<u64>> = single.inputs.iter().map(|a| a.as_ref().clone()).collect();
+        rt.execute_u64("routine2_n256", &owned).unwrap();
+        let tr2 = rt.cost_trace().unwrap();
+        assert_eq!(tr2.dispatches, 2);
+        assert_eq!(tr2.invocations, 9);
+        assert!(tr2.cycles > tr1.cycles);
+        assert!(tr2.energy_j > tr1.energy_j);
+    }
+
+    #[test]
+    fn trace_attributes_cycles_and_bytes_per_class() {
+        let rt = pnm_runtime();
+        rt.execute_batch_u64(&routine2_invs(4, 5));
+        let tr = rt.cost_trace().unwrap();
+        assert!(tr.class_cycles(OpClass::Routine2) > 0);
+        assert_eq!(tr.class_cycles(OpClass::NttFwd), 0);
+        // paper config has IMC KS adders on: routine2 traffic is bank-level
+        assert!(tr.profile.io_bank > 0, "R2 pools stream at bank level");
+        assert!(tr.row_hits + tr.row_misses > 0);
+        let d = tr.delta_since(&CostTrace::default());
+        assert_eq!(d.dispatches, tr.dispatches);
+        assert_eq!(d.cycles, tr.cycles);
+    }
+
+    #[test]
+    fn pool_tagged_items_share_a_rank() {
+        let backend = PnmBackend::paper();
+        let manifest = builtin_manifest();
+        let meta = manifest.iter().find(|m| m.name == "routine2_n256").unwrap();
+        let d: Arc<Vec<u64>> = Arc::new(vec![1u64; 14 * 256]);
+        let invs: Vec<Invocation> = (0..6)
+            .map(|i| {
+                Invocation::new("routine2_n256", vec![d.clone(), d.clone(), d.clone()])
+                    .with_pool((i / 2) as u64)
+            })
+            .collect();
+        let items: Vec<BatchItem<'_>> = invs
+            .iter()
+            .map(|inv| BatchItem {
+                meta,
+                inputs: &inv.inputs,
+                pool: inv.pool,
+            })
+            .collect();
+        let ranks = backend.placement(&items);
+        assert_eq!(ranks[0], ranks[1], "pool 0 stays on one rank");
+        assert_eq!(ranks[2], ranks[3]);
+        assert_eq!(ranks[4], ranks[5]);
+        assert_ne!(ranks[0], ranks[2], "distinct pools round-robin");
+        assert_ne!(ranks[2], ranks[4]);
+    }
+
+    #[test]
+    fn shared_pool_streaming_earns_row_hits() {
+        // the same key rows streamed twice on one rank re-open the same
+        // DRAM rows: hit rate must exceed a pool-scattered layout's
+        let backend = PnmBackend::paper();
+        let manifest = builtin_manifest();
+        let meta = manifest.iter().find(|m| m.name == "routine2_n256").unwrap();
+        let k: Arc<Vec<u64>> = Arc::new(vec![2u64; 14 * 256]);
+        let invs: Vec<Invocation> = (0..8)
+            .map(|_| {
+                Invocation::new("routine2_n256", vec![k.clone(), k.clone(), k.clone()])
+                    .with_pool(7)
+            })
+            .collect();
+        let items: Vec<BatchItem<'_>> = invs
+            .iter()
+            .map(|inv| BatchItem {
+                meta,
+                inputs: &inv.inputs,
+                pool: inv.pool,
+            })
+            .collect();
+        for out in backend.execute_batch(&items) {
+            out.unwrap();
+        }
+        let tr = backend.trace();
+        assert!(
+            tr.row_hit_rate() > 0.5,
+            "shared rows must hit the row buffer: {}",
+            tr.row_hit_rate()
+        );
+    }
+
+    #[test]
+    fn pnm_matches_reference_on_an_ntt_batch() {
+        let pnm = pnm_runtime();
+        let reference = Runtime::reference();
+        let n = 256usize;
+        let q = reference.manifest["ntt_fwd_n256"].modulus;
+        let table = NttTable::new(n, q);
+        let tw = Arc::new(table.forward_twiddles().to_vec());
+        let mut rng = Rng::seeded(6);
+        let invs: Vec<Invocation> = (0..5)
+            .map(|_| {
+                let data: Arc<Vec<u64>> = Arc::new((0..14 * n).map(|_| rng.uniform(q)).collect());
+                Invocation::new("ntt_fwd_n256", vec![data, tw.clone()])
+            })
+            .collect();
+        let a = pnm.execute_batch_u64(&invs);
+        let b = reference.execute_batch_u64(&invs);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.as_ref().unwrap(), y.as_ref().unwrap());
+        }
+        let tr = pnm.cost_trace().unwrap();
+        assert!(tr.class_cycles(OpClass::NttFwd) > 0);
+        assert!(tr.ntt_utilization() > 0.0);
+        assert!(tr.profile.io_internal > 0, "NTT traffic is rank-level");
+    }
+
+    #[test]
+    fn failed_items_fail_in_their_slot() {
+        let rt = pnm_runtime();
+        let mut invs = routine2_invs(2, 9);
+        let unknown = Invocation::from_owned("no_such_artifact", vec![vec![0; 4]]);
+        invs.insert(1, unknown);
+        let misshaped = Invocation::from_owned("routine2_n256", vec![vec![0; 3]; 3]);
+        invs.push(misshaped);
+        let outs = rt.execute_batch_u64(&invs);
+        assert!(outs[0].is_ok());
+        assert!(outs[1].is_err());
+        assert!(outs[2].is_ok());
+        assert!(outs[3].is_err());
+        // invalid items never reached the device: 2 modeled invocations
+        let tr = rt.cost_trace().unwrap();
+        assert_eq!(tr.dispatches, 1);
+        assert_eq!(tr.invocations, 2);
+    }
+}

@@ -100,11 +100,24 @@ impl RingOperands {
 pub struct Lowerer {
     rings: HashMap<usize, RingOperands>,
     ring_choice: HashMap<usize, usize>,
+    /// operand-pool ids, one per (ring, key identity): the §V-B cluster
+    /// tag stamped onto every lowered invocation so placement-aware
+    /// backends (the pnm rank partitioner) keep a cluster's invocations
+    /// — and therefore its shared evk rows — on one device partition
+    pools: HashMap<(usize, i64), u64>,
 }
 
 impl Lowerer {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// The stable pool id for ops on `ring` sharing `key_id` (keyless
+    /// ops share one anonymous pool per ring).
+    fn pool_for(&mut self, ring: usize, key_id: Option<u32>) -> u64 {
+        let id = key_id.map(|k| k as i64).unwrap_or(-1);
+        let next = self.pools.len() as u64;
+        *self.pools.entry((ring, id)).or_insert(next)
     }
 
     /// Ring sizes the manifest can execute (an `ntt_fwd_n*` entry marks a
@@ -138,7 +151,7 @@ impl Lowerer {
     }
 
     fn operands(&mut self, ring: usize, rt: &Runtime) -> Result<&mut RingOperands> {
-        if !self.rings.contains_key(&ring) {
+        if let std::collections::hash_map::Entry::Vacant(slot) = self.rings.entry(ring) {
             let meta = rt
                 .manifest
                 .get(&format!("ntt_fwd_n{ring}"))
@@ -149,8 +162,7 @@ impl Lowerer {
                     meta.shapes[0]
                 )));
             }
-            let operands = RingOperands::new(ring, meta.shapes[0][0], meta.modulus);
-            self.rings.insert(ring, operands);
+            slot.insert(RingOperands::new(ring, meta.shapes[0][0], meta.modulus));
         }
         Ok(self.rings.get_mut(&ring).expect("just inserted"))
     }
@@ -173,6 +185,7 @@ impl Lowerer {
             _ => shapes.ckks.n,
         };
         let ring = self.ring_for(want, rt)?;
+        let pool = self.pool_for(ring, key_id);
         let ops = self.operands(ring, rt)?;
         // evk-style pools are only materialized for ops that consume them
         // (role 1, the RGSW a-rows, only feeds the external product)
@@ -240,7 +253,7 @@ impl Lowerer {
             || Invocation::new(art("pointwise_mul"), vec![ops.poly.clone(), ops.poly.clone()]);
         let pointwise_add =
             || Invocation::new(art("pointwise_add"), vec![ops.poly.clone(), ops.poly.clone()]);
-        Ok(match op {
+        let invs = match op {
             FheOp::HAdd => vec![pointwise_add()],
             FheOp::PMult => vec![pointwise_mul()],
             // Moddown INTT + scale by q_l^{-1}
@@ -266,7 +279,10 @@ impl Lowerer {
             FheOp::CircuitBootstrap => vec![external_product(), routine1(), routine2()],
             // linear pre-combination + one gate-bootstrap CMUX step
             FheOp::HomGate => vec![pointwise_add(), external_product()],
-        })
+        };
+        // stamp the cluster's operand-pool id: the placement contract
+        // between the scheduler's key-cluster ordering and the backend
+        Ok(invs.into_iter().map(|inv| inv.with_pool(pool)).collect())
     }
 
     /// Lower a whole task graph, level by level with same-key operators
@@ -361,6 +377,25 @@ mod tests {
         assert!(!Arc::ptr_eq(&a[0].inputs[1], &c[0].inputs[1]));
         // twiddles are ring-wide shared regardless of key
         assert!(Arc::ptr_eq(&a[0].inputs[3], &c[0].inputs[3]));
+    }
+
+    #[test]
+    fn invocations_carry_cluster_pool_ids() {
+        let rt = Runtime::reference();
+        let s = shapes();
+        let mut low = Lowerer::new();
+        let a = low.lower_op(FheOp::Cmux, Some(9), &s, &rt).unwrap();
+        let b = low.lower_op(FheOp::Cmux, Some(9), &s, &rt).unwrap();
+        let c = low.lower_op(FheOp::Cmux, Some(10), &s, &rt).unwrap();
+        let d = low.lower_op(FheOp::HAdd, None, &s, &rt).unwrap();
+        // every lowered invocation is pool-tagged
+        for inv in a.iter().chain(&b).chain(&c).chain(&d) {
+            assert!(inv.pool.is_some(), "{}: untagged", inv.artifact);
+        }
+        // same (ring, key) cluster → same pool; different key or ring → not
+        assert_eq!(a[0].pool, b[0].pool);
+        assert_ne!(a[0].pool, c[0].pool);
+        assert_ne!(a[0].pool, d[0].pool);
     }
 
     #[test]

@@ -3,19 +3,28 @@
 //! the Rust functional library on the same primes and twiddle layout.
 //! This is the integration seam of the whole three-layer architecture,
 //! and it runs on every plain `cargo test` — no artifacts required.
+//!
+//! The `APACHE_BACKEND` environment variable swaps the backend under
+//! test (`reference` | `pnm`) — the CI matrix runs this suite once per
+//! backend, so every assertion below doubles as a bit-identity check on
+//! the near-memory device model.
 
+use apache_fhe::hw::DimmConfig;
 use apache_fhe::math::automorph::galois_eval_map;
 use apache_fhe::math::modops::ntt_primes;
 use apache_fhe::math::ntt::NttTable;
 use apache_fhe::math::sampler::Rng;
-use apache_fhe::runtime::Runtime;
+use apache_fhe::runtime::{ArtifactMeta, Invocation, Runtime};
 
-/// On-disk artifacts when built with `--features pjrt` after
-/// `make artifacts`; the hermetic reference runtime otherwise. Never
-/// skips.
+/// The backend named by `APACHE_BACKEND` when set; otherwise on-disk
+/// artifacts when built with `--features pjrt` after `make artifacts`,
+/// and the hermetic reference runtime in every other case. Never skips.
 fn runtime() -> Runtime {
-    let dir = Runtime::default_dir();
-    match Runtime::new(&dir) {
+    if let Some(name) = Runtime::env_backend() {
+        return Runtime::for_backend(&name, &DimmConfig::paper())
+            .expect("APACHE_BACKEND must name a known backend");
+    }
+    match Runtime::new(Runtime::default_dir()) {
         Ok(rt) => rt,
         Err(e) => {
             eprintln!("on-disk artifacts unusable ({e}); using reference backend");
@@ -267,7 +276,6 @@ fn execute_batch_is_bit_identical_to_per_call() {
     // the batched entry point must be a pure grouping of the singleton
     // path: same artifacts, same operands (twiddles Arc-shared across the
     // batch), bitwise-equal outputs in order.
-    use apache_fhe::runtime::Invocation;
     use std::sync::Arc;
     let rt = runtime();
     let n = 256usize;
@@ -336,7 +344,6 @@ fn execute_batch_is_bit_identical_to_per_call() {
 
 #[test]
 fn batch_failures_stay_in_their_slot() {
-    use apache_fhe::runtime::Invocation;
     let rt = runtime();
     let rows_n = 14 * 256;
     let q = rt.manifest["routine2_n256"].modulus;
@@ -361,4 +368,111 @@ fn wrong_input_shape_is_rejected() {
     assert!(err.is_err());
     let err2 = rt.execute_u64("no_such_artifact", &[vec![]]);
     assert!(err2.is_err());
+}
+
+/// Valid random inputs for one manifest artifact: table-like operands
+/// (twiddles, n_inv, Galois maps) get their canonical layouts, data
+/// operands get uniform randoms in the right range.
+fn gen_inputs(meta: &ArtifactMeta, rng: &mut Rng) -> Vec<Vec<u64>> {
+    let q = meta.modulus;
+    let n = *meta.shapes[0].last().expect("shaped input");
+    let table = NttTable::new(n, q);
+    let name = meta.name.as_str();
+    meta.shapes
+        .iter()
+        .enumerate()
+        .map(|(i, shape)| {
+            let len: usize = shape.iter().product();
+            if name.starts_with("ntt_fwd") && i == 1 {
+                return table.forward_twiddles().to_vec();
+            }
+            if name.starts_with("ntt_inv") && i == 1 {
+                return table.inverse_twiddles().to_vec();
+            }
+            if name.starts_with("ntt_inv") && i == 2 {
+                return vec![table.n_inv()];
+            }
+            if name.starts_with("external_product") {
+                match i {
+                    0 => return (0..len).map(|_| rng.uniform(256)).collect(),
+                    3 => return table.forward_twiddles().to_vec(),
+                    4 => return table.inverse_twiddles().to_vec(),
+                    5 => return vec![table.n_inv()],
+                    _ => {}
+                }
+            }
+            if name.starts_with("routine1") && i == 3 {
+                return table.forward_twiddles().to_vec();
+            }
+            if name.starts_with("automorph") && i == 1 {
+                return galois_eval_map(n, 5).iter().map(|&m| m as u64).collect();
+            }
+            (0..len).map(|_| rng.uniform(q)).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn pnm_full_manifest_bit_identity_sweep() {
+    // every artifact in the builtin manifest, at batch 1 and batch 16:
+    // the near-memory backend must be bit-identical to the reference
+    // backend in every slot, and must dispatch once per batch.
+    let reference = Runtime::reference();
+    let pnm = Runtime::for_backend("pnm", &DimmConfig::paper()).unwrap();
+    let names = reference.artifact_names();
+    let mut rng = Rng::seeded(90);
+    let mut batches = 0u64;
+    let mut total_invs = 0u64;
+    for batch in [1usize, 16] {
+        let mut invs = Vec::new();
+        for name in &names {
+            let meta = &reference.manifest[name];
+            for _ in 0..batch {
+                invs.push(Invocation::from_owned(name.clone(), gen_inputs(meta, &mut rng)));
+            }
+        }
+        let ref_outs = reference.execute_batch_u64(&invs);
+        let pnm_outs = pnm.execute_batch_u64(&invs);
+        assert_eq!(ref_outs.len(), pnm_outs.len());
+        for ((inv, r), p) in invs.iter().zip(&ref_outs).zip(&pnm_outs) {
+            let r = r.as_ref().unwrap_or_else(|e| {
+                panic!("reference failed {} at batch {batch}: {e}", inv.artifact)
+            });
+            let p = p.as_ref().unwrap_or_else(|e| {
+                panic!("pnm failed {} at batch {batch}: {e}", inv.artifact)
+            });
+            assert_eq!(r, p, "{}: pnm diverged at batch {batch}", inv.artifact);
+        }
+        batches += 1;
+        total_invs += invs.len() as u64;
+    }
+    let tr = pnm.cost_trace().expect("pnm exposes a cost trace");
+    assert_eq!(tr.dispatches, batches, "one device dispatch per batch");
+    assert_eq!(tr.invocations, total_invs);
+    assert!(tr.cycles > 0 && tr.energy_j > 0.0);
+    assert!(
+        reference.cost_trace().is_none(),
+        "the reference backend models no hardware cost"
+    );
+}
+
+#[test]
+fn pnm_per_slot_error_isolation() {
+    // an invalid invocation fails in its own slot without aborting its
+    // siblings, and never reaches the modeled device.
+    let pnm = Runtime::for_backend("pnm", &DimmConfig::paper()).unwrap();
+    let meta = &pnm.manifest["routine2_n256"];
+    let mut rng = Rng::seeded(91);
+    let good = Invocation::from_owned("routine2_n256", gen_inputs(meta, &mut rng));
+    let unknown = Invocation::from_owned("no_such_artifact", vec![vec![0u64; 4]]);
+    let misshaped = Invocation::from_owned("routine2_n256", vec![vec![0u64; 4]; 3]);
+    let tail = Invocation::from_owned("routine2_n256", gen_inputs(meta, &mut rng));
+    let outs = pnm.execute_batch_u64(&[good, unknown, misshaped, tail]);
+    assert!(outs[0].is_ok(), "{:?}", outs[0].as_ref().err());
+    assert!(outs[1].is_err());
+    assert!(outs[2].is_err());
+    assert!(outs[3].is_ok());
+    let tr = pnm.cost_trace().unwrap();
+    assert_eq!(tr.dispatches, 1);
+    assert_eq!(tr.invocations, 2, "invalid items never reach the device");
 }
