@@ -8,8 +8,13 @@
 //! crossval suite asserts it exhaustively; this bench spot-checks one
 //! batch) while paying only the device-model bookkeeping on top of the
 //! same kernels, and must issue exactly one device dispatch per batch.
+//!
+//! The allocator-policy dimension rides along: the same cold batches run
+//! once per [`AllocPolicy`] (`identity` vs `rank_aware`), and the JSON
+//! artifact records each policy's row-hit rate and rank balance so the
+//! CI trajectory captures placement quality, not just throughput.
 
-use apache_fhe::hw::DimmConfig;
+use apache_fhe::hw::{AllocPolicy, DimmConfig};
 use apache_fhe::math::ntt::NttTable;
 use apache_fhe::math::sampler::Rng;
 use apache_fhe::runtime::{Invocation, Runtime};
@@ -59,11 +64,19 @@ fn mixed_batch(rng: &mut Rng, rt: &Runtime, batch: usize) -> Vec<Invocation> {
 fn main() {
     let reference = Runtime::reference();
     let pnm = Runtime::for_backend("pnm", &DimmConfig::paper()).expect("pnm backend");
-    // the recorded trace comes from a separate runtime that executes each
+    // the recorded traces come from separate runtimes that execute each
     // batch exactly once: the timed runtime's trace accumulates across
     // bench repetitions of identical operands, which would saturate the
-    // row-hit rate regardless of placement quality
-    let pnm_cold = Runtime::for_backend("pnm", &DimmConfig::paper()).expect("pnm backend");
+    // row-hit rate regardless of placement quality. One cold runtime per
+    // allocator policy — the A/B the artifact records.
+    let cold_policies = [AllocPolicy::Identity, AllocPolicy::RankAware];
+    let cold_runtimes: Vec<Runtime> = cold_policies
+        .iter()
+        .map(|&p| {
+            Runtime::for_backend_with_policy("pnm", &DimmConfig::paper(), p)
+                .expect("pnm backend")
+        })
+        .collect();
     let mut rng = Rng::seeded(23);
 
     // sanity: the two backends are bit-identical on a mixed batch
@@ -80,8 +93,10 @@ fn main() {
     let mut rows_json: Vec<Json> = Vec::new();
     for batch in [1usize, 16, 64] {
         let invs = mixed_batch(&mut rng, &reference, batch);
-        for r in pnm_cold.execute_batch_u64(&invs) {
-            r.unwrap();
+        for cold in &cold_runtimes {
+            for r in cold.execute_batch_u64(&invs) {
+                r.unwrap();
+            }
         }
         let st_ref = bench(&format!("reference x{batch}"), || {
             for r in std::hint::black_box(reference.execute_batch_u64(&invs)) {
@@ -111,23 +126,47 @@ fn main() {
     }
     t.print("backend matrix: reference vs pnm dispatch throughput");
 
-    let tr = pnm_cold.cost_trace().expect("pnm exposes a cost trace");
-    assert_eq!(tr.dispatches, 3, "one device dispatch per cold batch");
-    assert_eq!(tr.invocations, 1 + 16 + 64);
-    println!(
-        "pnm trace: {} dispatches, {} invocations, {} cycles, \
-         NTT utilization {:.1}%, row-hit rate {:.1}%, {:.3} J",
-        tr.dispatches,
-        tr.invocations,
-        tr.cycles,
-        100.0 * tr.ntt_utilization(),
-        100.0 * tr.row_hit_rate(),
-        tr.energy_j
+    let mut policy_json: Vec<Json> = Vec::new();
+    let mut hit_rates = Vec::new();
+    for (policy, cold) in cold_policies.iter().zip(&cold_runtimes) {
+        let tr = cold.cost_trace().expect("pnm exposes a cost trace");
+        assert_eq!(tr.dispatches, 3, "one device dispatch per cold batch");
+        assert_eq!(tr.invocations, 1 + 16 + 64);
+        println!(
+            "pnm[{}]: {} dispatches, {} invocations, {} cycles, \
+             NTT utilization {:.1}%, row-hit rate {:.1}%, \
+             rank imbalance {:.2}, {:.3} J",
+            policy.name(),
+            tr.dispatches,
+            tr.invocations,
+            tr.cycles,
+            100.0 * tr.ntt_utilization(),
+            100.0 * tr.row_hit_rate(),
+            tr.rank_imbalance(),
+            tr.energy_j
+        );
+        hit_rates.push(tr.row_hit_rate());
+        policy_json.push(
+            Json::obj()
+                .put("policy", policy.name())
+                .put("row_hit_rate", tr.row_hit_rate())
+                .put("rank_imbalance", tr.rank_imbalance())
+                .put("cycles", tr.cycles)
+                .put("energy_j", tr.energy_j),
+        );
+    }
+    assert!(
+        hit_rates[1] > hit_rates[0],
+        "rank_aware must beat identity on the bench mix: {hit_rates:?}"
     );
 
+    // the cumulative trace the artifact has always carried comes from the
+    // default-policy (rank_aware) cold runtime
+    let tr = cold_runtimes[1].cost_trace().expect("pnm exposes a cost trace");
     let doc = Json::obj()
         .put("bench", "backend_matrix")
         .put("batches", Json::Arr(rows_json))
+        .put("alloc_policies", Json::Arr(policy_json))
         .put(
             "pnm_trace",
             Json::obj()
@@ -138,6 +177,7 @@ fn main() {
                 .put("bytes_rank", tr.profile.io_internal)
                 .put("bytes_bank", tr.profile.io_bank)
                 .put("row_hit_rate", tr.row_hit_rate())
+                .put("rank_imbalance", tr.rank_imbalance())
                 .put("energy_j", tr.energy_j),
         );
     let path =

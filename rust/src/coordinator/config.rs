@@ -1,6 +1,6 @@
 //! Coordinator configuration: TOML-subset file + CLI overrides.
 
-use crate::hw::{DimmConfig, DramTiming};
+use crate::hw::{AllocPolicy, DimmConfig, DramTiming};
 use crate::util::error::{Error, Result};
 use crate::util::toml_lite;
 
@@ -21,6 +21,12 @@ pub struct ApacheConfig {
     /// `APACHE_BACKEND` environment variable (the CI matrix dimension)
     /// > this config key.
     pub backend: String,
+    /// operand-placement policy of placement-aware backends:
+    /// `"rank_aware"` (explicit bank/row extents through `hw::alloc`,
+    /// the default) or `"identity"` (legacy synthetic addressing). Same
+    /// precedence chain as `backend`: `--alloc-policy` >
+    /// `APACHE_ALLOC_POLICY` > this config key.
+    pub alloc_policy: String,
     pub worker_threads: usize,
 }
 
@@ -33,6 +39,7 @@ impl Default for ApacheConfig {
             artifacts_dir: "artifacts".into(),
             use_runtime: false,
             backend: "reference".into(),
+            alloc_policy: AllocPolicy::RankAware.name().into(),
             worker_threads: 2,
         }
     }
@@ -64,6 +71,9 @@ impl ApacheConfig {
                 .to_string(),
             use_runtime: doc.get_bool("system", "use_runtime", def.use_runtime),
             backend: doc.get_str("system", "backend", &def.backend).to_string(),
+            alloc_policy: doc
+                .get_str("system", "alloc_policy", &def.alloc_policy)
+                .to_string(),
             worker_threads: doc.get_int("system", "worker_threads", def.worker_threads as i64)
                 as usize,
         };
@@ -76,6 +86,8 @@ impl ApacheConfig {
                 cfg.backend
             )));
         }
+        AllocPolicy::parse(&cfg.alloc_policy)
+            .map_err(|e| Error::new(format!("system.alloc_policy: {e}")))?;
         Ok(cfg)
     }
 
@@ -132,5 +144,16 @@ imc_ks = false
         let err = ApacheConfig::from_toml("[system]\nbackend = \"gpu\"\n");
         assert!(err.is_err(), "unknown backends must be rejected");
         assert!(err.unwrap_err().to_string().contains("backend"));
+    }
+
+    #[test]
+    fn alloc_policy_parses_and_validates() {
+        let cfg = ApacheConfig::from_toml("").unwrap();
+        assert_eq!(cfg.alloc_policy, "rank_aware", "rank-aware is the default");
+        let cfg = ApacheConfig::from_toml("[system]\nalloc_policy = \"identity\"\n").unwrap();
+        assert_eq!(cfg.alloc_policy, "identity");
+        let err = ApacheConfig::from_toml("[system]\nalloc_policy = \"random\"\n");
+        assert!(err.is_err(), "unknown policies must be rejected");
+        assert!(err.unwrap_err().to_string().contains("alloc_policy"));
     }
 }

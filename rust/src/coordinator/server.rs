@@ -61,7 +61,11 @@ impl Coordinator {
                 // the reference path may upgrade to on-disk PJRT artifacts
                 Runtime::new(&cfg.artifacts_dir)
             } else {
-                Runtime::for_backend(&cfg.backend, &cfg.dimm)
+                // alloc_policy was validated at config parse time; a
+                // hand-built config with a bad policy surfaces here
+                crate::hw::AllocPolicy::parse(&cfg.alloc_policy).and_then(|policy| {
+                    Runtime::for_backend_with_policy(&cfg.backend, &cfg.dimm, policy)
+                })
             };
             match built {
                 Ok(rt) => {
@@ -237,6 +241,7 @@ impl Coordinator {
             }
         }
         self.metrics.observe("pnm.ntt_utilization", d.ntt_utilization());
+        self.metrics.observe("pnm.rank_imbalance", d.rank_imbalance());
         self.metrics.observe("pnm.energy_j", d.energy_j);
     }
 }
@@ -341,6 +346,27 @@ mod tests {
             task: cmux_tree_task("again", 3),
         }]);
         assert_eq!(coord.metrics.counter("pnm.dispatches"), 2);
+    }
+
+    #[test]
+    fn alloc_policy_flows_from_config_to_backend() {
+        // an identity-policy config must serve cleanly and surface the
+        // same pnm metrics (the policy changes placement, not dispatch)
+        let cfg = ApacheConfig {
+            backend: "pnm".into(),
+            alloc_policy: "identity".into(),
+            use_runtime: true,
+            ..Default::default()
+        };
+        let coord = Coordinator::new(cfg);
+        let results = coord.serve_batch(vec![TaskRequest {
+            task: cmux_tree_task("t", 3),
+        }]);
+        assert_eq!(results.len(), 1);
+        assert!(results[0].runtime_error.is_none());
+        assert_eq!(coord.metrics.counter("pnm.dispatches"), 1);
+        let p50 = coord.metrics.percentile("pnm.rank_imbalance", 0.5).unwrap();
+        assert!(p50 >= 1.0);
     }
 
     #[test]

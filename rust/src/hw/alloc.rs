@@ -1,0 +1,828 @@
+//! Rank-aware operand allocator: explicit `(rank, bank, row)` placement
+//! for every operand the near-memory backend streams (§IV–§V).
+//!
+//! The device model used to synthesize DRAM addresses from operand
+//! identity (a heap pointer), so row-hit rates and rank/bank byte counts
+//! were artifacts of where the host allocator happened to put a `Vec`.
+//! This module makes placement a first-class scheduling input, the way
+//! MemFHE/CraterLake treat operand layout:
+//!
+//! * every operand pool (the id `sched::lowering` stamps per §V-B key
+//!   cluster) is pinned to one rank, chosen by cumulative byte load so
+//!   ranks stay balanced;
+//! * within a rank, a deterministic *skyline* allocator decides which
+//!   operands get to stay row-buffer-resident. The row buffers of one
+//!   rank hold `banks × row_bytes` (128 KB on the modeled DIMM) — less
+//!   than a working set of large-ring operands — so placement is a
+//!   residency policy, not just an address map:
+//!   - ciphertext limbs ([`OperandKind::Data`]) stripe bank-interleaved,
+//!     one row per bank, across the window of banks with the lowest
+//!     skyline — a poly's repeated streams then touch each bank at a
+//!     fixed row and stay resident (the R1 `poly → key → poly` pattern
+//!     re-opens nothing);
+//!   - evk rows ([`OperandKind::Evk`]) are pinned per rank: they stripe
+//!     resident when a whole-row window is free (small rings), and
+//!     otherwise stack on a single *sacrificial* column so streaming a
+//!     key never evicts the ciphertext stripes (the paper streams evk
+//!     from DRAM anyway — §V-B amortizes it by clustering);
+//!   - single-use staging ([`OperandKind::Stream`]: gadget digits, INTT
+//!     staging) always stacks on the sacrificial column — it is read
+//!     once per use, so it must not cost the hot stripes their rows;
+//!   - twiddle/constant tables ([`OperandKind::Twiddle`]) are replicated
+//!     per rank on a reserved table bank, packed sub-row so a ring's
+//!     small tables share one open row;
+//! * freed extents are recycled LIFO per (rank, kind, size), so freeing
+//!   and re-allocating is address-stable and row-buffer locality
+//!   survives across dispatches.
+//!
+//! The allocator is deterministic: identical request sequences produce
+//! identical extents (no hashing of addresses, no iteration over
+//! unordered maps). [`AllocPolicy`] selects between this model
+//! (`RankAware`, the default) and the legacy identity-address model
+//! (`Identity`) so the two can be A/B'd through config/CLI/env alongside
+//! `--backend`.
+
+use super::DimmConfig;
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Banks per modeled rank (matches [`DimmConfig::bank_bw`]).
+pub const BANKS_PER_RANK: usize = 16;
+/// Row-buffer bytes per bank (8 KB typical DDR4).
+pub const ROW_BYTES: u64 = 8192;
+/// Rows per bank (8 Gb x8 DDR4 die: 64 K rows).
+pub const ROWS_PER_BANK: u64 = 1 << 16;
+
+/// Operand placement policy of the near-memory backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// Legacy model: operand identity doubles as the DRAM address and
+    /// pools round-robin across ranks in first-appearance order.
+    Identity,
+    /// Explicit placement through [`RankAllocator`] (the default).
+    RankAware,
+}
+
+impl AllocPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "identity" => Ok(AllocPolicy::Identity),
+            "rank_aware" | "rank-aware" => Ok(AllocPolicy::RankAware),
+            other => Err(Error::new(format!(
+                "unknown alloc policy `{other}` (expected `identity` or `rank_aware`)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AllocPolicy::Identity => "identity",
+            AllocPolicy::RankAware => "rank_aware",
+        }
+    }
+}
+
+/// What an operand *is* to the memory system — the placement hint
+/// `sched::lowering` stamps per invocation input, and the residency
+/// class the skyline allocator places by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OperandKind {
+    /// Ciphertext limbs: the hot working set, striped bank-interleaved
+    /// one row per bank so repeated streams stay row-resident.
+    Data,
+    /// evk-style key rows: pinned to the pool's rank; resident when a
+    /// whole-row window is free, sacrificial-column otherwise.
+    Evk,
+    /// Twiddle/constant tables: replicated per rank on the reserved
+    /// table bank, packed sub-row.
+    Twiddle,
+    /// Single-use staging (gadget digits, INTT staging): streamed once
+    /// per use, always stacked on the sacrificial column.
+    Stream,
+}
+
+impl OperandKind {
+    /// Fallback classification for invocations that carry no lowering
+    /// hints: the manifest operator family fixes each input's role (the
+    /// same dispatch rule the reference backend executes by).
+    pub fn classify(artifact: &str, index: usize) -> OperandKind {
+        if artifact.starts_with("ntt_fwd") {
+            // [data, twiddles]
+            if index == 0 {
+                OperandKind::Data
+            } else {
+                OperandKind::Twiddle
+            }
+        } else if artifact.starts_with("ntt_inv") {
+            // [staging, twiddles, n_inv]
+            if index == 0 {
+                OperandKind::Stream
+            } else {
+                OperandKind::Twiddle
+            }
+        } else if artifact.starts_with("external_product") {
+            // [digits, b-rows, a-rows, fwd_tw, inv_tw, n_inv]
+            match index {
+                0 => OperandKind::Stream,
+                1 | 2 => OperandKind::Evk,
+                _ => OperandKind::Twiddle,
+            }
+        } else if artifact.starts_with("routine1") {
+            // [x, key, acc, fwd_tw]
+            match index {
+                1 => OperandKind::Evk,
+                3 => OperandKind::Twiddle,
+                _ => OperandKind::Data,
+            }
+        } else if artifact.starts_with("routine2") {
+            // [a, key, c]
+            if index == 1 {
+                OperandKind::Evk
+            } else {
+                OperandKind::Data
+            }
+        } else if artifact.starts_with("automorph") {
+            // [x, galois map]
+            if index == 0 {
+                OperandKind::Data
+            } else {
+                OperandKind::Twiddle
+            }
+        } else {
+            // pointwise and unknown ops: plain data streams
+            OperandKind::Data
+        }
+    }
+}
+
+/// Static DRAM geometry the allocator places into. The last bank is
+/// reserved for tables; the remaining banks form the skyline region for
+/// data/evk/stream extents (with `banks == 1`, everything shares the
+/// single bank through one monotone cursor).
+#[derive(Debug, Clone, Copy)]
+pub struct Geometry {
+    pub ranks: usize,
+    pub banks: usize,
+    pub row_bytes: u64,
+    pub rows_per_bank: u64,
+}
+
+impl Geometry {
+    pub fn of(cfg: &DimmConfig) -> Self {
+        Geometry {
+            ranks: cfg.ranks.max(1),
+            banks: BANKS_PER_RANK,
+            row_bytes: ROW_BYTES,
+            rows_per_bank: ROWS_PER_BANK,
+        }
+    }
+
+    /// Banks available to the skyline region (all but the table bank).
+    pub fn skyline_banks(&self) -> usize {
+        self.banks.saturating_sub(1).max(1)
+    }
+
+    /// The reserved table bank.
+    pub fn table_bank(&self) -> usize {
+        self.banks - 1
+    }
+}
+
+/// One placed operand: `slots` whole-or-packed `(bank, row)` cells,
+/// bank-interleaved over `width` banks starting at `bank0`. Slot `s`
+/// (global index) lives at bank `bank0 + s % width`, row `s / width`;
+/// `col` is the byte offset within the first row for sub-row-packed
+/// table extents (always 0 for multi-slot extents).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Extent {
+    pub rank: usize,
+    pub kind: OperandKind,
+    /// first bank of the stripe
+    pub bank0: usize,
+    /// banks the stripe interleaves across
+    pub width: usize,
+    /// first slot index (row-major within the stripe)
+    pub slot: u64,
+    /// `(bank, row)` cells owned
+    pub slots: u64,
+    /// byte offset within the (single) row, for packed table extents
+    pub col: u64,
+    pub bytes: u64,
+}
+
+impl Extent {
+    /// Bank of the first slot.
+    pub fn bank(&self) -> usize {
+        self.bank0 + (self.slot % self.width as u64) as usize
+    }
+
+    /// Row of the first slot.
+    pub fn row(&self) -> u64 {
+        self.slot / self.width as u64
+    }
+
+    /// The `(bank, row)` walk a stream of this extent performs.
+    pub fn slot_iter(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        let w = self.width as u64;
+        (self.slot..self.slot + self.slots).map(move |s| (self.bank0 + (s % w) as usize, s / w))
+    }
+
+    pub fn fits(&self, geo: &Geometry) -> bool {
+        let rows_ok = (self.slot + self.slots - 1) / self.width as u64 < geo.rows_per_bank;
+        let bytes_ok = if self.slots == 1 {
+            self.col + self.bytes <= geo.row_bytes
+        } else {
+            self.col == 0 && self.bytes <= self.slots * geo.row_bytes
+        };
+        self.rank < geo.ranks
+            && self.width >= 1
+            && self.bank0 + self.width <= geo.banks
+            && self.slots >= 1
+            && rows_ok
+            && bytes_ok
+    }
+
+    /// Whether two extents share any DRAM bytes: a shared `(bank, row)`
+    /// cell, unless both are single-row packed extents whose byte ranges
+    /// within that row are disjoint.
+    pub fn overlaps(&self, other: &Extent) -> bool {
+        if self.rank != other.rank {
+            return false;
+        }
+        if self.bank0 + self.width <= other.bank0 || other.bank0 + other.width <= self.bank0 {
+            return false;
+        }
+        let mine: std::collections::HashSet<(usize, u64)> = self.slot_iter().collect();
+        let shared = other.slot_iter().any(|s| mine.contains(&s));
+        if !shared {
+            return false;
+        }
+        if self.slots == 1 && other.slots == 1 {
+            // packed table cells in one row: compare byte intervals
+            return self.col < other.col + other.bytes && other.col < self.col + self.bytes;
+        }
+        true
+    }
+}
+
+/// Per-rank skyline state.
+#[derive(Debug, Clone)]
+struct RankState {
+    /// next free row per skyline bank (monotone: rows are never
+    /// reclaimed except through the exact-size free lists)
+    heights: Vec<u64>,
+    /// table-bank cursor: (next slot, byte offset within it)
+    table: (u64, u64),
+    /// the pinned sacrificial column, once one was needed
+    sac: Option<usize>,
+    /// freed extents by (kind, slots, table-bytes), reused LIFO
+    free: HashMap<(OperandKind, u64, u64), Vec<Extent>>,
+}
+
+/// The deterministic rank-aware skyline allocator.
+pub struct RankAllocator {
+    geo: Geometry,
+    ranks: Vec<RankState>,
+    /// live placements, keyed by (operand identity, rank) — a table
+    /// shared by pools on two ranks is replicated, one extent per rank
+    live: HashMap<(u64, usize), Extent>,
+    /// pool → rank pinning (first assignment wins, stable thereafter)
+    pool_rank: HashMap<u64, usize>,
+    /// cumulative estimated bytes assigned per rank (the balance metric)
+    load: Vec<u64>,
+}
+
+impl RankAllocator {
+    pub fn new(geo: Geometry) -> Self {
+        let state = RankState {
+            heights: vec![0; geo.skyline_banks()],
+            table: (0, 0),
+            sac: None,
+            free: HashMap::new(),
+        };
+        RankAllocator {
+            ranks: vec![state; geo.ranks],
+            live: HashMap::new(),
+            pool_rank: HashMap::new(),
+            load: vec![0; geo.ranks],
+            geo,
+        }
+    }
+
+    pub fn geometry(&self) -> &Geometry {
+        &self.geo
+    }
+
+    /// Rank assignment for `pool`: the first request pins the pool to the
+    /// least-loaded rank (ties break to the lowest index); later requests
+    /// return the pinned rank. *Every* request charges `est_bytes` to the
+    /// pool's rank, so the greedy balance always sees live cumulative
+    /// traffic — a recurring cluster keeps weighing on its rank instead
+    /// of being counted once and going stale. Greedy least-loaded bounds
+    /// the imbalance: no rank ever exceeds the lightest rank by more than
+    /// the largest single request.
+    pub fn rank_for_pool(&mut self, pool: u64, est_bytes: u64) -> usize {
+        let r = match self.pool_rank.get(&pool) {
+            Some(&r) => r,
+            None => {
+                let r = self.least_loaded();
+                self.pool_rank.insert(pool, r);
+                r
+            }
+        };
+        self.load[r] = self.load[r].saturating_add(est_bytes);
+        r
+    }
+
+    /// The least-loaded rank charged with `est_bytes` but pinned to no
+    /// pool id — the placement for untagged operand groups whose only
+    /// identity is a transient pointer (pinning those would leak an
+    /// entry per buffer and alias reallocated addresses to stale pins).
+    pub fn rank_for_transient(&mut self, est_bytes: u64) -> usize {
+        let r = self.least_loaded();
+        self.load[r] = self.load[r].saturating_add(est_bytes);
+        r
+    }
+
+    /// The currently least-loaded rank (ties break to the lowest index).
+    pub fn least_loaded(&self) -> usize {
+        (0..self.geo.ranks)
+            .min_by_key(|&r| (self.load[r], r))
+            .expect("geometry has >= 1 rank")
+    }
+
+    /// The rank a pool is pinned to, if assigned.
+    pub fn pool_rank(&self, pool: u64) -> Option<usize> {
+        self.pool_rank.get(&pool).copied()
+    }
+
+    /// Cumulative estimated byte load per rank.
+    pub fn loads(&self) -> &[u64] {
+        &self.load
+    }
+
+    /// The sacrificial column of `rank`: picked once as the shortest
+    /// skyline bank (rightmost on ties) and pinned, so every unresident
+    /// key and staging stream stacks on the same bank instead of
+    /// scattering evictions over the hot stripes.
+    fn sac_col(state: &mut RankState) -> usize {
+        if let Some(b) = state.sac {
+            return b;
+        }
+        let b = (0..state.heights.len())
+            .min_by_key(|&b| (state.heights[b], std::cmp::Reverse(b)))
+            .expect("skyline has >= 1 bank");
+        state.sac = Some(b);
+        b
+    }
+
+    /// Place (or look up) the operand identified by `key` on `rank`.
+    /// Idempotent while the placement is live: repeated calls return the
+    /// same extent, which is what turns repeated streams of a shared
+    /// buffer into DRAM row hits.
+    pub fn place(
+        &mut self,
+        key: u64,
+        rank: usize,
+        kind: OperandKind,
+        bytes: u64,
+    ) -> Result<Extent> {
+        if let Some(e) = self.live.get(&(key, rank)) {
+            return Ok(*e);
+        }
+        if rank >= self.geo.ranks {
+            return Err(Error::new(format!(
+                "alloc: rank {rank} out of range ({} ranks)",
+                self.geo.ranks
+            )));
+        }
+        let geo = self.geo;
+        let slots = bytes.div_ceil(geo.row_bytes).max(1);
+        let state = &mut self.ranks[rank];
+        // exact-size LIFO reuse first: address stability across frees
+        let free_key = Self::free_key(kind, slots, bytes);
+        if let Some(stack) = state.free.get_mut(&free_key) {
+            let mut ext = stack.pop().expect("free stacks are never left empty");
+            if stack.is_empty() {
+                state.free.remove(&free_key);
+            }
+            ext.bytes = bytes;
+            self.live.insert((key, rank), ext);
+            return Ok(ext);
+        }
+        // a single-bank rank degenerates to one monotone cursor
+        let effective = if geo.banks == 1 && kind != OperandKind::Twiddle {
+            OperandKind::Twiddle
+        } else {
+            kind
+        };
+        let ext = match effective {
+            OperandKind::Twiddle => Self::place_table(state, &geo, rank, kind, slots, bytes)?,
+            OperandKind::Data => Self::place_stripe(state, &geo, rank, kind, slots, bytes)?,
+            OperandKind::Evk => {
+                // resident when a whole-row window is free at the skyline
+                // minimum; sacrificial column otherwise
+                match Self::place_resident_run(state, &geo, rank, kind, slots, bytes) {
+                    Some(ext) => ext,
+                    None => Self::place_column(state, &geo, rank, kind, slots, bytes)?,
+                }
+            }
+            OperandKind::Stream => Self::place_column(state, &geo, rank, kind, slots, bytes)?,
+        };
+        self.live.insert((key, rank), ext);
+        Ok(ext)
+    }
+
+    fn free_key(kind: OperandKind, slots: u64, bytes: u64) -> (OperandKind, u64, u64) {
+        // table extents may be sub-row packed: only an exact byte match
+        // can safely reuse the packed cell
+        let b = if kind == OperandKind::Twiddle { bytes } else { 0 };
+        (kind, slots, b)
+    }
+
+    /// Sub-row-packed placement on the reserved table bank. Packing is
+    /// only ever applied to true table operands — the degenerate
+    /// single-bank geometry routes every kind through this cursor, and
+    /// those extents must stay whole-row so the size-keyed free lists
+    /// can safely reuse them for different byte counts.
+    fn place_table(
+        state: &mut RankState,
+        geo: &Geometry,
+        rank: usize,
+        kind: OperandKind,
+        slots: u64,
+        bytes: u64,
+    ) -> Result<Extent> {
+        let packable = kind == OperandKind::Twiddle && slots == 1;
+        let (cur_slot, cur_col) = state.table;
+        let (slot, col) = if packable && cur_col > 0 && bytes <= geo.row_bytes - cur_col {
+            (cur_slot, cur_col)
+        } else {
+            (cur_slot + u64::from(cur_col > 0), 0)
+        };
+        if slot + slots > geo.rows_per_bank {
+            return Err(Error::new(format!(
+                "alloc: rank {rank} table bank exhausted placing {bytes} bytes"
+            )));
+        }
+        state.table = if packable && col + bytes < geo.row_bytes {
+            (slot, (col + bytes).div_ceil(64) * 64)
+        } else {
+            (slot + slots, 0)
+        };
+        Ok(Extent {
+            rank,
+            kind,
+            bank0: geo.table_bank(),
+            width: 1,
+            slot,
+            slots,
+            col,
+            bytes,
+        })
+    }
+
+    /// Bank-interleaved stripe over the skyline window with the lowest
+    /// maximum height (leftmost on ties): one row per bank, so a stream
+    /// touches each bank once at a fixed row and stays resident.
+    fn place_stripe(
+        state: &mut RankState,
+        geo: &Geometry,
+        rank: usize,
+        kind: OperandKind,
+        slots: u64,
+        bytes: u64,
+    ) -> Result<Extent> {
+        let nb = state.heights.len();
+        let width = (slots as usize).min(nb);
+        let best = (0..=nb - width)
+            .min_by_key(|&s0| {
+                let top = state.heights[s0..s0 + width].iter().max().copied().unwrap_or(0);
+                (top, s0)
+            })
+            .expect("window exists");
+        let top = state.heights[best..best + width]
+            .iter()
+            .max()
+            .copied()
+            .unwrap_or(0);
+        let rows = slots.div_ceil(width as u64);
+        if top + rows > geo.rows_per_bank {
+            return Err(Error::new(format!(
+                "alloc: rank {rank} skyline exhausted placing {bytes} bytes"
+            )));
+        }
+        for h in state.heights[best..best + width].iter_mut() {
+            *h = top + rows;
+        }
+        Ok(Extent {
+            rank,
+            kind,
+            bank0: best,
+            width,
+            slot: top * width as u64,
+            slots,
+            col: 0,
+            bytes,
+        })
+    }
+
+    /// Whole-row resident placement: a contiguous run of banks at the
+    /// skyline minimum long enough for one row per bank (right end of
+    /// the rightmost such run, away from the data stripes).
+    fn place_resident_run(
+        state: &mut RankState,
+        geo: &Geometry,
+        rank: usize,
+        kind: OperandKind,
+        slots: u64,
+        bytes: u64,
+    ) -> Option<Extent> {
+        let h = &state.heights;
+        let nb = h.len();
+        let hmin = *h.iter().min()?;
+        if hmin + 1 > geo.rows_per_bank {
+            return None;
+        }
+        let want = slots as usize;
+        if want > nb {
+            return None;
+        }
+        // rightmost run of hmin banks with len >= want
+        let mut best: Option<(usize, usize)> = None;
+        let mut i = 0;
+        while i < nb {
+            if h[i] == hmin {
+                let start = i;
+                while i < nb && h[i] == hmin {
+                    i += 1;
+                }
+                if i - start >= want {
+                    best = Some((start, i - start));
+                }
+            } else {
+                i += 1;
+            }
+        }
+        let (start, len) = best?;
+        let bank0 = start + len - want;
+        for hh in state.heights[bank0..bank0 + want].iter_mut() {
+            *hh = hmin + 1;
+        }
+        Some(Extent {
+            rank,
+            kind,
+            bank0,
+            width: want,
+            slot: hmin * want as u64,
+            slots,
+            col: 0,
+            bytes,
+        })
+    }
+
+    /// Sacrificial-column placement: stack on the pinned column.
+    fn place_column(
+        state: &mut RankState,
+        geo: &Geometry,
+        rank: usize,
+        kind: OperandKind,
+        slots: u64,
+        bytes: u64,
+    ) -> Result<Extent> {
+        let b0 = Self::sac_col(state);
+        let row = state.heights[b0];
+        if row + slots > geo.rows_per_bank {
+            return Err(Error::new(format!(
+                "alloc: rank {rank} sacrificial column exhausted placing {bytes} bytes"
+            )));
+        }
+        state.heights[b0] += slots;
+        Ok(Extent {
+            rank,
+            kind,
+            bank0: b0,
+            width: 1,
+            slot: row,
+            slots,
+            col: 0,
+            bytes,
+        })
+    }
+
+    /// Free a live placement; its cells go to the LIFO free list so the
+    /// next same-shape placement in the same (rank, kind) reuses the
+    /// address. Returns whether anything was freed.
+    pub fn free(&mut self, key: u64, rank: usize) -> bool {
+        match self.live.remove(&(key, rank)) {
+            Some(ext) => {
+                self.ranks[ext.rank]
+                    .free
+                    .entry(Self::free_key(ext.kind, ext.slots, ext.bytes))
+                    .or_default()
+                    .push(ext);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Every live extent (order unspecified — for invariant checks).
+    pub fn live_extents(&self) -> Vec<Extent> {
+        self.live.values().copied().collect()
+    }
+
+    pub fn live_len(&self) -> usize {
+        self.live.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geo() -> Geometry {
+        Geometry::of(&DimmConfig::paper())
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        assert_eq!(AllocPolicy::parse("identity").unwrap(), AllocPolicy::Identity);
+        assert_eq!(AllocPolicy::parse("rank_aware").unwrap(), AllocPolicy::RankAware);
+        assert_eq!(AllocPolicy::parse("rank-aware").unwrap(), AllocPolicy::RankAware);
+        assert!(AllocPolicy::parse("gpu").is_err());
+        assert_eq!(AllocPolicy::Identity.name(), "identity");
+        assert_eq!(AllocPolicy::RankAware.name(), "rank_aware");
+    }
+
+    #[test]
+    fn classify_matches_manifest_roles() {
+        use OperandKind::{Data, Evk, Stream, Twiddle};
+        assert_eq!(OperandKind::classify("ntt_fwd_n256", 0), Data);
+        assert_eq!(OperandKind::classify("ntt_fwd_n256", 1), Twiddle);
+        assert_eq!(OperandKind::classify("ntt_inv_n256", 0), Stream);
+        assert_eq!(OperandKind::classify("ntt_inv_n256", 2), Twiddle);
+        assert_eq!(OperandKind::classify("external_product_n1024", 0), Stream);
+        assert_eq!(OperandKind::classify("external_product_n1024", 1), Evk);
+        assert_eq!(OperandKind::classify("external_product_n1024", 5), Twiddle);
+        assert_eq!(OperandKind::classify("routine1_n256", 0), Data);
+        assert_eq!(OperandKind::classify("routine1_n256", 1), Evk);
+        assert_eq!(OperandKind::classify("routine1_n256", 3), Twiddle);
+        assert_eq!(OperandKind::classify("routine2_n256", 1), Evk);
+        assert_eq!(OperandKind::classify("routine2_n256", 2), Data);
+        assert_eq!(OperandKind::classify("automorph_n256", 1), Twiddle);
+        assert_eq!(OperandKind::classify("pointwise_mul_n256", 1), Data);
+    }
+
+    #[test]
+    fn data_stripes_resident_one_row_per_bank() {
+        let mut a = RankAllocator::new(geo());
+        // a 14-row poly stripes over 14 banks at row 0: repeated streams
+        // touch every bank once at a fixed row (no self-conflict)
+        let e = a.place(1, 0, OperandKind::Data, 14 * ROW_BYTES).unwrap();
+        assert_eq!(e.width, 14);
+        assert_eq!(e.row(), 0);
+        let rows: std::collections::HashSet<u64> =
+            e.slot_iter().map(|(_, r)| r).collect();
+        assert_eq!(rows.len(), 1, "one row per bank: {rows:?}");
+        let banks: std::collections::HashSet<usize> =
+            e.slot_iter().map(|(b, _)| b).collect();
+        assert_eq!(banks.len(), 14, "every slot on its own bank");
+    }
+
+    #[test]
+    fn unresident_keys_and_streams_stack_on_one_column() {
+        let mut a = RankAllocator::new(geo());
+        let poly = a.place(1, 0, OperandKind::Data, 14 * ROW_BYTES).unwrap();
+        // a 14-row key cannot be whole-row resident next to the poly:
+        // it stacks on the sacrificial column, off the poly's banks
+        let kb = a.place(2, 0, OperandKind::Evk, 14 * ROW_BYTES).unwrap();
+        assert_eq!(kb.width, 1, "unresident key is a column");
+        let dig = a.place(3, 0, OperandKind::Stream, 14 * ROW_BYTES).unwrap();
+        assert_eq!(dig.bank0, kb.bank0, "streams share the sacrificial column");
+        for (b, _) in poly.slot_iter() {
+            assert_ne!(b, kb.bank0, "sacrifice must dodge the data stripe");
+        }
+        assert!(!poly.overlaps(&kb) && !poly.overlaps(&dig) && !kb.overlaps(&dig));
+    }
+
+    #[test]
+    fn small_keys_go_resident() {
+        let mut a = RankAllocator::new(geo());
+        let data = a.place(1, 0, OperandKind::Data, 4 * ROW_BYTES).unwrap();
+        // a 4-row key fits whole-row next to a 4-row ciphertext: resident
+        let key = a.place(2, 0, OperandKind::Evk, 4 * ROW_BYTES).unwrap();
+        assert_eq!(key.width, 4, "small key stripes resident");
+        assert_eq!(key.row(), 0);
+        assert!(!data.overlaps(&key));
+        let db: std::collections::HashSet<usize> = data.slot_iter().map(|(b, _)| b).collect();
+        assert!(key.slot_iter().all(|(b, _)| !db.contains(&b)));
+    }
+
+    #[test]
+    fn tables_pack_sub_row_on_the_table_bank() {
+        let g = geo();
+        let mut a = RankAllocator::new(g);
+        // three small n256 tables share one open row on the table bank
+        let fwd = a.place(1, 0, OperandKind::Twiddle, 2048).unwrap();
+        let inv = a.place(2, 0, OperandKind::Twiddle, 2048).unwrap();
+        let ninv = a.place(3, 0, OperandKind::Twiddle, 8).unwrap();
+        for e in [&fwd, &inv, &ninv] {
+            assert_eq!(e.bank0, g.table_bank());
+            assert_eq!(e.row(), 0, "small tables share the open row");
+        }
+        assert!(!fwd.overlaps(&inv) && !inv.overlaps(&ninv) && !fwd.overlaps(&ninv));
+        // a full-row table takes its own row
+        let big = a.place(4, 0, OperandKind::Twiddle, ROW_BYTES).unwrap();
+        assert_eq!(big.bank0, g.table_bank());
+        assert!(big.row() > 0);
+        assert!(!big.overlaps(&fwd));
+    }
+
+    #[test]
+    fn place_is_idempotent_and_replicates_per_rank() {
+        let mut a = RankAllocator::new(geo());
+        let e1 = a.place(7, 0, OperandKind::Evk, 3 * ROW_BYTES + 1).unwrap();
+        let e2 = a.place(7, 0, OperandKind::Evk, 3 * ROW_BYTES + 1).unwrap();
+        assert_eq!(e1, e2, "live placement must be stable");
+        assert_eq!(e1.slots, 4, "partial rows round up to whole cells");
+        assert_eq!(e1.slot_iter().count() as u64, e1.slots);
+        let other = a.place(7, 1, OperandKind::Evk, 3 * ROW_BYTES + 1).unwrap();
+        assert_eq!(other.rank, 1, "replication is per rank");
+        assert_eq!(a.live_len(), 2);
+    }
+
+    #[test]
+    fn free_then_realloc_reuses_the_address() {
+        let mut a = RankAllocator::new(geo());
+        let e1 = a.place(1, 0, OperandKind::Data, 5 * ROW_BYTES).unwrap();
+        let _e2 = a.place(2, 0, OperandKind::Data, 5 * ROW_BYTES).unwrap();
+        assert!(a.free(1, 0));
+        assert!(!a.free(1, 0), "double free is a no-op");
+        let e3 = a.place(3, 0, OperandKind::Data, 5 * ROW_BYTES).unwrap();
+        assert_eq!(e1.slot, e3.slot, "same-size realloc is address-stable");
+        assert_eq!(e1.bank0, e3.bank0);
+    }
+
+    #[test]
+    fn rank_assignment_balances_and_pins() {
+        let mut a = RankAllocator::new(geo());
+        let r0 = a.rank_for_pool(10, 100);
+        let r1 = a.rank_for_pool(11, 100);
+        let r2 = a.rank_for_pool(12, 100);
+        assert_eq!(r0, 0);
+        assert_ne!(r0, r1, "equal pools spread across ranks");
+        assert_ne!(r1, r2);
+        assert_eq!(a.rank_for_pool(10, 999), r0, "pool pinning is stable");
+        assert_eq!(a.pool_rank(10), Some(r0));
+        assert_eq!(a.pool_rank(999), None);
+    }
+
+    #[test]
+    fn exhausted_geometry_errors_without_leaking() {
+        let g = Geometry {
+            ranks: 1,
+            banks: BANKS_PER_RANK,
+            row_bytes: ROW_BYTES,
+            rows_per_bank: 4,
+        };
+        let mut a = RankAllocator::new(g);
+        // fill the sacrificial column (4 rows), then overflow it
+        let e = a.place(1, 0, OperandKind::Stream, 4 * ROW_BYTES).unwrap();
+        assert_eq!(e.slots, 4);
+        assert!(a.place(2, 0, OperandKind::Stream, ROW_BYTES).is_err());
+        // freeing hands the exact extent back
+        assert!(a.free(1, 0));
+        let again = a.place(3, 0, OperandKind::Stream, 4 * ROW_BYTES).unwrap();
+        assert_eq!(e.slot, again.slot);
+        assert_eq!(e.bank0, again.bank0);
+    }
+
+    #[test]
+    fn single_bank_geometry_still_places() {
+        let g = Geometry {
+            ranks: 2,
+            banks: 1,
+            row_bytes: ROW_BYTES,
+            rows_per_bank: 64,
+        };
+        let mut a = RankAllocator::new(g);
+        let kinds = [
+            OperandKind::Data,
+            OperandKind::Evk,
+            OperandKind::Twiddle,
+            OperandKind::Stream,
+        ];
+        let mut placed = Vec::new();
+        for (i, kind) in kinds.into_iter().enumerate() {
+            let e = a.place(i as u64, 0, kind, 3 * ROW_BYTES).unwrap();
+            assert!(e.fits(&g), "banks=1 {kind:?}: {e:?}");
+            placed.push(e);
+        }
+        for (i, x) in placed.iter().enumerate() {
+            for y in &placed[i + 1..] {
+                assert!(!x.overlaps(y), "{x:?} vs {y:?}");
+            }
+        }
+    }
+}

@@ -17,7 +17,13 @@ pub const PJ_PER_BANK_BYTE: f64 = 1.2;
 /// energy at the rank and bank levels. This is what the `PnmBackend`
 /// accrues into its cost trace on every dispatch.
 pub fn dynamic_energy_j(cfg: &DimmConfig, cycles: u64, rank_bytes: u64, bank_bytes: u64) -> f64 {
-    let logic = AreaPower::of(cfg).total_power() * cycles as f64 / cfg.clock_hz as f64;
+    // a zero-clock config has no defined logic time — charge transfer
+    // energy only instead of propagating a NaN/inf into the cost trace
+    let logic = if cfg.clock_hz == 0 {
+        0.0
+    } else {
+        AreaPower::of(cfg).total_power() * cycles as f64 / cfg.clock_hz as f64
+    };
     logic
         + rank_bytes as f64 * PJ_PER_RANK_BYTE * 1e-12
         + bank_bytes as f64 * PJ_PER_BANK_BYTE * 1e-12
@@ -116,6 +122,15 @@ mod tests {
         let bank = dynamic_energy_j(&cfg, 0, 0, 1 << 30);
         assert!(rank > bank);
         assert!(dynamic_energy_j(&cfg, 1_000_000, 1 << 30, 1 << 30) > logic + bank);
+    }
+
+    #[test]
+    fn zero_clock_config_yields_finite_energy() {
+        let mut cfg = DimmConfig::paper();
+        cfg.clock_hz = 0;
+        let e = dynamic_energy_j(&cfg, 1_000_000, 1 << 20, 1 << 20);
+        assert!(e.is_finite(), "zero clock must not produce inf/NaN: {e}");
+        assert!(e > 0.0, "transfer energy still accrues");
     }
 
     #[test]

@@ -7,12 +7,14 @@
 //! interconnect with the Eq. (8)/(9) utilization accounting, bank-level
 //! key-switching adders, and the Table-IV area/power roll-up.
 
+pub mod alloc;
 pub mod dram;
 pub mod energy;
 pub mod fu;
 pub mod imc;
 pub mod interconnect;
 
+pub use alloc::{AllocPolicy, Extent, Geometry, OperandKind, RankAllocator};
 pub use dram::DramTiming;
 pub use energy::AreaPower;
 pub use fu::{FuKind, FuPool, Width};

@@ -45,6 +45,17 @@ fn load_config(args: &Args) -> ApacheConfig {
     } else if let Some(b) = apache_fhe::runtime::Runtime::env_backend() {
         cfg.backend = b;
     }
+    // placement-policy precedence mirrors the backend's:
+    // --alloc-policy > APACHE_ALLOC_POLICY > config file
+    if let Some(p) = args.opt("alloc-policy") {
+        cfg.alloc_policy = p.to_string();
+    } else if let Some(p) = apache_fhe::runtime::Runtime::env_alloc_policy() {
+        cfg.alloc_policy = p;
+    }
+    if let Err(e) = apache_fhe::hw::AllocPolicy::parse(&cfg.alloc_policy) {
+        eprintln!("config error: {e}");
+        std::process::exit(2);
+    }
     cfg
 }
 
@@ -148,11 +159,17 @@ fn main() {
                     apache_fhe::runtime::Runtime::reference()
                 })
             } else {
-                apache_fhe::runtime::Runtime::for_backend(&cfg.backend, &cfg.dimm)
-                    .unwrap_or_else(|e| {
-                        eprintln!("backend `{}` unusable ({e}); using reference", cfg.backend);
-                        apache_fhe::runtime::Runtime::reference()
-                    })
+                let policy = apache_fhe::hw::AllocPolicy::parse(&cfg.alloc_policy)
+                    .expect("load_config validated the policy");
+                apache_fhe::runtime::Runtime::for_backend_with_policy(
+                    &cfg.backend,
+                    &cfg.dimm,
+                    policy,
+                )
+                .unwrap_or_else(|e| {
+                    eprintln!("backend `{}` unusable ({e}); using reference", cfg.backend);
+                    apache_fhe::runtime::Runtime::reference()
+                })
             };
             println!("backend: {}", rt.backend_name());
             for name in rt.artifact_names() {
@@ -167,7 +184,7 @@ fn main() {
             eprintln!(
                 "usage: apache <serve|profile|inspect|area|config|baselines|artifacts> \
                  [--config file.toml] [--dimms N] [--tasks N] [--runtime] \
-                 [--backend reference|pnm]"
+                 [--backend reference|pnm] [--alloc-policy rank_aware|identity]"
             );
             std::process::exit(2);
         }

@@ -27,6 +27,7 @@
 
 pub mod pnm;
 
+pub use crate::hw::alloc::{AllocPolicy, OperandKind};
 pub use pnm::{CostTrace, OpClass, PnmBackend};
 
 use crate::hw::DimmConfig;
@@ -161,6 +162,12 @@ pub struct Invocation {
     /// for hand-built invocations — backends then fall back to operand
     /// identity.
     pub pool: Option<u64>,
+    /// Per-input placement hints stamped by `sched::lowering` (evk rows
+    /// pinned, twiddles replicated, ciphertext limbs striped). Empty for
+    /// hand-built invocations — placement-aware backends then classify
+    /// each input from the artifact's operator family
+    /// ([`OperandKind::classify`]).
+    pub kinds: Vec<OperandKind>,
 }
 
 impl Invocation {
@@ -169,6 +176,7 @@ impl Invocation {
             artifact: artifact.into(),
             inputs,
             pool: None,
+            kinds: Vec::new(),
         }
     }
 
@@ -178,12 +186,19 @@ impl Invocation {
             artifact: artifact.into(),
             inputs: inputs.into_iter().map(Arc::new).collect(),
             pool: None,
+            kinds: Vec::new(),
         }
     }
 
     /// Tag with an operand-pool id (see [`Invocation::pool`]).
     pub fn with_pool(mut self, pool: u64) -> Self {
         self.pool = Some(pool);
+        self
+    }
+
+    /// Stamp per-input placement hints (see [`Invocation::kinds`]).
+    pub fn with_kinds(mut self, kinds: Vec<OperandKind>) -> Self {
+        self.kinds = kinds;
         self
     }
 }
@@ -197,6 +212,8 @@ pub struct BatchItem<'a> {
     pub inputs: &'a [Arc<Vec<u64>>],
     /// see [`Invocation::pool`]
     pub pool: Option<u64>,
+    /// see [`Invocation::kinds`] (empty when unstamped)
+    pub kinds: &'a [OperandKind],
 }
 
 /// An execution engine for manifest artifacts. Implementations receive
@@ -656,13 +673,25 @@ impl Runtime {
 
     /// Construct the runtime for a named backend: `reference` (pure
     /// Rust) or `pnm` (the near-memory device model over the same
-    /// kernels, parameterized by the DIMM configuration).
+    /// kernels, parameterized by the DIMM configuration) with the
+    /// default operand-placement policy ([`AllocPolicy::RankAware`]).
     pub fn for_backend(name: &str, dimm: &DimmConfig) -> Result<Self> {
+        Self::for_backend_with_policy(name, dimm, AllocPolicy::RankAware)
+    }
+
+    /// [`Runtime::for_backend`] with an explicit operand-placement
+    /// policy for placement-aware backends (the reference backend models
+    /// no memory and ignores it).
+    pub fn for_backend_with_policy(
+        name: &str,
+        dimm: &DimmConfig,
+        policy: AllocPolicy,
+    ) -> Result<Self> {
         match name {
             "reference" => Ok(Self::reference()),
             "pnm" => Ok(Self::from_parts(
                 builtin_manifest(),
-                Box::new(PnmBackend::new(dimm.clone())),
+                Box::new(PnmBackend::with_policy(dimm.clone(), policy)),
             )),
             other => Err(Error::new(format!(
                 "unknown backend `{other}` (expected `reference` or `pnm`)"
@@ -674,6 +703,16 @@ impl Runtime {
     /// the CI matrix dimension. `None` when unset or empty.
     pub fn env_backend() -> Option<String> {
         std::env::var("APACHE_BACKEND").ok().filter(|s| !s.is_empty())
+    }
+
+    /// Placement-policy override from the `APACHE_ALLOC_POLICY`
+    /// environment variable (the second CI matrix dimension). `None`
+    /// when unset or empty; the value is validated by
+    /// [`AllocPolicy::parse`] at the point of use.
+    pub fn env_alloc_policy() -> Option<String> {
+        std::env::var("APACHE_ALLOC_POLICY")
+            .ok()
+            .filter(|s| !s.is_empty())
     }
 
     /// The backend's cumulative hardware cost trace, when it models one.
@@ -759,6 +798,7 @@ impl Runtime {
                         meta,
                         inputs: &inv.inputs,
                         pool: inv.pool,
+                        kinds: &inv.kinds,
                     });
                     slots.push(None);
                 }

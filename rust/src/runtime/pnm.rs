@@ -19,21 +19,32 @@
 //! by `sched::lowering`, which assigns one id per (ring, evk identity)
 //! cluster — §V-B) land on the same rank, so a key's rows stream into one
 //! rank's row buffers and the scheduler's key-cluster ordering turns into
-//! DRAM row hits instead of ping-ponging across ranks.
+//! DRAM row hits instead of ping-ponging across ranks. *Where* on that
+//! rank each operand lives is the [`AllocPolicy`] dimension:
+//! `RankAware` (default) places every operand through
+//! [`crate::hw::alloc::RankAllocator`] — explicit `(rank, bank, row)`
+//! extents: hot ciphertext limbs striped one-row-per-bank so repeated
+//! streams stay row-resident, evk rows pinned per rank (resident when
+//! they fit, sacrificial-column otherwise), single-use staging stacked
+//! on the sacrificial column, tables replicated per rank on a reserved
+//! bank, pools balanced across ranks by byte load — while `Identity`
+//! keeps the legacy model where operand identity doubles as the
+//! synthetic DRAM address and pools round-robin across ranks. Both
+//! policies execute identical numerics; only the cost trace (row hits,
+//! per-rank bytes, energy) responds to placement.
 
+use crate::hw::alloc::{
+    AllocPolicy, Geometry, OperandKind, RankAllocator, BANKS_PER_RANK, ROW_BYTES,
+};
 use crate::hw::dram::Rank;
 use crate::hw::energy;
 use crate::hw::{DimmConfig, ImcKs, Interconnect, OpProfile};
 use crate::util::error::{Error, Result};
-use std::collections::HashMap;
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, HashSet};
 use std::sync::Mutex;
 
 use super::{ArtifactMeta, Backend, BatchItem, ReferenceBackend};
-
-/// Banks per modeled rank (matches [`DimmConfig::bank_bw`]).
-const BANKS_PER_RANK: usize = 16;
-/// Row-buffer bytes per bank (8 KB typical DDR4).
-const ROW_BYTES: u64 = 8192;
 
 /// Artifact classes the cost trace attributes cycles to — one per
 /// manifest operator family.
@@ -132,6 +143,9 @@ pub struct CostTrace {
     /// cumulative DRAM row-buffer hits/misses across all modeled ranks
     pub row_hits: u64,
     pub row_misses: u64,
+    /// bytes streamed per modeled rank (rank-level + bank-level): the
+    /// balance the placement policy is accountable for
+    pub bytes_by_rank: Vec<u64>,
     /// accrued dynamic energy (joules) via [`energy::dynamic_energy_j`]
     pub energy_j: f64,
 }
@@ -139,11 +153,27 @@ pub struct CostTrace {
 impl CostTrace {
     /// NTT-FU utilization: busy cycles over the critical-path cycles of
     /// every rank cluster (the Eq. (8)/(9) numerator/denominator shape).
+    /// Zero-safe: an empty trace (no dispatches) reports 0, and the
+    /// denominator is computed in f64 so huge cycle counts cannot wrap.
     pub fn ntt_utilization(&self) -> f64 {
         if self.cycles == 0 || self.fu_clusters == 0 {
             return 0.0;
         }
-        self.profile.ntt_busy as f64 / (self.cycles * self.fu_clusters) as f64
+        self.profile.ntt_busy as f64 / (self.cycles as f64 * self.fu_clusters as f64)
+    }
+
+    /// Max-over-mean byte load across *all* configured ranks — 1.0 is
+    /// perfectly balanced, and an idle rank counts as imbalance (placing
+    /// every byte on one of N ranks reads N, not 1.0). Zero-safe: an
+    /// empty trace is trivially balanced and reports 1.0.
+    pub fn rank_imbalance(&self) -> f64 {
+        let n = self.bytes_by_rank.len();
+        let total: u64 = self.bytes_by_rank.iter().sum();
+        if n == 0 || total == 0 {
+            return 1.0;
+        }
+        let max = *self.bytes_by_rank.iter().max().expect("non-empty") as f64;
+        max / (total as f64 / n as f64)
     }
 
     pub fn row_hit_rate(&self) -> f64 {
@@ -181,6 +211,12 @@ impl CostTrace {
             fu_clusters: self.fu_clusters,
             row_hits: self.row_hits.saturating_sub(prev.row_hits),
             row_misses: self.row_misses.saturating_sub(prev.row_misses),
+            bytes_by_rank: self
+                .bytes_by_rank
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| b.saturating_sub(prev.bytes_by_rank.get(i).copied().unwrap_or(0)))
+                .collect(),
             energy_j: (self.energy_j - prev.energy_j).max(0.0),
         };
         for (i, slot) in d.cycles_by_class.iter_mut().enumerate() {
@@ -201,6 +237,12 @@ pub struct PnmBackend {
     /// §III-B③ in-memory KS adders: when enabled, routine2-class traffic
     /// (the PubKS/PrivKS lowering target) is charged at bank level
     imc_ks: bool,
+    /// operand-placement policy (see [`AllocPolicy`])
+    policy: AllocPolicy,
+    /// the rank-aware operand allocator (used by `RankAware` only):
+    /// pool→rank pinning and per-operand extents live here, and its LIFO
+    /// free lists keep re-placement address-stable across dispatches
+    alloc: Mutex<RankAllocator>,
     /// persistent per-rank bank state, so row-buffer locality spans
     /// dispatches the way an open row would
     ranks: Mutex<Vec<Rank>>,
@@ -208,16 +250,24 @@ pub struct PnmBackend {
 }
 
 impl PnmBackend {
+    /// Default construction: the rank-aware placement policy.
     pub fn new(cfg: DimmConfig) -> Self {
+        Self::with_policy(cfg, AllocPolicy::RankAware)
+    }
+
+    pub fn with_policy(cfg: DimmConfig, policy: AllocPolicy) -> Self {
         let nranks = cfg.ranks.max(1);
         let ranks = vec![Rank::new(BANKS_PER_RANK, ROW_BYTES); nranks];
         PnmBackend {
             inner: ReferenceBackend::new(),
             ic: Interconnect::from_config(&cfg),
             imc_ks: ImcKs::from_config(&cfg).enabled,
+            policy,
+            alloc: Mutex::new(RankAllocator::new(Geometry::of(&cfg))),
             ranks: Mutex::new(ranks),
             trace: Mutex::new(CostTrace {
                 fu_clusters: nranks as u64,
+                bytes_by_rank: vec![0; nranks],
                 ..Default::default()
             }),
             cfg,
@@ -229,6 +279,10 @@ impl PnmBackend {
         Self::new(DimmConfig::paper())
     }
 
+    pub fn policy(&self) -> AllocPolicy {
+        self.policy
+    }
+
     /// Snapshot of the cumulative cost trace.
     pub fn trace(&self) -> CostTrace {
         self.trace.lock().unwrap().clone()
@@ -236,23 +290,64 @@ impl PnmBackend {
 
     /// Rank placement for a batch: items sharing an operand pool (the
     /// lowering-stamped `pool` id, else the identity of their largest
-    /// operand) are placed on the same rank; distinct pools round-robin
-    /// across ranks in first-appearance order. Deterministic given the
+    /// operand) are placed on the same rank. Under `Identity`, distinct
+    /// pools round-robin across ranks in first-appearance order; under
+    /// `RankAware`, the allocator pins each new pool to the rank with the
+    /// lightest cumulative byte load (estimated from this batch's operand
+    /// bytes), so rank traffic stays balanced. Deterministic given the
     /// batch order the scheduler produced.
     pub fn placement(&self, items: &[BatchItem<'_>]) -> Vec<usize> {
         let nranks = self.cfg.ranks.max(1);
-        let mut by_pool: HashMap<u64, usize> = HashMap::new();
-        let mut next = 0usize;
-        items
-            .iter()
-            .map(|it| {
-                *by_pool.entry(Self::pool_key(it)).or_insert_with(|| {
-                    let r = next % nranks;
-                    next += 1;
-                    r
-                })
-            })
-            .collect()
+        match self.policy {
+            AllocPolicy::Identity => {
+                let mut by_pool: HashMap<u64, usize> = HashMap::new();
+                let mut next = 0usize;
+                items
+                    .iter()
+                    .map(|it| {
+                        *by_pool.entry(Self::pool_key(it)).or_insert_with(|| {
+                            let r = next % nranks;
+                            next += 1;
+                            r
+                        })
+                    })
+                    .collect()
+            }
+            AllocPolicy::RankAware => {
+                // pool byte estimates over the whole batch first, then
+                // assign pools in first-appearance order, least-loaded
+                // rank first (greedy balance). Lowering-stamped pool ids
+                // pin (the cluster recurs across batches and its rank
+                // should too); pointer-derived fallback groups get a
+                // transient assignment — pinning a heap address would
+                // leak an entry per buffer and alias reused addresses.
+                let mut order: Vec<(u64, bool)> = Vec::new();
+                let mut est: HashMap<u64, u64> = HashMap::new();
+                for it in items {
+                    let bytes: u64 = it.inputs.iter().map(|a| (a.len() * 8) as u64).sum();
+                    match est.entry(Self::pool_key(it)) {
+                        Entry::Occupied(mut e) => *e.get_mut() += bytes,
+                        Entry::Vacant(v) => {
+                            order.push((*v.key(), it.pool.is_some()));
+                            v.insert(bytes);
+                        }
+                    }
+                }
+                let mut alloc = self.alloc.lock().unwrap();
+                let assign: HashMap<u64, usize> = order
+                    .iter()
+                    .map(|&(p, pinned)| {
+                        let r = if pinned {
+                            alloc.rank_for_pool(p, est[&p])
+                        } else {
+                            alloc.rank_for_transient(est[&p])
+                        };
+                        (p, r)
+                    })
+                    .collect();
+                items.iter().map(|it| assign[&Self::pool_key(it)]).collect()
+            }
+        }
     }
 
     fn pool_key(item: &BatchItem<'_>) -> u64 {
@@ -265,14 +360,39 @@ impl PnmBackend {
         largest.map(|a| a.as_ptr() as u64).unwrap_or(0)
     }
 
-    /// Advance the device model for one invocation placed on `rank`:
-    /// FU occupancy for the compute, row-buffer-aware streaming for the
-    /// operands, overlap of the two on the critical path.
+    /// Free every placement made during one dispatch, in *reverse*
+    /// placement order: popped LIFO by the next dispatch's placements,
+    /// the free lists then hand every operand its previous slots back,
+    /// so an identical dispatch sequence is exactly address-stable and
+    /// row-buffer locality survives the free.
+    fn release(&self, alloc: &mut RankAllocator, placed: &[(u64, usize)]) {
+        let mut seen: HashSet<(u64, usize)> = HashSet::new();
+        let mut order: Vec<(u64, usize)> = Vec::new();
+        for &p in placed {
+            if seen.insert(p) {
+                order.push(p);
+            }
+        }
+        for &(key, rank) in order.iter().rev() {
+            alloc.free(key, rank);
+        }
+    }
+
+    /// Advance the device model for one invocation placed on rank
+    /// `rank_id`: FU occupancy for the compute, row-buffer-aware
+    /// streaming for the operands (through the allocator's explicit
+    /// extents when `alloc` is supplied, synthetic identity addresses
+    /// otherwise), overlap of the two on the critical path.
+    #[allow(clippy::too_many_arguments)]
     fn account(
         &self,
         meta: &ArtifactMeta,
         operands: &[(u64, usize)],
+        kinds: &[OperandKind],
+        rank_id: usize,
         rank: &mut Rank,
+        alloc: Option<&mut RankAllocator>,
+        placed: &mut Vec<(u64, usize)>,
     ) -> (OpProfile, OpClass) {
         let class = OpClass::of(&meta.name);
         let (rows, n) = match meta.shapes.first() {
@@ -315,15 +435,40 @@ impl PnmBackend {
                 p.madd_busy += c;
             }
         }
-        // operand streaming through this rank's banks: operand identity
-        // doubles as the address, so a pool's shared rows re-open the
-        // same DRAM rows (the locality the placement exists to create)
+        // operand streaming through this rank's banks. RankAware: each
+        // operand streams from its allocator extent — explicit (bank,
+        // row) placement, so the hot ciphertext stripes stay
+        // row-resident while keys and staging streams burn a sacrificial
+        // column instead of evicting them. Identity: operand identity
+        // doubles as the address, so locality is whatever the host heap
+        // produced.
         let mut mem_clocks = 0u64;
         let mut bytes = 0u64;
-        for &(addr, len) in operands {
-            let b = (len * 8) as u64;
-            mem_clocks += rank.stream(addr, b, &self.cfg.timing);
-            bytes += b;
+        if let Some(alloc) = alloc {
+            for (i, &(key, len)) in operands.iter().enumerate() {
+                let b = (len * 8) as u64;
+                let kind = kinds
+                    .get(i)
+                    .copied()
+                    .unwrap_or_else(|| OperandKind::classify(&meta.name, i));
+                match alloc.place(key, rank_id, kind, b) {
+                    Ok(ext) => {
+                        mem_clocks += rank.stream_slots(ext.slot_iter(), b, &self.cfg.timing);
+                        placed.push((key, rank_id));
+                    }
+                    // a somehow-exhausted group degrades to identity
+                    // addressing for this operand instead of failing the
+                    // dispatch — the numerics never depend on placement
+                    Err(_) => mem_clocks += rank.stream(key, b, &self.cfg.timing),
+                }
+                bytes += b;
+            }
+        } else {
+            for &(addr, len) in operands {
+                let b = (len * 8) as u64;
+                mem_clocks += rank.stream(addr, b, &self.cfg.timing);
+                bytes += b;
+            }
         }
         // result write-back: counted as traffic; writes combine at burst
         // rate without re-opening operand rows
@@ -337,9 +482,15 @@ impl PnmBackend {
             p.io_internal += bytes;
         }
         // memory clocks → NMC cycles; streaming overlaps compute, so the
-        // critical path is the slower of the two
-        let mem_cycles =
-            mem_clocks * self.cfg.clock_hz / (self.cfg.timing.clock_mhz * 1_000_000);
+        // critical path is the slower of the two (zero-safe: a zero-MHz
+        // memory clock contributes no cycles instead of dividing by zero)
+        let mem_hz = self.cfg.timing.clock_mhz.saturating_mul(1_000_000);
+        let mem_cycles = if mem_hz == 0 {
+            0
+        } else {
+            ((mem_clocks as u128 * self.cfg.clock_hz as u128 / mem_hz as u128)
+                .min(u64::MAX as u128)) as u64
+        };
         p.cycles = p.cycles.max(mem_cycles);
         (p, class)
     }
@@ -348,6 +499,7 @@ impl PnmBackend {
     fn accrue(
         &self,
         per_rank_cycles: &[u64],
+        per_rank_bytes: &[u64],
         total: OpProfile,
         by_class: [u64; OpClass::COUNT],
         invocations: u64,
@@ -371,6 +523,9 @@ impl PnmBackend {
         for (slot, c) in tr.cycles_by_class.iter_mut().zip(by_class) {
             *slot += c;
         }
+        for (slot, b) in tr.bytes_by_rank.iter_mut().zip(per_rank_bytes) {
+            *slot += b;
+        }
         tr.row_hits = hits;
         tr.row_misses = misses;
     }
@@ -382,19 +537,52 @@ impl Backend for PnmBackend {
     }
 
     fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[&[u64]]) -> Result<Vec<u64>> {
-        // a lone invocation is still one device dispatch, on rank 0
+        // a lone invocation is still one device dispatch
+        let nranks = self.cfg.ranks.max(1);
         let operands: Vec<(u64, usize)> = inputs
             .iter()
             .map(|s| (s.as_ptr() as u64, s.len()))
             .collect();
-        let (p, class) = {
-            let mut ranks = self.ranks.lock().unwrap();
-            self.account(meta, &operands, &mut ranks[0])
+        let mut placed: Vec<(u64, usize)> = Vec::new();
+        // lock order everywhere: allocator before rank state
+        let (p, class, rank_id) = match self.policy {
+            AllocPolicy::Identity => {
+                let mut ranks = self.ranks.lock().unwrap();
+                let (p, c) =
+                    self.account(meta, &operands, &[], 0, &mut ranks[0], None, &mut placed);
+                (p, c, 0)
+            }
+            AllocPolicy::RankAware => {
+                let mut alloc = self.alloc.lock().unwrap();
+                // no lowering pool on the singleton path: a transient
+                // least-loaded assignment (pinning a pointer-derived id
+                // would leak pins and alias reused heap addresses)
+                let est: u64 = operands.iter().map(|o| (o.1 * 8) as u64).sum();
+                let r = alloc.rank_for_transient(est);
+                let mut ranks = self.ranks.lock().unwrap();
+                let (p, c) = self.account(
+                    meta,
+                    &operands,
+                    &[],
+                    r,
+                    &mut ranks[r],
+                    Some(&mut alloc),
+                    &mut placed,
+                );
+                drop(ranks);
+                self.release(&mut alloc, &placed);
+                (p, c, r)
+            }
         };
         let cycles = p.cycles;
+        let streamed = p.io_internal + p.io_bank;
         let mut by_class = [0u64; OpClass::COUNT];
         by_class[class.index()] = cycles;
-        self.accrue(&[cycles], p, by_class, 1);
+        let mut per_rank_cycles = vec![0u64; nranks];
+        per_rank_cycles[rank_id] = cycles;
+        let mut per_rank_bytes = vec![0u64; nranks];
+        per_rank_bytes[rank_id] = streamed;
+        self.accrue(&per_rank_cycles, &per_rank_bytes, p, by_class, 1);
         self.inner.execute_u64(meta, inputs)
     }
 
@@ -450,10 +638,17 @@ impl Backend for PnmBackend {
         };
         // device model: per-rank serial occupancy, ranks in parallel
         let mut per_rank_cycles = vec![0u64; nranks];
+        let mut per_rank_bytes = vec![0u64; nranks];
         let mut total = OpProfile::default();
         let mut by_class = [0u64; OpClass::COUNT];
         {
+            // lock order everywhere: allocator before rank state
+            let mut alloc_guard = match self.policy {
+                AllocPolicy::RankAware => Some(self.alloc.lock().unwrap()),
+                AllocPolicy::Identity => None,
+            };
             let mut ranks = self.ranks.lock().unwrap();
+            let mut dispatch_placed: Vec<(u64, usize)> = Vec::new();
             for (r, ixs) in parts.iter().enumerate() {
                 for &i in ixs {
                     let inputs = items[i].inputs;
@@ -461,14 +656,34 @@ impl Backend for PnmBackend {
                         .iter()
                         .map(|a| (a.as_ptr() as u64, a.len()))
                         .collect();
-                    let (p, class) = self.account(items[i].meta, &operands, &mut ranks[r]);
+                    let (p, class) = self.account(
+                        items[i].meta,
+                        &operands,
+                        items[i].kinds,
+                        r,
+                        &mut ranks[r],
+                        alloc_guard.as_deref_mut(),
+                        &mut dispatch_placed,
+                    );
                     per_rank_cycles[r] += p.cycles;
+                    per_rank_bytes[r] += p.io_internal + p.io_bank;
                     by_class[class.index()] += p.cycles;
                     total.absorb(&p, 1);
                 }
             }
+            // placements are transient per dispatch; the LIFO free lists
+            // hand the same extents back next time, so locality persists
+            if let Some(alloc) = alloc_guard.as_deref_mut() {
+                self.release(alloc, &dispatch_placed);
+            }
         }
-        self.accrue(&per_rank_cycles, total, by_class, items.len() as u64);
+        self.accrue(
+            &per_rank_cycles,
+            &per_rank_bytes,
+            total,
+            by_class,
+            items.len() as u64,
+        );
         // scatter partition results back into batch order
         let mut slots: Vec<Option<Result<Vec<u64>>>> = items.iter().map(|_| None).collect();
         for (&r, outs) in occupied.iter().zip(part_outs) {
@@ -564,6 +779,7 @@ mod tests {
                 meta,
                 inputs: &inv.inputs,
                 pool: inv.pool,
+                kinds: &inv.kinds,
             })
             .collect();
         let ranks = backend.placement(&items);
@@ -594,6 +810,7 @@ mod tests {
                 meta,
                 inputs: &inv.inputs,
                 pool: inv.pool,
+                kinds: &inv.kinds,
             })
             .collect();
         for out in backend.execute_batch(&items) {
@@ -650,5 +867,155 @@ mod tests {
         let tr = rt.cost_trace().unwrap();
         assert_eq!(tr.dispatches, 1);
         assert_eq!(tr.invocations, 2);
+    }
+
+    #[test]
+    fn policies_execute_identical_numerics() {
+        let dimm = DimmConfig::paper();
+        let identity =
+            Runtime::for_backend_with_policy("pnm", &dimm, AllocPolicy::Identity).unwrap();
+        let rank_aware =
+            Runtime::for_backend_with_policy("pnm", &dimm, AllocPolicy::RankAware).unwrap();
+        let invs = routine2_invs(6, 17);
+        let a = identity.execute_batch_u64(&invs);
+        let b = rank_aware.execute_batch_u64(&invs);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.as_ref().unwrap(), y.as_ref().unwrap());
+        }
+        let ti = identity.cost_trace().unwrap();
+        let tr = rank_aware.cost_trace().unwrap();
+        assert_eq!(ti.invocations, tr.invocations);
+        assert_eq!(ti.dispatches, tr.dispatches);
+        // both traces attribute the streamed bytes to ranks
+        let sum_i: u64 = ti.bytes_by_rank.iter().sum();
+        let sum_r: u64 = tr.bytes_by_rank.iter().sum();
+        assert_eq!(sum_i, ti.profile.io_internal + ti.profile.io_bank);
+        assert_eq!(sum_r, tr.profile.io_internal + tr.profile.io_bank);
+        assert!(tr.rank_imbalance() >= 1.0);
+    }
+
+    #[test]
+    fn identity_policy_round_robins_pools() {
+        let backend = PnmBackend::with_policy(DimmConfig::paper(), AllocPolicy::Identity);
+        assert_eq!(backend.policy(), AllocPolicy::Identity);
+        let manifest = builtin_manifest();
+        let meta = manifest.iter().find(|m| m.name == "routine2_n256").unwrap();
+        let d: Arc<Vec<u64>> = Arc::new(vec![1u64; 14 * 256]);
+        let invs: Vec<Invocation> = [5u64, 5, 9]
+            .iter()
+            .map(|&p| {
+                Invocation::new("routine2_n256", vec![d.clone(), d.clone(), d.clone()])
+                    .with_pool(p)
+            })
+            .collect();
+        let items: Vec<BatchItem<'_>> = invs
+            .iter()
+            .map(|inv| BatchItem {
+                meta,
+                inputs: &inv.inputs,
+                pool: inv.pool,
+                kinds: &inv.kinds,
+            })
+            .collect();
+        assert_eq!(backend.placement(&items), vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn rank_aware_placement_balances_pool_bytes() {
+        let mut cfg = DimmConfig::paper();
+        cfg.ranks = 2;
+        let backend = PnmBackend::with_policy(cfg, AllocPolicy::RankAware);
+        let manifest = builtin_manifest();
+        let meta = manifest.iter().find(|m| m.name == "routine2_n256").unwrap();
+        let d: Arc<Vec<u64>> = Arc::new(vec![1u64; 14 * 256]);
+        // pool 0 appears twice (heavy), pools 1 and 2 once each: greedy
+        // least-loaded puts the light pools together on the other rank
+        let invs: Vec<Invocation> = [0u64, 0, 1, 2]
+            .iter()
+            .map(|&p| {
+                Invocation::new("routine2_n256", vec![d.clone(), d.clone(), d.clone()])
+                    .with_pool(p)
+            })
+            .collect();
+        let items: Vec<BatchItem<'_>> = invs
+            .iter()
+            .map(|inv| BatchItem {
+                meta,
+                inputs: &inv.inputs,
+                pool: inv.pool,
+                kinds: &inv.kinds,
+            })
+            .collect();
+        assert_eq!(backend.placement(&items), vec![0, 0, 1, 1]);
+        // pool pinning is stable on a later batch
+        assert_eq!(backend.placement(&items[..2]), vec![0, 0]);
+    }
+
+    #[test]
+    fn empty_trace_derived_stats_are_zero_safe() {
+        let backend = PnmBackend::paper();
+        let tr = backend.trace();
+        assert_eq!(tr.dispatches, 0);
+        assert_eq!(tr.row_hit_rate(), 0.0);
+        assert_eq!(tr.ntt_utilization(), 0.0);
+        assert_eq!(tr.rank_imbalance(), 1.0);
+        assert_eq!(tr.energy_j, 0.0);
+        // the all-default trace (no rank vector at all) is equally safe
+        let d = CostTrace::default();
+        assert_eq!(d.row_hit_rate(), 0.0);
+        assert_eq!(d.ntt_utilization(), 0.0);
+        assert_eq!(d.rank_imbalance(), 1.0);
+        // delta against a shorter (default) snapshot must not panic
+        let delta = tr.delta_since(&d);
+        assert_eq!(delta.dispatches, 0);
+        assert_eq!(delta.bytes_by_rank.len(), tr.bytes_by_rank.len());
+    }
+
+    #[test]
+    fn rank_aware_placements_are_address_stable_across_dispatches() {
+        // the same batch dispatched twice streams from the same rows:
+        // the second dispatch re-opens no rows at all
+        let backend = PnmBackend::paper();
+        let manifest = builtin_manifest();
+        let meta = manifest.iter().find(|m| m.name == "routine1_n256").unwrap();
+        let mut rng = Rng::seeded(29);
+        let q = meta.modulus;
+        let mk = |rng: &mut Rng| -> Arc<Vec<u64>> {
+            Arc::new((0..14 * 256).map(|_| rng.uniform(q)).collect())
+        };
+        let table = NttTable::new(256, q);
+        let tw = Arc::new(table.forward_twiddles().to_vec());
+        let (x, key) = (mk(&mut rng), mk(&mut rng));
+        let invs: Vec<Invocation> = (0..4)
+            .map(|_| {
+                Invocation::new(
+                    "routine1_n256",
+                    vec![x.clone(), key.clone(), x.clone(), tw.clone()],
+                )
+                .with_pool(3)
+            })
+            .collect();
+        let items: Vec<BatchItem<'_>> = invs
+            .iter()
+            .map(|inv| BatchItem {
+                meta,
+                inputs: &inv.inputs,
+                pool: inv.pool,
+                kinds: &inv.kinds,
+            })
+            .collect();
+        for out in backend.execute_batch(&items) {
+            out.unwrap();
+        }
+        let t1 = backend.trace();
+        for out in backend.execute_batch(&items) {
+            out.unwrap();
+        }
+        let t2 = backend.trace();
+        assert_eq!(
+            t2.row_misses, t1.row_misses,
+            "re-dispatch must reuse the freed extents (no new row opens)"
+        );
+        assert!(t2.row_hits > t1.row_hits);
     }
 }

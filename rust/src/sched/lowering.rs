@@ -24,7 +24,7 @@
 use crate::math::automorph::galois_eval_map;
 use crate::math::ntt::NttTable;
 use crate::math::sampler::Rng;
-use crate::runtime::{Invocation, Runtime};
+use crate::runtime::{Invocation, OperandKind, Runtime};
 use crate::sched::graph::OpGraph;
 use crate::sched::oplevel::{FheOp, OpShapes};
 use crate::util::error::{Error, Result};
@@ -100,11 +100,6 @@ impl RingOperands {
 pub struct Lowerer {
     rings: HashMap<usize, RingOperands>,
     ring_choice: HashMap<usize, usize>,
-    /// operand-pool ids, one per (ring, key identity): the §V-B cluster
-    /// tag stamped onto every lowered invocation so placement-aware
-    /// backends (the pnm rank partitioner) keep a cluster's invocations
-    /// — and therefore its shared evk rows — on one device partition
-    pools: HashMap<(usize, i64), u64>,
 }
 
 impl Lowerer {
@@ -112,12 +107,20 @@ impl Lowerer {
         Self::default()
     }
 
-    /// The stable pool id for ops on `ring` sharing `key_id` (keyless
-    /// ops share one anonymous pool per ring).
-    fn pool_for(&mut self, ring: usize, key_id: Option<u32>) -> u64 {
-        let id = key_id.map(|k| k as i64).unwrap_or(-1);
-        let next = self.pools.len() as u64;
-        *self.pools.entry((ring, id)).or_insert(next)
+    /// The pool id for ops on `ring` sharing `key_id` (keyless ops share
+    /// one anonymous pool per ring): the §V-B cluster tag stamped onto
+    /// every lowered invocation so placement-aware backends (the pnm
+    /// rank partitioner) keep a cluster's invocations — and therefore
+    /// its shared evk rows — on one device partition. The encoding is a
+    /// *stable* function of (ring, key), not an allocation counter, so
+    /// the same cluster maps to the same id across lowerers — the
+    /// backend's cross-batch pool→rank pinning and per-rank load
+    /// accounting then track real clusters, not batch-relative indices.
+    fn pool_for(ring: usize, key_id: Option<u32>) -> u64 {
+        // key ids occupy 33 bits (u32::MAX + 1 is a valid keyed id), the
+        // ring the bits above — no cluster can alias another
+        let id = key_id.map(|k| k as u64 + 1).unwrap_or(0);
+        ((ring as u64) << 33) | id
     }
 
     /// Ring sizes the manifest can execute (an `ntt_fwd_n*` entry marks a
@@ -185,7 +188,7 @@ impl Lowerer {
             _ => shapes.ckks.n,
         };
         let ring = self.ring_for(want, rt)?;
-        let pool = self.pool_for(ring, key_id);
+        let pool = Self::pool_for(ring, key_id);
         let ops = self.operands(ring, rt)?;
         // evk-style pools are only materialized for ops that consume them
         // (role 1, the RGSW a-rows, only feeds the external product)
@@ -207,15 +210,25 @@ impl Lowerer {
         let key_a = if uses_ep { Some(ops.key(key_id, 1)) } else { None };
         let key_b = move || key_b.as_ref().expect("key operand for keyed op").clone();
         let key_a = move || key_a.as_ref().expect("a-rows operand for external product").clone();
-        // invocation builders: only the ones the op's arm names are built
+        // invocation builders: only the ones the op's arm names are
+        // built. Each stamps the per-input placement hints the rank-aware
+        // allocator consumes — hot ciphertext limbs striped row-resident
+        // (`Data`), evk rows pinned (`Evk`), twiddle/constant tables
+        // replicated (`Twiddle`), single-use staging sacrificial
+        // (`Stream`) — mirroring the operand roles the reference backend
+        // executes by.
+        use OperandKind::{Data, Evk, Stream, Twiddle};
         let art = |kind: &str| format!("{kind}_n{ring}");
-        let ntt_fwd =
-            || Invocation::new(art("ntt_fwd"), vec![ops.poly.clone(), ops.fwd_tw.clone()]);
+        let ntt_fwd = || {
+            Invocation::new(art("ntt_fwd"), vec![ops.poly.clone(), ops.fwd_tw.clone()])
+                .with_kinds(vec![Data, Twiddle])
+        };
         let ntt_inv = || {
             Invocation::new(
                 art("ntt_inv"),
                 vec![ops.poly2.clone(), ops.inv_tw.clone(), ops.n_inv.clone()],
             )
+            .with_kinds(vec![Stream, Twiddle, Twiddle])
         };
         let routine1 = || {
             Invocation::new(
@@ -227,12 +240,14 @@ impl Lowerer {
                     ops.fwd_tw.clone(),
                 ],
             )
+            .with_kinds(vec![Data, Evk, Data, Twiddle])
         };
         let routine2 = || {
             Invocation::new(
                 art("routine2"),
                 vec![ops.poly.clone(), key_b(), ops.poly.clone()],
             )
+            .with_kinds(vec![Data, Evk, Data])
         };
         let external_product = || {
             Invocation::new(
@@ -246,13 +261,20 @@ impl Lowerer {
                     ops.n_inv.clone(),
                 ],
             )
+            .with_kinds(vec![Stream, Evk, Evk, Twiddle, Twiddle, Twiddle])
         };
-        let automorph =
-            || Invocation::new(art("automorph"), vec![ops.poly.clone(), ops.auto_map.clone()]);
-        let pointwise_mul =
-            || Invocation::new(art("pointwise_mul"), vec![ops.poly.clone(), ops.poly.clone()]);
-        let pointwise_add =
-            || Invocation::new(art("pointwise_add"), vec![ops.poly.clone(), ops.poly.clone()]);
+        let automorph = || {
+            Invocation::new(art("automorph"), vec![ops.poly.clone(), ops.auto_map.clone()])
+                .with_kinds(vec![Data, Twiddle])
+        };
+        let pointwise_mul = || {
+            Invocation::new(art("pointwise_mul"), vec![ops.poly.clone(), ops.poly.clone()])
+                .with_kinds(vec![Data, Data])
+        };
+        let pointwise_add = || {
+            Invocation::new(art("pointwise_add"), vec![ops.poly.clone(), ops.poly.clone()])
+                .with_kinds(vec![Data, Data])
+        };
         let invs = match op {
             FheOp::HAdd => vec![pointwise_add()],
             FheOp::PMult => vec![pointwise_mul()],
@@ -421,5 +443,86 @@ mod tests {
         let invs = low.lower_op(FheOp::HAdd, None, &s, &rt).unwrap();
         // paper CKKS ring exceeds every compiled kernel: tile on n=1024
         assert_eq!(invs[0].artifact, "pointwise_add_n1024");
+    }
+
+    #[test]
+    fn undersized_lane_falls_back_to_the_smallest_ring() {
+        // a lane smaller than every compiled kernel still lowers — onto
+        // the smallest manifest ring rather than erroring
+        let rt = Runtime::reference();
+        let mut s = shapes();
+        s.ckks.n = 128;
+        let mut low = Lowerer::new();
+        let invs = low.lower_op(FheOp::HAdd, None, &s, &rt).unwrap();
+        assert_eq!(invs[0].artifact, "pointwise_add_n256");
+    }
+
+    #[test]
+    fn keyless_ops_share_one_anonymous_pool_per_ring() {
+        let rt = Runtime::reference();
+        let mut s = shapes();
+        // shrink the CKKS lane so CKKS ops tile onto n=256 while the
+        // TFHE ring stays on n=1024: two distinct anonymous pools
+        s.ckks.n = 256;
+        let mut low = Lowerer::new();
+        let a = low.lower_op(FheOp::HAdd, None, &s, &rt).unwrap();
+        let b = low.lower_op(FheOp::PMult, None, &s, &rt).unwrap();
+        let c = low.lower_op(FheOp::Rescale, None, &s, &rt).unwrap();
+        let d = low.lower_op(FheOp::Cmux, None, &s, &rt).unwrap();
+        assert_eq!(a[0].pool, b[0].pool, "keyless CKKS ops share one pool");
+        assert_eq!(a[0].pool, c[0].pool);
+        assert_ne!(
+            a[0].pool, d[0].pool,
+            "the anonymous pool is per ring, not global"
+        );
+        // a keyed op on the same ring gets its own cluster pool
+        let e = low.lower_op(FheOp::CMult, Some(4), &s, &rt).unwrap();
+        assert_ne!(a[0].pool, e[0].pool);
+    }
+
+    #[test]
+    fn evk_roles_are_distinct_and_keyless_keys_share_buffers() {
+        let rt = Runtime::reference();
+        let s = shapes();
+        let mut low = Lowerer::new();
+        // external product: input 1 is the b-rows role, input 2 the
+        // a-rows role — same key, different buffers
+        let ep = low.lower_op(FheOp::Cmux, Some(5), &s, &rt).unwrap();
+        assert!(!Arc::ptr_eq(&ep[0].inputs[1], &ep[0].inputs[2]));
+        // keyless keyed-op lowering shares one anonymous evk buffer per
+        // role, and never aliases a real key's buffer
+        let k1 = low.lower_op(FheOp::Cmux, None, &s, &rt).unwrap();
+        let k2 = low.lower_op(FheOp::GateBootstrap, None, &s, &rt).unwrap();
+        assert!(Arc::ptr_eq(&k1[0].inputs[1], &k2[0].inputs[1]));
+        assert!(Arc::ptr_eq(&k1[0].inputs[2], &k2[0].inputs[2]));
+        assert!(!Arc::ptr_eq(&k1[0].inputs[1], &ep[0].inputs[1]));
+    }
+
+    #[test]
+    fn stamped_kinds_cover_inputs_and_match_classification() {
+        // the hints the lowerer stamps must agree with the fallback
+        // classification placement-aware backends use for unstamped
+        // invocations — otherwise the two paths would place differently
+        let rt = Runtime::reference();
+        let s = shapes();
+        let mut low = Lowerer::new();
+        for op in all_ops() {
+            for inv in low.lower_op(op, Some(1), &s, &rt).unwrap() {
+                assert_eq!(
+                    inv.kinds.len(),
+                    inv.inputs.len(),
+                    "{}: every input needs a placement hint",
+                    inv.artifact
+                );
+                for (i, &k) in inv.kinds.iter().enumerate() {
+                    assert_eq!(
+                        k,
+                        OperandKind::classify(&inv.artifact, i),
+                        "{} input {i}: hint diverges from classification",
+                        inv.artifact
+                    );
+                }
+            }
+        }
     }
 }

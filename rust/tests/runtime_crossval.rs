@@ -5,23 +5,38 @@
 //! and it runs on every plain `cargo test` — no artifacts required.
 //!
 //! The `APACHE_BACKEND` environment variable swaps the backend under
-//! test (`reference` | `pnm`) — the CI matrix runs this suite once per
-//! backend, so every assertion below doubles as a bit-identity check on
-//! the near-memory device model.
+//! test (`reference` | `pnm`) and `APACHE_ALLOC_POLICY` the operand
+//! placement policy (`rank_aware` | `identity`) — the CI matrix runs
+//! this suite once per (backend, policy) leg, so every assertion below
+//! doubles as a bit-identity check on the near-memory device model under
+//! both placement models.
 
-use apache_fhe::hw::DimmConfig;
+use apache_fhe::hw::{AllocPolicy, DimmConfig};
 use apache_fhe::math::automorph::galois_eval_map;
 use apache_fhe::math::modops::ntt_primes;
 use apache_fhe::math::ntt::NttTable;
 use apache_fhe::math::sampler::Rng;
+use apache_fhe::params::{CkksParams, TfheParams};
 use apache_fhe::runtime::{ArtifactMeta, Invocation, Runtime};
+use apache_fhe::sched::lowering::Lowerer;
+use apache_fhe::sched::oplevel::OpShapes;
+
+/// The placement policy named by `APACHE_ALLOC_POLICY`, else the default.
+fn env_policy() -> AllocPolicy {
+    match Runtime::env_alloc_policy() {
+        Some(name) => {
+            AllocPolicy::parse(&name).expect("APACHE_ALLOC_POLICY must name a known policy")
+        }
+        None => AllocPolicy::RankAware,
+    }
+}
 
 /// The backend named by `APACHE_BACKEND` when set; otherwise on-disk
 /// artifacts when built with `--features pjrt` after `make artifacts`,
 /// and the hermetic reference runtime in every other case. Never skips.
 fn runtime() -> Runtime {
     if let Some(name) = Runtime::env_backend() {
-        return Runtime::for_backend(&name, &DimmConfig::paper())
+        return Runtime::for_backend_with_policy(&name, &DimmConfig::paper(), env_policy())
             .expect("APACHE_BACKEND must name a known backend");
     }
     match Runtime::new(Runtime::default_dir()) {
@@ -453,6 +468,129 @@ fn pnm_full_manifest_bit_identity_sweep() {
     assert!(
         reference.cost_trace().is_none(),
         "the reference backend models no hardware cost"
+    );
+}
+
+/// The e2e serving mix, lowered to one flat invocation batch: CKKS
+/// inference (Lola-MNIST), an HELR iteration and a TFHE VSP cycle share
+/// one lowerer, so operand pools (and the §V-B key clusters they encode)
+/// span the whole mix — 5 pools across the compiled rings.
+fn serving_mix_invocations(rt: &Runtime) -> Vec<Invocation> {
+    let shapes = OpShapes {
+        ckks: CkksParams::paper_shape(),
+        tfhe: TfheParams::paper_shape(),
+    };
+    let tasks = [
+        apache_fhe::apps::lola_mnist(true),
+        apache_fhe::apps::helr_iteration(),
+        apache_fhe::apps::vsp_cycle(),
+    ];
+    let mut lowerer = Lowerer::new();
+    let mut invs = Vec::new();
+    for task in &tasks {
+        invs.extend(
+            lowerer
+                .lower_graph(&task.graph, &shapes, rt)
+                .expect("serving mix lowers"),
+        );
+    }
+    invs
+}
+
+/// A 4-rank DIMM: fewer ranks than the mix has pools, so the rank-aware
+/// policy actually has to balance (and the identity policy actually has
+/// to collide).
+fn crossval_dimm() -> DimmConfig {
+    let mut dimm = DimmConfig::paper();
+    dimm.ranks = 4;
+    dimm
+}
+
+#[test]
+fn rank_aware_policy_beats_identity_on_the_serving_mix() {
+    // the acceptance gate of the allocator: on the e2e serving mix the
+    // rank-aware policy must (a) stay bit-identical to the reference
+    // backend and the identity policy, (b) earn a strictly higher DRAM
+    // row-hit rate than identity addressing, and (c) keep per-rank byte
+    // traffic balanced under a fixed bound.
+    let reference = Runtime::reference();
+    let dimm = crossval_dimm();
+    let identity = Runtime::for_backend_with_policy("pnm", &dimm, AllocPolicy::Identity).unwrap();
+    let rank_aware =
+        Runtime::for_backend_with_policy("pnm", &dimm, AllocPolicy::RankAware).unwrap();
+    let invs = serving_mix_invocations(&reference);
+    assert!(invs.len() > 100, "the mix must be a real batch");
+    let ref_outs = reference.execute_batch_u64(&invs);
+    let id_outs = identity.execute_batch_u64(&invs);
+    let ra_outs = rank_aware.execute_batch_u64(&invs);
+    for ((inv, r), (i, a)) in invs.iter().zip(&ref_outs).zip(id_outs.iter().zip(&ra_outs)) {
+        let r = r.as_ref().unwrap_or_else(|e| panic!("{}: reference: {e}", inv.artifact));
+        let i = i.as_ref().unwrap_or_else(|e| panic!("{}: identity: {e}", inv.artifact));
+        let a = a.as_ref().unwrap_or_else(|e| panic!("{}: rank_aware: {e}", inv.artifact));
+        assert_eq!(r, i, "{}: identity diverged from reference", inv.artifact);
+        assert_eq!(r, a, "{}: rank_aware diverged from reference", inv.artifact);
+    }
+    let ti = identity.cost_trace().unwrap();
+    let ta = rank_aware.cost_trace().unwrap();
+    assert_eq!(ti.dispatches, 1);
+    assert_eq!(ta.dispatches, 1);
+    assert_eq!(ti.invocations, invs.len() as u64);
+    assert_eq!(ta.invocations, invs.len() as u64);
+    assert!(
+        ta.row_hit_rate() > ti.row_hit_rate(),
+        "explicit placement must beat synthetic addressing: rank_aware {:.3} vs identity {:.3}",
+        ta.row_hit_rate(),
+        ti.row_hit_rate()
+    );
+    assert!(
+        ta.rank_imbalance() <= 3.0,
+        "per-rank byte imbalance out of bounds: {:.3} ({:?})",
+        ta.rank_imbalance(),
+        ta.bytes_by_rank
+    );
+    // every rank the placement used moved traffic
+    assert!(ta.bytes_by_rank.iter().all(|&b| b > 0), "{:?}", ta.bytes_by_rank);
+}
+
+#[test]
+fn policy_trace_shape_sweep_is_dispatch_invariant() {
+    // the same mix chunked into many smaller dispatches: numerics stay
+    // bit-identical to the reference backend for both policies at every
+    // granularity, counters add up, and the rank-aware locality win
+    // persists across dispatch shapes.
+    let reference = Runtime::reference();
+    let invs = serving_mix_invocations(&reference);
+    let chunk = 64usize;
+    let ref_outs: Vec<_> = invs
+        .chunks(chunk)
+        .map(|c| reference.execute_batch_u64(c))
+        .collect();
+    let mut hit_rates = Vec::new();
+    for policy in [AllocPolicy::Identity, AllocPolicy::RankAware] {
+        let rt = Runtime::for_backend_with_policy("pnm", &crossval_dimm(), policy).unwrap();
+        let mut dispatches = 0u64;
+        for (piece, ref_piece) in invs.chunks(chunk).zip(&ref_outs) {
+            let outs = rt.execute_batch_u64(piece);
+            dispatches += 1;
+            for ((inv, r), o) in piece.iter().zip(ref_piece).zip(&outs) {
+                assert_eq!(
+                    r.as_ref().unwrap(),
+                    o.as_ref().unwrap(),
+                    "{}: {} diverged under chunked dispatch",
+                    inv.artifact,
+                    policy.name()
+                );
+            }
+        }
+        let tr = rt.cost_trace().unwrap();
+        assert_eq!(tr.dispatches, dispatches);
+        assert_eq!(tr.invocations, invs.len() as u64);
+        assert!(tr.cycles > 0 && tr.energy_j > 0.0);
+        hit_rates.push(tr.row_hit_rate());
+    }
+    assert!(
+        hit_rates[1] > hit_rates[0],
+        "rank-aware must keep its locality edge under chunked dispatch: {hit_rates:?}"
     );
 }
 
