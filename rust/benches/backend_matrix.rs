@@ -13,14 +13,47 @@
 //! once per [`AllocPolicy`] (`identity` vs `rank_aware`), and the JSON
 //! artifact records each policy's row-hit rate and rank balance so the
 //! CI trajectory captures placement quality, not just throughput.
+//!
+//! The plan-policy dimension rides the same way: the cold batches run
+//! once per [`PlanPolicy`] (`fifo` vs `row_locality`) on a rank-starved
+//! DIMM (pools forced to share ranks, so dispatch order actually
+//! matters), and the artifact records the A/B row-hit rates plus the
+//! planner's split/prediction counters.
 
 use apache_fhe::hw::{AllocPolicy, DimmConfig};
 use apache_fhe::math::ntt::NttTable;
 use apache_fhe::math::sampler::Rng;
-use apache_fhe::runtime::{Invocation, Runtime};
+use apache_fhe::runtime::{Invocation, PlanPolicy, Runtime};
+use apache_fhe::sched::plan::PlanCost;
 use apache_fhe::util::benchkit::{bench, fmt_rate, Table};
 use apache_fhe::util::jsonw::Json;
 use std::sync::Arc;
+
+/// One §V-B-style cluster's shared operands: (ciphertext poly, key rows).
+type ClusterOperands = (Arc<Vec<u64>>, Arc<Vec<u64>>);
+
+/// The plan-policy A/B mix: six §V-B-style clusters, each with a shared
+/// ciphertext poly and key-rows buffer, interleaved round-robin the way
+/// lowering order interleaves clusters across tasks. On a two-rank DIMM
+/// three clusters share each rank, so FIFO dispatch re-opens a cluster's
+/// rows on every switch while the planner streams each cluster's rows
+/// back-to-back — the locality dimension the A/B records.
+fn plan_batch(rt: &Runtime, pools: &[ClusterOperands], batch: usize) -> Vec<Invocation> {
+    let n = 256usize;
+    let q = rt.manifest["routine1_n256"].modulus;
+    let table = NttTable::new(n, q);
+    let fwd_tw = Arc::new(table.forward_twiddles().to_vec());
+    (0..batch)
+        .map(|i| {
+            let (poly, key) = &pools[i % pools.len()];
+            Invocation::new(
+                "routine1_n256",
+                vec![poly.clone(), key.clone(), poly.clone(), fwd_tw.clone()],
+            )
+            .with_pool((i % pools.len()) as u64)
+        })
+        .collect()
+}
 
 /// The batch_dispatch operand mix: an evk-sharing group where every
 /// invocation owns its data operand and shares the ring tables + one
@@ -77,7 +110,35 @@ fn main() {
                 .expect("pnm backend")
         })
         .collect();
+    // the plan-policy A/B runs on a rank-starved DIMM: more pools than
+    // ranks, so clusters share ranks and dispatch order decides whether
+    // their rows thrash — the dimension the planner is accountable for
+    let plan_dimm = {
+        let mut d = DimmConfig::paper();
+        d.ranks = 2;
+        d
+    };
+    let plan_policies = [PlanPolicy::Fifo, PlanPolicy::RowLocality];
+    let plan_runtimes: Vec<Runtime> = plan_policies
+        .iter()
+        .map(|&p| {
+            Runtime::for_backend_with_policies("pnm", &plan_dimm, AllocPolicy::RankAware, p)
+                .expect("pnm backend")
+        })
+        .collect();
     let mut rng = Rng::seeded(23);
+    // six shared (poly, key) cluster operand pairs for the plan A/B
+    let plan_pools: Vec<ClusterOperands> = {
+        let q = reference.manifest["routine1_n256"].modulus;
+        (0..6)
+            .map(|_| {
+                let mut gen = || -> Arc<Vec<u64>> {
+                    Arc::new((0..14 * 256).map(|_| rng.uniform(q)).collect())
+                };
+                (gen(), gen())
+            })
+            .collect()
+    };
 
     // sanity: the two backends are bit-identical on a mixed batch
     let check = mixed_batch(&mut rng, &reference, 6);
@@ -95,6 +156,12 @@ fn main() {
         let invs = mixed_batch(&mut rng, &reference, batch);
         for cold in &cold_runtimes {
             for r in cold.execute_batch_u64(&invs) {
+                r.unwrap();
+            }
+        }
+        let plan_invs = plan_batch(&reference, &plan_pools, batch);
+        for cold in &plan_runtimes {
+            for r in cold.execute_batch_u64(&plan_invs) {
                 r.unwrap();
             }
         }
@@ -160,6 +227,45 @@ fn main() {
         "rank_aware must beat identity on the bench mix: {hit_rates:?}"
     );
 
+    // plan-policy A/B: same cold batches, rank-starved DIMM, fifo vs
+    // row-locality dispatch planning
+    let mut plan_json: Vec<Json> = Vec::new();
+    let mut plan_hit_rates = Vec::new();
+    for (policy, cold) in plan_policies.iter().zip(&plan_runtimes) {
+        let tr = cold.cost_trace().expect("pnm exposes a cost trace");
+        assert_eq!(tr.invocations, 1 + 16 + 64);
+        let predicted = PlanCost {
+            row_hits: tr.predicted_row_hits,
+            row_misses: tr.predicted_row_misses,
+        };
+        println!(
+            "pnm[plan={}]: {} plans, {} splits, row-hit rate {:.1}% \
+             (predicted {:.1}%), {} dispatches",
+            policy.name(),
+            tr.plans,
+            tr.plan_splits,
+            100.0 * tr.row_hit_rate(),
+            100.0 * predicted.hit_rate(),
+            tr.dispatches
+        );
+        plan_hit_rates.push(tr.row_hit_rate());
+        plan_json.push(
+            Json::obj()
+                .put("policy", policy.name())
+                .put("row_hit_rate", tr.row_hit_rate())
+                .put("plans", tr.plans)
+                .put("splits", tr.plan_splits)
+                .put("predicted_row_hits", tr.predicted_row_hits)
+                .put("predicted_row_misses", tr.predicted_row_misses)
+                .put("cycles", tr.cycles)
+                .put("energy_j", tr.energy_j),
+        );
+    }
+    assert!(
+        plan_hit_rates[1] > plan_hit_rates[0],
+        "row_locality must beat fifo on the rank-starved bench mix: {plan_hit_rates:?}"
+    );
+
     // the cumulative trace the artifact has always carried comes from the
     // default-policy (rank_aware) cold runtime
     let tr = cold_runtimes[1].cost_trace().expect("pnm exposes a cost trace");
@@ -167,6 +273,7 @@ fn main() {
         .put("bench", "backend_matrix")
         .put("batches", Json::Arr(rows_json))
         .put("alloc_policies", Json::Arr(policy_json))
+        .put("plan_policies", Json::Arr(plan_json))
         .put(
             "pnm_trace",
             Json::obj()

@@ -1,6 +1,7 @@
 //! Coordinator configuration: TOML-subset file + CLI overrides.
 
 use crate::hw::{AllocPolicy, DimmConfig, DramTiming};
+use crate::sched::plan::PlanPolicy;
 use crate::util::error::{Error, Result};
 use crate::util::toml_lite;
 
@@ -27,6 +28,12 @@ pub struct ApacheConfig {
     /// precedence chain as `backend`: `--alloc-policy` >
     /// `APACHE_ALLOC_POLICY` > this config key.
     pub alloc_policy: String,
+    /// dispatch-planning policy of the runtime's batched entry point:
+    /// `"row_locality"` (order/cluster/split batches against the
+    /// allocator's placements through `sched::plan`, the default) or
+    /// `"fifo"` (lowering order, the control). Same precedence chain:
+    /// `--plan-policy` > `APACHE_PLAN_POLICY` > this config key.
+    pub plan_policy: String,
     pub worker_threads: usize,
 }
 
@@ -40,6 +47,7 @@ impl Default for ApacheConfig {
             use_runtime: false,
             backend: "reference".into(),
             alloc_policy: AllocPolicy::RankAware.name().into(),
+            plan_policy: PlanPolicy::RowLocality.name().into(),
             worker_threads: 2,
         }
     }
@@ -74,6 +82,9 @@ impl ApacheConfig {
             alloc_policy: doc
                 .get_str("system", "alloc_policy", &def.alloc_policy)
                 .to_string(),
+            plan_policy: doc
+                .get_str("system", "plan_policy", &def.plan_policy)
+                .to_string(),
             worker_threads: doc.get_int("system", "worker_threads", def.worker_threads as i64)
                 as usize,
         };
@@ -88,6 +99,8 @@ impl ApacheConfig {
         }
         AllocPolicy::parse(&cfg.alloc_policy)
             .map_err(|e| Error::new(format!("system.alloc_policy: {e}")))?;
+        PlanPolicy::parse(&cfg.plan_policy)
+            .map_err(|e| Error::new(format!("system.plan_policy: {e}")))?;
         Ok(cfg)
     }
 
@@ -155,5 +168,16 @@ imc_ks = false
         let err = ApacheConfig::from_toml("[system]\nalloc_policy = \"random\"\n");
         assert!(err.is_err(), "unknown policies must be rejected");
         assert!(err.unwrap_err().to_string().contains("alloc_policy"));
+    }
+
+    #[test]
+    fn plan_policy_parses_and_validates() {
+        let cfg = ApacheConfig::from_toml("").unwrap();
+        assert_eq!(cfg.plan_policy, "row_locality", "row locality is the default");
+        let cfg = ApacheConfig::from_toml("[system]\nplan_policy = \"fifo\"\n").unwrap();
+        assert_eq!(cfg.plan_policy, "fifo");
+        let err = ApacheConfig::from_toml("[system]\nplan_policy = \"lifo\"\n");
+        assert!(err.is_err(), "unknown policies must be rejected");
+        assert!(err.unwrap_err().to_string().contains("plan_policy"));
     }
 }

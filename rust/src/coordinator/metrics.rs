@@ -2,7 +2,7 @@
 
 use crate::util::jsonw::Json;
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 #[derive(Debug, Default)]
 struct Inner {
@@ -26,22 +26,35 @@ fn sorted_finite(v: &[f64]) -> Vec<f64> {
 }
 
 impl Metrics {
+    /// Lock the registry, recovering from poisoning: a worker that
+    /// panicked while holding the lock must not take the whole server's
+    /// metrics down with it. Every update here is a single push or
+    /// counter add — there is no multi-step invariant a poisoned guard
+    /// could have left half-applied — so adopting the inner state is
+    /// strictly better than panicking every future reader and writer.
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
     pub fn incr(&self, name: &str, by: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         *g.counters.entry(name.to_string()).or_default() += by;
     }
 
     pub fn observe(&self, name: &str, seconds: f64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.latencies.entry(name.to_string()).or_default().push(seconds);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+        self.lock().counters.get(name).copied().unwrap_or(0)
     }
 
     pub fn percentile(&self, name: &str, p: f64) -> Option<f64> {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         let v = g.latencies.get(name)?;
         if v.is_empty() {
             return None;
@@ -55,7 +68,7 @@ impl Metrics {
     }
 
     pub fn to_json(&self) -> Json {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         let mut counters = Json::obj();
         for (k, v) in &g.counters {
             counters = counters.put(k, *v);
@@ -123,5 +136,31 @@ mod tests {
         // a metric with only NaN observations reports no percentile
         m.observe("allnan", f64::NAN);
         assert!(m.percentile("allnan", 0.5).is_none());
+    }
+
+    #[test]
+    fn poisoned_lock_does_not_take_metrics_down() {
+        // regression: the registry used bare `.lock().unwrap()`, so one
+        // worker panicking mid-update poisoned the mutex and every later
+        // incr/observe/report panicked with it — one bad task killed
+        // metrics for the whole server. The recovering lock adopts the
+        // inner state instead.
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::default());
+        m.incr("before", 2);
+        let held = m.clone();
+        let worker = std::thread::spawn(move || {
+            let _guard = held.inner.lock().unwrap();
+            panic!("worker dies holding the metrics lock");
+        });
+        assert!(worker.join().is_err(), "the worker must have panicked");
+        assert!(m.inner.is_poisoned(), "the panic must have poisoned the lock");
+        // every entry point still serves
+        m.incr("after", 3);
+        m.observe("lat", 0.25);
+        assert_eq!(m.counter("before"), 2);
+        assert_eq!(m.counter("after"), 3);
+        assert_eq!(m.percentile("lat", 0.5), Some(0.25));
+        assert!(m.to_json().render().contains("\"after\":3"));
     }
 }

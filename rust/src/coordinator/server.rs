@@ -57,16 +57,27 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(cfg: ApacheConfig) -> Self {
         let runtime = if cfg.use_runtime {
-            let built = if cfg.backend == "reference" {
-                // the reference path may upgrade to on-disk PJRT artifacts
-                Runtime::new(&cfg.artifacts_dir)
-            } else {
-                // alloc_policy was validated at config parse time; a
-                // hand-built config with a bad policy surfaces here
-                crate::hw::AllocPolicy::parse(&cfg.alloc_policy).and_then(|policy| {
-                    Runtime::for_backend_with_policy(&cfg.backend, &cfg.dimm, policy)
-                })
-            };
+            // policies were validated at config parse time; a hand-built
+            // config with a bad policy surfaces here
+            let built = crate::sched::plan::PlanPolicy::parse(&cfg.plan_policy).and_then(
+                |plan_policy| {
+                    if cfg.backend == "reference" {
+                        // the reference path may upgrade to on-disk PJRT
+                        // artifacts; planning no-ops on placement-blind
+                        // backends but the policy threads uniformly
+                        Runtime::new(&cfg.artifacts_dir).map(|rt| rt.with_plan_policy(plan_policy))
+                    } else {
+                        crate::hw::AllocPolicy::parse(&cfg.alloc_policy).and_then(|policy| {
+                            Runtime::for_backend_with_policies(
+                                &cfg.backend,
+                                &cfg.dimm,
+                                policy,
+                                plan_policy,
+                            )
+                        })
+                    }
+                },
+            );
             match built {
                 Ok(rt) => {
                     eprintln!("[coordinator] runtime backend: {}", rt.backend_name());
@@ -225,8 +236,8 @@ impl Coordinator {
 
     /// Surface one served batch's hardware cost (the pnm backend's trace
     /// delta) in the metrics registry: dispatch/cycle counters, bytes
-    /// moved per memory level, cycles per artifact class, utilization %
-    /// and energy.
+    /// moved per memory level, cycles per artifact class, planner
+    /// outcomes, utilization % and energy.
     fn record_cost(&self, d: CostTrace) {
         self.metrics.incr("pnm.dispatches", d.dispatches);
         self.metrics.incr("pnm.cycles", d.cycles);
@@ -234,6 +245,15 @@ impl Coordinator {
         self.metrics.incr("pnm.bytes_bank", d.profile.io_bank);
         self.metrics.incr("pnm.row_hits", d.row_hits);
         self.metrics.incr("pnm.row_misses", d.row_misses);
+        // per-batch planner outcomes, next to the observed row counters
+        // they predict (the planner runs only under `row_locality`)
+        if d.plans > 0 {
+            self.metrics.incr("pnm.plan.built", d.plans);
+            self.metrics.incr("pnm.plan.splits", d.plan_splits);
+            self.metrics.incr("pnm.plan.predicted_row_hits", d.predicted_row_hits);
+            self.metrics
+                .incr("pnm.plan.predicted_row_misses", d.predicted_row_misses);
+        }
         for class in OpClass::ALL {
             let c = d.class_cycles(class);
             if c > 0 {
@@ -367,6 +387,46 @@ mod tests {
         assert_eq!(coord.metrics.counter("pnm.dispatches"), 1);
         let p50 = coord.metrics.percentile("pnm.rank_imbalance", 0.5).unwrap();
         assert!(p50 >= 1.0);
+    }
+
+    #[test]
+    fn plan_policy_flows_from_config_to_backend() {
+        // the default config plans dispatch under `row_locality`: served
+        // batches surface planner outcomes next to the cost trace
+        let cfg = ApacheConfig {
+            backend: "pnm".into(),
+            use_runtime: true,
+            ..Default::default()
+        };
+        assert_eq!(cfg.plan_policy, "row_locality");
+        let coord = Coordinator::new(cfg);
+        let results = coord.serve_batch(vec![TaskRequest {
+            task: cmux_tree_task("t", 3),
+        }]);
+        assert_eq!(results.len(), 1);
+        assert!(results[0].runtime_error.is_none(), "{:?}", results[0].runtime_error);
+        assert_eq!(coord.metrics.counter("pnm.plan.built"), 1);
+        assert!(
+            coord.metrics.counter("pnm.plan.predicted_row_hits")
+                + coord.metrics.counter("pnm.plan.predicted_row_misses")
+                > 0,
+            "the planner must have priced the batch"
+        );
+        // the small single-pool batch fits one residency segment
+        assert_eq!(coord.metrics.counter("pnm.plan.splits"), 0);
+        assert_eq!(coord.metrics.counter("pnm.dispatches"), 1);
+        // the fifo control plans nothing
+        let cfg = ApacheConfig {
+            backend: "pnm".into(),
+            plan_policy: "fifo".into(),
+            use_runtime: true,
+            ..Default::default()
+        };
+        let coord = Coordinator::new(cfg);
+        coord.serve_batch(vec![TaskRequest {
+            task: cmux_tree_task("t", 3),
+        }]);
+        assert_eq!(coord.metrics.counter("pnm.plan.built"), 0);
     }
 
     #[test]

@@ -52,6 +52,21 @@ pub const BANKS_PER_RANK: usize = 16;
 pub const ROW_BYTES: u64 = 8192;
 /// Rows per bank (8 Gb x8 DDR4 die: 64 K rows).
 pub const ROWS_PER_BANK: u64 = 1 << 16;
+/// Row-buffer multiples one dispatch segment's per-rank working set may
+/// span before the dispatch planner cuts a split point: past this, a
+/// segment holds far more live rows than the rank can keep open, and
+/// recycling extents between dispatches (LIFO, address-stable) beats
+/// stacking the skyline until placement fails.
+pub const RESIDENCY_SEGMENT_MULTIPLE: u64 = 16;
+
+/// The least-loaded slot of a load vector (ties break to the lowest
+/// index) — the greedy rule [`RankAllocator`] assigns ranks by, shared
+/// so placement previews can never drift from it.
+pub fn least_loaded_of(loads: &[u64]) -> usize {
+    (0..loads.len())
+        .min_by_key(|&r| (loads[r], r))
+        .expect("load vector is non-empty")
+}
 
 /// Operand placement policy of the near-memory backend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -185,6 +200,20 @@ impl Geometry {
     /// The reserved table bank.
     pub fn table_bank(&self) -> usize {
         self.banks - 1
+    }
+
+    /// Bytes of DRAM rows one rank can hold open at once (banks × row
+    /// bytes) — the residency capacity placement and planning reason
+    /// about.
+    pub fn row_buffer_bytes(&self) -> u64 {
+        self.banks as u64 * self.row_bytes
+    }
+
+    /// The per-rank working-set budget of one dispatch segment
+    /// ([`RESIDENCY_SEGMENT_MULTIPLE`] row buffers): the dispatch
+    /// planner's split threshold.
+    pub fn residency_budget(&self) -> u64 {
+        self.row_buffer_bytes().saturating_mul(RESIDENCY_SEGMENT_MULTIPLE)
     }
 }
 
@@ -346,9 +375,7 @@ impl RankAllocator {
 
     /// The currently least-loaded rank (ties break to the lowest index).
     pub fn least_loaded(&self) -> usize {
-        (0..self.geo.ranks)
-            .min_by_key(|&r| (self.load[r], r))
-            .expect("geometry has >= 1 rank")
+        least_loaded_of(&self.load)
     }
 
     /// The rank a pool is pinned to, if assigned.

@@ -46,6 +46,12 @@ pub struct Bank {
 }
 
 impl Bank {
+    /// The row this bank currently holds open, if any — the state the
+    /// dispatch planner's cost model reasons about.
+    pub fn open_row(&self) -> Option<u64> {
+        self.open_row
+    }
+
     /// Access `row`; returns access latency in memory clocks.
     pub fn access(&mut self, row: u64, t: &DramTiming) -> u64 {
         match self.open_row {
@@ -131,6 +137,12 @@ impl Rank {
             remaining -= chunk;
         }
         clocks
+    }
+
+    /// The open row per bank — a residency snapshot for planner tests
+    /// and debugging.
+    pub fn open_rows(&self) -> Vec<Option<u64>> {
+        self.banks.iter().map(|b| b.open_row()).collect()
     }
 
     /// Cumulative (row hits, row misses) across this rank's banks — the

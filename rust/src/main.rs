@@ -56,6 +56,17 @@ fn load_config(args: &Args) -> ApacheConfig {
         eprintln!("config error: {e}");
         std::process::exit(2);
     }
+    // dispatch-planning precedence mirrors both:
+    // --plan-policy > APACHE_PLAN_POLICY > config file
+    if let Some(p) = args.opt("plan-policy") {
+        cfg.plan_policy = p.to_string();
+    } else if let Some(p) = apache_fhe::runtime::Runtime::env_plan_policy() {
+        cfg.plan_policy = p;
+    }
+    if let Err(e) = apache_fhe::sched::plan::PlanPolicy::parse(&cfg.plan_policy) {
+        eprintln!("config error: {e}");
+        std::process::exit(2);
+    }
     cfg
 }
 
@@ -161,10 +172,13 @@ fn main() {
             } else {
                 let policy = apache_fhe::hw::AllocPolicy::parse(&cfg.alloc_policy)
                     .expect("load_config validated the policy");
-                apache_fhe::runtime::Runtime::for_backend_with_policy(
+                let plan = apache_fhe::sched::plan::PlanPolicy::parse(&cfg.plan_policy)
+                    .expect("load_config validated the policy");
+                apache_fhe::runtime::Runtime::for_backend_with_policies(
                     &cfg.backend,
                     &cfg.dimm,
                     policy,
+                    plan,
                 )
                 .unwrap_or_else(|e| {
                     eprintln!("backend `{}` unusable ({e}); using reference", cfg.backend);
@@ -184,7 +198,8 @@ fn main() {
             eprintln!(
                 "usage: apache <serve|profile|inspect|area|config|baselines|artifacts> \
                  [--config file.toml] [--dimms N] [--tasks N] [--runtime] \
-                 [--backend reference|pnm] [--alloc-policy rank_aware|identity]"
+                 [--backend reference|pnm] [--alloc-policy rank_aware|identity] \
+                 [--plan-policy row_locality|fifo]"
             );
             std::process::exit(2);
         }

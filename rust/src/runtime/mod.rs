@@ -28,11 +28,14 @@
 pub mod pnm;
 
 pub use crate::hw::alloc::{AllocPolicy, OperandKind};
+pub use crate::sched::plan::{DispatchPlan, PlanPolicy};
 pub use pnm::{CostTrace, OpClass, PnmBackend};
 
+use crate::hw::alloc::Geometry;
 use crate::hw::DimmConfig;
 use crate::math::modops::{mod_add, mod_mul, ntt_primes};
 use crate::math::ntt::NttTable;
+use crate::sched::plan::{PlanItem, Planner};
 use crate::util::error::{Context, Error, Result};
 use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
@@ -216,6 +219,44 @@ pub struct BatchItem<'a> {
     pub kinds: &'a [OperandKind],
 }
 
+impl BatchItem<'_> {
+    /// The operand-pool identity placement and planning group by: the
+    /// lowering-stamped pool id when present, else the identity of the
+    /// largest operand — the evk-style rows / twiddle tables that define
+    /// reuse for hand-built invocations.
+    pub fn pool_key(&self) -> u64 {
+        if let Some(p) = self.pool {
+            return p;
+        }
+        let largest = self.inputs.iter().max_by_key(|a| a.len());
+        largest.map(|a| a.as_ptr() as u64).unwrap_or(0)
+    }
+
+    /// The planner's digest of this item: operand identities, residency
+    /// classes (stamped hints, classification fallback — the same rule
+    /// [`PnmBackend`] places by) and byte counts.
+    pub fn plan_item(&self, rank: usize) -> PlanItem {
+        let operands = self
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(j, a)| {
+                let kind = self
+                    .kinds
+                    .get(j)
+                    .copied()
+                    .unwrap_or_else(|| OperandKind::classify(&self.meta.name, j));
+                (a.as_ptr() as u64, kind, (a.len() * 8) as u64)
+            })
+            .collect();
+        PlanItem {
+            pool: self.pool_key(),
+            rank,
+            operands,
+        }
+    }
+}
+
 /// An execution engine for manifest artifacts. Implementations receive
 /// pre-validated inputs (arity and element counts already checked by
 /// [`Runtime::execute_u64`] / [`Runtime::execute_batch_u64`]) as
@@ -245,6 +286,27 @@ pub trait Backend {
     fn cost_trace(&self) -> Option<CostTrace> {
         None
     }
+
+    /// The DRAM geometry a placement-aware backend places into — the
+    /// dispatch planner's cost-model input. `None` (the default) marks a
+    /// backend that models no placement; planning is then a no-op.
+    fn plan_geometry(&self) -> Option<Geometry> {
+        None
+    }
+
+    /// Side-effect-free preview of the device partition (rank) each item
+    /// of `items` would land on if dispatched as one batch — what the
+    /// dispatch planner clusters against. Must agree with the placement
+    /// the backend performs when the batch is actually dispatched.
+    /// `None` (the default) for placement-blind backends.
+    fn rank_assignment(&self, _items: &[BatchItem<'_>]) -> Option<Vec<usize>> {
+        None
+    }
+
+    /// Observe the plan about to drive the next dispatches — cost-traced
+    /// backends fold the planner counters (plans built, splits, predicted
+    /// row hits/misses) into their trace. Default: no-op.
+    fn note_plan(&self, _plan: &DispatchPlan) {}
 }
 
 /// Operand tables already validated within one batch, keyed by (operand
@@ -642,6 +704,9 @@ impl Backend for PjrtBackend {
 pub struct Runtime {
     pub manifest: HashMap<String, ArtifactMeta>,
     backend: Box<dyn Backend>,
+    /// dispatch-planning policy of the batched entry point (`Fifo` — the
+    /// pre-planner behavior — unless explicitly selected otherwise)
+    plan_policy: PlanPolicy,
 }
 
 impl Runtime {
@@ -681,7 +746,9 @@ impl Runtime {
 
     /// [`Runtime::for_backend`] with an explicit operand-placement
     /// policy for placement-aware backends (the reference backend models
-    /// no memory and ignores it).
+    /// no memory and ignores it). Dispatch planning stays on the
+    /// [`PlanPolicy::Fifo`] control; use
+    /// [`Runtime::for_backend_with_policies`] to select it too.
     pub fn for_backend_with_policy(
         name: &str,
         dimm: &DimmConfig,
@@ -697,6 +764,29 @@ impl Runtime {
                 "unknown backend `{other}` (expected `reference` or `pnm`)"
             ))),
         }
+    }
+
+    /// [`Runtime::for_backend_with_policy`] plus an explicit
+    /// dispatch-planning policy — the full policy surface the
+    /// coordinator threads from config/CLI/env.
+    pub fn for_backend_with_policies(
+        name: &str,
+        dimm: &DimmConfig,
+        alloc_policy: AllocPolicy,
+        plan_policy: PlanPolicy,
+    ) -> Result<Self> {
+        Self::for_backend_with_policy(name, dimm, alloc_policy)
+            .map(|rt| rt.with_plan_policy(plan_policy))
+    }
+
+    /// Select the dispatch-planning policy of the batched entry point.
+    pub fn with_plan_policy(mut self, policy: PlanPolicy) -> Self {
+        self.plan_policy = policy;
+        self
+    }
+
+    pub fn plan_policy(&self) -> PlanPolicy {
+        self.plan_policy
     }
 
     /// Backend override from the `APACHE_BACKEND` environment variable —
@@ -715,6 +805,16 @@ impl Runtime {
             .filter(|s| !s.is_empty())
     }
 
+    /// Plan-policy override from the `APACHE_PLAN_POLICY` environment
+    /// variable (the third CI matrix dimension). `None` when unset or
+    /// empty; the value is validated by [`PlanPolicy::parse`] at the
+    /// point of use.
+    pub fn env_plan_policy() -> Option<String> {
+        std::env::var("APACHE_PLAN_POLICY")
+            .ok()
+            .filter(|s| !s.is_empty())
+    }
+
     /// The backend's cumulative hardware cost trace, when it models one.
     pub fn cost_trace(&self) -> Option<CostTrace> {
         self.backend.cost_trace()
@@ -725,6 +825,7 @@ impl Runtime {
         Runtime {
             manifest: metas.into_iter().map(|m| (m.name.clone(), m)).collect(),
             backend,
+            plan_policy: PlanPolicy::Fifo,
         }
     }
 
@@ -778,13 +879,52 @@ impl Runtime {
         self.backend.execute_u64(meta, &refs)
     }
 
+    /// Dispatch pre-validated items through the planner seam. Under
+    /// [`PlanPolicy::Fifo`] (or on a placement-blind backend) this is
+    /// exactly the pre-planner path: one `execute_batch` call in item
+    /// order. Under [`PlanPolicy::RowLocality`] the batch is planned
+    /// against the backend's rank assignment and dispatched one segment
+    /// per device dispatch, with results scattered back into item order —
+    /// plans permute *dispatch*, never results.
+    fn dispatch_planned(&self, items: &[BatchItem<'_>]) -> Vec<Result<Vec<u64>>> {
+        if self.plan_policy == PlanPolicy::Fifo || items.is_empty() {
+            return self.backend.execute_batch(items);
+        }
+        let (geo, ranks) = match (
+            self.backend.plan_geometry(),
+            self.backend.rank_assignment(items),
+        ) {
+            (Some(g), Some(r)) => (g, r),
+            _ => return self.backend.execute_batch(items),
+        };
+        let plan_items: Vec<PlanItem> = items
+            .iter()
+            .zip(&ranks)
+            .map(|(it, &rank)| it.plan_item(rank))
+            .collect();
+        let plan = Planner::new(self.plan_policy, geo).plan(&plan_items);
+        self.backend.note_plan(&plan);
+        let mut slots: Vec<Option<Result<Vec<u64>>>> = items.iter().map(|_| None).collect();
+        for seg in &plan.segments {
+            let seg_items: Vec<BatchItem<'_>> = seg.iter().map(|&i| items[i]).collect();
+            for (&i, out) in seg.iter().zip(self.backend.execute_batch(&seg_items)) {
+                slots[i] = Some(out);
+            }
+        }
+        slots
+            .into_iter()
+            .map(|s| s.unwrap_or_else(|| Err(Error::new("plan dropped a batch item"))))
+            .collect()
+    }
+
     /// Execute a batch of artifact invocations, returning one result per
     /// invocation in order. Arities and shapes of *every* item are
     /// validated up front; an invalid item fails in its own slot without
     /// aborting its siblings, and the valid items are handed to the
     /// backend as one batch so it can amortize operand handling shared
     /// across invocations (twiddles, evk-style inputs) instead of paying
-    /// it once per call.
+    /// it once per call. The batch flows through the dispatch planner
+    /// ([`crate::sched::plan`]) on its way to the backend.
     pub fn execute_batch_u64(&self, invocations: &[Invocation]) -> Vec<Result<Vec<u64>>> {
         let mut slots: Vec<Option<Result<Vec<u64>>>> = Vec::with_capacity(invocations.len());
         let mut valid_idx: Vec<usize> = Vec::new();
@@ -805,7 +945,7 @@ impl Runtime {
                 Err(e) => slots.push(Some(Err(e))),
             }
         }
-        let outs = self.backend.execute_batch(&items);
+        let outs = self.dispatch_planned(&items);
         for (i, out) in valid_idx.into_iter().zip(outs) {
             slots[i] = Some(out);
         }

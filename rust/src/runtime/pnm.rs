@@ -34,7 +34,7 @@
 //! per-rank bytes, energy) responds to placement.
 
 use crate::hw::alloc::{
-    AllocPolicy, Geometry, OperandKind, RankAllocator, BANKS_PER_RANK, ROW_BYTES,
+    least_loaded_of, AllocPolicy, Geometry, OperandKind, RankAllocator, BANKS_PER_RANK, ROW_BYTES,
 };
 use crate::hw::dram::Rank;
 use crate::hw::energy;
@@ -44,7 +44,7 @@ use std::collections::hash_map::Entry;
 use std::collections::{HashMap, HashSet};
 use std::sync::Mutex;
 
-use super::{ArtifactMeta, Backend, BatchItem, ReferenceBackend};
+use super::{ArtifactMeta, Backend, BatchItem, DispatchPlan, ReferenceBackend};
 
 /// Artifact classes the cost trace attributes cycles to — one per
 /// manifest operator family.
@@ -148,6 +148,16 @@ pub struct CostTrace {
     pub bytes_by_rank: Vec<u64>,
     /// accrued dynamic energy (joules) via [`energy::dynamic_energy_j`]
     pub energy_j: f64,
+    /// dispatch plans observed via [`Backend::note_plan`]
+    pub plans: u64,
+    /// residency split points across all observed plans (segments beyond
+    /// each plan's first)
+    pub plan_splits: u64,
+    /// row hits/misses the planner's pure cost model predicted for the
+    /// observed plans — read next to the observed `row_hits`/`row_misses`
+    /// deltas to see how honest the predictor is
+    pub predicted_row_hits: u64,
+    pub predicted_row_misses: u64,
 }
 
 impl CostTrace {
@@ -218,6 +228,12 @@ impl CostTrace {
                 .map(|(i, &b)| b.saturating_sub(prev.bytes_by_rank.get(i).copied().unwrap_or(0)))
                 .collect(),
             energy_j: (self.energy_j - prev.energy_j).max(0.0),
+            plans: self.plans.saturating_sub(prev.plans),
+            plan_splits: self.plan_splits.saturating_sub(prev.plan_splits),
+            predicted_row_hits: self.predicted_row_hits.saturating_sub(prev.predicted_row_hits),
+            predicted_row_misses: self
+                .predicted_row_misses
+                .saturating_sub(prev.predicted_row_misses),
         };
         for (i, slot) in d.cycles_by_class.iter_mut().enumerate() {
             *slot = self.cycles_by_class[i].saturating_sub(prev.cycles_by_class[i]);
@@ -305,7 +321,7 @@ impl PnmBackend {
                 items
                     .iter()
                     .map(|it| {
-                        *by_pool.entry(Self::pool_key(it)).or_insert_with(|| {
+                        *by_pool.entry(it.pool_key()).or_insert_with(|| {
                             let r = next % nranks;
                             next += 1;
                             r
@@ -321,18 +337,7 @@ impl PnmBackend {
                 // should too); pointer-derived fallback groups get a
                 // transient assignment — pinning a heap address would
                 // leak an entry per buffer and alias reused addresses.
-                let mut order: Vec<(u64, bool)> = Vec::new();
-                let mut est: HashMap<u64, u64> = HashMap::new();
-                for it in items {
-                    let bytes: u64 = it.inputs.iter().map(|a| (a.len() * 8) as u64).sum();
-                    match est.entry(Self::pool_key(it)) {
-                        Entry::Occupied(mut e) => *e.get_mut() += bytes,
-                        Entry::Vacant(v) => {
-                            order.push((*v.key(), it.pool.is_some()));
-                            v.insert(bytes);
-                        }
-                    }
-                }
+                let (order, est) = Self::pool_groups(items);
                 let mut alloc = self.alloc.lock().unwrap();
                 let assign: HashMap<u64, usize> = order
                     .iter()
@@ -345,19 +350,58 @@ impl PnmBackend {
                         (p, r)
                     })
                     .collect();
-                items.iter().map(|it| assign[&Self::pool_key(it)]).collect()
+                items.iter().map(|it| assign[&it.pool_key()]).collect()
             }
         }
     }
 
-    fn pool_key(item: &BatchItem<'_>) -> u64 {
-        if let Some(p) = item.pool {
-            return p;
+    /// Side-effect-free twin of [`PnmBackend::placement`] — what the
+    /// dispatch planner clusters against. Under `RankAware` it replays
+    /// the allocator's greedy assignment on a local copy of the load
+    /// vector (pinned pools answer from their pins, new pools take the
+    /// least-loaded rank) without charging anything, so previewing a
+    /// batch never distorts the balance its real dispatch will account.
+    /// Untagged (transient) groups are previewed with the same greedy;
+    /// the real dispatch re-assigns them per segment, so their preview
+    /// is advisory while every pool-tagged item's preview is exact.
+    pub fn placement_preview(&self, items: &[BatchItem<'_>]) -> Vec<usize> {
+        match self.policy {
+            // the identity round-robin never touches backend state
+            AllocPolicy::Identity => self.placement(items),
+            AllocPolicy::RankAware => {
+                let (order, est) = Self::pool_groups(items);
+                let alloc = self.alloc.lock().unwrap();
+                let mut loads = alloc.loads().to_vec();
+                let mut assign: HashMap<u64, usize> = HashMap::new();
+                for &(p, pinned) in &order {
+                    let pinned_rank = if pinned { alloc.pool_rank(p) } else { None };
+                    let r = pinned_rank.unwrap_or_else(|| least_loaded_of(&loads));
+                    loads[r] = loads[r].saturating_add(est[&p]);
+                    assign.insert(p, r);
+                }
+                drop(alloc);
+                items.iter().map(|it| assign[&it.pool_key()]).collect()
+            }
         }
-        // untagged invocations pool by the identity of their largest
-        // operand — the evk-style rows / twiddle tables that define reuse
-        let largest = item.inputs.iter().max_by_key(|a| a.len());
-        largest.map(|a| a.as_ptr() as u64).unwrap_or(0)
+    }
+
+    /// First-appearance pool order (with pinned-ness) and cumulative
+    /// per-pool byte estimates over one batch — the shared front half of
+    /// [`PnmBackend::placement`] and its preview.
+    fn pool_groups(items: &[BatchItem<'_>]) -> (Vec<(u64, bool)>, HashMap<u64, u64>) {
+        let mut order: Vec<(u64, bool)> = Vec::new();
+        let mut est: HashMap<u64, u64> = HashMap::new();
+        for it in items {
+            let bytes: u64 = it.inputs.iter().map(|a| (a.len() * 8) as u64).sum();
+            match est.entry(it.pool_key()) {
+                Entry::Occupied(mut e) => *e.get_mut() += bytes,
+                Entry::Vacant(v) => {
+                    order.push((*v.key(), it.pool.is_some()));
+                    v.insert(bytes);
+                }
+            }
+        }
+        (order, est)
     }
 
     /// Free every placement made during one dispatch, in *reverse*
@@ -700,6 +744,25 @@ impl Backend for PnmBackend {
     fn cost_trace(&self) -> Option<CostTrace> {
         Some(self.trace())
     }
+
+    fn plan_geometry(&self) -> Option<crate::hw::alloc::Geometry> {
+        Some(Geometry::of(&self.cfg))
+    }
+
+    fn rank_assignment(&self, items: &[BatchItem<'_>]) -> Option<Vec<usize>> {
+        Some(self.placement_preview(items))
+    }
+
+    /// Fold the planner's counters into the cost trace: plans observed,
+    /// residency splits, and the predicted row hits/misses the observed
+    /// `row_hits`/`row_misses` deltas are compared against.
+    fn note_plan(&self, plan: &DispatchPlan) {
+        let mut tr = self.trace.lock().unwrap();
+        tr.plans += 1;
+        tr.plan_splits += plan.splits();
+        tr.predicted_row_hits += plan.predicted.row_hits;
+        tr.predicted_row_misses += plan.predicted.row_misses;
+    }
 }
 
 #[cfg(test)]
@@ -707,7 +770,7 @@ mod tests {
     use crate::math::modops::ntt_primes;
     use crate::math::ntt::NttTable;
     use crate::math::sampler::Rng;
-    use crate::runtime::{builtin_manifest, Invocation, Runtime};
+    use crate::runtime::{builtin_manifest, Invocation, PlanPolicy, Runtime};
     use std::sync::Arc;
 
     use super::*;
@@ -969,6 +1032,126 @@ mod tests {
         let delta = tr.delta_since(&d);
         assert_eq!(delta.dispatches, 0);
         assert_eq!(delta.bytes_by_rank.len(), tr.bytes_by_rank.len());
+    }
+
+    #[test]
+    fn placement_preview_is_pure_and_matches_dispatch_placement() {
+        let mut cfg = DimmConfig::paper();
+        cfg.ranks = 2;
+        let backend = PnmBackend::with_policy(cfg, AllocPolicy::RankAware);
+        let manifest = builtin_manifest();
+        let meta = manifest.iter().find(|m| m.name == "routine2_n256").unwrap();
+        let d: Arc<Vec<u64>> = Arc::new(vec![1u64; 14 * 256]);
+        let invs: Vec<Invocation> = [0u64, 0, 1, 2]
+            .iter()
+            .map(|&p| {
+                Invocation::new("routine2_n256", vec![d.clone(), d.clone(), d.clone()])
+                    .with_pool(p)
+            })
+            .collect();
+        let items: Vec<BatchItem<'_>> = invs
+            .iter()
+            .map(|inv| BatchItem {
+                meta,
+                inputs: &inv.inputs,
+                pool: inv.pool,
+                kinds: &inv.kinds,
+            })
+            .collect();
+        // the preview charges nothing: repeating it cannot drift, and the
+        // real placement that follows must land exactly where predicted
+        let preview = backend.placement_preview(&items);
+        assert_eq!(preview, backend.placement_preview(&items));
+        assert_eq!(preview, backend.placement(&items));
+        // once pools are pinned, preview keeps answering from the pins
+        assert_eq!(backend.placement_preview(&items[..2]), vec![0, 0]);
+    }
+
+    #[test]
+    fn planned_dispatch_is_bit_identical_and_counts_plans() {
+        // two pools pinned to one rank, items interleaved — the planner
+        // reorders dispatch, results stay slot-aligned with the
+        // reference backend, and the trace counts the plan
+        let mut dimm = DimmConfig::paper();
+        dimm.ranks = 1;
+        let planned = Runtime::for_backend_with_policies(
+            "pnm",
+            &dimm,
+            AllocPolicy::RankAware,
+            PlanPolicy::RowLocality,
+        )
+        .unwrap();
+        assert_eq!(planned.plan_policy(), PlanPolicy::RowLocality);
+        let reference = Runtime::reference();
+        let q = ntt_primes(31, 512, 1)[0];
+        let mut rng = Rng::seeded(41);
+        let mut gen = || -> Arc<Vec<u64>> {
+            Arc::new((0..14 * 256).map(|_| rng.uniform(q)).collect())
+        };
+        let keys = [gen(), gen()];
+        let invs: Vec<Invocation> = (0..8)
+            .map(|i| {
+                let pool = (i % 2) as u64;
+                Invocation::new(
+                    "routine2_n256",
+                    vec![gen(), keys[pool as usize].clone(), gen()],
+                )
+                .with_pool(pool)
+            })
+            .collect();
+        let a = planned.execute_batch_u64(&invs);
+        let b = reference.execute_batch_u64(&invs);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.as_ref().unwrap(), y.as_ref().unwrap());
+        }
+        let tr = planned.cost_trace().unwrap();
+        assert_eq!(tr.plans, 1, "one plan per batched call");
+        assert_eq!(tr.invocations, 8);
+        assert_eq!(tr.dispatches, 1 + tr.plan_splits);
+        assert!(
+            tr.predicted_row_hits + tr.predicted_row_misses > 0,
+            "the plan must carry a prediction"
+        );
+        let d = tr.delta_since(&CostTrace::default());
+        assert_eq!(d.plans, tr.plans);
+        assert_eq!(d.predicted_row_hits, tr.predicted_row_hits);
+    }
+
+    #[test]
+    fn residency_splits_execute_as_multiple_dispatches() {
+        // one pool, many distinct large operands: the working set blows
+        // the residency budget, the plan splits, every segment is its own
+        // device dispatch, and outputs stay bit-identical throughout
+        let planned = Runtime::for_backend_with_policies(
+            "pnm",
+            &DimmConfig::paper(),
+            AllocPolicy::RankAware,
+            PlanPolicy::RowLocality,
+        )
+        .unwrap();
+        let reference = Runtime::reference();
+        let q = ntt_primes(31, 2048, 1)[0];
+        let rows_n = 14 * 1024;
+        let mut rng = Rng::seeded(43);
+        let mut gen = || -> Arc<Vec<u64>> {
+            Arc::new((0..rows_n).map(|_| rng.uniform(q)).collect())
+        };
+        let key = gen();
+        let invs: Vec<Invocation> = (0..24)
+            .map(|_| {
+                Invocation::new("routine2_n1024", vec![gen(), key.clone(), gen()]).with_pool(1)
+            })
+            .collect();
+        let a = planned.execute_batch_u64(&invs);
+        let b = reference.execute_batch_u64(&invs);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.as_ref().unwrap(), y.as_ref().unwrap());
+        }
+        let tr = planned.cost_trace().unwrap();
+        assert_eq!(tr.plans, 1);
+        assert!(tr.plan_splits > 0, "a ~5 MB working set must split");
+        assert_eq!(tr.dispatches, 1 + tr.plan_splits);
+        assert_eq!(tr.invocations, 24);
     }
 
     #[test]

@@ -1,15 +1,18 @@
 //! The multi-scheme operator compiler (§V): operator-level decomposition
 //! and group scheduling, task-level multi-DIMM scheduling, micro-code
-//! emission and ciphertext packing decisions.
+//! emission, ciphertext packing decisions, and row-locality dispatch
+//! planning against the allocator's DRAM placements.
 
 pub mod graph;
 pub mod lowering;
 pub mod microcode;
 pub mod oplevel;
 pub mod packing;
+pub mod plan;
 pub mod tasklevel;
 
 pub use graph::{OpGraph, OpNode};
 pub use lowering::Lowerer;
 pub use oplevel::{profile_op, FheOp, OpShapes};
+pub use plan::{DispatchPlan, PlanCost, PlanItem, PlanPolicy, Planner};
 pub use tasklevel::{schedule_tasks, DimmAssignment, Task};

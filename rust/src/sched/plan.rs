@@ -1,0 +1,579 @@
+//! Row-locality dispatch planner: order, cluster and split invocation
+//! batches against the allocator's DRAM placements (§V-B row-buffer-aware
+//! data flow).
+//!
+//! PR 4 made operand placement explicit — every pool is pinned to a rank
+//! and every operand owns `(bank, row)` cells — but the scheduler still
+//! dispatched invocations in lowering order, blind to that placement: two
+//! pools pinned to one rank interleave in the batch, their stripes sit at
+//! different rows of the same banks, and every item pays a row conflict
+//! its neighbour just created. This module is the missing layer between
+//! `sched::lowering` and `Runtime::execute_batch_u64`: it takes a lowered
+//! batch plus the backend's rank assignment and produces a
+//! [`DispatchPlan`] — a permutation, clustering and optional splitting of
+//! the batch that maximizes open-row reuse per rank:
+//!
+//! * **pool-contiguous ordering**: items are grouped by operand pool (the
+//!   §V-B cluster id) and pools are laid out contiguously, stable-sorted
+//!   by rank, so a rank streams one cluster's rows to completion before
+//!   opening the next cluster's;
+//! * **greedy row-affinity chaining**: within a pool, items are chained
+//!   so consecutive items share the most operand bytes — a shared evk row
+//!   or ciphertext stripe is still open when the next item streams it;
+//! * **residency splitting**: when a batch's per-rank working set exceeds
+//!   the row-buffer residency budget derived from [`Geometry`], the plan
+//!   cuts the batch into segments. Each segment is its own device
+//!   dispatch, so the backend's per-dispatch release recycles extents
+//!   (LIFO, address-stable) instead of stacking the skyline until
+//!   placement fails and operands degrade to identity addressing.
+//!
+//! Plan quality is judged by a **pure cost model** ([`predict`]): it
+//! replays a plan against a fresh [`RankAllocator`] and per-rank
+//! [`Rank`] row-buffer state — the same extent walk the pnm backend
+//! streams — and counts row hits/misses, so plans are testable without a
+//! backend and the planner can guarantee a [`PlanPolicy::RowLocality`]
+//! plan never predicts worse than the [`PlanPolicy::Fifo`] control (it
+//! falls back to the identity plan when the greedy loses).
+//!
+//! Policy selection threads through the same three-level precedence as
+//! the allocator's: `--plan-policy` > `APACHE_PLAN_POLICY` >
+//! `[system] plan_policy`.
+
+use crate::hw::alloc::{Geometry, OperandKind, RankAllocator};
+use crate::hw::dram::{DramTiming, Rank};
+use crate::util::error::{Error, Result};
+use std::collections::{HashMap, HashSet};
+
+/// Dispatch-planning policy of the runtime's batched entry point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanPolicy {
+    /// Today's behavior, the control: dispatch the batch in lowering
+    /// order as one device dispatch. Zero planning overhead.
+    Fifo,
+    /// Row-locality planning: pool-contiguous ordering, row-affinity
+    /// chaining and residency splitting against the allocator's
+    /// placements, guarded to never predict worse than `Fifo`.
+    RowLocality,
+}
+
+impl PlanPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fifo" => Ok(PlanPolicy::Fifo),
+            "row_locality" | "row-locality" => Ok(PlanPolicy::RowLocality),
+            other => Err(Error::new(format!(
+                "unknown plan policy `{other}` (expected `fifo` or `row_locality`)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanPolicy::Fifo => "fifo",
+            PlanPolicy::RowLocality => "row_locality",
+        }
+    }
+}
+
+/// What the planner needs to know about one batch item — a placement
+/// digest, not the operands themselves, so the planner (and its cost
+/// model) never touches invocation data and stays pure.
+#[derive(Debug, Clone)]
+pub struct PlanItem {
+    /// resolved operand-pool id: the lowering-stamped §V-B cluster id, or
+    /// the backend's operand-identity fallback for untagged items.
+    /// An item's batch slot is its position in the planned slice — plan
+    /// segments refer to slice positions, so items carry no index of
+    /// their own that could disagree with it.
+    pub pool: u64,
+    /// the device partition (rank) the backend's placement assigns
+    pub rank: usize,
+    /// per-operand placement digest: (identity key, residency class,
+    /// bytes) — the inputs `RankAllocator::place` decides by
+    pub operands: Vec<(u64, OperandKind, u64)>,
+}
+
+impl PlanItem {
+    /// Total operand bytes this item streams.
+    pub fn bytes(&self) -> u64 {
+        self.operands.iter().map(|&(_, _, b)| b).sum()
+    }
+}
+
+/// Predicted DRAM row-buffer behaviour of one plan, from the pure cost
+/// model ([`predict`]). The planner's objective is minimizing
+/// `row_misses` (each miss is a row activation the open-row case skips).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanCost {
+    pub row_hits: u64,
+    pub row_misses: u64,
+}
+
+impl PlanCost {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.row_hits as f64 / total as f64
+    }
+}
+
+/// The planner's product: an ordered list of dispatch segments. Each
+/// segment is one device dispatch; the concatenation of all segments is a
+/// permutation of the planned batch (no drops, no duplicates — the
+/// property suite holds the planner to it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DispatchPlan {
+    pub policy: PlanPolicy,
+    /// dispatch segments, each a list of original batch indices
+    pub segments: Vec<Vec<usize>>,
+    /// predicted cost of this plan (zero for unpredicted `Fifo` plans —
+    /// the control pays no planning overhead)
+    pub predicted: PlanCost,
+    /// predicted cost of the `Fifo` control over the same items (what
+    /// the plan was judged against; zero for `Fifo` plans)
+    pub predicted_fifo: PlanCost,
+    /// whether the greedy candidate predicted worse than the control and
+    /// the planner shipped the identity plan instead
+    pub fell_back: bool,
+}
+
+impl DispatchPlan {
+    /// The identity plan: one segment, lowering order. This *is* the
+    /// pre-planner dispatch path.
+    pub fn fifo(n: usize) -> Self {
+        DispatchPlan {
+            policy: PlanPolicy::Fifo,
+            segments: if n == 0 { Vec::new() } else { vec![(0..n).collect()] },
+            predicted: PlanCost::default(),
+            predicted_fifo: PlanCost::default(),
+            fell_back: false,
+        }
+    }
+
+    /// Segment cuts beyond the first segment.
+    pub fn splits(&self) -> u64 {
+        self.segments.len().saturating_sub(1) as u64
+    }
+
+    /// The planned order, flattened across segments.
+    pub fn order(&self) -> Vec<usize> {
+        self.segments.iter().flatten().copied().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.segments.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Pure cost model: replay `segments` over `items` against a fresh
+/// allocator and per-rank row-buffer state, counting row hits/misses.
+///
+/// The replay mirrors the pnm backend's dispatch loop exactly: operands
+/// place idempotently while a segment is live (a shared buffer streams
+/// the same extent and earns hits), each extent streams its `(bank, row)`
+/// slot walk through [`Rank::stream_slots`], a placement failure degrades
+/// to identity addressing for that operand, and a segment boundary
+/// releases every placement in reverse order (the backend's LIFO
+/// address-stable free). It starts from empty device state, so it
+/// predicts the *relative* quality of orderings, not the absolute
+/// counters of a backend with prior batches behind it — `CostTrace`
+/// records predicted next to observed so the drift stays visible.
+pub fn predict(geo: &Geometry, items: &[PlanItem], segments: &[Vec<usize>]) -> PlanCost {
+    let mut alloc = RankAllocator::new(*geo);
+    let mut ranks: Vec<Rank> = vec![Rank::new(geo.banks, geo.row_bytes); geo.ranks];
+    // timing only shapes latency; the hit/miss counters this model reads
+    // are timing-independent
+    let t = DramTiming::ddr4_3200();
+    for seg in segments {
+        let mut placed: Vec<(u64, usize)> = Vec::new();
+        let mut seen: HashSet<(u64, usize)> = HashSet::new();
+        for &ix in seg {
+            let it = &items[ix];
+            let rank = it.rank.min(geo.ranks - 1);
+            for &(key, kind, bytes) in &it.operands {
+                match alloc.place(key, rank, kind, bytes) {
+                    Ok(ext) => {
+                        ranks[rank].stream_slots(ext.slot_iter(), bytes, &t);
+                        if seen.insert((key, rank)) {
+                            placed.push((key, rank));
+                        }
+                    }
+                    Err(_) => {
+                        ranks[rank].stream(key, bytes, &t);
+                    }
+                }
+            }
+        }
+        for &(key, rank) in placed.iter().rev() {
+            alloc.free(key, rank);
+        }
+    }
+    let (row_hits, row_misses) = ranks.iter().fold((0u64, 0u64), |(h, m), r| {
+        let (rh, rm) = r.counters();
+        (h + rh, m + rm)
+    });
+    PlanCost {
+        row_hits,
+        row_misses,
+    }
+}
+
+/// The dispatch planner: one policy, one geometry, pure `plan` calls.
+pub struct Planner {
+    policy: PlanPolicy,
+    geo: Geometry,
+}
+
+impl Planner {
+    pub fn new(policy: PlanPolicy, geo: Geometry) -> Self {
+        Planner { policy, geo }
+    }
+
+    pub fn policy(&self) -> PlanPolicy {
+        self.policy
+    }
+
+    /// Plan a batch. `Fifo` returns the identity plan without touching
+    /// the cost model; `RowLocality` builds the reordered/split candidate,
+    /// prices it and the control with [`predict`], and keeps whichever
+    /// predicts fewer row misses — the planner can reorder, never regress.
+    /// Deterministic: identical items produce identical plans.
+    pub fn plan(&self, items: &[PlanItem]) -> DispatchPlan {
+        match self.policy {
+            PlanPolicy::Fifo => DispatchPlan::fifo(items.len()),
+            PlanPolicy::RowLocality => {
+                if items.len() < 2 {
+                    return DispatchPlan {
+                        policy: PlanPolicy::RowLocality,
+                        ..DispatchPlan::fifo(items.len())
+                    };
+                }
+                let order = self.row_affinity_order(items);
+                let segments = self.split(items, &order);
+                let predicted = predict(&self.geo, items, &segments);
+                let fifo_segments = vec![(0..items.len()).collect::<Vec<_>>()];
+                let predicted_fifo = predict(&self.geo, items, &fifo_segments);
+                if predicted.row_misses > predicted_fifo.row_misses {
+                    // the greedy lost to the control on this batch: ship
+                    // the identity plan (labelled, so the trace still
+                    // counts the planning attempt)
+                    return DispatchPlan {
+                        policy: PlanPolicy::RowLocality,
+                        segments: fifo_segments,
+                        predicted: predicted_fifo,
+                        predicted_fifo,
+                        fell_back: true,
+                    };
+                }
+                DispatchPlan {
+                    policy: PlanPolicy::RowLocality,
+                    segments,
+                    predicted,
+                    predicted_fifo,
+                    fell_back: false,
+                }
+            }
+        }
+    }
+
+    /// Pool-contiguous order with greedy row-affinity chaining inside
+    /// each pool. Pools keep their first-appearance order within a rank
+    /// and are stable-sorted by rank, so each rank's partition streams
+    /// its clusters back-to-back.
+    fn row_affinity_order(&self, items: &[PlanItem]) -> Vec<usize> {
+        let mut pool_order: Vec<u64> = Vec::new();
+        let mut by_pool: HashMap<u64, Vec<usize>> = HashMap::new();
+        for (i, it) in items.iter().enumerate() {
+            let slot = by_pool.entry(it.pool).or_default();
+            if slot.is_empty() {
+                pool_order.push(it.pool);
+            }
+            slot.push(i);
+        }
+        // stable: equal-rank pools keep first-appearance order
+        pool_order.sort_by_key(|p| items[by_pool[p][0]].rank);
+        let mut order = Vec::with_capacity(items.len());
+        for pool in &pool_order {
+            order.extend(Self::chain(&by_pool[pool], items));
+        }
+        order
+    }
+
+    /// Greedy nearest-neighbour chain over one pool's items: start from
+    /// the pool's first item in lowering order, then repeatedly hop to
+    /// the unvisited item sharing the most operand bytes with the current
+    /// one (ties break to the lowest original index, so the chain is
+    /// deterministic). Shared bytes approximate still-open rows: an
+    /// operand the previous item just streamed re-opens nothing.
+    fn chain(ixs: &[usize], items: &[PlanItem]) -> Vec<usize> {
+        if ixs.len() <= 2 {
+            return ixs.to_vec();
+        }
+        let mut out = Vec::with_capacity(ixs.len());
+        let mut used = vec![false; ixs.len()];
+        out.push(ixs[0]);
+        used[0] = true;
+        for _ in 1..ixs.len() {
+            let cur_keys: HashSet<u64> = items[*out.last().expect("chain is non-empty")]
+                .operands
+                .iter()
+                .map(|&(k, _, _)| k)
+                .collect();
+            let mut best: Option<(u64, usize)> = None; // (affinity, pos)
+            for (pos, &ix) in ixs.iter().enumerate() {
+                if used[pos] {
+                    continue;
+                }
+                // shared bytes per *distinct* key — an operand an item
+                // lists twice opens its rows once, so it must not score
+                // twice (the same dedup split() applies)
+                let mut counted: HashSet<u64> = HashSet::new();
+                let aff: u64 = items[ix]
+                    .operands
+                    .iter()
+                    .filter(|&&(k, _, _)| cur_keys.contains(&k) && counted.insert(k))
+                    .map(|&(_, _, b)| b)
+                    .sum();
+                // strict > keeps the lowest index on ties
+                if best.map(|(a, _)| aff > a).unwrap_or(true) {
+                    best = Some((aff, pos));
+                }
+            }
+            let (_, pos) = best.expect("an unvisited item remains");
+            used[pos] = true;
+            out.push(ixs[pos]);
+        }
+        out
+    }
+
+    /// Cut the planned order into segments wherever a rank's distinct
+    /// working set would exceed the residency budget
+    /// ([`Geometry::residency_budget`]). A fresh segment re-counts its
+    /// items' full operand sets — the backend releases placements per
+    /// dispatch, so a later segment re-places (and LIFO-reuses) them.
+    fn split(&self, items: &[PlanItem], order: &[usize]) -> Vec<Vec<usize>> {
+        let budget = self.geo.residency_budget();
+        let mut segments: Vec<Vec<usize>> = Vec::new();
+        let mut cur: Vec<usize> = Vec::new();
+        let mut footprint: Vec<u64> = vec![0; self.geo.ranks];
+        let mut seen: HashSet<(u64, usize)> = HashSet::new();
+        let mut flush = |cur: &mut Vec<usize>,
+                         footprint: &mut Vec<u64>,
+                         seen: &mut HashSet<(u64, usize)>,
+                         segments: &mut Vec<Vec<usize>>| {
+            if !cur.is_empty() {
+                segments.push(std::mem::take(cur));
+            }
+            footprint.iter_mut().for_each(|f| *f = 0);
+            seen.clear();
+        };
+        for &ix in order {
+            let it = &items[ix];
+            let rank = it.rank.min(self.geo.ranks - 1);
+            // the item's own distinct working set, independent of what
+            // the current segment already holds — the quantity that
+            // decides unsplittability (a post-flush recount can be this
+            // large, so the budget check below must never see more)
+            let mut item_keys: HashSet<u64> = HashSet::new();
+            let alone: u64 = it
+                .operands
+                .iter()
+                .filter(|&&(k, _, _)| item_keys.insert(k))
+                .map(|&(_, _, b)| b)
+                .sum();
+            if alone > budget {
+                // an item whose own working set exceeds the budget is
+                // unsplittable: it ships alone, so multi-item segments
+                // always honour the budget
+                flush(&mut cur, &mut footprint, &mut seen, &mut segments);
+                segments.push(vec![ix]);
+                continue;
+            }
+            // pre-check against the *deduplicated* unseen bytes —
+            // `item_keys.remove` passes each key once, so an operand the
+            // item lists twice (routine1's poly) cannot inflate the
+            // estimate and cut a segment the real working set still fits
+            let fresh: u64 = it
+                .operands
+                .iter()
+                .filter(|&&(k, _, _)| item_keys.remove(&k) && !seen.contains(&(k, rank)))
+                .map(|&(_, _, b)| b)
+                .sum();
+            if footprint[rank].saturating_add(fresh) > budget {
+                // after the flush the item re-counts at most `alone`
+                // bytes, which the guard above bounded by the budget
+                flush(&mut cur, &mut footprint, &mut seen, &mut segments);
+            }
+            let fresh: u64 = it
+                .operands
+                .iter()
+                .filter(|&&(k, _, _)| seen.insert((k, rank)))
+                .map(|&(_, _, b)| b)
+                .sum();
+            footprint[rank] = footprint[rank].saturating_add(fresh);
+            cur.push(ix);
+        }
+        if !cur.is_empty() {
+            segments.push(cur);
+        }
+        segments
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::alloc::ROW_BYTES;
+    use crate::hw::DimmConfig;
+
+    fn geo() -> Geometry {
+        Geometry::of(&DimmConfig::paper())
+    }
+
+    /// Two pools pinned to one rank, items interleaved A B A B … — the
+    /// worst case FIFO order for open rows.
+    fn interleaved(n_pairs: usize) -> Vec<PlanItem> {
+        (0..2 * n_pairs)
+            .map(|i| {
+                let pool = (i % 2) as u64;
+                PlanItem {
+                    pool,
+                    rank: 0,
+                    operands: vec![
+                        (pool * 100 + 1, OperandKind::Data, 14 * ROW_BYTES),
+                        (pool * 100 + 2, OperandKind::Evk, 14 * ROW_BYTES),
+                    ],
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        assert_eq!(PlanPolicy::parse("fifo").unwrap(), PlanPolicy::Fifo);
+        assert_eq!(
+            PlanPolicy::parse("row_locality").unwrap(),
+            PlanPolicy::RowLocality
+        );
+        assert_eq!(
+            PlanPolicy::parse("row-locality").unwrap(),
+            PlanPolicy::RowLocality
+        );
+        assert!(PlanPolicy::parse("random").is_err());
+        assert_eq!(PlanPolicy::Fifo.name(), "fifo");
+        assert_eq!(PlanPolicy::RowLocality.name(), "row_locality");
+    }
+
+    #[test]
+    fn fifo_plan_is_the_identity() {
+        let p = Planner::new(PlanPolicy::Fifo, geo()).plan(&interleaved(4));
+        assert_eq!(p.segments, vec![(0..8).collect::<Vec<_>>()]);
+        assert_eq!(p.splits(), 0);
+        assert_eq!(p.predicted, PlanCost::default());
+        // the empty batch plans to no segments at all
+        assert!(DispatchPlan::fifo(0).is_empty());
+        assert_eq!(DispatchPlan::fifo(0).splits(), 0);
+    }
+
+    #[test]
+    fn row_locality_clusters_pools_contiguously() {
+        let items = interleaved(4);
+        let plan = Planner::new(PlanPolicy::RowLocality, geo()).plan(&items);
+        let order = plan.order();
+        let pools: Vec<u64> = order.iter().map(|&i| items[i].pool).collect();
+        // one contiguous run per pool: exactly one boundary where the
+        // pool id changes
+        let changes = pools.windows(2).filter(|w| w[0] != w[1]).count();
+        assert_eq!(changes, 1, "pools must be contiguous: {pools:?}");
+        // and the clustered plan predicts strictly fewer misses than the
+        // interleaved control
+        assert!(
+            plan.predicted.row_misses < plan.predicted_fifo.row_misses,
+            "clustering must win on the interleaved batch: {:?} vs {:?}",
+            plan.predicted,
+            plan.predicted_fifo
+        );
+    }
+
+    #[test]
+    fn row_locality_never_predicts_worse_than_fifo() {
+        // an already-contiguous batch: the greedy cannot improve it, and
+        // the guard must keep predicted cost at the control's level
+        let mut items = interleaved(4);
+        items.sort_by_key(|it| it.pool);
+        let plan = Planner::new(PlanPolicy::RowLocality, geo()).plan(&items);
+        assert!(plan.predicted.row_misses <= plan.predicted_fifo.row_misses);
+    }
+
+    #[test]
+    fn singleton_and_empty_batches_plan_trivially() {
+        let planner = Planner::new(PlanPolicy::RowLocality, geo());
+        let one = interleaved(1);
+        let p = planner.plan(&one[..1]);
+        assert_eq!(p.order(), vec![0]);
+        assert_eq!(p.policy, PlanPolicy::RowLocality);
+        let empty = planner.plan(&[]);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn residency_budget_splits_and_preserves_the_permutation() {
+        // a tiny geometry: the budget is a few rows, so distinct-operand
+        // items force segment cuts
+        let g = Geometry {
+            ranks: 1,
+            banks: 2,
+            row_bytes: ROW_BYTES,
+            rows_per_bank: 1 << 16,
+        };
+        let items: Vec<PlanItem> = (0..12)
+            .map(|i| PlanItem {
+                pool: 0,
+                rank: 0,
+                operands: vec![(1000 + i as u64, OperandKind::Data, g.residency_budget() / 2)],
+            })
+            .collect();
+        let plan = Planner::new(PlanPolicy::RowLocality, g).plan(&items);
+        assert!(plan.splits() > 0, "distinct working sets must split");
+        let mut order = plan.order();
+        order.sort_unstable();
+        assert_eq!(order, (0..12).collect::<Vec<_>>(), "no drops, no dups");
+        for seg in &plan.segments {
+            assert!(!seg.is_empty(), "no empty segments");
+        }
+    }
+
+    #[test]
+    fn predict_counts_shared_streams_as_hits() {
+        // two items streaming the same operand: the second stream walks
+        // the same extent and every slot hits
+        let g = geo();
+        let items: Vec<PlanItem> = (0..2)
+            .map(|_| PlanItem {
+                pool: 0,
+                rank: 0,
+                operands: vec![(7, OperandKind::Data, 4 * ROW_BYTES)],
+            })
+            .collect();
+        let cost = predict(&g, &items, &[vec![0, 1]]);
+        assert_eq!(cost.row_misses, 4, "cold slots open once");
+        assert_eq!(cost.row_hits, 4, "the second stream re-opens nothing");
+        assert!((cost.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(PlanCost::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn planning_is_deterministic() {
+        let items = interleaved(6);
+        let planner = Planner::new(PlanPolicy::RowLocality, geo());
+        let a = planner.plan(&items);
+        let b = planner.plan(&items);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,175 @@
+//! Property tests for the row-locality dispatch planner (`sched::plan`):
+//! the invariants the planned dispatch path leans on.
+//!
+//! * every plan is a permutation of its input — segments drop nothing
+//!   and duplicate nothing, whatever the policy;
+//! * planning is deterministic — identical items produce identical plans
+//!   (segment structure and predicted cost both);
+//! * `Fifo` is the identity plan: one segment, lowering order, zero
+//!   planning overhead;
+//! * under `RowLocality` the predicted cost never increases versus the
+//!   `Fifo` control — the planner may reorder, never regress;
+//! * no segment is empty, and every segment honours the per-rank
+//!   residency budget at the moment it was cut.
+
+use apache_fhe::hw::alloc::{Geometry, OperandKind, ROW_BYTES};
+use apache_fhe::hw::DimmConfig;
+use apache_fhe::math::sampler::Rng;
+use apache_fhe::sched::plan::{predict, PlanItem, PlanPolicy, Planner};
+use apache_fhe::util::proptest_lite::{run_prop, GenExt};
+
+fn geo() -> Geometry {
+    Geometry::of(&DimmConfig::paper())
+}
+
+fn rand_kind(rng: &mut Rng) -> OperandKind {
+    match rng.uniform(4) {
+        0 => OperandKind::Data,
+        1 => OperandKind::Evk,
+        2 => OperandKind::Twiddle,
+        _ => OperandKind::Stream,
+    }
+}
+
+/// A random batch the way the backend would describe it: a handful of
+/// pools pinned to ranks, operands drawn from a per-pool universe of
+/// shared keys (an operand's size and class are functions of its key, so
+/// a key means the same bytes everywhere, like a real buffer).
+fn rand_items(rng: &mut Rng, geo: &Geometry, n: usize) -> Vec<PlanItem> {
+    let pools = 1 + rng.uniform(6);
+    (0..n)
+        .map(|_| {
+            let pool = rng.uniform(pools);
+            let rank = (pool % geo.ranks as u64) as usize;
+            let n_ops = 1 + rng.uniform(4) as usize;
+            let operands = (0..n_ops)
+                .map(|_| {
+                    let key = pool * 1000 + rng.uniform(8);
+                    let mut krng = Rng::seeded(0x5EED ^ key);
+                    let kind = rand_kind(&mut krng);
+                    let bytes = krng.gen_range(8, 20 * ROW_BYTES);
+                    (key, kind, bytes)
+                })
+                .collect();
+            PlanItem {
+                pool,
+                rank,
+                operands,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn every_plan_is_a_permutation_of_its_input() {
+    let geo = geo();
+    run_prop("plan-permutation", 24, |rng, _| {
+        let n = 1 + rng.uniform(48) as usize;
+        let items = rand_items(rng, &geo, n);
+        for policy in [PlanPolicy::Fifo, PlanPolicy::RowLocality] {
+            let plan = Planner::new(policy, geo).plan(&items);
+            let mut order = plan.order();
+            assert_eq!(order.len(), n, "{policy:?}: dropped or duplicated items");
+            order.sort_unstable();
+            assert_eq!(
+                order,
+                (0..n).collect::<Vec<_>>(),
+                "{policy:?}: not a permutation"
+            );
+            for seg in &plan.segments {
+                assert!(!seg.is_empty(), "{policy:?}: empty segment");
+            }
+        }
+    });
+}
+
+#[test]
+fn planning_is_deterministic_for_identical_inputs() {
+    let geo = geo();
+    run_prop("plan-deterministic", 24, |rng, _| {
+        let n = 2 + rng.uniform(40) as usize;
+        let items = rand_items(rng, &geo, n);
+        let a = Planner::new(PlanPolicy::RowLocality, geo).plan(&items);
+        let b = Planner::new(PlanPolicy::RowLocality, geo).plan(&items);
+        assert_eq!(a, b, "identical inputs must plan identically");
+    });
+}
+
+#[test]
+fn fifo_is_the_identity_plan() {
+    let geo = geo();
+    run_prop("plan-fifo-identity", 24, |rng, _| {
+        let n = 1 + rng.uniform(48) as usize;
+        let items = rand_items(rng, &geo, n);
+        let plan = Planner::new(PlanPolicy::Fifo, geo).plan(&items);
+        assert_eq!(plan.segments, vec![(0..n).collect::<Vec<_>>()]);
+        assert_eq!(plan.splits(), 0);
+        assert_eq!(plan.order(), (0..n).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn row_locality_predicted_cost_never_exceeds_fifo() {
+    let geo = geo();
+    run_prop("plan-never-worse", 24, |rng, _| {
+        let n = 2 + rng.uniform(40) as usize;
+        let items = rand_items(rng, &geo, n);
+        let plan = Planner::new(PlanPolicy::RowLocality, geo).plan(&items);
+        // recompute the control independently of the planner's guard
+        let fifo_cost = predict(&geo, &items, &[(0..n).collect()]);
+        assert!(
+            plan.predicted.row_misses <= fifo_cost.row_misses,
+            "planned misses {} exceed fifo misses {}",
+            plan.predicted.row_misses,
+            fifo_cost.row_misses
+        );
+        assert_eq!(
+            plan.predicted_fifo, fifo_cost,
+            "the plan must have judged itself against the real control"
+        );
+        // the predicted cost of the shipped segments is the shipped cost
+        assert_eq!(plan.predicted, predict(&geo, &items, &plan.segments));
+    });
+}
+
+#[test]
+fn segments_honour_the_residency_budget() {
+    // a small geometry with a tight budget: whenever a plan splits, each
+    // segment's per-rank distinct working set must fit the budget unless
+    // a single item alone exceeds it (an unsplittable item still ships).
+    let geo = Geometry {
+        ranks: 2,
+        banks: 4,
+        row_bytes: ROW_BYTES,
+        rows_per_bank: 1 << 16,
+    };
+    run_prop("plan-budget", 24, |rng, _| {
+        let n = 2 + rng.uniform(40) as usize;
+        let items = rand_items(rng, &geo, n);
+        let plan = Planner::new(PlanPolicy::RowLocality, geo).plan(&items);
+        if plan.fell_back {
+            // the guard shipped the unsplit identity plan; the budget
+            // only binds plans the greedy actually built
+            return;
+        }
+        let budget = geo.residency_budget();
+        for seg in &plan.segments {
+            let mut footprint = vec![0u64; geo.ranks];
+            let mut seen = std::collections::HashSet::new();
+            for &ix in seg {
+                let it = &items[ix];
+                for &(key, _, bytes) in &it.operands {
+                    if seen.insert((key, it.rank)) {
+                        footprint[it.rank] += bytes;
+                    }
+                }
+            }
+            for (rank, &fp) in footprint.iter().enumerate() {
+                assert!(
+                    fp <= budget || seg.len() == 1,
+                    "rank {rank} working set {fp} exceeds budget {budget} in a multi-item segment"
+                );
+            }
+        }
+    });
+}

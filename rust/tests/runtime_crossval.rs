@@ -5,11 +5,12 @@
 //! and it runs on every plain `cargo test` — no artifacts required.
 //!
 //! The `APACHE_BACKEND` environment variable swaps the backend under
-//! test (`reference` | `pnm`) and `APACHE_ALLOC_POLICY` the operand
-//! placement policy (`rank_aware` | `identity`) — the CI matrix runs
-//! this suite once per (backend, policy) leg, so every assertion below
-//! doubles as a bit-identity check on the near-memory device model under
-//! both placement models.
+//! test (`reference` | `pnm`), `APACHE_ALLOC_POLICY` the operand
+//! placement policy (`rank_aware` | `identity`) and `APACHE_PLAN_POLICY`
+//! the dispatch-planning policy (`row_locality` | `fifo`) — the CI
+//! matrix runs this suite once per (backend, policy, plan) leg, so every
+//! assertion below doubles as a bit-identity check on the near-memory
+//! device model under both placement models and both dispatch planners.
 
 use apache_fhe::hw::{AllocPolicy, DimmConfig};
 use apache_fhe::math::automorph::galois_eval_map;
@@ -17,7 +18,7 @@ use apache_fhe::math::modops::ntt_primes;
 use apache_fhe::math::ntt::NttTable;
 use apache_fhe::math::sampler::Rng;
 use apache_fhe::params::{CkksParams, TfheParams};
-use apache_fhe::runtime::{ArtifactMeta, Invocation, Runtime};
+use apache_fhe::runtime::{ArtifactMeta, Invocation, PlanPolicy, Runtime};
 use apache_fhe::sched::lowering::Lowerer;
 use apache_fhe::sched::oplevel::OpShapes;
 
@@ -31,13 +32,29 @@ fn env_policy() -> AllocPolicy {
     }
 }
 
+/// The plan policy named by `APACHE_PLAN_POLICY`, else the serving
+/// default (`row_locality` — the coordinator's config default).
+fn env_plan() -> PlanPolicy {
+    match Runtime::env_plan_policy() {
+        Some(name) => {
+            PlanPolicy::parse(&name).expect("APACHE_PLAN_POLICY must name a known policy")
+        }
+        None => PlanPolicy::RowLocality,
+    }
+}
+
 /// The backend named by `APACHE_BACKEND` when set; otherwise on-disk
 /// artifacts when built with `--features pjrt` after `make artifacts`,
 /// and the hermetic reference runtime in every other case. Never skips.
 fn runtime() -> Runtime {
     if let Some(name) = Runtime::env_backend() {
-        return Runtime::for_backend_with_policy(&name, &DimmConfig::paper(), env_policy())
-            .expect("APACHE_BACKEND must name a known backend");
+        return Runtime::for_backend_with_policies(
+            &name,
+            &DimmConfig::paper(),
+            env_policy(),
+            env_plan(),
+        )
+        .expect("APACHE_BACKEND must name a known backend");
     }
     match Runtime::new(Runtime::default_dir()) {
         Ok(rt) => rt,
@@ -591,6 +608,134 @@ fn policy_trace_shape_sweep_is_dispatch_invariant() {
     assert!(
         hit_rates[1] > hit_rates[0],
         "rank-aware must keep its locality edge under chunked dispatch: {hit_rates:?}"
+    );
+}
+
+#[test]
+fn row_locality_plan_beats_fifo_on_the_serving_mix() {
+    // the acceptance gate of the dispatch planner: on the e2e serving
+    // mix under the rank-aware allocator, `RowLocality` planning must
+    // (a) stay bit-identical to the reference backend and the `Fifo`
+    // control in every slot, (b) earn a strictly higher observed DRAM
+    // row-hit rate than lowering-order dispatch, and (c) keep the
+    // planner's own prediction honest (never worse than its control).
+    let reference = Runtime::reference();
+    let dimm = crossval_dimm();
+    let fifo = Runtime::for_backend_with_policies(
+        "pnm",
+        &dimm,
+        AllocPolicy::RankAware,
+        PlanPolicy::Fifo,
+    )
+    .unwrap();
+    let planned = Runtime::for_backend_with_policies(
+        "pnm",
+        &dimm,
+        AllocPolicy::RankAware,
+        PlanPolicy::RowLocality,
+    )
+    .unwrap();
+    let invs = serving_mix_invocations(&reference);
+    assert!(invs.len() > 100, "the mix must be a real batch");
+    let ref_outs = reference.execute_batch_u64(&invs);
+    let fifo_outs = fifo.execute_batch_u64(&invs);
+    let plan_outs = planned.execute_batch_u64(&invs);
+    for ((inv, r), (f, p)) in invs
+        .iter()
+        .zip(&ref_outs)
+        .zip(fifo_outs.iter().zip(&plan_outs))
+    {
+        let r = r.as_ref().unwrap_or_else(|e| panic!("{}: reference: {e}", inv.artifact));
+        let f = f.as_ref().unwrap_or_else(|e| panic!("{}: fifo: {e}", inv.artifact));
+        let p = p.as_ref().unwrap_or_else(|e| panic!("{}: row_locality: {e}", inv.artifact));
+        assert_eq!(r, f, "{}: fifo diverged from reference", inv.artifact);
+        assert_eq!(r, p, "{}: row_locality diverged from reference", inv.artifact);
+    }
+    let tf = fifo.cost_trace().unwrap();
+    let tp = planned.cost_trace().unwrap();
+    assert_eq!(tf.invocations, invs.len() as u64);
+    assert_eq!(tp.invocations, invs.len() as u64);
+    assert_eq!(tf.dispatches, 1, "fifo is one unplanned dispatch");
+    assert_eq!(tf.plans, 0, "the control never plans");
+    assert_eq!(tp.plans, 1, "one plan per served batch");
+    assert_eq!(
+        tp.dispatches,
+        1 + tp.plan_splits,
+        "one device dispatch per plan segment"
+    );
+    assert!(
+        tp.row_hit_rate() > tf.row_hit_rate(),
+        "planned dispatch must beat lowering order: row_locality {:.3} vs fifo {:.3}",
+        tp.row_hit_rate(),
+        tf.row_hit_rate()
+    );
+    assert!(
+        tp.predicted_row_hits + tp.predicted_row_misses > 0,
+        "the planner must have priced the batch"
+    );
+    // planning permutes dispatch, not placement: the balance bound the
+    // allocator gate enforces survives the planner
+    assert!(
+        tp.rank_imbalance() <= 3.0,
+        "per-rank byte imbalance out of bounds under planning: {:.3} ({:?})",
+        tp.rank_imbalance(),
+        tp.bytes_by_rank
+    );
+}
+
+#[test]
+fn plan_policies_stay_bit_identical_across_dispatch_shapes() {
+    // the same mix chunked into many smaller planned dispatches: both
+    // plan policies stay bit-identical to the reference backend at every
+    // granularity, counters add up, and planning keeps its locality edge
+    // (never loses one) under chunked dispatch.
+    let reference = Runtime::reference();
+    let invs = serving_mix_invocations(&reference);
+    let chunk = 64usize;
+    let ref_outs: Vec<_> = invs
+        .chunks(chunk)
+        .map(|c| reference.execute_batch_u64(c))
+        .collect();
+    let mut hit_rates = Vec::new();
+    for plan_policy in [PlanPolicy::Fifo, PlanPolicy::RowLocality] {
+        let rt = Runtime::for_backend_with_policies(
+            "pnm",
+            &crossval_dimm(),
+            AllocPolicy::RankAware,
+            plan_policy,
+        )
+        .unwrap();
+        let mut batches = 0u64;
+        for (piece, ref_piece) in invs.chunks(chunk).zip(&ref_outs) {
+            let outs = rt.execute_batch_u64(piece);
+            batches += 1;
+            for ((inv, r), o) in piece.iter().zip(ref_piece).zip(&outs) {
+                assert_eq!(
+                    r.as_ref().unwrap(),
+                    o.as_ref().unwrap(),
+                    "{}: {} diverged under chunked dispatch",
+                    inv.artifact,
+                    plan_policy.name()
+                );
+            }
+        }
+        let tr = rt.cost_trace().unwrap();
+        assert_eq!(tr.invocations, invs.len() as u64);
+        match plan_policy {
+            PlanPolicy::Fifo => {
+                assert_eq!(tr.dispatches, batches);
+                assert_eq!(tr.plans, 0);
+            }
+            PlanPolicy::RowLocality => {
+                assert_eq!(tr.plans, batches, "one plan per chunk");
+                assert_eq!(tr.dispatches, batches + tr.plan_splits);
+            }
+        }
+        hit_rates.push(tr.row_hit_rate());
+    }
+    assert!(
+        hit_rates[1] >= hit_rates[0],
+        "planning must never lose locality under chunked dispatch: {hit_rates:?}"
     );
 }
 
