@@ -19,6 +19,12 @@
 //! DIMM (pools forced to share ranks, so dispatch order actually
 //! matters), and the artifact records the A/B row-hit rates plus the
 //! planner's split/prediction counters.
+//!
+//! The residency dimension completes the matrix: a repeated-tenant mix
+//! replays the same key operands across eight rounds with the
+//! cross-batch residency cache on (8 MiB) and off (budget 0), and the
+//! artifact records the cached-vs-cold row-hit rates plus the cache's
+//! hit/miss/eviction/pinned-byte counters — asserting the cached win.
 
 use apache_fhe::hw::{AllocPolicy, DimmConfig};
 use apache_fhe::math::ntt::NttTable;
@@ -266,6 +272,87 @@ fn main() {
         "row_locality must beat fifo on the rank-starved bench mix: {plan_hit_rates:?}"
     );
 
+    // residency A/B: the repeated-tenant serving mix — six tenants
+    // replay the same key operands across eight rounds with alternating
+    // arrival order on the rank-starved DIMM. The cached runtime keeps
+    // every tenant's key rows pinned across batches; the budget-0
+    // control re-allocates per batch, so the LIFO free lists hand each
+    // returning tenant a different extent every round.
+    let residency_budgets = [8u64 << 20, 0];
+    let residency_runtimes: Vec<Runtime> = residency_budgets
+        .iter()
+        .map(|&budget| {
+            Runtime::for_backend_configured(
+                "pnm",
+                &plan_dimm,
+                AllocPolicy::RankAware,
+                PlanPolicy::RowLocality,
+                budget,
+            )
+            .expect("pnm backend")
+        })
+        .collect();
+    let tenant_rounds: Vec<Vec<Invocation>> = {
+        let q = reference.manifest["routine2_n256"].modulus;
+        let len = 14 * 256;
+        let mut gen = || -> Arc<Vec<u64>> { Arc::new((0..len).map(|_| rng.uniform(q)).collect()) };
+        let evks: Vec<Arc<Vec<u64>>> = (0..6).map(|_| gen()).collect();
+        (0..8)
+            .map(|round| {
+                let order: Vec<usize> = if round % 2 == 0 {
+                    (0..6).collect()
+                } else {
+                    (0..6).rev().collect()
+                };
+                order
+                    .into_iter()
+                    .map(|t| {
+                        Invocation::new("routine2_n256", vec![gen(), evks[t].clone(), gen()])
+                            .with_pool(t as u64)
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    for invs in &tenant_rounds {
+        for rt in &residency_runtimes {
+            for r in rt.execute_batch_u64(invs) {
+                r.unwrap();
+            }
+        }
+    }
+    let mut residency_json: Vec<Json> = Vec::new();
+    let mut residency_hit_rates = Vec::new();
+    for (&budget, rt) in residency_budgets.iter().zip(&residency_runtimes) {
+        let tr = rt.cost_trace().expect("pnm exposes a cost trace");
+        println!(
+            "pnm[residency={budget}]: row-hit rate {:.1}%, {} cache hits, \
+             {} misses, {} evictions, {} B pinned",
+            100.0 * tr.row_hit_rate(),
+            tr.cache_hits,
+            tr.cache_misses,
+            tr.cache_evictions,
+            tr.cache_pinned_bytes,
+        );
+        residency_hit_rates.push(tr.row_hit_rate());
+        residency_json.push(
+            Json::obj()
+                .put("budget_bytes", budget)
+                .put("row_hit_rate", tr.row_hit_rate())
+                .put("cache_hits", tr.cache_hits)
+                .put("cache_misses", tr.cache_misses)
+                .put("cache_evictions", tr.cache_evictions)
+                .put("cache_pinned_bytes", tr.cache_pinned_bytes)
+                .put("cycles", tr.cycles)
+                .put("energy_j", tr.energy_j),
+        );
+    }
+    assert!(
+        residency_hit_rates[0] > residency_hit_rates[1],
+        "the residency cache must beat per-batch allocation on the \
+         repeated-tenant mix: {residency_hit_rates:?}"
+    );
+
     // the cumulative trace the artifact has always carried comes from the
     // default-policy (rank_aware) cold runtime
     let tr = cold_runtimes[1].cost_trace().expect("pnm exposes a cost trace");
@@ -274,6 +361,7 @@ fn main() {
         .put("batches", Json::Arr(rows_json))
         .put("alloc_policies", Json::Arr(policy_json))
         .put("plan_policies", Json::Arr(plan_json))
+        .put("residency", Json::Arr(residency_json))
         .put(
             "pnm_trace",
             Json::obj()

@@ -34,6 +34,13 @@ pub struct ApacheConfig {
     /// `"fifo"` (lowering order, the control). Same precedence chain:
     /// `--plan-policy` > `APACHE_PLAN_POLICY` > this config key.
     pub plan_policy: String,
+    /// cross-batch residency budget in bytes for the pnm backend's
+    /// evk/twiddle cache (`hw::alloc::ResidencyCache`): returning
+    /// tenants find their key material still row-resident, LRU-evicted
+    /// under this bound. 0 disables the cache (per-batch allocation).
+    /// Same precedence chain: `--residency-budget` >
+    /// `APACHE_RESIDENCY_BUDGET` > this config key.
+    pub residency_budget_bytes: u64,
     pub worker_threads: usize,
 }
 
@@ -48,6 +55,7 @@ impl Default for ApacheConfig {
             backend: "reference".into(),
             alloc_policy: AllocPolicy::RankAware.name().into(),
             plan_policy: PlanPolicy::RowLocality.name().into(),
+            residency_budget_bytes: 64 << 20,
             worker_threads: 2,
         }
     }
@@ -85,6 +93,19 @@ impl ApacheConfig {
             plan_policy: doc
                 .get_str("system", "plan_policy", &def.plan_policy)
                 .to_string(),
+            residency_budget_bytes: {
+                let raw = doc.get_int(
+                    "system",
+                    "residency_budget_bytes",
+                    def.residency_budget_bytes as i64,
+                );
+                if raw < 0 {
+                    return Err(Error::new(
+                        "system.residency_budget_bytes must be >= 0 (0 disables the cache)",
+                    ));
+                }
+                raw as u64
+            },
             worker_threads: doc.get_int("system", "worker_threads", def.worker_threads as i64)
                 as usize,
         };
@@ -168,6 +189,24 @@ imc_ks = false
         let err = ApacheConfig::from_toml("[system]\nalloc_policy = \"random\"\n");
         assert!(err.is_err(), "unknown policies must be rejected");
         assert!(err.unwrap_err().to_string().contains("alloc_policy"));
+    }
+
+    #[test]
+    fn residency_budget_parses_and_validates() {
+        let cfg = ApacheConfig::from_toml("").unwrap();
+        assert_eq!(cfg.residency_budget_bytes, 64 << 20, "64 MiB default");
+        let cfg =
+            ApacheConfig::from_toml("[system]\nresidency_budget_bytes = 0\n").unwrap();
+        assert_eq!(cfg.residency_budget_bytes, 0, "0 = cache off");
+        let cfg =
+            ApacheConfig::from_toml("[system]\nresidency_budget_bytes = 1048576\n").unwrap();
+        assert_eq!(cfg.residency_budget_bytes, 1 << 20);
+        let err = ApacheConfig::from_toml("[system]\nresidency_budget_bytes = -1\n");
+        assert!(err.is_err(), "negative budgets must be rejected");
+        assert!(err
+            .unwrap_err()
+            .to_string()
+            .contains("residency_budget_bytes"));
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::sched::lowering::Lowerer;
 use crate::sched::oplevel::{profile_op, OpShapes};
 use crate::sched::tasklevel::{schedule_tasks, Task};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 // Backend handles may be !Send (the PJRT client is Rc + raw pointers), so
@@ -51,6 +51,12 @@ pub struct Coordinator {
     pub cfg: ApacheConfig,
     pub metrics: Arc<Metrics>,
     runtime: Option<Runtime>,
+    /// one lowerer for the coordinator's lifetime, not one per served
+    /// batch: its operand pools memoize evk/twiddle buffers per
+    /// (ring, key), so a tenant returning in a later batch presents the
+    /// *same* operand keys to the backend — the condition under which
+    /// the pnm residency cache can score cross-batch row hits
+    lowerer: Mutex<Lowerer>,
     shapes: OpShapes,
 }
 
@@ -68,11 +74,12 @@ impl Coordinator {
                         Runtime::new(&cfg.artifacts_dir).map(|rt| rt.with_plan_policy(plan_policy))
                     } else {
                         crate::hw::AllocPolicy::parse(&cfg.alloc_policy).and_then(|policy| {
-                            Runtime::for_backend_with_policies(
+                            Runtime::for_backend_configured(
                                 &cfg.backend,
                                 &cfg.dimm,
                                 policy,
                                 plan_policy,
+                                cfg.residency_budget_bytes,
                             )
                         })
                     }
@@ -105,7 +112,19 @@ impl Coordinator {
             cfg,
             metrics: Arc::new(Metrics::default()),
             runtime,
+            lowerer: Mutex::new(Lowerer::new()),
             shapes,
+        }
+    }
+
+    /// Lock the persistent lowerer, recovering from poisoning: its pools
+    /// are append-only memo tables (a half-built entry is re-built on the
+    /// next miss), so adopting the inner state is strictly better than
+    /// wedging every future served batch.
+    fn lowerer(&self) -> MutexGuard<'_, Lowerer> {
+        match self.lowerer.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
         }
     }
 
@@ -186,7 +205,7 @@ impl Coordinator {
             Some(rt) => rt,
             None => return,
         };
-        let mut lowerer = Lowerer::new();
+        let mut lowerer = self.lowerer();
         let mut batch: Vec<Invocation> = Vec::new();
         let mut spans: Vec<(usize, std::ops::Range<usize>)> = Vec::new();
         for (ti, task) in tasks.iter().enumerate() {
@@ -253,6 +272,16 @@ impl Coordinator {
             self.metrics.incr("pnm.plan.predicted_row_hits", d.predicted_row_hits);
             self.metrics
                 .incr("pnm.plan.predicted_row_misses", d.predicted_row_misses);
+        }
+        // residency-cache outcomes (all-zero when the budget is 0 or the
+        // backend is placement-blind); pinned_bytes is a gauge — observe
+        // the end-of-batch footprint rather than accumulating it
+        if d.cache_hits + d.cache_misses + d.cache_evictions > 0 {
+            self.metrics.incr("pnm.cache.hits", d.cache_hits);
+            self.metrics.incr("pnm.cache.misses", d.cache_misses);
+            self.metrics.incr("pnm.cache.evictions", d.cache_evictions);
+            self.metrics
+                .observe("pnm.cache.pinned_bytes", d.cache_pinned_bytes as f64);
         }
         for class in OpClass::ALL {
             let c = d.class_cycles(class);
@@ -427,6 +456,41 @@ mod tests {
             task: cmux_tree_task("t", 3),
         }]);
         assert_eq!(coord.metrics.counter("pnm.plan.built"), 0);
+    }
+
+    #[test]
+    fn returning_tenants_surface_residency_cache_metrics() {
+        // the default config budget (64 MiB) enables the cache; the
+        // coordinator's persistent lowerer hands returning tenants the
+        // same operand keys, so the second served batch scores
+        // cross-batch residency hits
+        let cfg = ApacheConfig {
+            backend: "pnm".into(),
+            use_runtime: true,
+            ..Default::default()
+        };
+        assert!(cfg.residency_budget_bytes > 0, "default budget must enable the cache");
+        let coord = Coordinator::new(cfg);
+        let mix = || -> Vec<TaskRequest> {
+            (0..3)
+                .map(|i| TaskRequest {
+                    task: cmux_tree_task(&format!("t{i}"), 3),
+                })
+                .collect()
+        };
+        let first = coord.serve_batch(mix());
+        assert!(first.iter().all(|r| r.runtime_error.is_none()));
+        // a cold cache only pins: every evk/twiddle stream is a miss
+        assert_eq!(coord.metrics.counter("pnm.cache.hits"), 0);
+        assert!(coord.metrics.counter("pnm.cache.misses") > 0);
+        let second = coord.serve_batch(mix());
+        assert!(second.iter().all(|r| r.runtime_error.is_none()));
+        assert!(
+            coord.metrics.counter("pnm.cache.hits") > 0,
+            "returning tenants must find their key material resident"
+        );
+        let pinned = coord.metrics.percentile("pnm.cache.pinned_bytes", 0.5).unwrap();
+        assert!(pinned > 0.0, "the pinned-bytes gauge must surface");
     }
 
     #[test]

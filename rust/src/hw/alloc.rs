@@ -308,7 +308,11 @@ struct RankState {
     free: HashMap<(OperandKind, u64, u64), Vec<Extent>>,
 }
 
-/// The deterministic rank-aware skyline allocator.
+/// The deterministic rank-aware skyline allocator. `Clone` is cheap
+/// enough to snapshot: the dispatch planner clones live device state so
+/// its cost predictions replay against exactly the allocator the
+/// dispatch will mutate.
+#[derive(Debug, Clone)]
 pub struct RankAllocator {
     geo: Geometry,
     ranks: Vec<RankState>,
@@ -371,6 +375,24 @@ impl RankAllocator {
         let r = self.least_loaded();
         self.load[r] = self.load[r].saturating_add(est_bytes);
         r
+    }
+
+    /// Pin `pool` to a rank decided elsewhere (the dispatch preview) and
+    /// charge the estimate — the same load accounting as
+    /// [`Self::rank_for_pool`] without re-running the greedy choice, so
+    /// a planned dispatch realizes exactly the rank its preview
+    /// promised. An existing pin wins: the preview derives its rank from
+    /// the pin, so the two can only agree.
+    pub fn pin_pool(&mut self, pool: u64, rank: usize, est_bytes: u64) {
+        let r = *self.pool_rank.entry(pool).or_insert(rank);
+        self.load[r] = self.load[r].saturating_add(est_bytes);
+    }
+
+    /// Charge a transient group's estimate to a rank decided elsewhere
+    /// (no pool pin) — the threaded-rank counterpart of
+    /// [`Self::rank_for_transient`].
+    pub fn charge(&mut self, rank: usize, est_bytes: u64) {
+        self.load[rank] = self.load[rank].saturating_add(est_bytes);
     }
 
     /// The currently least-loaded rank (ties break to the lowest index).
@@ -664,6 +686,187 @@ impl RankAllocator {
     }
 }
 
+/// One tenant's pinned key material: the extents the cache holds live in
+/// the allocator across batches, in pin order.
+#[derive(Debug, Clone)]
+struct PinnedPool {
+    /// `(operand key, rank, bytes)` per pinned extent
+    extents: Vec<(u64, usize, u64)>,
+    bytes: u64,
+    /// dispatch clock of the last stream that touched this pool
+    last_use: u64,
+}
+
+/// Cross-batch operand residency, layered on [`RankAllocator`]: evk and
+/// twiddle extents of pool-tagged (§V-B key cluster) invocations stay
+/// live in the allocator after their batch releases, so a returning
+/// tenant's key material is still at the same `(bank, row)` cells — and,
+/// with the rank's row buffers undisturbed, still open. MemFHE/FHEmem
+/// argue this in-memory reuse is where PIM wins; per-batch allocation
+/// re-streams the same key rows cold forever.
+///
+/// Eviction is deterministic LRU over whole pools: when a new pin would
+/// exceed the byte budget, the pool with the oldest `last_use` (ties
+/// break to the lowest pool id) is unpinned and its extents freed —
+/// never a pool already touched by the dispatch in flight. A pin that
+/// cannot fit even after eviction is declined, not queued.
+///
+/// Budget 0 disables the cache: every method is inert, so per-batch
+/// allocate/free behavior is bit- and address-identical to a cache-free
+/// build.
+#[derive(Debug, Clone)]
+pub struct ResidencyCache {
+    budget: u64,
+    /// dispatch clock: advanced once per device dispatch, so "touched
+    /// this dispatch" and "resident from an earlier dispatch" are
+    /// distinguishable
+    clock: u64,
+    pools: HashMap<u64, PinnedPool>,
+    /// `(key, rank)` → (owning pool, clock at pin time)
+    pinned: HashMap<(u64, usize), (u64, u64)>,
+    pinned_bytes: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl ResidencyCache {
+    pub fn new(budget: u64) -> Self {
+        ResidencyCache {
+            budget,
+            clock: 0,
+            pools: HashMap::new(),
+            pinned: HashMap::new(),
+            pinned_bytes: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Budget 0 = the cache is off (today's per-batch behavior).
+    pub fn enabled(&self) -> bool {
+        self.budget > 0
+    }
+
+    /// Advance the dispatch clock. Call once per device dispatch, before
+    /// any [`Self::note_stream`] of that dispatch.
+    pub fn begin_dispatch(&mut self) {
+        if self.enabled() {
+            self.clock += 1;
+        }
+    }
+
+    /// Whether `(key, rank)` is pinned — pinned extents must survive the
+    /// batch's release pass.
+    pub fn contains(&self, key: u64, rank: usize) -> bool {
+        self.pinned.contains_key(&(key, rank))
+    }
+
+    /// Record one operand stream, after the allocator placed it. A
+    /// stream of a key pinned by an *earlier* dispatch is a cache hit
+    /// (its rows were held resident); a pinnable stream — evk/twiddle
+    /// with a lowering-stamped pool — that is not yet pinned is a miss,
+    /// and the cache tries to pin it, evicting LRU pools as needed.
+    /// Data/staging operands and untagged invocations pass through
+    /// untracked.
+    pub fn note_stream(
+        &mut self,
+        pool: Option<u64>,
+        key: u64,
+        rank: usize,
+        kind: OperandKind,
+        bytes: u64,
+        alloc: &mut RankAllocator,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        if let Some(&(owner, pinned_at)) = self.pinned.get(&(key, rank)) {
+            if pinned_at < self.clock {
+                self.hits += 1;
+            }
+            if let Some(p) = self.pools.get_mut(&owner) {
+                p.last_use = self.clock;
+            }
+            return;
+        }
+        let Some(pool) = pool else { return };
+        if !matches!(kind, OperandKind::Evk | OperandKind::Twiddle) {
+            return;
+        }
+        self.misses += 1;
+        if bytes > self.budget {
+            return;
+        }
+        while self.pinned_bytes + bytes > self.budget {
+            let victim = self
+                .pools
+                .iter()
+                .filter(|(_, p)| p.last_use < self.clock)
+                .map(|(&id, p)| (p.last_use, id))
+                .min();
+            match victim {
+                Some((_, id)) => self.evict(id, alloc),
+                None => return, // everything still pinned is in use
+            }
+        }
+        let p = self.pools.entry(pool).or_insert(PinnedPool {
+            extents: Vec::new(),
+            bytes: 0,
+            last_use: self.clock,
+        });
+        p.last_use = self.clock;
+        p.extents.push((key, rank, bytes));
+        p.bytes += bytes;
+        self.pinned.insert((key, rank), (pool, self.clock));
+        self.pinned_bytes += bytes;
+    }
+
+    /// Unpin one pool, freeing its extents back to the allocator in
+    /// reverse pin order (LIFO, so the free lists stay address-stable).
+    fn evict(&mut self, pool: u64, alloc: &mut RankAllocator) {
+        if let Some(p) = self.pools.remove(&pool) {
+            for &(key, rank, bytes) in p.extents.iter().rev() {
+                self.pinned.remove(&(key, rank));
+                alloc.free(key, rank);
+                self.pinned_bytes -= bytes;
+            }
+            self.evictions += 1;
+        }
+    }
+
+    /// Cumulative cache hits (streams served from a prior dispatch's
+    /// pin).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Cumulative misses (pinnable streams that were not resident).
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Cumulative whole-pool evictions.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Bytes currently pinned (a gauge, not a counter).
+    pub fn pinned_bytes(&self) -> u64 {
+        self.pinned_bytes
+    }
+
+    /// Number of currently pinned extents.
+    pub fn pinned_len(&self) -> usize {
+        self.pinned.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -851,5 +1054,89 @@ mod tests {
                 assert!(!x.overlaps(y), "{x:?} vs {y:?}");
             }
         }
+    }
+
+    #[test]
+    fn zero_budget_cache_is_inert() {
+        let mut a = RankAllocator::new(geo());
+        let mut c = ResidencyCache::new(0);
+        assert!(!c.enabled());
+        c.begin_dispatch();
+        a.place(1, 0, OperandKind::Evk, ROW_BYTES).unwrap();
+        c.note_stream(Some(5), 1, 0, OperandKind::Evk, ROW_BYTES, &mut a);
+        assert!(!c.contains(1, 0));
+        assert_eq!((c.hits(), c.misses(), c.evictions()), (0, 0, 0));
+        assert_eq!(c.pinned_bytes(), 0);
+    }
+
+    #[test]
+    fn returning_key_hits_after_a_pinned_dispatch() {
+        let mut a = RankAllocator::new(geo());
+        let mut c = ResidencyCache::new(1 << 20);
+        c.begin_dispatch();
+        let e1 = a.place(1, 0, OperandKind::Evk, 3 * ROW_BYTES).unwrap();
+        c.note_stream(Some(5), 1, 0, OperandKind::Evk, 3 * ROW_BYTES, &mut a);
+        assert!(c.contains(1, 0), "first sight pins");
+        assert_eq!((c.hits(), c.misses()), (0, 1), "first sight is a miss");
+        // the batch release must skip the pin; next dispatch returns
+        c.begin_dispatch();
+        let e2 = a.place(1, 0, OperandKind::Evk, 3 * ROW_BYTES).unwrap();
+        c.note_stream(Some(5), 1, 0, OperandKind::Evk, 3 * ROW_BYTES, &mut a);
+        assert_eq!(e1, e2, "pinned key keeps its extent across dispatches");
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+        // data and untagged streams pass through untracked
+        a.place(2, 0, OperandKind::Data, ROW_BYTES).unwrap();
+        c.note_stream(Some(5), 2, 0, OperandKind::Data, ROW_BYTES, &mut a);
+        a.place(3, 0, OperandKind::Evk, ROW_BYTES).unwrap();
+        c.note_stream(None, 3, 0, OperandKind::Evk, ROW_BYTES, &mut a);
+        assert!(!c.contains(2, 0) && !c.contains(3, 0));
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+    }
+
+    #[test]
+    fn eviction_is_lru_and_frees_the_extents() {
+        let mut a = RankAllocator::new(geo());
+        // budget fits exactly two one-row pins
+        let mut c = ResidencyCache::new(2 * ROW_BYTES);
+        c.begin_dispatch();
+        let e1 = a.place(1, 0, OperandKind::Evk, ROW_BYTES).unwrap();
+        c.note_stream(Some(10), 1, 0, OperandKind::Evk, ROW_BYTES, &mut a);
+        c.begin_dispatch();
+        a.place(2, 0, OperandKind::Evk, ROW_BYTES).unwrap();
+        c.note_stream(Some(11), 2, 0, OperandKind::Evk, ROW_BYTES, &mut a);
+        // third tenant: pool 10 is the LRU victim, pool 11 survives
+        c.begin_dispatch();
+        a.place(3, 0, OperandKind::Evk, ROW_BYTES).unwrap();
+        c.note_stream(Some(12), 3, 0, OperandKind::Evk, ROW_BYTES, &mut a);
+        assert_eq!(c.evictions(), 1);
+        assert!(!c.contains(1, 0), "LRU pool evicted");
+        assert!(c.contains(2, 0) && c.contains(3, 0));
+        assert_eq!(c.pinned_bytes(), 2 * ROW_BYTES, "budget respected");
+        // the evicted cells went back to the free list: a same-shape
+        // placement reuses them
+        let again = a.place(9, 0, OperandKind::Evk, ROW_BYTES).unwrap();
+        assert_eq!((e1.bank0, e1.slot), (again.bank0, again.slot));
+    }
+
+    #[test]
+    fn pools_in_use_this_dispatch_are_never_evicted() {
+        let mut a = RankAllocator::new(geo());
+        let mut c = ResidencyCache::new(2 * ROW_BYTES);
+        c.begin_dispatch();
+        a.place(1, 0, OperandKind::Evk, ROW_BYTES).unwrap();
+        c.note_stream(Some(10), 1, 0, OperandKind::Evk, ROW_BYTES, &mut a);
+        a.place(2, 0, OperandKind::Evk, ROW_BYTES).unwrap();
+        c.note_stream(Some(11), 2, 0, OperandKind::Evk, ROW_BYTES, &mut a);
+        // same dispatch: no evictable pool (both touched) — pin declined
+        a.place(3, 0, OperandKind::Evk, ROW_BYTES).unwrap();
+        c.note_stream(Some(12), 3, 0, OperandKind::Evk, ROW_BYTES, &mut a);
+        assert_eq!(c.evictions(), 0, "in-flight pools stay pinned");
+        assert!(!c.contains(3, 0), "over-budget pin is declined");
+        assert!(c.contains(1, 0) && c.contains(2, 0));
+        // an oversized single extent is never pinnable at all
+        a.place(4, 0, OperandKind::Evk, 3 * ROW_BYTES).unwrap();
+        c.note_stream(Some(13), 4, 0, OperandKind::Evk, 3 * ROW_BYTES, &mut a);
+        assert!(!c.contains(4, 0));
+        assert_eq!(c.pinned_bytes(), 2 * ROW_BYTES);
     }
 }

@@ -67,6 +67,23 @@ fn load_config(args: &Args) -> ApacheConfig {
         eprintln!("config error: {e}");
         std::process::exit(2);
     }
+    // residency-cache precedence, same chain:
+    // --residency-budget > APACHE_RESIDENCY_BUDGET > config file
+    let budget_override = args
+        .opt("residency-budget")
+        .map(|s| s.to_string())
+        .or_else(apache_fhe::runtime::Runtime::env_residency_budget);
+    if let Some(raw) = budget_override {
+        match raw.parse::<u64>() {
+            Ok(b) => cfg.residency_budget_bytes = b,
+            Err(_) => {
+                eprintln!(
+                    "config error: residency budget must be a byte count >= 0, got `{raw}`"
+                );
+                std::process::exit(2);
+            }
+        }
+    }
     cfg
 }
 
@@ -174,11 +191,12 @@ fn main() {
                     .expect("load_config validated the policy");
                 let plan = apache_fhe::sched::plan::PlanPolicy::parse(&cfg.plan_policy)
                     .expect("load_config validated the policy");
-                apache_fhe::runtime::Runtime::for_backend_with_policies(
+                apache_fhe::runtime::Runtime::for_backend_configured(
                     &cfg.backend,
                     &cfg.dimm,
                     policy,
                     plan,
+                    cfg.residency_budget_bytes,
                 )
                 .unwrap_or_else(|e| {
                     eprintln!("backend `{}` unusable ({e}); using reference", cfg.backend);
@@ -199,7 +217,7 @@ fn main() {
                 "usage: apache <serve|profile|inspect|area|config|baselines|artifacts> \
                  [--config file.toml] [--dimms N] [--tasks N] [--runtime] \
                  [--backend reference|pnm] [--alloc-policy rank_aware|identity] \
-                 [--plan-policy row_locality|fifo]"
+                 [--plan-policy row_locality|fifo] [--residency-budget BYTES]"
             );
             std::process::exit(2);
         }

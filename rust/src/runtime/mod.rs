@@ -27,7 +27,7 @@
 
 pub mod pnm;
 
-pub use crate::hw::alloc::{AllocPolicy, OperandKind};
+pub use crate::hw::alloc::{AllocPolicy, OperandKind, ResidencyCache};
 pub use crate::sched::plan::{DispatchPlan, PlanPolicy};
 pub use pnm::{CostTrace, OpClass, PnmBackend};
 
@@ -35,7 +35,7 @@ use crate::hw::alloc::Geometry;
 use crate::hw::DimmConfig;
 use crate::math::modops::{mod_add, mod_mul, ntt_primes};
 use crate::math::ntt::NttTable;
-use crate::sched::plan::{PlanItem, Planner};
+use crate::sched::plan::{DeviceState, PlanItem, Planner};
 use crate::util::error::{Context, Error, Result};
 use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
@@ -253,6 +253,7 @@ impl BatchItem<'_> {
             pool: self.pool_key(),
             rank,
             operands,
+            stamped: self.pool.is_some(),
         }
     }
 }
@@ -296,10 +297,37 @@ pub trait Backend {
 
     /// Side-effect-free preview of the device partition (rank) each item
     /// of `items` would land on if dispatched as one batch — what the
-    /// dispatch planner clusters against. Must agree with the placement
-    /// the backend performs when the batch is actually dispatched.
-    /// `None` (the default) for placement-blind backends.
+    /// dispatch planner clusters against. The planner threads these
+    /// ranks back into [`Backend::execute_batch_placed`], so the preview
+    /// *is* the placement: exact, not advisory, even for pools first
+    /// seen mid-batch. `None` (the default) for placement-blind
+    /// backends.
     fn rank_assignment(&self, _items: &[BatchItem<'_>]) -> Option<Vec<usize>> {
+        None
+    }
+
+    /// Execute a pre-validated batch whose per-item device partition
+    /// (rank) was already decided by the [`Backend::rank_assignment`]
+    /// preview. Threading the previewed ranks into the dispatch closes
+    /// the preview/placement seam: a segmented plan can no longer drift
+    /// from the whole-batch preview for pools first seen mid-batch. The
+    /// default ignores the ranks (placement-blind backends have nothing
+    /// to thread).
+    fn execute_batch_placed(
+        &self,
+        items: &[BatchItem<'_>],
+        _ranks: &[usize],
+    ) -> Vec<Result<Vec<u64>>> {
+        self.execute_batch(items)
+    }
+
+    /// Snapshot of the live device state (allocator, row buffers,
+    /// residency cache) the dispatch planner should price plans against
+    /// — with it, predicted row hits/misses equal the realized dispatch
+    /// counters. `None` (the default) for backends without a placement
+    /// model; the planner then predicts against fresh state, which is
+    /// only *relatively* accurate.
+    fn plan_state(&self) -> Option<DeviceState> {
         None
     }
 
@@ -307,6 +335,51 @@ pub trait Backend {
     /// backends fold the planner counters (plans built, splits, predicted
     /// row hits/misses) into their trace. Default: no-op.
     fn note_plan(&self, _plan: &DispatchPlan) {}
+}
+
+/// Shared-backend delegation: a runtime can drive an `Arc`-held backend
+/// while tests (or the coordinator) keep a handle on the same instance
+/// to inspect its trace and placements mid-flight.
+impl<B: Backend + ?Sized> Backend for Arc<B> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[&[u64]]) -> Result<Vec<u64>> {
+        (**self).execute_u64(meta, inputs)
+    }
+
+    fn execute_batch(&self, items: &[BatchItem<'_>]) -> Vec<Result<Vec<u64>>> {
+        (**self).execute_batch(items)
+    }
+
+    fn execute_batch_placed(
+        &self,
+        items: &[BatchItem<'_>],
+        ranks: &[usize],
+    ) -> Vec<Result<Vec<u64>>> {
+        (**self).execute_batch_placed(items, ranks)
+    }
+
+    fn cost_trace(&self) -> Option<CostTrace> {
+        (**self).cost_trace()
+    }
+
+    fn plan_geometry(&self) -> Option<Geometry> {
+        (**self).plan_geometry()
+    }
+
+    fn rank_assignment(&self, items: &[BatchItem<'_>]) -> Option<Vec<usize>> {
+        (**self).rank_assignment(items)
+    }
+
+    fn plan_state(&self) -> Option<DeviceState> {
+        (**self).plan_state()
+    }
+
+    fn note_plan(&self, plan: &DispatchPlan) {
+        (**self).note_plan(plan)
+    }
 }
 
 /// Operand tables already validated within one batch, keyed by (operand
@@ -336,7 +409,12 @@ impl ReferenceBackend {
     }
 
     fn table(&self, n: usize, q: u64) -> Arc<NttTable> {
-        let mut cache = self.tables.lock().unwrap();
+        // recover the memo from a poisoned lock: cached tables written
+        // before a worker panic are still canonical
+        let mut cache = match self.tables.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
         cache
             .entry((n, q))
             .or_insert_with(|| Arc::new(NttTable::new(n, q)))
@@ -767,16 +845,43 @@ impl Runtime {
     }
 
     /// [`Runtime::for_backend_with_policy`] plus an explicit
-    /// dispatch-planning policy — the full policy surface the
-    /// coordinator threads from config/CLI/env.
+    /// dispatch-planning policy. Cross-batch residency stays off (budget
+    /// 0); use [`Runtime::for_backend_configured`] to enable it.
     pub fn for_backend_with_policies(
         name: &str,
         dimm: &DimmConfig,
         alloc_policy: AllocPolicy,
         plan_policy: PlanPolicy,
     ) -> Result<Self> {
-        Self::for_backend_with_policy(name, dimm, alloc_policy)
-            .map(|rt| rt.with_plan_policy(plan_policy))
+        Self::for_backend_configured(name, dimm, alloc_policy, plan_policy, 0)
+    }
+
+    /// The full configuration surface the coordinator threads from
+    /// config/CLI/env: backend, DIMM, both policies, and the cross-batch
+    /// residency budget in bytes (0 = per-batch allocation, today's
+    /// cache-off behavior).
+    pub fn for_backend_configured(
+        name: &str,
+        dimm: &DimmConfig,
+        alloc_policy: AllocPolicy,
+        plan_policy: PlanPolicy,
+        residency_budget: u64,
+    ) -> Result<Self> {
+        match name {
+            "reference" => Ok(Self::reference().with_plan_policy(plan_policy)),
+            "pnm" => Ok(Self::from_parts(
+                builtin_manifest(),
+                Box::new(PnmBackend::with_policy_and_budget(
+                    dimm.clone(),
+                    alloc_policy,
+                    residency_budget,
+                )),
+            )
+            .with_plan_policy(plan_policy)),
+            other => Err(Error::new(format!(
+                "unknown backend `{other}` (expected `reference` or `pnm`)"
+            ))),
+        }
     }
 
     /// Select the dispatch-planning policy of the batched entry point.
@@ -811,6 +916,16 @@ impl Runtime {
     /// point of use.
     pub fn env_plan_policy() -> Option<String> {
         std::env::var("APACHE_PLAN_POLICY")
+            .ok()
+            .filter(|s| !s.is_empty())
+    }
+
+    /// Residency-budget override (bytes) from the
+    /// `APACHE_RESIDENCY_BUDGET` environment variable — the cache-enabled
+    /// CI matrix leg. `None` when unset or empty; parsed as `u64` at the
+    /// point of use.
+    pub fn env_residency_budget() -> Option<String> {
+        std::env::var("APACHE_RESIDENCY_BUDGET")
             .ok()
             .filter(|s| !s.is_empty())
     }
@@ -902,12 +1017,19 @@ impl Runtime {
             .zip(&ranks)
             .map(|(it, &rank)| it.plan_item(rank))
             .collect();
-        let plan = Planner::new(self.plan_policy, geo).plan(&plan_items);
+        let state = self.backend.plan_state();
+        let plan = Planner::new(self.plan_policy, geo).plan_with(&plan_items, state.as_ref());
         self.backend.note_plan(&plan);
         let mut slots: Vec<Option<Result<Vec<u64>>>> = items.iter().map(|_| None).collect();
         for seg in &plan.segments {
             let seg_items: Vec<BatchItem<'_>> = seg.iter().map(|&i| items[i]).collect();
-            for (&i, out) in seg.iter().zip(self.backend.execute_batch(&seg_items)) {
+            // thread the previewed ranks into the dispatch: the preview
+            // is the placement, even for pools first seen mid-batch
+            let seg_ranks: Vec<usize> = seg.iter().map(|&i| ranks[i]).collect();
+            for (&i, out) in seg
+                .iter()
+                .zip(self.backend.execute_batch_placed(&seg_items, &seg_ranks))
+            {
                 slots[i] = Some(out);
             }
         }

@@ -32,19 +32,42 @@
 //! synthetic DRAM address and pools round-robin across ranks. Both
 //! policies execute identical numerics; only the cost trace (row hits,
 //! per-rank bytes, energy) responds to placement.
+//!
+//! Residency: with a non-zero byte budget the backend layers a
+//! [`ResidencyCache`] over the allocator, so evk/twiddle extents of
+//! pool-tagged invocations stay live across dispatches — a returning
+//! tenant's key material streams from the same still-open rows instead
+//! of re-opening them cold every batch (the MemFHE/FHEmem in-memory
+//! reuse argument). Budget 0 (the default) keeps today's per-batch
+//! allocate/free behavior bit- and address-identical.
 
 use crate::hw::alloc::{
-    least_loaded_of, AllocPolicy, Geometry, OperandKind, RankAllocator, BANKS_PER_RANK, ROW_BYTES,
+    least_loaded_of, AllocPolicy, Geometry, OperandKind, RankAllocator, ResidencyCache,
+    BANKS_PER_RANK, ROW_BYTES,
 };
 use crate::hw::dram::Rank;
 use crate::hw::energy;
 use crate::hw::{DimmConfig, ImcKs, Interconnect, OpProfile};
+use crate::sched::plan::DeviceState;
 use crate::util::error::{Error, Result};
 use std::collections::hash_map::Entry;
 use std::collections::{HashMap, HashSet};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use super::{ArtifactMeta, Backend, BatchItem, DispatchPlan, ReferenceBackend};
+
+/// Poison-recovering lock (the same recovery `coordinator::metrics`
+/// uses): a panic elsewhere while holding a device-model mutex must not
+/// take the backend down — the cost trace and allocator state a
+/// panicking holder wrote before dying are still internally consistent
+/// (counters are plain sums; the allocator frees idempotently), so
+/// recover the guard and keep dispatching.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
 
 /// Artifact classes the cost trace attributes cycles to — one per
 /// manifest operator family.
@@ -158,6 +181,16 @@ pub struct CostTrace {
     /// deltas to see how honest the predictor is
     pub predicted_row_hits: u64,
     pub predicted_row_misses: u64,
+    /// residency-cache counters: streams served from a prior dispatch's
+    /// pin (`cache_hits`), pinnable streams that arrived cold
+    /// (`cache_misses`), and whole-pool LRU evictions — monotone, like
+    /// the row counters
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    /// bytes currently pinned by the residency cache — a gauge, not a
+    /// counter: a delta carries the end-of-window value
+    pub cache_pinned_bytes: u64,
 }
 
 impl CostTrace {
@@ -234,12 +267,30 @@ impl CostTrace {
             predicted_row_misses: self
                 .predicted_row_misses
                 .saturating_sub(prev.predicted_row_misses),
+            cache_hits: self.cache_hits.saturating_sub(prev.cache_hits),
+            cache_misses: self.cache_misses.saturating_sub(prev.cache_misses),
+            cache_evictions: self.cache_evictions.saturating_sub(prev.cache_evictions),
+            // gauge: the delta reports where the cache stands now
+            cache_pinned_bytes: self.cache_pinned_bytes,
         };
         for (i, slot) in d.cycles_by_class.iter_mut().enumerate() {
             *slot = self.cycles_by_class[i].saturating_sub(prev.cycles_by_class[i]);
         }
         d
     }
+}
+
+/// The mutable placement state behind one mutex: allocator and residency
+/// cache change together (a pin holds allocator extents live; an
+/// eviction frees them), so they share a guard.
+struct DeviceMut {
+    /// the rank-aware operand allocator (used by `RankAware` only):
+    /// pool→rank pinning and per-operand extents live here, and its LIFO
+    /// free lists keep re-placement address-stable across dispatches
+    alloc: RankAllocator,
+    /// cross-batch evk/twiddle residency layered on the allocator
+    /// (inert at budget 0)
+    cache: ResidencyCache,
 }
 
 /// The near-memory device-model backend. Numerics delegate to an inner
@@ -255,10 +306,8 @@ pub struct PnmBackend {
     imc_ks: bool,
     /// operand-placement policy (see [`AllocPolicy`])
     policy: AllocPolicy,
-    /// the rank-aware operand allocator (used by `RankAware` only):
-    /// pool→rank pinning and per-operand extents live here, and its LIFO
-    /// free lists keep re-placement address-stable across dispatches
-    alloc: Mutex<RankAllocator>,
+    /// allocator + residency cache (see [`DeviceMut`])
+    dev: Mutex<DeviceMut>,
     /// persistent per-rank bank state, so row-buffer locality spans
     /// dispatches the way an open row would
     ranks: Mutex<Vec<Rank>>,
@@ -271,7 +320,19 @@ impl PnmBackend {
         Self::with_policy(cfg, AllocPolicy::RankAware)
     }
 
+    /// Cache-off construction (residency budget 0): per-batch
+    /// allocate/free, exactly the pre-cache behavior.
     pub fn with_policy(cfg: DimmConfig, policy: AllocPolicy) -> Self {
+        Self::with_policy_and_budget(cfg, policy, 0)
+    }
+
+    /// Full construction: placement policy plus a cross-batch residency
+    /// budget in bytes (0 disables the cache).
+    pub fn with_policy_and_budget(
+        cfg: DimmConfig,
+        policy: AllocPolicy,
+        residency_budget: u64,
+    ) -> Self {
         let nranks = cfg.ranks.max(1);
         let ranks = vec![Rank::new(BANKS_PER_RANK, ROW_BYTES); nranks];
         PnmBackend {
@@ -279,7 +340,10 @@ impl PnmBackend {
             ic: Interconnect::from_config(&cfg),
             imc_ks: ImcKs::from_config(&cfg).enabled,
             policy,
-            alloc: Mutex::new(RankAllocator::new(Geometry::of(&cfg))),
+            dev: Mutex::new(DeviceMut {
+                alloc: RankAllocator::new(Geometry::of(&cfg)),
+                cache: ResidencyCache::new(residency_budget),
+            }),
             ranks: Mutex::new(ranks),
             trace: Mutex::new(CostTrace {
                 fu_clusters: nranks as u64,
@@ -299,9 +363,14 @@ impl PnmBackend {
         self.policy
     }
 
+    /// The residency cache's byte budget (0 = cache off).
+    pub fn residency_budget(&self) -> u64 {
+        lock(&self.dev).cache.budget()
+    }
+
     /// Snapshot of the cumulative cost trace.
     pub fn trace(&self) -> CostTrace {
-        self.trace.lock().unwrap().clone()
+        lock(&self.trace).clone()
     }
 
     /// Rank placement for a batch: items sharing an operand pool (the
@@ -338,14 +407,14 @@ impl PnmBackend {
                 // transient assignment — pinning a heap address would
                 // leak an entry per buffer and alias reused addresses.
                 let (order, est) = Self::pool_groups(items);
-                let mut alloc = self.alloc.lock().unwrap();
+                let mut dev = lock(&self.dev);
                 let assign: HashMap<u64, usize> = order
                     .iter()
                     .map(|&(p, pinned)| {
                         let r = if pinned {
-                            alloc.rank_for_pool(p, est[&p])
+                            dev.alloc.rank_for_pool(p, est[&p])
                         } else {
-                            alloc.rank_for_transient(est[&p])
+                            dev.alloc.rank_for_transient(est[&p])
                         };
                         (p, r)
                     })
@@ -361,25 +430,26 @@ impl PnmBackend {
     /// vector (pinned pools answer from their pins, new pools take the
     /// least-loaded rank) without charging anything, so previewing a
     /// batch never distorts the balance its real dispatch will account.
-    /// Untagged (transient) groups are previewed with the same greedy;
-    /// the real dispatch re-assigns them per segment, so their preview
-    /// is advisory while every pool-tagged item's preview is exact.
+    /// The preview is *exact*, not advisory: the runtime threads it back
+    /// through [`Backend::execute_batch_placed`], so the dispatch lands
+    /// every group — pool-tagged, transient, or first seen mid-batch —
+    /// on exactly the previewed rank.
     pub fn placement_preview(&self, items: &[BatchItem<'_>]) -> Vec<usize> {
         match self.policy {
             // the identity round-robin never touches backend state
             AllocPolicy::Identity => self.placement(items),
             AllocPolicy::RankAware => {
                 let (order, est) = Self::pool_groups(items);
-                let alloc = self.alloc.lock().unwrap();
-                let mut loads = alloc.loads().to_vec();
+                let dev = lock(&self.dev);
+                let mut loads = dev.alloc.loads().to_vec();
                 let mut assign: HashMap<u64, usize> = HashMap::new();
                 for &(p, pinned) in &order {
-                    let pinned_rank = if pinned { alloc.pool_rank(p) } else { None };
+                    let pinned_rank = if pinned { dev.alloc.pool_rank(p) } else { None };
                     let r = pinned_rank.unwrap_or_else(|| least_loaded_of(&loads));
                     loads[r] = loads[r].saturating_add(est[&p]);
                     assign.insert(p, r);
                 }
-                drop(alloc);
+                drop(dev);
                 items.iter().map(|it| assign[&it.pool_key()]).collect()
             }
         }
@@ -408,8 +478,10 @@ impl PnmBackend {
     /// placement order: popped LIFO by the next dispatch's placements,
     /// the free lists then hand every operand its previous slots back,
     /// so an identical dispatch sequence is exactly address-stable and
-    /// row-buffer locality survives the free.
-    fn release(&self, alloc: &mut RankAllocator, placed: &[(u64, usize)]) {
+    /// row-buffer locality survives the free. Extents the residency
+    /// cache pinned during (or before) this dispatch are skipped — they
+    /// stay live until the cache evicts their pool.
+    fn release(&self, dev: &mut DeviceMut, placed: &[(u64, usize)]) {
         let mut seen: HashSet<(u64, usize)> = HashSet::new();
         let mut order: Vec<(u64, usize)> = Vec::new();
         for &p in placed {
@@ -418,24 +490,29 @@ impl PnmBackend {
             }
         }
         for &(key, rank) in order.iter().rev() {
-            alloc.free(key, rank);
+            if !dev.cache.contains(key, rank) {
+                dev.alloc.free(key, rank);
+            }
         }
     }
 
     /// Advance the device model for one invocation placed on rank
     /// `rank_id`: FU occupancy for the compute, row-buffer-aware
     /// streaming for the operands (through the allocator's explicit
-    /// extents when `alloc` is supplied, synthetic identity addresses
-    /// otherwise), overlap of the two on the critical path.
+    /// extents when `dev` is supplied, synthetic identity addresses
+    /// otherwise), overlap of the two on the critical path. `pool` is
+    /// the lowering-stamped pool id (if any) — the residency cache only
+    /// pins operands of stamped pools.
     #[allow(clippy::too_many_arguments)]
     fn account(
         &self,
         meta: &ArtifactMeta,
         operands: &[(u64, usize)],
         kinds: &[OperandKind],
+        pool: Option<u64>,
         rank_id: usize,
         rank: &mut Rank,
-        alloc: Option<&mut RankAllocator>,
+        dev: Option<&mut DeviceMut>,
         placed: &mut Vec<(u64, usize)>,
     ) -> (OpProfile, OpClass) {
         let class = OpClass::of(&meta.name);
@@ -488,7 +565,7 @@ impl PnmBackend {
         // produced.
         let mut mem_clocks = 0u64;
         let mut bytes = 0u64;
-        if let Some(alloc) = alloc {
+        if let Some(DeviceMut { alloc, cache }) = dev {
             for (i, &(key, len)) in operands.iter().enumerate() {
                 let b = (len * 8) as u64;
                 let kind = kinds
@@ -498,6 +575,7 @@ impl PnmBackend {
                 match alloc.place(key, rank_id, kind, b) {
                     Ok(ext) => {
                         mem_clocks += rank.stream_slots(ext.slot_iter(), b, &self.cfg.timing);
+                        cache.note_stream(pool, key, rank_id, kind, b, alloc);
                         placed.push((key, rank_id));
                     }
                     // a somehow-exhausted group degrades to identity
@@ -549,8 +627,18 @@ impl PnmBackend {
         invocations: u64,
     ) {
         let device_cycles = per_rank_cycles.iter().copied().max().unwrap_or(0);
+        // lock order everywhere: device state before rank state
+        let (c_hits, c_misses, c_evictions, c_pinned) = {
+            let dev = lock(&self.dev);
+            (
+                dev.cache.hits(),
+                dev.cache.misses(),
+                dev.cache.evictions(),
+                dev.cache.pinned_bytes(),
+            )
+        };
         let (hits, misses) = {
-            let ranks = self.ranks.lock().unwrap();
+            let ranks = lock(&self.ranks);
             ranks.iter().fold((0u64, 0u64), |(h, m), r| {
                 let (rh, rm) = r.counters();
                 (h + rh, m + rm)
@@ -558,7 +646,7 @@ impl PnmBackend {
         };
         let energy =
             energy::dynamic_energy_j(&self.cfg, device_cycles, total.io_internal, total.io_bank);
-        let mut tr = self.trace.lock().unwrap();
+        let mut tr = lock(&self.trace);
         tr.dispatches += 1;
         tr.invocations += invocations;
         tr.cycles += device_cycles;
@@ -572,77 +660,27 @@ impl PnmBackend {
         }
         tr.row_hits = hits;
         tr.row_misses = misses;
-    }
-}
-
-impl Backend for PnmBackend {
-    fn name(&self) -> &'static str {
-        "pnm"
+        tr.cache_hits = c_hits;
+        tr.cache_misses = c_misses;
+        tr.cache_evictions = c_evictions;
+        tr.cache_pinned_bytes = c_pinned;
     }
 
-    fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[&[u64]]) -> Result<Vec<u64>> {
-        // a lone invocation is still one device dispatch
+    /// One device dispatch with the rank placement already decided:
+    /// partition by `placement`, execute every partition's kernels on
+    /// its own scoped thread (rank parallelism), and advance the cost
+    /// model. Item order is preserved; a failed item only fails its own
+    /// slot. The shared back half of [`Backend::execute_batch`] and
+    /// [`Backend::execute_batch_placed`].
+    fn run_dispatch(
+        &self,
+        items: &[BatchItem<'_>],
+        placement: &[usize],
+    ) -> Vec<Result<Vec<u64>>> {
         let nranks = self.cfg.ranks.max(1);
-        let operands: Vec<(u64, usize)> = inputs
-            .iter()
-            .map(|s| (s.as_ptr() as u64, s.len()))
-            .collect();
-        let mut placed: Vec<(u64, usize)> = Vec::new();
-        // lock order everywhere: allocator before rank state
-        let (p, class, rank_id) = match self.policy {
-            AllocPolicy::Identity => {
-                let mut ranks = self.ranks.lock().unwrap();
-                let (p, c) =
-                    self.account(meta, &operands, &[], 0, &mut ranks[0], None, &mut placed);
-                (p, c, 0)
-            }
-            AllocPolicy::RankAware => {
-                let mut alloc = self.alloc.lock().unwrap();
-                // no lowering pool on the singleton path: a transient
-                // least-loaded assignment (pinning a pointer-derived id
-                // would leak pins and alias reused heap addresses)
-                let est: u64 = operands.iter().map(|o| (o.1 * 8) as u64).sum();
-                let r = alloc.rank_for_transient(est);
-                let mut ranks = self.ranks.lock().unwrap();
-                let (p, c) = self.account(
-                    meta,
-                    &operands,
-                    &[],
-                    r,
-                    &mut ranks[r],
-                    Some(&mut alloc),
-                    &mut placed,
-                );
-                drop(ranks);
-                self.release(&mut alloc, &placed);
-                (p, c, r)
-            }
-        };
-        let cycles = p.cycles;
-        let streamed = p.io_internal + p.io_bank;
-        let mut by_class = [0u64; OpClass::COUNT];
-        by_class[class.index()] = cycles;
-        let mut per_rank_cycles = vec![0u64; nranks];
-        per_rank_cycles[rank_id] = cycles;
-        let mut per_rank_bytes = vec![0u64; nranks];
-        per_rank_bytes[rank_id] = streamed;
-        self.accrue(&per_rank_cycles, &per_rank_bytes, p, by_class, 1);
-        self.inner.execute_u64(meta, inputs)
-    }
-
-    /// One device dispatch for the whole batch: partition across ranks by
-    /// operand pool, execute every partition's kernels on its own scoped
-    /// thread (rank parallelism), and advance the cost model. Item order
-    /// is preserved; a failed item only fails its own slot.
-    fn execute_batch(&self, items: &[BatchItem<'_>]) -> Vec<Result<Vec<u64>>> {
-        if items.is_empty() {
-            return Vec::new();
-        }
-        let nranks = self.cfg.ranks.max(1);
-        let placement = self.placement(items);
         let mut parts: Vec<Vec<usize>> = vec![Vec::new(); nranks];
         for (i, &r) in placement.iter().enumerate() {
-            parts[r].push(i);
+            parts[r.min(nranks - 1)].push(i);
         }
         // only occupied ranks get a worker — a small batch must not pay
         // spawn/join for ranks it never touches
@@ -686,12 +724,15 @@ impl Backend for PnmBackend {
         let mut total = OpProfile::default();
         let mut by_class = [0u64; OpClass::COUNT];
         {
-            // lock order everywhere: allocator before rank state
-            let mut alloc_guard = match self.policy {
-                AllocPolicy::RankAware => Some(self.alloc.lock().unwrap()),
+            // lock order everywhere: device state before rank state
+            let mut dev_guard = match self.policy {
+                AllocPolicy::RankAware => Some(lock(&self.dev)),
                 AllocPolicy::Identity => None,
             };
-            let mut ranks = self.ranks.lock().unwrap();
+            if let Some(dev) = dev_guard.as_deref_mut() {
+                dev.cache.begin_dispatch();
+            }
+            let mut ranks = lock(&self.ranks);
             let mut dispatch_placed: Vec<(u64, usize)> = Vec::new();
             for (r, ixs) in parts.iter().enumerate() {
                 for &i in ixs {
@@ -704,9 +745,10 @@ impl Backend for PnmBackend {
                         items[i].meta,
                         &operands,
                         items[i].kinds,
+                        items[i].pool,
                         r,
                         &mut ranks[r],
-                        alloc_guard.as_deref_mut(),
+                        dev_guard.as_deref_mut(),
                         &mut dispatch_placed,
                     );
                     per_rank_cycles[r] += p.cycles;
@@ -715,10 +757,11 @@ impl Backend for PnmBackend {
                     total.absorb(&p, 1);
                 }
             }
-            // placements are transient per dispatch; the LIFO free lists
-            // hand the same extents back next time, so locality persists
-            if let Some(alloc) = alloc_guard.as_deref_mut() {
-                self.release(alloc, &dispatch_placed);
+            // placements are transient per dispatch (pinned extents
+            // aside); the LIFO free lists hand the same extents back
+            // next time, so locality persists
+            if let Some(dev) = dev_guard.as_deref_mut() {
+                self.release(dev, &dispatch_placed);
             }
         }
         self.accrue(
@@ -740,6 +783,115 @@ impl Backend for PnmBackend {
             .map(|s| s.unwrap_or_else(|| Err(Error::new("pnm: missing partition result"))))
             .collect()
     }
+}
+
+impl Backend for PnmBackend {
+    fn name(&self) -> &'static str {
+        "pnm"
+    }
+
+    fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[&[u64]]) -> Result<Vec<u64>> {
+        // a lone invocation is still one device dispatch
+        let nranks = self.cfg.ranks.max(1);
+        let operands: Vec<(u64, usize)> = inputs
+            .iter()
+            .map(|s| (s.as_ptr() as u64, s.len()))
+            .collect();
+        let mut placed: Vec<(u64, usize)> = Vec::new();
+        // lock order everywhere: device state before rank state
+        let (p, class, rank_id) = match self.policy {
+            AllocPolicy::Identity => {
+                let mut ranks = lock(&self.ranks);
+                let (p, c) =
+                    self.account(meta, &operands, &[], None, 0, &mut ranks[0], None, &mut placed);
+                (p, c, 0)
+            }
+            AllocPolicy::RankAware => {
+                let mut dev = lock(&self.dev);
+                dev.cache.begin_dispatch();
+                // no lowering pool on the singleton path: a transient
+                // least-loaded assignment (pinning a pointer-derived id
+                // would leak pins and alias reused heap addresses)
+                let est: u64 = operands.iter().map(|o| (o.1 * 8) as u64).sum();
+                let r = dev.alloc.rank_for_transient(est);
+                let mut ranks = lock(&self.ranks);
+                let (p, c) = self.account(
+                    meta,
+                    &operands,
+                    &[],
+                    None,
+                    r,
+                    &mut ranks[r],
+                    Some(&mut dev),
+                    &mut placed,
+                );
+                drop(ranks);
+                self.release(&mut dev, &placed);
+                (p, c, r)
+            }
+        };
+        let cycles = p.cycles;
+        let streamed = p.io_internal + p.io_bank;
+        let mut by_class = [0u64; OpClass::COUNT];
+        by_class[class.index()] = cycles;
+        let mut per_rank_cycles = vec![0u64; nranks];
+        per_rank_cycles[rank_id] = cycles;
+        let mut per_rank_bytes = vec![0u64; nranks];
+        per_rank_bytes[rank_id] = streamed;
+        self.accrue(&per_rank_cycles, &per_rank_bytes, p, by_class, 1);
+        self.inner.execute_u64(meta, inputs)
+    }
+
+    /// One device dispatch for the whole batch: partition across ranks by
+    /// operand pool (via [`PnmBackend::placement`]) and run the shared
+    /// dispatch body.
+    fn execute_batch(&self, items: &[BatchItem<'_>]) -> Vec<Result<Vec<u64>>> {
+        if items.is_empty() {
+            return Vec::new();
+        }
+        let placement = self.placement(items);
+        self.run_dispatch(items, &placement)
+    }
+
+    /// One device dispatch at the planner's previewed ranks: instead of
+    /// re-running the greedy assignment (which, with other segments
+    /// already charged, could land a mid-batch pool somewhere the
+    /// whole-batch preview did not), the dispatch takes `ranks`
+    /// verbatim and charges the allocator at those ranks — pool-tagged
+    /// groups pin where the preview put them, transient groups charge
+    /// their previewed rank. Preview == placement, exactly.
+    fn execute_batch_placed(
+        &self,
+        items: &[BatchItem<'_>],
+        ranks: &[usize],
+    ) -> Vec<Result<Vec<u64>>> {
+        if items.is_empty() {
+            return Vec::new();
+        }
+        if ranks.len() != items.len() {
+            // a malformed preview falls back to the self-placed path
+            return self.execute_batch(items);
+        }
+        let nranks = self.cfg.ranks.max(1);
+        let placement: Vec<usize> = ranks.iter().map(|&r| r.min(nranks - 1)).collect();
+        if matches!(self.policy, AllocPolicy::RankAware) {
+            let (order, est) = Self::pool_groups(items);
+            let mut first_rank: HashMap<u64, usize> = HashMap::new();
+            for (it, &r) in items.iter().zip(&placement) {
+                first_rank.entry(it.pool_key()).or_insert(r);
+            }
+            let mut dev = lock(&self.dev);
+            for &(p, pinned) in &order {
+                let r = first_rank[&p];
+                if pinned {
+                    dev.alloc.pin_pool(p, r, est[&p]);
+                } else {
+                    dev.alloc.charge(r, est[&p]);
+                }
+            }
+        }
+        self.run_dispatch(items, &placement)
+    }
 
     fn cost_trace(&self) -> Option<CostTrace> {
         Some(self.trace())
@@ -753,11 +905,30 @@ impl Backend for PnmBackend {
         Some(self.placement_preview(items))
     }
 
+    /// Live device snapshot for the planner's exact cost model — under
+    /// `RankAware` only (the `Identity` policy has no allocator state to
+    /// replay, so the planner keeps its fresh-state relative pricing).
+    fn plan_state(&self) -> Option<DeviceState> {
+        match self.policy {
+            AllocPolicy::Identity => None,
+            AllocPolicy::RankAware => {
+                // lock order everywhere: device state before rank state
+                let dev = lock(&self.dev);
+                let ranks = lock(&self.ranks);
+                Some(DeviceState {
+                    alloc: dev.alloc.clone(),
+                    ranks: ranks.clone(),
+                    cache: dev.cache.clone(),
+                })
+            }
+        }
+    }
+
     /// Fold the planner's counters into the cost trace: plans observed,
     /// residency splits, and the predicted row hits/misses the observed
     /// `row_hits`/`row_misses` deltas are compared against.
     fn note_plan(&self, plan: &DispatchPlan) {
-        let mut tr = self.trace.lock().unwrap();
+        let mut tr = lock(&self.trace);
         tr.plans += 1;
         tr.plan_splits += plan.splits();
         tr.predicted_row_hits += plan.predicted.row_hits;
@@ -1200,5 +1371,119 @@ mod tests {
             "re-dispatch must reuse the freed extents (no new row opens)"
         );
         assert!(t2.row_hits > t1.row_hits);
+    }
+
+    #[test]
+    fn poisoned_trace_mutex_does_not_stop_dispatch() {
+        // a panic while holding the trace guard poisons the mutex; the
+        // backend must recover the guard and keep dispatching (the
+        // regression the bare `.unwrap()`s used to fail)
+        let backend = Arc::new(PnmBackend::paper());
+        let b = backend.clone();
+        let worker = std::thread::spawn(move || {
+            let _g = b.trace.lock().unwrap();
+            panic!("poison the trace mid-write");
+        });
+        assert!(worker.join().is_err());
+        assert!(backend.trace.is_poisoned());
+        let rt = Runtime::from_parts(builtin_manifest(), Box::new(backend.clone()));
+        let outs = rt.execute_batch_u64(&routine2_invs(4, 11));
+        assert!(outs.iter().all(|r| r.is_ok()));
+        let tr = backend.trace();
+        assert_eq!(tr.dispatches, 1);
+        assert_eq!(tr.invocations, 4);
+    }
+
+    #[test]
+    fn returning_tenant_finds_key_rows_resident() {
+        // same key_id across two batches with the cache on: the first
+        // sight pins (a miss), the return streams from the pin (hits)
+        let backend = Arc::new(PnmBackend::with_policy_and_budget(
+            DimmConfig::paper(),
+            AllocPolicy::RankAware,
+            1 << 22,
+        ));
+        assert_eq!(backend.residency_budget(), 1 << 22);
+        let rt = Runtime::from_parts(builtin_manifest(), Box::new(backend.clone()));
+        let q = ntt_primes(31, 512, 1)[0];
+        let mut rng = Rng::seeded(51);
+        let key: Arc<Vec<u64>> = Arc::new((0..14 * 256).map(|_| rng.uniform(q)).collect());
+        let batch = |rng: &mut Rng| -> Vec<Invocation> {
+            (0..4)
+                .map(|_| {
+                    let data: Arc<Vec<u64>> =
+                        Arc::new((0..14 * 256).map(|_| rng.uniform(q)).collect());
+                    Invocation::new("routine2_n256", vec![data.clone(), key.clone(), data])
+                        .with_pool(3)
+                })
+                .collect()
+        };
+        for out in rt.execute_batch_u64(&batch(&mut rng)) {
+            out.unwrap();
+        }
+        let t1 = backend.trace();
+        assert_eq!(t1.cache_hits, 0, "first sight of the key is cold");
+        assert!(t1.cache_misses > 0);
+        assert!(t1.cache_pinned_bytes > 0, "the key must pin under budget");
+        for out in rt.execute_batch_u64(&batch(&mut rng)) {
+            out.unwrap();
+        }
+        let t2 = backend.trace();
+        assert!(t2.cache_hits > 0, "the returning key must hit the cache");
+        assert_eq!(t2.cache_evictions, 0);
+        let d = t2.delta_since(&t1);
+        assert_eq!(d.cache_hits, t2.cache_hits);
+        // the gauge reports the end-of-window value, not a difference
+        assert_eq!(d.cache_pinned_bytes, t2.cache_pinned_bytes);
+    }
+
+    #[test]
+    fn live_state_prediction_matches_realized_counters() {
+        // the acceptance equality: with the preview threaded into the
+        // dispatch and the planner pricing against the live snapshot,
+        // cumulative predicted row hits/misses equal the realized
+        // counters exactly — across batches, with the cache pinning and
+        // with pools first seen mid-batch
+        let mut dimm = DimmConfig::paper();
+        dimm.ranks = 2;
+        let backend = Arc::new(PnmBackend::with_policy_and_budget(
+            dimm,
+            AllocPolicy::RankAware,
+            1 << 22,
+        ));
+        let rt = Runtime::from_parts(builtin_manifest(), Box::new(backend.clone()))
+            .with_plan_policy(PlanPolicy::RowLocality);
+        let q = ntt_primes(31, 512, 1)[0];
+        let mut rng = Rng::seeded(53);
+        let mk = |rng: &mut Rng| -> Arc<Vec<u64>> {
+            Arc::new((0..14 * 256).map(|_| rng.uniform(q)).collect())
+        };
+        let keys: Vec<Arc<Vec<u64>>> = (0..4).map(|_| mk(&mut rng)).collect();
+        for round in 0usize..3 {
+            // round r uses pools 0..r+2: every later round introduces a
+            // pool the earlier preview never saw
+            let invs: Vec<Invocation> = (0..8)
+                .map(|i| {
+                    let pool = i % (round + 2);
+                    Invocation::new(
+                        "routine2_n256",
+                        vec![mk(&mut rng), keys[pool].clone(), mk(&mut rng)],
+                    )
+                    .with_pool(pool as u64)
+                })
+                .collect();
+            for out in rt.execute_batch_u64(&invs) {
+                out.unwrap();
+            }
+        }
+        let tr = backend.trace();
+        assert_eq!(tr.plans, 3);
+        assert!(tr.cache_hits > 0, "returning keys must hit");
+        assert!(tr.row_hits > 0);
+        assert_eq!(
+            tr.predicted_row_hits, tr.row_hits,
+            "prediction must be exact, not relative"
+        );
+        assert_eq!(tr.predicted_row_misses, tr.row_misses);
     }
 }

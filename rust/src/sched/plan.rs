@@ -27,19 +27,23 @@
 //!   (LIFO, address-stable) instead of stacking the skyline until
 //!   placement fails and operands degrade to identity addressing.
 //!
-//! Plan quality is judged by a **pure cost model** ([`predict`]): it
-//! replays a plan against a fresh [`RankAllocator`] and per-rank
-//! [`Rank`] row-buffer state — the same extent walk the pnm backend
-//! streams — and counts row hits/misses, so plans are testable without a
-//! backend and the planner can guarantee a [`PlanPolicy::RowLocality`]
-//! plan never predicts worse than the [`PlanPolicy::Fifo`] control (it
-//! falls back to the identity plan when the greedy loses).
+//! Plan quality is judged by a **pure cost model** ([`predict_from`]):
+//! it replays a plan against a [`DeviceState`] — allocator, per-rank
+//! row-buffer state and residency cache, cloned from the live backend at
+//! plan time — walking exactly the extent streams the pnm backend will,
+//! and counts row hits/misses. Predictions are therefore *exact*, not
+//! relative: the predicted counters of the plan the backend dispatches
+//! equal the realized counters. Plans stay testable without a backend
+//! through [`predict`], the fresh-state convenience wrapper, and the
+//! planner guarantees a [`PlanPolicy::RowLocality`] plan never predicts
+//! worse than the [`PlanPolicy::Fifo`] control (it falls back to the
+//! identity plan when the greedy loses).
 //!
 //! Policy selection threads through the same three-level precedence as
 //! the allocator's: `--plan-policy` > `APACHE_PLAN_POLICY` >
 //! `[system] plan_policy`.
 
-use crate::hw::alloc::{Geometry, OperandKind, RankAllocator};
+use crate::hw::alloc::{Geometry, OperandKind, RankAllocator, ResidencyCache};
 use crate::hw::dram::{DramTiming, Rank};
 use crate::util::error::{Error, Result};
 use std::collections::{HashMap, HashSet};
@@ -91,6 +95,11 @@ pub struct PlanItem {
     /// per-operand placement digest: (identity key, residency class,
     /// bytes) — the inputs `RankAllocator::place` decides by
     pub operands: Vec<(u64, OperandKind, u64)>,
+    /// whether `pool` is a lowering-stamped §V-B cluster id (true) or
+    /// the backend's operand-identity fallback (false) — only stamped
+    /// pools are eligible for residency-cache pins, and the cost model
+    /// must mirror that eligibility exactly
+    pub stamped: bool,
 }
 
 impl PlanItem {
@@ -171,57 +180,115 @@ impl DispatchPlan {
     }
 }
 
-/// Pure cost model: replay `segments` over `items` against a fresh
-/// allocator and per-rank row-buffer state, counting row hits/misses.
+/// The device state a plan is priced against: the rank allocator, the
+/// per-rank DRAM row-buffer state, and the cross-batch residency cache.
+/// The pnm backend snapshots its live state into one of these at plan
+/// time (`Backend::plan_state`), so [`predict_from`] replays against
+/// exactly the state the dispatch will mutate — including open rows and
+/// pinned key material left behind by earlier batches.
+#[derive(Clone)]
+pub struct DeviceState {
+    pub alloc: RankAllocator,
+    pub ranks: Vec<Rank>,
+    pub cache: ResidencyCache,
+}
+
+impl DeviceState {
+    /// Empty device state (cold ranks, cache off) — the fresh baseline
+    /// [`predict`] uses when no backend snapshot is available.
+    pub fn fresh(geo: &Geometry) -> Self {
+        DeviceState {
+            alloc: RankAllocator::new(*geo),
+            ranks: vec![Rank::new(geo.banks, geo.row_bytes); geo.ranks],
+            cache: ResidencyCache::new(0),
+        }
+    }
+}
+
+fn rank_counters(ranks: &[Rank]) -> (u64, u64) {
+    ranks.iter().fold((0u64, 0u64), |(h, m), r| {
+        let (rh, rm) = r.counters();
+        (h + rh, m + rm)
+    })
+}
+
+/// Exact cost model: replay `segments` over `items` against a clone of
+/// `state`, counting the row hits/misses the replay adds.
 ///
-/// The replay mirrors the pnm backend's dispatch loop exactly: operands
-/// place idempotently while a segment is live (a shared buffer streams
-/// the same extent and earns hits), each extent streams its `(bank, row)`
-/// slot walk through [`Rank::stream_slots`], a placement failure degrades
-/// to identity addressing for that operand, and a segment boundary
-/// releases every placement in reverse order (the backend's LIFO
-/// address-stable free). It starts from empty device state, so it
-/// predicts the *relative* quality of orderings, not the absolute
-/// counters of a backend with prior batches behind it — `CostTrace`
-/// records predicted next to observed so the drift stays visible.
-pub fn predict(geo: &Geometry, items: &[PlanItem], segments: &[Vec<usize>]) -> PlanCost {
-    let mut alloc = RankAllocator::new(*geo);
-    let mut ranks: Vec<Rank> = vec![Rank::new(geo.banks, geo.row_bytes); geo.ranks];
+/// The replay mirrors the pnm backend's dispatch loop *exactly*: each
+/// segment is one device dispatch iterating its items rank by rank (the
+/// backend's per-rank partitions), operands place idempotently while
+/// live (a shared buffer streams the same extent and earns hits), each
+/// extent streams its `(bank, row)` slot walk through
+/// [`Rank::stream_slots`], a placement failure degrades to identity
+/// addressing for that operand, the residency cache pins/evicts in
+/// stream order, and the segment boundary releases every non-pinned
+/// placement in reverse order (the backend's LIFO address-stable free).
+/// Given the backend's live snapshot, predicted counters equal the
+/// realized dispatch counters — `CostTrace` records both so the equality
+/// is checkable.
+pub fn predict_from(state: &DeviceState, items: &[PlanItem], segments: &[Vec<usize>]) -> PlanCost {
+    let mut st = state.clone();
+    let geo = *st.alloc.geometry();
     // timing only shapes latency; the hit/miss counters this model reads
     // are timing-independent
     let t = DramTiming::ddr4_3200();
+    // cloned ranks carry the backend's cumulative counters: the
+    // prediction is the delta this replay adds
+    let before = rank_counters(&st.ranks);
     for seg in segments {
+        st.cache.begin_dispatch();
+        let mut parts: Vec<Vec<usize>> = vec![Vec::new(); geo.ranks];
+        for &ix in seg {
+            parts[items[ix].rank.min(geo.ranks - 1)].push(ix);
+        }
         let mut placed: Vec<(u64, usize)> = Vec::new();
         let mut seen: HashSet<(u64, usize)> = HashSet::new();
-        for &ix in seg {
-            let it = &items[ix];
-            let rank = it.rank.min(geo.ranks - 1);
-            for &(key, kind, bytes) in &it.operands {
-                match alloc.place(key, rank, kind, bytes) {
-                    Ok(ext) => {
-                        ranks[rank].stream_slots(ext.slot_iter(), bytes, &t);
-                        if seen.insert((key, rank)) {
-                            placed.push((key, rank));
+        for (rank, ixs) in parts.iter().enumerate() {
+            for &ix in ixs {
+                let it = &items[ix];
+                for &(key, kind, bytes) in &it.operands {
+                    match st.alloc.place(key, rank, kind, bytes) {
+                        Ok(ext) => {
+                            st.ranks[rank].stream_slots(ext.slot_iter(), bytes, &t);
+                            st.cache.note_stream(
+                                it.stamped.then_some(it.pool),
+                                key,
+                                rank,
+                                kind,
+                                bytes,
+                                &mut st.alloc,
+                            );
+                            if seen.insert((key, rank)) {
+                                placed.push((key, rank));
+                            }
                         }
-                    }
-                    Err(_) => {
-                        ranks[rank].stream(key, bytes, &t);
+                        Err(_) => {
+                            st.ranks[rank].stream(key, bytes, &t);
+                        }
                     }
                 }
             }
         }
         for &(key, rank) in placed.iter().rev() {
-            alloc.free(key, rank);
+            if !st.cache.contains(key, rank) {
+                st.alloc.free(key, rank);
+            }
         }
     }
-    let (row_hits, row_misses) = ranks.iter().fold((0u64, 0u64), |(h, m), r| {
-        let (rh, rm) = r.counters();
-        (h + rh, m + rm)
-    });
+    let after = rank_counters(&st.ranks);
     PlanCost {
-        row_hits,
-        row_misses,
+        row_hits: after.0 - before.0,
+        row_misses: after.1 - before.1,
     }
+}
+
+/// Fresh-state cost model: [`predict_from`] on [`DeviceState::fresh`].
+/// Without a live snapshot it predicts the *relative* quality of
+/// orderings, not the absolute counters of a backend with prior batches
+/// behind it.
+pub fn predict(geo: &Geometry, items: &[PlanItem], segments: &[Vec<usize>]) -> PlanCost {
+    predict_from(&DeviceState::fresh(geo), items, segments)
 }
 
 /// The dispatch planner: one policy, one geometry, pure `plan` calls.
@@ -239,26 +306,48 @@ impl Planner {
         self.policy
     }
 
+    /// Plan a batch against fresh device state — [`Self::plan_with`]
+    /// without a backend snapshot.
+    pub fn plan(&self, items: &[PlanItem]) -> DispatchPlan {
+        self.plan_with(items, None)
+    }
+
     /// Plan a batch. `Fifo` returns the identity plan without touching
     /// the cost model; `RowLocality` builds the reordered/split candidate,
-    /// prices it and the control with [`predict`], and keeps whichever
-    /// predicts fewer row misses — the planner can reorder, never regress.
-    /// Deterministic: identical items produce identical plans.
-    pub fn plan(&self, items: &[PlanItem]) -> DispatchPlan {
+    /// prices it and the control with [`predict_from`] against `state`
+    /// (the backend's live snapshot, or fresh state when `None`), and
+    /// keeps whichever predicts fewer row misses — the planner can
+    /// reorder, never regress. Deterministic: identical items and state
+    /// produce identical plans.
+    pub fn plan_with(&self, items: &[PlanItem], state: Option<&DeviceState>) -> DispatchPlan {
+        let fresh;
+        let state = match state {
+            Some(s) => s,
+            None => {
+                fresh = DeviceState::fresh(&self.geo);
+                &fresh
+            }
+        };
         match self.policy {
             PlanPolicy::Fifo => DispatchPlan::fifo(items.len()),
             PlanPolicy::RowLocality => {
                 if items.len() < 2 {
+                    // nothing to reorder, but the prediction still runs
+                    // so a planned singleton keeps predicted == realized
+                    let base = DispatchPlan::fifo(items.len());
+                    let predicted = predict_from(state, items, &base.segments);
                     return DispatchPlan {
                         policy: PlanPolicy::RowLocality,
-                        ..DispatchPlan::fifo(items.len())
+                        predicted,
+                        predicted_fifo: predicted,
+                        ..base
                     };
                 }
                 let order = self.row_affinity_order(items);
                 let segments = self.split(items, &order);
-                let predicted = predict(&self.geo, items, &segments);
+                let predicted = predict_from(state, items, &segments);
                 let fifo_segments = vec![(0..items.len()).collect::<Vec<_>>()];
-                let predicted_fifo = predict(&self.geo, items, &fifo_segments);
+                let predicted_fifo = predict_from(state, items, &fifo_segments);
                 if predicted.row_misses > predicted_fifo.row_misses {
                     // the greedy lost to the control on this batch: ship
                     // the identity plan (labelled, so the trace still
@@ -449,6 +538,7 @@ mod tests {
                         (pool * 100 + 1, OperandKind::Data, 14 * ROW_BYTES),
                         (pool * 100 + 2, OperandKind::Evk, 14 * ROW_BYTES),
                     ],
+                    stamped: true,
                 }
             })
             .collect()
@@ -537,6 +627,7 @@ mod tests {
                 pool: 0,
                 rank: 0,
                 operands: vec![(1000 + i as u64, OperandKind::Data, g.residency_budget() / 2)],
+                stamped: true,
             })
             .collect();
         let plan = Planner::new(PlanPolicy::RowLocality, g).plan(&items);
@@ -559,6 +650,7 @@ mod tests {
                 pool: 0,
                 rank: 0,
                 operands: vec![(7, OperandKind::Data, 4 * ROW_BYTES)],
+                stamped: true,
             })
             .collect();
         let cost = predict(&g, &items, &[vec![0, 1]]);
@@ -566,6 +658,26 @@ mod tests {
         assert_eq!(cost.row_hits, 4, "the second stream re-opens nothing");
         assert!((cost.hit_rate() - 0.5).abs() < 1e-12);
         assert_eq!(PlanCost::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn live_state_prediction_counts_only_the_delta() {
+        let g = geo();
+        let items = interleaved(2);
+        let segs = vec![(0..4).collect::<Vec<_>>()];
+        let fresh = predict(&g, &items, &segs);
+        assert!(fresh.row_hits + fresh.row_misses > 0);
+        // a state whose ranks already saw traffic: the replay walks the
+        // same slots, so the total accesses predicted must be the delta
+        // this plan adds — never the warmup's cumulative counters
+        let mut st = DeviceState::fresh(&g);
+        let t = DramTiming::ddr4_3200();
+        st.ranks[0].stream(99, 4 * ROW_BYTES, &t);
+        let warm = predict_from(&st, &items, &segs);
+        assert_eq!(
+            warm.row_hits + warm.row_misses,
+            fresh.row_hits + fresh.row_misses
+        );
     }
 
     #[test]

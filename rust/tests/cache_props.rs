@@ -1,0 +1,202 @@
+//! Property tests for the cross-batch residency cache
+//! (`hw::alloc::ResidencyCache`): the invariants the pnm backend's
+//! cross-batch dispatch path leans on.
+//!
+//! * the pinned footprint never exceeds the byte budget, at any point of
+//!   any dispatch;
+//! * pinned extents stay coherent with the allocator — they remain live,
+//!   fit the geometry, and never overlap a batch's transient extents;
+//! * eviction is deterministic: identical dispatch scripts replayed on a
+//!   fresh device produce identical extents, counters and survivors;
+//! * budget 0 is inert: the cache-threaded dispatch loop is bit- and
+//!   address-identical to a cache-free allocate/free-per-batch loop.
+
+use apache_fhe::hw::alloc::{
+    Extent, Geometry, OperandKind, RankAllocator, ResidencyCache, ROW_BYTES,
+};
+use apache_fhe::hw::DimmConfig;
+use apache_fhe::math::sampler::Rng;
+use apache_fhe::util::proptest_lite::{run_prop, GenExt};
+
+fn geo() -> Geometry {
+    Geometry::of(&DimmConfig::paper())
+}
+
+/// One operand stream the way the backend sees it mid-dispatch.
+#[derive(Debug, Clone, Copy)]
+struct Op {
+    key: u64,
+    pool: u64,
+    kind: OperandKind,
+    bytes: u64,
+}
+
+/// A multi-dispatch script: operands are drawn from a per-pool universe
+/// of shared keys, and an operand's kind and size are functions of its
+/// key — a key means the same bytes everywhere, like a real buffer.
+fn rand_script(rng: &mut Rng, n_dispatches: usize) -> Vec<Vec<Op>> {
+    let pools = 1 + rng.uniform(6);
+    (0..n_dispatches)
+        .map(|_| {
+            let n = 1 + rng.uniform(12) as usize;
+            (0..n)
+                .map(|_| {
+                    let pool = rng.uniform(pools);
+                    let key = pool * 1000 + rng.uniform(8);
+                    let mut krng = Rng::seeded(0xCAFE ^ key);
+                    let kind = match krng.uniform(4) {
+                        0 => OperandKind::Data,
+                        1 => OperandKind::Evk,
+                        2 => OperandKind::Twiddle,
+                        _ => OperandKind::Stream,
+                    };
+                    let bytes = krng.gen_range(8, 20 * ROW_BYTES);
+                    Op {
+                        key,
+                        pool,
+                        kind,
+                        bytes,
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Replay a script through the same loop the pnm backend runs per
+/// dispatch: clock tick, place + note every stream, then release the
+/// batch's transients — skipping whatever the cache pinned. `check` runs
+/// at the peak of every dispatch (everything placed, nothing released).
+fn run(
+    script: &[Vec<Op>],
+    geo: Geometry,
+    budget: u64,
+    mut check: impl FnMut(&RankAllocator, &ResidencyCache),
+) -> (Vec<Extent>, RankAllocator, ResidencyCache) {
+    let mut alloc = RankAllocator::new(geo);
+    let mut cache = ResidencyCache::new(budget);
+    let mut produced = Vec::new();
+    for ops in script {
+        cache.begin_dispatch();
+        let mut placed: Vec<(u64, usize)> = Vec::new();
+        for op in ops {
+            let rank = alloc.rank_for_pool(op.pool, op.bytes);
+            let ext = alloc.place(op.key, rank, op.kind, op.bytes).expect("fits");
+            produced.push(ext);
+            cache.note_stream(Some(op.pool), op.key, rank, op.kind, op.bytes, &mut alloc);
+            if !placed.contains(&(op.key, rank)) {
+                placed.push((op.key, rank));
+            }
+        }
+        check(&alloc, &cache);
+        for &(key, rank) in placed.iter().rev() {
+            if !cache.contains(key, rank) {
+                alloc.free(key, rank);
+            }
+        }
+    }
+    (produced, alloc, cache)
+}
+
+#[test]
+fn pinned_bytes_never_exceed_the_budget() {
+    let geo = geo();
+    run_prop("cache-budget", 24, |rng, _| {
+        let budget = rng.gen_range(1, 64 * ROW_BYTES);
+        let script = rand_script(rng, 6);
+        let (_, _, cache) = run(&script, geo, budget, |_, cache| {
+            assert!(
+                cache.pinned_bytes() <= budget,
+                "pinned {} exceeds budget {budget}",
+                cache.pinned_bytes()
+            );
+        });
+        assert!(cache.pinned_bytes() <= budget);
+    });
+}
+
+#[test]
+fn pinned_extents_stay_coherent_with_the_allocator() {
+    // what survives a batch is exactly what the cache pinned, and it
+    // shares no DRAM cells with the next batch's transients: at every
+    // dispatch peak all live extents fit the geometry and are pairwise
+    // disjoint, and between dispatches the live set is the pinned set
+    let geo = geo();
+    run_prop("cache-coherent", 24, |rng, _| {
+        let budget = rng.gen_range(ROW_BYTES, 128 * ROW_BYTES);
+        let script = rand_script(rng, 6);
+        let (_, alloc, cache) = run(&script, geo, budget, |alloc, cache| {
+            let live = alloc.live_extents();
+            for e in &live {
+                assert!(e.fits(&geo), "extent out of geometry: {e:?}");
+            }
+            for (i, a) in live.iter().enumerate() {
+                for b in &live[i + 1..] {
+                    assert!(!a.overlaps(b), "pinned/batch extents collide: {a:?} vs {b:?}");
+                }
+            }
+            assert!(
+                cache.pinned_len() <= alloc.live_len(),
+                "cache pins something the allocator does not hold"
+            );
+        });
+        // after the last release pass only pinned extents remain live
+        assert_eq!(alloc.live_len(), cache.pinned_len());
+    });
+}
+
+#[test]
+fn eviction_is_deterministic_across_identical_runs() {
+    let geo = geo();
+    run_prop("cache-deterministic", 24, |rng, _| {
+        // a budget tight enough that most runs evict
+        let budget = rng.gen_range(4 * ROW_BYTES, 40 * ROW_BYTES);
+        let script = rand_script(rng, 8);
+        let (ea, aa, ca) = run(&script, geo, budget, |_, _| {});
+        let (eb, ab, cb) = run(&script, geo, budget, |_, _| {});
+        assert_eq!(ea, eb, "identical scripts must place identically");
+        assert_eq!(ca.hits(), cb.hits());
+        assert_eq!(ca.misses(), cb.misses());
+        assert_eq!(ca.evictions(), cb.evictions());
+        assert_eq!(ca.pinned_bytes(), cb.pinned_bytes());
+        assert_eq!(ca.pinned_len(), cb.pinned_len());
+        let mut la = aa.live_extents();
+        let mut lb = ab.live_extents();
+        la.sort_by_key(|e| (e.rank, e.bank0, e.slot, e.col));
+        lb.sort_by_key(|e| (e.rank, e.bank0, e.slot, e.col));
+        assert_eq!(la, lb, "identical scripts must leave identical survivors");
+    });
+}
+
+#[test]
+fn zero_budget_is_bit_identical_to_the_cache_free_loop() {
+    let geo = geo();
+    run_prop("cache-zero-budget", 24, |rng, _| {
+        let script = rand_script(rng, 6);
+        let (cached, alloc, cache) = run(&script, geo, 0, |_, _| {});
+        // control: the pre-cache dispatch loop — allocate, free everything
+        let mut ctrl = RankAllocator::new(geo);
+        let mut expected = Vec::new();
+        for ops in &script {
+            let mut placed: Vec<(u64, usize)> = Vec::new();
+            for op in ops {
+                let rank = ctrl.rank_for_pool(op.pool, op.bytes);
+                expected.push(ctrl.place(op.key, rank, op.kind, op.bytes).expect("fits"));
+                if !placed.contains(&(op.key, rank)) {
+                    placed.push((op.key, rank));
+                }
+            }
+            for &(key, rank) in placed.iter().rev() {
+                ctrl.free(key, rank);
+            }
+        }
+        assert_eq!(
+            cached, expected,
+            "budget 0 must reproduce per-batch placement address-for-address"
+        );
+        assert_eq!(alloc.live_len(), 0, "budget 0 must pin nothing");
+        assert_eq!(cache.pinned_len(), 0);
+        assert_eq!(cache.hits() + cache.misses() + cache.evictions(), 0);
+        assert_eq!(cache.pinned_bytes(), 0);
+    });
+}

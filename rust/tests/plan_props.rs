@@ -55,6 +55,7 @@ fn rand_items(rng: &mut Rng, geo: &Geometry, n: usize) -> Vec<PlanItem> {
                 pool,
                 rank,
                 operands,
+                stamped: true,
             }
         })
         .collect()

@@ -6,11 +6,15 @@
 //!
 //! The `APACHE_BACKEND` environment variable swaps the backend under
 //! test (`reference` | `pnm`), `APACHE_ALLOC_POLICY` the operand
-//! placement policy (`rank_aware` | `identity`) and `APACHE_PLAN_POLICY`
-//! the dispatch-planning policy (`row_locality` | `fifo`) — the CI
-//! matrix runs this suite once per (backend, policy, plan) leg, so every
-//! assertion below doubles as a bit-identity check on the near-memory
-//! device model under both placement models and both dispatch planners.
+//! placement policy (`rank_aware` | `identity`), `APACHE_PLAN_POLICY`
+//! the dispatch-planning policy (`row_locality` | `fifo`) and
+//! `APACHE_RESIDENCY_BUDGET` the cross-batch residency budget in bytes
+//! (0 = per-batch allocation) — the CI matrix runs this suite once per
+//! configuration leg, so every assertion below doubles as a bit-identity
+//! check on the near-memory device model under both placement models,
+//! both dispatch planners, and the cache-enabled configuration.
+
+use std::sync::Arc;
 
 use apache_fhe::hw::{AllocPolicy, DimmConfig};
 use apache_fhe::math::automorph::galois_eval_map;
@@ -18,7 +22,9 @@ use apache_fhe::math::modops::ntt_primes;
 use apache_fhe::math::ntt::NttTable;
 use apache_fhe::math::sampler::Rng;
 use apache_fhe::params::{CkksParams, TfheParams};
-use apache_fhe::runtime::{ArtifactMeta, Invocation, PlanPolicy, Runtime};
+use apache_fhe::runtime::{
+    builtin_manifest, ArtifactMeta, BatchItem, Invocation, PlanPolicy, PnmBackend, Runtime,
+};
 use apache_fhe::sched::lowering::Lowerer;
 use apache_fhe::sched::oplevel::OpShapes;
 
@@ -43,16 +49,28 @@ fn env_plan() -> PlanPolicy {
     }
 }
 
+/// The residency budget named by `APACHE_RESIDENCY_BUDGET` (bytes), else
+/// 0 — the per-batch default every pre-cache leg ran under.
+fn env_budget() -> u64 {
+    match Runtime::env_residency_budget() {
+        Some(raw) => raw
+            .parse()
+            .expect("APACHE_RESIDENCY_BUDGET must be a byte count"),
+        None => 0,
+    }
+}
+
 /// The backend named by `APACHE_BACKEND` when set; otherwise on-disk
 /// artifacts when built with `--features pjrt` after `make artifacts`,
 /// and the hermetic reference runtime in every other case. Never skips.
 fn runtime() -> Runtime {
     if let Some(name) = Runtime::env_backend() {
-        return Runtime::for_backend_with_policies(
+        return Runtime::for_backend_configured(
             &name,
             &DimmConfig::paper(),
             env_policy(),
             env_plan(),
+            env_budget(),
         )
         .expect("APACHE_BACKEND must name a known backend");
     }
@@ -758,4 +776,189 @@ fn pnm_per_slot_error_isolation() {
     let tr = pnm.cost_trace().unwrap();
     assert_eq!(tr.dispatches, 1);
     assert_eq!(tr.invocations, 2, "invalid items never reach the device");
+}
+
+#[test]
+fn placement_preview_is_exact_across_policies_and_shapes() {
+    // `placement_preview` is a contract, not advisory: for a
+    // lowering-stamped batch the ranks it answers before a dispatch must
+    // be the ranks the dispatch realizes — under both plan policies, at
+    // both dispatch granularities, and for pools first seen mid-batch.
+    // Replaying the preview after the dispatch answers every pool from
+    // the allocator's realized pins, so preview == replay is exactly
+    // "predicted placement == realized placement".
+    let reference = Runtime::reference();
+    let invs = serving_mix_invocations(&reference);
+    assert!(invs.len() > 100, "the mix must be a real batch");
+    assert!(
+        invs.iter().all(|inv| inv.pool.is_some()),
+        "the exactness contract covers lowering-stamped batches"
+    );
+    for plan in [PlanPolicy::Fifo, PlanPolicy::RowLocality] {
+        for chunk in [invs.len(), 48usize] {
+            let backend = Arc::new(PnmBackend::with_policy_and_budget(
+                crossval_dimm(),
+                AllocPolicy::RankAware,
+                4 << 20,
+            ));
+            let rt = Runtime::from_parts(builtin_manifest(), Box::new(backend.clone()))
+                .with_plan_policy(plan);
+            for piece in invs.chunks(chunk) {
+                let items: Vec<BatchItem<'_>> = piece
+                    .iter()
+                    .map(|inv| BatchItem {
+                        meta: &rt.manifest[&inv.artifact],
+                        inputs: &inv.inputs,
+                        pool: inv.pool,
+                        kinds: &inv.kinds,
+                    })
+                    .collect();
+                let preview = backend.placement_preview(&items);
+                let outs = rt.execute_batch_u64(piece);
+                for (inv, o) in piece.iter().zip(&outs) {
+                    assert!(o.is_ok(), "{}: {:?}", inv.artifact, o.as_ref().err());
+                }
+                let replay = backend.placement_preview(&items);
+                assert_eq!(
+                    preview,
+                    replay,
+                    "preview must match realized placement ({} plan, chunk {chunk})",
+                    plan.name()
+                );
+            }
+        }
+    }
+}
+
+/// A 2-rank DIMM for the residency gate: six tenants on two ranks force
+/// every rank to host several key clusters, so whether a returning
+/// tenant's key rows are still resident is visible in the row-buffer
+/// counters instead of being hidden by rank isolation.
+fn residency_dimm() -> DimmConfig {
+    let mut dimm = DimmConfig::paper();
+    dimm.ranks = 2;
+    dimm
+}
+
+#[test]
+fn repeated_tenant_mix_wins_row_hits_only_with_the_residency_cache() {
+    // the acceptance gate of the cross-batch residency cache: a serving
+    // mix that replays the same key ids across batches must (a) stay
+    // bit-identical to the reference backend with the cache on and off,
+    // (b) earn a strictly higher DRAM row-hit rate than the budget-0
+    // baseline with real cache traffic and no evictions, and (c) keep
+    // the planner's live-state row prediction exact in both
+    // configurations. Tenant arrival order alternates between rounds —
+    // the serving pattern per-batch allocation is worst at: the LIFO
+    // free lists hand every tenant a different extent each round, while
+    // pinned key rows stay put and stay open.
+    let reference = Runtime::reference();
+    let dimm = residency_dimm();
+    let cold = Runtime::for_backend_configured(
+        "pnm",
+        &dimm,
+        AllocPolicy::RankAware,
+        PlanPolicy::RowLocality,
+        0,
+    )
+    .unwrap();
+    let cached = Runtime::for_backend_configured(
+        "pnm",
+        &dimm,
+        AllocPolicy::RankAware,
+        PlanPolicy::RowLocality,
+        8 << 20,
+    )
+    .unwrap();
+    let meta = &reference.manifest["routine2_n256"];
+    let len: usize = meta.shapes[0].iter().product();
+    let q = meta.modulus;
+    let mut rng = Rng::seeded(77);
+    let mut gen = || Arc::new((0..len).map(|_| rng.uniform(q)).collect::<Vec<u64>>());
+    let tenants: usize = 6;
+    // per-tenant evk operands, shared across all rounds — the returning
+    // key ids the cache is supposed to keep resident
+    let evks: Vec<Arc<Vec<u64>>> = (0..tenants).map(|_| gen()).collect();
+    // all rounds built up front so every operand stays alive (distinct
+    // identity) for the whole serving session
+    let rounds: Vec<Vec<Invocation>> = (0..8)
+        .map(|round| {
+            let order: Vec<usize> = if round % 2 == 0 {
+                (0..tenants).collect()
+            } else {
+                (0..tenants).rev().collect()
+            };
+            order
+                .into_iter()
+                .map(|t| {
+                    Invocation::new("routine2_n256", vec![gen(), evks[t].clone(), gen()])
+                        .with_pool(t as u64)
+                })
+                .collect()
+        })
+        .collect();
+    for (round, invs) in rounds.iter().enumerate() {
+        let ref_outs = reference.execute_batch_u64(invs);
+        let cold_outs = cold.execute_batch_u64(invs);
+        let hot_outs = cached.execute_batch_u64(invs);
+        for (((inv, r), c), h) in invs.iter().zip(&ref_outs).zip(&cold_outs).zip(&hot_outs) {
+            let r = r
+                .as_ref()
+                .unwrap_or_else(|e| panic!("{}: reference round {round}: {e}", inv.artifact));
+            let c = c
+                .as_ref()
+                .unwrap_or_else(|e| panic!("{}: budget 0 round {round}: {e}", inv.artifact));
+            let h = h
+                .as_ref()
+                .unwrap_or_else(|e| panic!("{}: cached round {round}: {e}", inv.artifact));
+            assert_eq!(r, c, "{}: budget 0 diverged in round {round}", inv.artifact);
+            assert_eq!(r, h, "{}: cached diverged in round {round}", inv.artifact);
+        }
+    }
+    let tc = cold.cost_trace().unwrap();
+    let th = cached.cost_trace().unwrap();
+    // same mix, same operand sizes: the stream counts agree, so the
+    // rate comparison below is a pure hit-count comparison
+    assert_eq!(
+        th.row_hits + th.row_misses,
+        tc.row_hits + tc.row_misses,
+        "both configurations stream the same operands"
+    );
+    // budget 0 is inert end to end
+    assert_eq!(tc.cache_hits, 0);
+    assert_eq!(tc.cache_misses, 0);
+    assert_eq!(tc.cache_evictions, 0);
+    assert_eq!(tc.cache_pinned_bytes, 0);
+    // the cache saw real traffic: one cold pin per tenant key, every
+    // later round a hit, nothing evicted under an ample budget
+    assert!(
+        th.cache_hits > 0,
+        "returning tenants must hit the residency cache"
+    );
+    assert_eq!(th.cache_misses, tenants as u64, "one cold pin per tenant key");
+    assert_eq!(th.cache_evictions, 0, "the budget holds every tenant");
+    assert_eq!(
+        th.cache_pinned_bytes,
+        (tenants * len * 8) as u64,
+        "every tenant's key rows stay pinned"
+    );
+    assert!(
+        th.row_hit_rate() > tc.row_hit_rate(),
+        "returning tenants must find their key rows resident: cached {:.4} vs budget 0 {:.4}",
+        th.row_hit_rate(),
+        tc.row_hit_rate()
+    );
+    // the planner prices every batch against live device state, cache
+    // included — its row prediction must match the realized dispatch
+    // exactly, in both configurations
+    for (name, t) in [("budget 0", &tc), ("cached", &th)] {
+        assert_eq!(
+            t.predicted_row_hits, t.row_hits,
+            "{name}: predicted row hits must match realized"
+        );
+        assert_eq!(
+            t.predicted_row_misses, t.row_misses,
+            "{name}: predicted row misses must match realized"
+        );
+    }
 }
