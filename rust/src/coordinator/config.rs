@@ -41,7 +41,67 @@ pub struct ApacheConfig {
     /// Same precedence chain: `--residency-budget` >
     /// `APACHE_RESIDENCY_BUDGET` > this config key.
     pub residency_budget_bytes: u64,
+    /// serving-tier shard count: per-shard bounded queues, each with its
+    /// own runtime instance and worker pair (`coordinator::shard`).
+    /// Same precedence chain as every other knob: `--shards` >
+    /// `APACHE_SHARDS` > this config key.
+    pub shards: usize,
+    /// bounded depth of each shard queue; a full queue rejects new
+    /// admissions instead of buffering without bound. Same precedence
+    /// chain: `--queue-depth` > `APACHE_QUEUE_DEPTH` > this config key.
+    pub queue_depth: usize,
     pub worker_threads: usize,
+}
+
+/// Validation shared by the config file, the CLI and the environment:
+/// one shard minimum, and a ceiling far above any sane deployment so an
+/// absurd value (fat-fingered byte count, negative wraparound) is
+/// rejected at parse time instead of spawning a million worker threads.
+pub const MAX_SHARDS: usize = 256;
+/// Queue-depth ceiling, same rationale: bounded queues are the point.
+pub const MAX_QUEUE_DEPTH: usize = 1 << 20;
+
+fn validate_shards(raw: i64, what: &str) -> Result<usize> {
+    if raw < 1 || raw > MAX_SHARDS as i64 {
+        return Err(Error::new(format!(
+            "{what} must be in 1..={MAX_SHARDS}, got {raw}"
+        )));
+    }
+    Ok(raw as usize)
+}
+
+fn validate_queue_depth(raw: i64, what: &str) -> Result<usize> {
+    if raw < 1 || raw > MAX_QUEUE_DEPTH as i64 {
+        return Err(Error::new(format!(
+            "{what} must be in 1..={MAX_QUEUE_DEPTH}, got {raw}"
+        )));
+    }
+    Ok(raw as usize)
+}
+
+fn resolve_knob(
+    cli: Option<&str>,
+    env: Option<String>,
+    cfg: usize,
+    names: (&str, &str),
+    validate: fn(i64, &str) -> Result<usize>,
+) -> Result<usize> {
+    // CLI > env > config — the same precedence rule as --backend /
+    // --alloc-policy / --plan-policy / --residency-budget. A pure
+    // function of its inputs so the order itself is unit-testable
+    // without mutating process-global environment state.
+    let (cli_name, env_name) = names;
+    let parse = |raw: &str, what: &str| -> Result<usize> {
+        let n: i64 = raw
+            .parse()
+            .map_err(|_| Error::new(format!("{what} must be an integer, got `{raw}`")))?;
+        validate(n, what)
+    };
+    match (cli, env) {
+        (Some(raw), _) => parse(raw, cli_name),
+        (None, Some(raw)) => parse(&raw, env_name),
+        (None, None) => Ok(cfg),
+    }
 }
 
 impl Default for ApacheConfig {
@@ -56,6 +116,8 @@ impl Default for ApacheConfig {
             alloc_policy: AllocPolicy::RankAware.name().into(),
             plan_policy: PlanPolicy::RowLocality.name().into(),
             residency_budget_bytes: 64 << 20,
+            shards: 2,
+            queue_depth: 64,
             worker_threads: 2,
         }
     }
@@ -106,6 +168,14 @@ impl ApacheConfig {
                 }
                 raw as u64
             },
+            shards: validate_shards(
+                doc.get_int("system", "shards", def.shards as i64),
+                "system.shards",
+            )?,
+            queue_depth: validate_queue_depth(
+                doc.get_int("system", "queue_depth", def.queue_depth as i64),
+                "system.queue_depth",
+            )?,
             worker_threads: doc.get_int("system", "worker_threads", def.worker_threads as i64)
                 as usize,
         };
@@ -127,6 +197,50 @@ impl ApacheConfig {
 
     pub fn from_file(path: &str) -> Result<Self> {
         Self::from_toml(&std::fs::read_to_string(path)?)
+    }
+
+    /// Shard-count override from `APACHE_SHARDS`. `None` when unset or
+    /// empty; validated by [`ApacheConfig::resolve_shards`] at the point
+    /// of use.
+    pub fn env_shards() -> Option<String> {
+        std::env::var("APACHE_SHARDS").ok().filter(|s| !s.is_empty())
+    }
+
+    /// Queue-depth override from `APACHE_QUEUE_DEPTH`. `None` when unset
+    /// or empty; validated by [`ApacheConfig::resolve_queue_depth`].
+    pub fn env_queue_depth() -> Option<String> {
+        std::env::var("APACHE_QUEUE_DEPTH")
+            .ok()
+            .filter(|s| !s.is_empty())
+    }
+
+    /// Resolve the serving-tier shard count through the standard
+    /// precedence chain — `--shards` (CLI) > `APACHE_SHARDS` (env) > the
+    /// `[system] shards` config key — validating whichever source wins.
+    pub fn resolve_shards(cli: Option<&str>, env: Option<String>, cfg: usize) -> Result<usize> {
+        resolve_knob(
+            cli,
+            env,
+            cfg,
+            ("--shards", "APACHE_SHARDS"),
+            validate_shards,
+        )
+    }
+
+    /// Resolve the shard queue depth through the same chain:
+    /// `--queue-depth` > `APACHE_QUEUE_DEPTH` > `[system] queue_depth`.
+    pub fn resolve_queue_depth(
+        cli: Option<&str>,
+        env: Option<String>,
+        cfg: usize,
+    ) -> Result<usize> {
+        resolve_knob(
+            cli,
+            env,
+            cfg,
+            ("--queue-depth", "APACHE_QUEUE_DEPTH"),
+            validate_queue_depth,
+        )
     }
 }
 
@@ -207,6 +321,60 @@ imc_ks = false
             .unwrap_err()
             .to_string()
             .contains("residency_budget_bytes"));
+    }
+
+    #[test]
+    fn shard_knobs_parse_and_validate() {
+        let cfg = ApacheConfig::from_toml("").unwrap();
+        assert_eq!(cfg.shards, 2, "two shards by default");
+        assert_eq!(cfg.queue_depth, 64);
+        let cfg =
+            ApacheConfig::from_toml("[system]\nshards = 4\nqueue_depth = 8\n").unwrap();
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.queue_depth, 8);
+        // zero and absurd values are parse-time errors, not panics later
+        for bad in ["shards = 0", "shards = -3", "shards = 100000"] {
+            let err = ApacheConfig::from_toml(&format!("[system]\n{bad}\n"));
+            assert!(err.is_err(), "`{bad}` must be rejected");
+            assert!(err.unwrap_err().to_string().contains("system.shards"));
+        }
+        for bad in ["queue_depth = 0", "queue_depth = -1", "queue_depth = 99999999"] {
+            let err = ApacheConfig::from_toml(&format!("[system]\n{bad}\n"));
+            assert!(err.is_err(), "`{bad}` must be rejected");
+            assert!(err.unwrap_err().to_string().contains("system.queue_depth"));
+        }
+    }
+
+    #[test]
+    fn shard_precedence_is_cli_env_config() {
+        // the standard chain: CLI beats env beats config — NOT the
+        // inverted config-first order
+        let r = ApacheConfig::resolve_shards(Some("8"), Some("4".into()), 2);
+        assert_eq!(r.unwrap(), 8, "CLI must beat env and config");
+        let r = ApacheConfig::resolve_shards(None, Some("4".into()), 2);
+        assert_eq!(r.unwrap(), 4, "env must beat config");
+        let r = ApacheConfig::resolve_shards(None, None, 2);
+        assert_eq!(r.unwrap(), 2, "config is the fallback");
+        let r = ApacheConfig::resolve_queue_depth(Some("16"), Some("32".into()), 64);
+        assert_eq!(r.unwrap(), 16);
+        let r = ApacheConfig::resolve_queue_depth(None, Some("32".into()), 64);
+        assert_eq!(r.unwrap(), 32);
+    }
+
+    #[test]
+    fn shard_resolution_rejects_bad_values_from_any_source() {
+        // a bad winning source is an error even when a lower-precedence
+        // source holds a valid value — silent fallback would mask typos
+        for bad in ["0", "-1", "1000000", "many"] {
+            let err = ApacheConfig::resolve_shards(Some(bad), None, 2);
+            assert!(err.is_err(), "CLI `{bad}` must be rejected");
+            assert!(err.unwrap_err().to_string().contains("--shards"));
+            let err = ApacheConfig::resolve_shards(None, Some(bad.into()), 2);
+            assert!(err.is_err(), "env `{bad}` must be rejected");
+            assert!(err.unwrap_err().to_string().contains("APACHE_SHARDS"));
+        }
+        let err = ApacheConfig::resolve_queue_depth(Some("0"), None, 64);
+        assert!(err.unwrap_err().to_string().contains("--queue-depth"));
     }
 
     #[test]

@@ -10,7 +10,9 @@
 pub mod config;
 pub mod metrics;
 pub mod server;
+pub mod shard;
 
 pub use config::ApacheConfig;
 pub use metrics::Metrics;
 pub use server::{Coordinator, TaskRequest, TaskResult};
+pub use shard::{Admission, ServeRequest, ShardConfig, ShardedCoordinator};

@@ -12,18 +12,19 @@
 
 use super::config::ApacheConfig;
 use super::metrics::Metrics;
+use super::shard;
 use crate::params::{CkksParams, TfheParams};
-use crate::runtime::{CostTrace, Invocation, OpClass, Runtime};
+use crate::runtime::Runtime;
 use crate::sched::lowering::Lowerer;
-use crate::sched::oplevel::{profile_op, OpShapes};
+use crate::sched::oplevel::OpShapes;
 use crate::sched::tasklevel::{schedule_tasks, Task};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, MutexGuard};
-use std::time::Instant;
 
-// Backend handles may be !Send (the PJRT client is Rc + raw pointers), so
-// artifact execution lives on the leader thread; workers model the DIMMs
-// concurrently.
+// This synchronous coordinator survives as the thin compatibility
+// wrapper over the sharded serving tier's pipeline stages
+// (coordinator::shard): same model phase, same lowering, same batched
+// dispatch — one batch at a time on the caller's thread.
 
 /// A client request: one homomorphic task.
 pub struct TaskRequest {
@@ -44,6 +45,50 @@ pub struct TaskResult {
     /// first runtime failure attributed to this task, if any; a failed
     /// invocation never aborts the batch
     pub runtime_error: Option<String>,
+    /// order-sensitive FNV-1a digest of this task's successful runtime
+    /// outputs (0 when the runtime backend is disabled or nothing
+    /// executed) — the bit-identity witness `tests/shard_props.rs`
+    /// compares across shardings and backends
+    pub runtime_digest: u64,
+}
+
+/// Build the configured runtime exactly as the serving paths do —
+/// shared by the synchronous coordinator and (per shard) the sharded
+/// tier, so both resolve backend/policies/budget identically.
+pub(crate) fn build_runtime(cfg: &ApacheConfig) -> Option<Runtime> {
+    if !cfg.use_runtime {
+        return None;
+    }
+    // policies were validated at config parse time; a hand-built
+    // config with a bad policy surfaces here
+    let built = crate::sched::plan::PlanPolicy::parse(&cfg.plan_policy).and_then(|plan_policy| {
+        if cfg.backend == "reference" {
+            // the reference path may upgrade to on-disk PJRT
+            // artifacts; planning no-ops on placement-blind
+            // backends but the policy threads uniformly
+            Runtime::new(&cfg.artifacts_dir).map(|rt| rt.with_plan_policy(plan_policy))
+        } else {
+            crate::hw::AllocPolicy::parse(&cfg.alloc_policy).and_then(|policy| {
+                Runtime::for_backend_configured(
+                    &cfg.backend,
+                    &cfg.dimm,
+                    policy,
+                    plan_policy,
+                    cfg.residency_budget_bytes,
+                )
+            })
+        }
+    });
+    match built {
+        Ok(rt) => {
+            eprintln!("[coordinator] runtime backend: {}", rt.backend_name());
+            Some(rt)
+        }
+        Err(e) => {
+            eprintln!("[coordinator] runtime disabled: {e}");
+            None
+        }
+    }
 }
 
 /// The leader: owns the queue, scheduler, worker pool and metrics.
@@ -62,42 +107,7 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(cfg: ApacheConfig) -> Self {
-        let runtime = if cfg.use_runtime {
-            // policies were validated at config parse time; a hand-built
-            // config with a bad policy surfaces here
-            let built = crate::sched::plan::PlanPolicy::parse(&cfg.plan_policy).and_then(
-                |plan_policy| {
-                    if cfg.backend == "reference" {
-                        // the reference path may upgrade to on-disk PJRT
-                        // artifacts; planning no-ops on placement-blind
-                        // backends but the policy threads uniformly
-                        Runtime::new(&cfg.artifacts_dir).map(|rt| rt.with_plan_policy(plan_policy))
-                    } else {
-                        crate::hw::AllocPolicy::parse(&cfg.alloc_policy).and_then(|policy| {
-                            Runtime::for_backend_configured(
-                                &cfg.backend,
-                                &cfg.dimm,
-                                policy,
-                                plan_policy,
-                                cfg.residency_budget_bytes,
-                            )
-                        })
-                    }
-                },
-            );
-            match built {
-                Ok(rt) => {
-                    eprintln!("[coordinator] runtime backend: {}", rt.backend_name());
-                    Some(rt)
-                }
-                Err(e) => {
-                    eprintln!("[coordinator] runtime disabled: {e}");
-                    None
-                }
-            }
-        } else {
-            None
-        };
+        let runtime = build_runtime(&cfg);
         Self::with_runtime(cfg, runtime)
     }
 
@@ -135,6 +145,13 @@ impl Coordinator {
     /// Serve a batch of tasks: schedule across DIMMs, execute on worker
     /// threads, return per-task results. Blocking; the caller is the
     /// "host CPU" of Fig. 3(a).
+    ///
+    /// This is the synchronous compatibility wrapper over the sharded
+    /// serving tier's pipeline stages ([`shard::model_task`] →
+    /// [`shard::lower_tasks`] → [`shard::execute_prepared`]): exactly
+    /// one batch in flight, prepared and executed on the caller's
+    /// thread. High-throughput callers use
+    /// [`super::shard::ShardedCoordinator`] instead.
     pub fn serve_batch(&self, requests: Vec<TaskRequest>) -> Vec<TaskResult> {
         let tasks: Vec<Task> = requests.into_iter().map(|r| r.task).collect();
         let assignment = schedule_tasks(
@@ -154,30 +171,8 @@ impl Coordinator {
                 let metrics = self.metrics.clone();
                 scope.spawn(move || {
                     for &ti in queue {
-                        let t0 = Instant::now();
-                        let task = &tasks[ti];
-                        let mut modelled = 0.0f64;
-                        for node in &task.graph.nodes {
-                            let prof = profile_op(node.op, shapes, &cfg.dimm);
-                            modelled += prof.latency_s(&cfg.dimm);
-                            metrics.incr(&format!("op.{}", prof.name), 1);
-                        }
-                        let wall_s = t0.elapsed().as_secs_f64();
-                        metrics.observe("task.modelled_s", modelled);
-                        metrics.observe("task.wall_s", wall_s);
-                        metrics.incr("tasks.completed", 1);
-                        let _ = tx.send((
-                            ti,
-                            TaskResult {
-                                name: task.name.clone(),
-                                dimm,
-                                modelled_s: modelled,
-                                wall_s,
-                                ops: task.graph.nodes.len(),
-                                runtime_invocations: 0,
-                                runtime_error: None,
-                            },
-                        ));
+                        let r = shard::model_task(&tasks[ti], dimm, shapes, cfg, &metrics);
+                        let _ = tx.send((ti, r));
                     }
                 });
             }
@@ -194,104 +189,19 @@ impl Coordinator {
         out
     }
 
-    /// The numeric hot path through the runtime backend: lower each
-    /// task's op graph to artifact invocations, dispatch the whole batch
-    /// through [`Runtime::execute_batch_u64`], and splice per-task
-    /// outcomes back. Runs on the leader thread (backend handles may be
-    /// !Send). A failing invocation marks its own task's result and the
-    /// `runtime.errors` counter — it never aborts the serving loop.
+    /// The numeric hot path through the runtime backend — the same
+    /// lowering and dispatch stages the sharded tier's workers run,
+    /// executed inline on the caller's thread. A failing invocation
+    /// marks its own task's result and the `runtime.errors` counter — it
+    /// never aborts the serving loop.
     fn dispatch_runtime(&self, tasks: &[Task], results: &mut [Option<TaskResult>]) {
         let rt = match &self.runtime {
             Some(rt) => rt,
             None => return,
         };
         let mut lowerer = self.lowerer();
-        let mut batch: Vec<Invocation> = Vec::new();
-        let mut spans: Vec<(usize, std::ops::Range<usize>)> = Vec::new();
-        for (ti, task) in tasks.iter().enumerate() {
-            match lowerer.lower_graph(&task.graph, &self.shapes, rt) {
-                Ok(invs) => {
-                    let start = batch.len();
-                    batch.extend(invs);
-                    spans.push((ti, start..batch.len()));
-                }
-                Err(e) => {
-                    self.metrics.incr("runtime.errors", 1);
-                    if let Some(r) = results[ti].as_mut() {
-                        r.runtime_error = Some(format!("lowering: {e}"));
-                    }
-                }
-            }
-        }
-        let before = rt.cost_trace().unwrap_or_default();
-        let outs = rt.execute_batch_u64(&batch);
-        for (ti, span) in spans {
-            let r = match results[ti].as_mut() {
-                Some(r) => r,
-                None => continue,
-            };
-            r.runtime_invocations = span.len();
-            for out in &outs[span] {
-                match out {
-                    Ok(_) => self.metrics.incr("runtime.invocations", 1),
-                    Err(e) => {
-                        self.metrics.incr("runtime.errors", 1);
-                        if r.runtime_error.is_none() {
-                            r.runtime_error = Some(e.to_string());
-                        }
-                    }
-                }
-            }
-        }
-        if let Some(after) = rt.cost_trace() {
-            let d = after.delta_since(&before);
-            // an empty batch never reached the device; recording its
-            // all-zero delta would skew the utilization/energy histograms
-            if d.dispatches > 0 {
-                self.record_cost(d);
-            }
-        }
-    }
-
-    /// Surface one served batch's hardware cost (the pnm backend's trace
-    /// delta) in the metrics registry: dispatch/cycle counters, bytes
-    /// moved per memory level, cycles per artifact class, planner
-    /// outcomes, utilization % and energy.
-    fn record_cost(&self, d: CostTrace) {
-        self.metrics.incr("pnm.dispatches", d.dispatches);
-        self.metrics.incr("pnm.cycles", d.cycles);
-        self.metrics.incr("pnm.bytes_rank", d.profile.io_internal);
-        self.metrics.incr("pnm.bytes_bank", d.profile.io_bank);
-        self.metrics.incr("pnm.row_hits", d.row_hits);
-        self.metrics.incr("pnm.row_misses", d.row_misses);
-        // per-batch planner outcomes, next to the observed row counters
-        // they predict (the planner runs only under `row_locality`)
-        if d.plans > 0 {
-            self.metrics.incr("pnm.plan.built", d.plans);
-            self.metrics.incr("pnm.plan.splits", d.plan_splits);
-            self.metrics.incr("pnm.plan.predicted_row_hits", d.predicted_row_hits);
-            self.metrics
-                .incr("pnm.plan.predicted_row_misses", d.predicted_row_misses);
-        }
-        // residency-cache outcomes (all-zero when the budget is 0 or the
-        // backend is placement-blind); pinned_bytes is a gauge — observe
-        // the end-of-batch footprint rather than accumulating it
-        if d.cache_hits + d.cache_misses + d.cache_evictions > 0 {
-            self.metrics.incr("pnm.cache.hits", d.cache_hits);
-            self.metrics.incr("pnm.cache.misses", d.cache_misses);
-            self.metrics.incr("pnm.cache.evictions", d.cache_evictions);
-            self.metrics
-                .observe("pnm.cache.pinned_bytes", d.cache_pinned_bytes as f64);
-        }
-        for class in OpClass::ALL {
-            let c = d.class_cycles(class);
-            if c > 0 {
-                self.metrics.incr(&format!("pnm.cycles.{}", class.name()), c);
-            }
-        }
-        self.metrics.observe("pnm.ntt_utilization", d.ntt_utilization());
-        self.metrics.observe("pnm.rank_imbalance", d.rank_imbalance());
-        self.metrics.observe("pnm.energy_j", d.energy_j);
+        let prepared = shard::lower_tasks(&mut lowerer, tasks, &self.shapes, rt);
+        shard::execute_prepared(rt, &self.metrics, &prepared, results);
     }
 }
 

@@ -1,0 +1,804 @@
+//! The sharded, double-buffered serving tier.
+//!
+//! [`super::server::Coordinator::serve_batch`] is a synchronous loop:
+//! plan a batch, execute it, return. Fine for benches — but the
+//! near-memory hierarchy only pays off when every DIMM's queue stays
+//! full under sustained multi-tenant pressure. This module refactors the
+//! serving path into per-shard pipelines:
+//!
+//! ```text
+//!   submit(tenant, task)
+//!        │  tenant→shard affinity (sched::tasklevel::tenant_shard)
+//!        ▼
+//!   ┌─ shard 0 ──────────────────────────────────────────────┐
+//!   │ BoundedQueue ──► prep thread ──► sync_channel ──► exec  │
+//!   │  (admission      model + lower     (depth 1 =    thread │
+//!   │   control,       + plan lookahead   double       (device│
+//!   │   backpressure)  for batch k+1)     buffer)     dispatch│
+//!   └────────────────────────────────────────────────────────┘
+//!   ┌─ shard 1 ─ ... one pipeline per shard, own Runtime ────┐
+//! ```
+//!
+//! * **Admission control.** Each shard owns a [`BoundedQueue`]; a full
+//!   queue rejects the submission ([`Admission::Rejected`]) instead of
+//!   buffering without bound. `admission.*` and `pnm.shard.queue_depth`
+//!   metrics record the pressure.
+//! * **Tenant→shard affinity.** A tenant id always routes to the same
+//!   shard, whose persistent `Lowerer` and per-shard runtime hold its
+//!   memoized operand pools and pinned residency-cache rows — returning
+//!   tenants keep scoring cross-batch row hits under sharding.
+//! * **Double buffering.** The prep thread drains a window of jobs,
+//!   runs the model phase, lowers the graphs and prices a
+//!   [`Runtime::plan_lookahead`] dispatch plan for batch k+1 while the
+//!   exec thread still executes batch k (`plan::predict` is pure, so
+//!   the overlap is free). A rendezvous acknowledgment serializes the
+//!   two stages when [`ShardConfig::double_buffer`] is off — the
+//!   bench's A/B control.
+//! * **Graceful shutdown.** [`ShardedCoordinator::drain`] stops
+//!   admission, flushes every queue, joins the workers and returns all
+//!   completed results: no accepted request is dropped.
+//!
+//! The synchronous `serve_batch` survives as a thin wrapper over the
+//! same pipeline stages ([`model_task`] → [`lower_tasks`] →
+//! [`execute_prepared`]), so both paths stay bit-identical by
+//! construction — gated by `tests/shard_props.rs`.
+
+use super::config::ApacheConfig;
+use super::metrics::Metrics;
+use super::server::{build_runtime, TaskResult};
+use crate::params::{CkksParams, TfheParams};
+use crate::runtime::{CostTrace, Invocation, OpClass, Runtime};
+use crate::sched::lowering::Lowerer;
+use crate::sched::oplevel::{profile_op, OpShapes};
+use crate::sched::tasklevel::{schedule_tasks, tenant_shard, Task};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A serving-tier request: one homomorphic task on behalf of a tenant.
+/// The tenant id drives shard affinity; tasks from one tenant always
+/// land on the shard holding that tenant's residency-cache rows.
+pub struct ServeRequest {
+    pub tenant: u64,
+    pub task: Task,
+}
+
+/// Admission-control verdict for one submission. A rejection is a
+/// first-class result — the caller sheds load or retries; the tier
+/// never buffers beyond the configured queue depth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Accepted { shard: usize },
+    /// the target shard's queue was full (or the tier stopped admitting)
+    Rejected { shard: usize, depth: usize },
+}
+
+impl Admission {
+    pub fn accepted(&self) -> bool {
+        matches!(self, Admission::Accepted { .. })
+    }
+}
+
+/// Serving-tier knobs. Shard count and queue depth resolve through the
+/// standard CLI > env > config precedence chain
+/// ([`ApacheConfig::resolve_shards`] / [`ApacheConfig::resolve_queue_depth`]).
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// independent pipelines, each with its own queue and runtime
+    pub shards: usize,
+    /// bounded per-shard queue depth; full = reject
+    pub queue_depth: usize,
+    /// max jobs drained into one shard batch
+    pub batch_window: usize,
+    /// prep batch k+1 while batch k executes; off = rendezvous (the
+    /// synchronous A/B control of `benches/serving_tier.rs`)
+    pub double_buffer: bool,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        let cfg = ApacheConfig::default();
+        ShardConfig {
+            shards: cfg.shards,
+            queue_depth: cfg.queue_depth,
+            batch_window: 8,
+            double_buffer: true,
+        }
+    }
+}
+
+impl ShardConfig {
+    /// Adopt the resolved `[system]` knobs (shard count, queue depth).
+    pub fn from_config(cfg: &ApacheConfig) -> Self {
+        ShardConfig {
+            shards: cfg.shards,
+            queue_depth: cfg.queue_depth,
+            ..ShardConfig::default()
+        }
+    }
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded MPSC work queue: `try_push` rejects when full (admission
+/// control — the caller gets its item back), `pop_blocking` parks the
+/// shard's prep thread until work or close, and a closed queue still
+/// drains its remaining items so shutdown never drops accepted work.
+pub(crate) struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    ready: Condvar,
+    cap: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub(crate) fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "queue depth must be >= 1");
+        BoundedQueue {
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Recover from poisoning: the queue holds plain jobs, and adopting
+    /// them after a worker panic beats wedging every later submission.
+    fn lock(&self) -> MutexGuard<'_, QueueState<T>> {
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Enqueue unless full or closed; `Ok` carries the new depth, `Err`
+    /// hands the item back to the rejected caller.
+    pub(crate) fn try_push(&self, item: T) -> Result<usize, T> {
+        let mut st = self.lock();
+        if st.closed || st.items.len() >= self.cap {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        let depth = st.items.len();
+        drop(st);
+        self.ready.notify_one();
+        Ok(depth)
+    }
+
+    /// Wait for the next item; `None` once the queue is closed *and*
+    /// fully drained.
+    pub(crate) fn pop_blocking(&self) -> Option<T> {
+        let mut st = self.lock();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = match self.ready.wait(st) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+
+    pub(crate) fn try_pop(&self) -> Option<T> {
+        self.lock().items.pop_front()
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.lock().items.len()
+    }
+
+    /// Stop accepting; blocked consumers wake and drain the remainder.
+    pub(crate) fn close(&self) {
+        self.lock().closed = true;
+        self.ready.notify_all();
+    }
+}
+
+/// One accepted job in a shard queue.
+struct Job {
+    task: Task,
+    submitted: Instant,
+}
+
+/// What the prep thread hands the exec thread: the drained jobs, their
+/// model-phase results, and the lowered invocation batch.
+struct PreparedBatch {
+    jobs: Vec<Job>,
+    results: Vec<Option<TaskResult>>,
+    prepared: Option<Prepared>,
+}
+
+/// Everything one shard's prep thread needs — moved into the thread.
+struct PrepStage {
+    queue: Arc<BoundedQueue<Job>>,
+    metrics: Arc<Metrics>,
+    runtime: Option<Arc<Runtime>>,
+    cfg: ApacheConfig,
+    shapes: OpShapes,
+    batch_window: usize,
+    double_buffer: bool,
+    tx: mpsc::SyncSender<PreparedBatch>,
+    ack_rx: mpsc::Receiver<()>,
+}
+
+impl PrepStage {
+    /// Drain → model → lower → lookahead, batch after batch, until the
+    /// queue closes and empties. With double buffering on, batch k+1 is
+    /// fully prepared (and its dispatch plan priced) while the exec
+    /// thread still runs batch k; the rendezvous ack serializes the two
+    /// stages otherwise.
+    fn run(self) {
+        // persistent per shard, like the synchronous coordinator's
+        // per-lifetime lowerer: returning tenants present stable
+        // operand identities, the residency cache's precondition
+        let mut lowerer = Lowerer::new();
+        while let Some(first) = self.queue.pop_blocking() {
+            let mut jobs = vec![first];
+            while jobs.len() < self.batch_window {
+                match self.queue.try_pop() {
+                    Some(j) => jobs.push(j),
+                    None => break,
+                }
+            }
+            self.metrics.observe("pnm.shard.batch_window", jobs.len() as f64);
+            let batch = self.prepare(&mut lowerer, jobs);
+            if self.tx.send(batch).is_err() {
+                break;
+            }
+            // rendezvous control: without double buffering, wait until
+            // exec finished this batch before prepping the next
+            if !self.double_buffer && self.ack_rx.recv().is_err() {
+                break;
+            }
+        }
+        // prep exits; dropping self.tx disconnects the exec thread
+    }
+
+    fn prepare(&self, lowerer: &mut Lowerer, jobs: Vec<Job>) -> PreparedBatch {
+        let tasks: Vec<Task> = jobs.iter().map(|j| j.task.clone()).collect();
+        let mut results: Vec<Option<TaskResult>> = jobs.iter().map(|_| None).collect();
+        let assignment = schedule_tasks(
+            &tasks,
+            &self.shapes,
+            &self.cfg.dimm,
+            self.cfg.dimms,
+            self.cfg.host_bw,
+        );
+        for (dimm, queue) in assignment.per_dimm.iter().enumerate() {
+            for &ti in queue {
+                let r = model_task(&tasks[ti], dimm, &self.shapes, &self.cfg, &self.metrics);
+                results[ti] = Some(r);
+            }
+        }
+        let prepared = self.runtime.as_ref().map(|rt| {
+            let p = lower_tasks(lowerer, &tasks, &self.shapes, rt);
+            self.lookahead(rt, &p);
+            p
+        });
+        PreparedBatch {
+            jobs,
+            results,
+            prepared,
+        }
+    }
+
+    /// Price the upcoming batch's dispatch plan on the host — the pure
+    /// half of double buffering — and surface the prediction.
+    fn lookahead(&self, rt: &Runtime, p: &Prepared) {
+        let plan = match rt.plan_lookahead(&p.invocations) {
+            Some(plan) => plan,
+            None => return,
+        };
+        self.metrics.incr("pnm.shard.lookahead.plans", 1);
+        self.metrics
+            .incr("pnm.shard.lookahead.predicted_row_hits", plan.predicted.row_hits);
+        self.metrics
+            .incr("pnm.shard.lookahead.predicted_row_misses", plan.predicted.row_misses);
+        if plan.fell_back {
+            self.metrics.incr("pnm.shard.lookahead.fell_back", 1);
+        }
+    }
+}
+
+/// Everything one shard's exec thread needs — moved into the thread.
+struct ExecStage {
+    metrics: Arc<Metrics>,
+    runtime: Option<Arc<Runtime>>,
+    sink: Arc<Mutex<Vec<TaskResult>>>,
+    rx: mpsc::Receiver<PreparedBatch>,
+    ack_tx: mpsc::Sender<()>,
+}
+
+impl ExecStage {
+    /// Execute prepared batches until the prep side disconnects.
+    fn run(self) {
+        while let Ok(mut batch) = self.rx.recv() {
+            if let (Some(rt), Some(p)) = (&self.runtime, &batch.prepared) {
+                execute_prepared(rt, &self.metrics, p, &mut batch.results);
+            }
+            self.metrics.incr("pnm.shard.batches", 1);
+            let mut sink = match self.sink.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            for (job, r) in batch.jobs.iter().zip(batch.results.drain(..)) {
+                if let Some(r) = r {
+                    let latency = job.submitted.elapsed().as_secs_f64();
+                    self.metrics.observe("serve.latency_s", latency);
+                    sink.push(r);
+                }
+            }
+            drop(sink);
+            // harmless when double-buffered (nobody listens); the
+            // rendezvous control blocks on it
+            let _ = self.ack_tx.send(());
+        }
+    }
+}
+
+struct ShardWorker {
+    prep: JoinHandle<()>,
+    exec: JoinHandle<()>,
+}
+
+/// The serving tier: per-shard bounded queues feeding prep/exec thread
+/// pairs, one [`Runtime`] per shard behind a shared `Arc` seam.
+pub struct ShardedCoordinator {
+    pub metrics: Arc<Metrics>,
+    queues: Vec<Arc<BoundedQueue<Job>>>,
+    workers: Vec<ShardWorker>,
+    sink: Arc<Mutex<Vec<TaskResult>>>,
+    accepting: AtomicBool,
+    accepted: AtomicU64,
+}
+
+impl ShardedCoordinator {
+    /// Build the tier from the system config: one runtime per shard,
+    /// constructed exactly like the synchronous coordinator's (backend,
+    /// policies and residency budget all apply per shard).
+    pub fn new(cfg: ApacheConfig, shard_cfg: ShardConfig) -> Self {
+        Self::with_runtime_factory(cfg.clone(), shard_cfg, |_shard| build_runtime(&cfg))
+    }
+
+    /// Build with an explicit per-shard runtime factory (tests inject
+    /// corrupted manifests or hand-built backends; `None` disables the
+    /// numeric hot path for that shard, model phase only).
+    pub fn with_runtime_factory(
+        cfg: ApacheConfig,
+        shard_cfg: ShardConfig,
+        mut factory: impl FnMut(usize) -> Option<Runtime>,
+    ) -> Self {
+        assert!(shard_cfg.shards >= 1, "shard count must be >= 1");
+        assert!(shard_cfg.batch_window >= 1, "batch window must be >= 1");
+        let metrics = Arc::new(Metrics::default());
+        let shapes = OpShapes {
+            ckks: CkksParams::paper_shape(),
+            tfhe: TfheParams::paper_shape(),
+        };
+        let sink: Arc<Mutex<Vec<TaskResult>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut queues = Vec::with_capacity(shard_cfg.shards);
+        let mut workers = Vec::with_capacity(shard_cfg.shards);
+        for shard in 0..shard_cfg.shards {
+            let queue = Arc::new(BoundedQueue::<Job>::new(shard_cfg.queue_depth));
+            let runtime = factory(shard).map(Arc::new);
+            // depth-1 channel: prep parks batch k+1 here while exec
+            // still runs batch k — that slot *is* the double buffer
+            let (tx, rx) = mpsc::sync_channel::<PreparedBatch>(1);
+            let (ack_tx, ack_rx) = mpsc::channel::<()>();
+            let prep_stage = PrepStage {
+                queue: queue.clone(),
+                metrics: metrics.clone(),
+                runtime: runtime.clone(),
+                cfg: cfg.clone(),
+                shapes,
+                batch_window: shard_cfg.batch_window,
+                double_buffer: shard_cfg.double_buffer,
+                tx,
+                ack_rx,
+            };
+            let exec_stage = ExecStage {
+                metrics: metrics.clone(),
+                runtime,
+                sink: sink.clone(),
+                rx,
+                ack_tx,
+            };
+            let prep = std::thread::Builder::new()
+                .name(format!("shard-{shard}-prep"))
+                .spawn(move || prep_stage.run())
+                .expect("spawn shard prep thread");
+            let exec = std::thread::Builder::new()
+                .name(format!("shard-{shard}-exec"))
+                .spawn(move || exec_stage.run())
+                .expect("spawn shard exec thread");
+            queues.push(queue);
+            workers.push(ShardWorker { prep, exec });
+        }
+        ShardedCoordinator {
+            metrics,
+            queues,
+            workers,
+            sink,
+            accepting: AtomicBool::new(true),
+            accepted: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Requests accepted so far — the left side of the drain-no-drop
+    /// invariant (`accepted() == drain().len()`).
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::SeqCst)
+    }
+
+    /// Admit one request onto its tenant's shard queue. Never blocks:
+    /// backpressure is an [`Admission::Rejected`] verdict, not a stall.
+    pub fn submit(&self, req: ServeRequest) -> Admission {
+        let shard = tenant_shard(req.tenant, self.queues.len());
+        if !self.accepting.load(Ordering::SeqCst) {
+            self.metrics.incr("admission.rejected", 1);
+            return Admission::Rejected {
+                shard,
+                depth: self.queues[shard].len(),
+            };
+        }
+        let job = Job {
+            task: req.task,
+            submitted: Instant::now(),
+        };
+        match self.queues[shard].try_push(job) {
+            Ok(depth) => {
+                self.metrics.incr("admission.accepted", 1);
+                self.metrics.observe("pnm.shard.queue_depth", depth as f64);
+                self.accepted.fetch_add(1, Ordering::SeqCst);
+                Admission::Accepted { shard }
+            }
+            Err(_) => {
+                let depth = self.queues[shard].len();
+                self.metrics.incr("admission.rejected", 1);
+                self.metrics.observe("pnm.shard.queue_depth", depth as f64);
+                Admission::Rejected { shard, depth }
+            }
+        }
+    }
+
+    fn shutdown(&mut self) {
+        self.accepting.store(false, Ordering::SeqCst);
+        for q in &self.queues {
+            q.close();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.prep.join();
+            let _ = w.exec.join();
+        }
+    }
+
+    /// Graceful shutdown: stop admission, flush every shard queue
+    /// through its pipeline, join the workers and return all completed
+    /// results sorted by task name (the synchronous wrapper's order).
+    /// Every accepted request appears exactly once.
+    pub fn drain(mut self) -> Vec<TaskResult> {
+        self.shutdown();
+        let mut out = {
+            let mut sink = match self.sink.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            std::mem::take(&mut *sink)
+        };
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+}
+
+impl Drop for ShardedCoordinator {
+    fn drop(&mut self) {
+        // drain() already emptied `workers`; an undrained tier still
+        // flushes and joins so no thread outlives its coordinator
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pipeline stages, shared verbatim with the synchronous `serve_batch`
+// wrapper so the two paths cannot drift.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+/// FNV-1a over little-endian words — the order-sensitive digest of a
+/// task's runtime outputs that `tests/shard_props.rs` compares across
+/// shardings.
+fn fnv1a_words(mut h: u64, words: &[u64]) -> u64 {
+    for &w in words {
+        for b in w.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// The model phase for one task on its assigned DIMM: per-op profiling
+/// metrics plus the `TaskResult` skeleton the runtime phase later
+/// splices invocation outcomes into.
+pub(crate) fn model_task(
+    task: &Task,
+    dimm: usize,
+    shapes: &OpShapes,
+    cfg: &ApacheConfig,
+    metrics: &Metrics,
+) -> TaskResult {
+    let t0 = Instant::now();
+    let mut modelled = 0.0f64;
+    for node in &task.graph.nodes {
+        let prof = profile_op(node.op, shapes, &cfg.dimm);
+        modelled += prof.latency_s(&cfg.dimm);
+        metrics.incr(&format!("op.{}", prof.name), 1);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    metrics.observe("task.modelled_s", modelled);
+    metrics.observe("task.wall_s", wall_s);
+    metrics.incr("tasks.completed", 1);
+    TaskResult {
+        name: task.name.clone(),
+        dimm,
+        modelled_s: modelled,
+        wall_s,
+        ops: task.graph.nodes.len(),
+        runtime_invocations: 0,
+        runtime_error: None,
+        runtime_digest: 0,
+    }
+}
+
+/// Everything the lowering stage produced for one batch: the flattened
+/// invocation list, each task's span into it, and per-task lowering
+/// failures (which never abort the batch).
+pub(crate) struct Prepared {
+    pub invocations: Vec<Invocation>,
+    pub spans: Vec<(usize, std::ops::Range<usize>)>,
+    pub lower_errors: Vec<(usize, String)>,
+}
+
+/// Lower every task's op graph through the (persistent) lowerer into
+/// one invocation batch. Pure bookkeeping — metrics and result splicing
+/// happen in [`execute_prepared`].
+pub(crate) fn lower_tasks(
+    lowerer: &mut Lowerer,
+    tasks: &[Task],
+    shapes: &OpShapes,
+    rt: &Runtime,
+) -> Prepared {
+    let mut p = Prepared {
+        invocations: Vec::new(),
+        spans: Vec::new(),
+        lower_errors: Vec::new(),
+    };
+    for (ti, task) in tasks.iter().enumerate() {
+        match lowerer.lower_graph(&task.graph, shapes, rt) {
+            Ok(invs) => {
+                let start = p.invocations.len();
+                p.invocations.extend(invs);
+                p.spans.push((ti, start..p.invocations.len()));
+            }
+            Err(e) => p.lower_errors.push((ti, format!("lowering: {e}"))),
+        }
+    }
+    p
+}
+
+/// The runtime phase: dispatch the lowered batch through
+/// [`Runtime::execute_batch_u64`], splice per-task outcomes (invocation
+/// counts, first error, output digest) back into the model-phase
+/// results, and record the device cost-trace delta. A failing
+/// invocation marks its own task — it never aborts the batch.
+pub(crate) fn execute_prepared(
+    rt: &Runtime,
+    metrics: &Metrics,
+    prepared: &Prepared,
+    results: &mut [Option<TaskResult>],
+) {
+    for (ti, msg) in &prepared.lower_errors {
+        metrics.incr("runtime.errors", 1);
+        if let Some(r) = results[*ti].as_mut() {
+            r.runtime_error = Some(msg.clone());
+        }
+    }
+    let before = rt.cost_trace().unwrap_or_default();
+    let outs = rt.execute_batch_u64(&prepared.invocations);
+    for (ti, span) in &prepared.spans {
+        let r = match results[*ti].as_mut() {
+            Some(r) => r,
+            None => continue,
+        };
+        r.runtime_invocations = span.len();
+        let mut digest = FNV_OFFSET;
+        for out in &outs[span.clone()] {
+            match out {
+                Ok(data) => {
+                    metrics.incr("runtime.invocations", 1);
+                    digest = fnv1a_words(digest, data);
+                }
+                Err(e) => {
+                    metrics.incr("runtime.errors", 1);
+                    if r.runtime_error.is_none() {
+                        r.runtime_error = Some(e.to_string());
+                    }
+                }
+            }
+        }
+        r.runtime_digest = digest;
+    }
+    if let Some(after) = rt.cost_trace() {
+        let d = after.delta_since(&before);
+        // an empty batch never reached the device; recording its
+        // all-zero delta would skew the utilization/energy histograms
+        if d.dispatches > 0 {
+            record_cost(metrics, d);
+        }
+    }
+}
+
+/// Surface one served batch's hardware cost (the pnm backend's trace
+/// delta) in the metrics registry: dispatch/cycle counters, bytes moved
+/// per memory level, cycles per artifact class, planner outcomes,
+/// utilization % and energy.
+pub(crate) fn record_cost(metrics: &Metrics, d: CostTrace) {
+    metrics.incr("pnm.dispatches", d.dispatches);
+    metrics.incr("pnm.cycles", d.cycles);
+    metrics.incr("pnm.bytes_rank", d.profile.io_internal);
+    metrics.incr("pnm.bytes_bank", d.profile.io_bank);
+    metrics.incr("pnm.row_hits", d.row_hits);
+    metrics.incr("pnm.row_misses", d.row_misses);
+    // per-batch planner outcomes, next to the observed row counters
+    // they predict (the planner runs only under `row_locality`)
+    if d.plans > 0 {
+        metrics.incr("pnm.plan.built", d.plans);
+        metrics.incr("pnm.plan.splits", d.plan_splits);
+        metrics.incr("pnm.plan.predicted_row_hits", d.predicted_row_hits);
+        metrics.incr("pnm.plan.predicted_row_misses", d.predicted_row_misses);
+    }
+    // residency-cache outcomes (all-zero when the budget is 0 or the
+    // backend is placement-blind); pinned_bytes is a gauge — observe
+    // the end-of-batch footprint rather than accumulating it
+    if d.cache_hits + d.cache_misses + d.cache_evictions > 0 {
+        metrics.incr("pnm.cache.hits", d.cache_hits);
+        metrics.incr("pnm.cache.misses", d.cache_misses);
+        metrics.incr("pnm.cache.evictions", d.cache_evictions);
+        metrics.observe("pnm.cache.pinned_bytes", d.cache_pinned_bytes as f64);
+    }
+    for class in OpClass::ALL {
+        let c = d.class_cycles(class);
+        if c > 0 {
+            metrics.incr(&format!("pnm.cycles.{}", class.name()), c);
+        }
+    }
+    metrics.observe("pnm.ntt_utilization", d.ntt_utilization());
+    metrics.observe("pnm.rank_imbalance", d.rank_imbalance());
+    metrics.observe("pnm.energy_j", d.energy_j);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::tasklevel::cmux_tree_task;
+
+    #[test]
+    fn bounded_queue_rejects_when_full_and_drains_after_close() {
+        let q = BoundedQueue::new(2);
+        assert_eq!(q.try_push(1), Ok(1));
+        assert_eq!(q.try_push(2), Ok(2));
+        // full: the item comes back to the rejected caller
+        assert_eq!(q.try_push(3), Err(3));
+        assert_eq!(q.len(), 2);
+        q.close();
+        // closed: no new admissions, but the backlog still drains
+        assert_eq!(q.try_push(4), Err(4));
+        assert_eq!(q.pop_blocking(), Some(1));
+        assert_eq!(q.pop_blocking(), Some(2));
+        assert_eq!(q.pop_blocking(), None);
+    }
+
+    #[test]
+    fn sharded_tier_serves_and_drains_all_accepted() {
+        let cfg = ApacheConfig::default();
+        let shard_cfg = ShardConfig {
+            shards: 2,
+            queue_depth: 32,
+            ..ShardConfig::default()
+        };
+        let factory = |_shard: usize| Some(Runtime::reference());
+        let coord = ShardedCoordinator::with_runtime_factory(cfg, shard_cfg, factory);
+        let mut accepted = 0u64;
+        for i in 0..12u64 {
+            let adm = coord.submit(ServeRequest {
+                tenant: i % 5,
+                task: cmux_tree_task(&format!("t{i:02}"), 3),
+            });
+            if adm.accepted() {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 12, "depth-32 queues must admit 12 requests");
+        assert_eq!(coord.accepted(), 12);
+        let metrics = coord.metrics.clone();
+        let results = coord.drain();
+        assert_eq!(results.len(), 12, "no accepted request may be dropped");
+        assert!(results.windows(2).all(|w| w[0].name <= w[1].name));
+        for r in &results {
+            assert!(r.runtime_error.is_none(), "{:?}", r.runtime_error);
+            assert!(r.runtime_invocations > 0);
+            assert!(r.runtime_digest != 0);
+        }
+        assert_eq!(metrics.counter("admission.accepted"), 12);
+        assert_eq!(metrics.counter("tasks.completed"), 12);
+        assert!(metrics.percentile("serve.latency_s", 0.5).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn submissions_after_drain_are_rejected() {
+        let mut coord = ShardedCoordinator::with_runtime_factory(
+            ApacheConfig::default(),
+            ShardConfig::default(),
+            |_| None,
+        );
+        let adm = coord.submit(ServeRequest {
+            tenant: 1,
+            task: cmux_tree_task("a", 3),
+        });
+        assert!(adm.accepted());
+        coord.shutdown();
+        let adm = coord.submit(ServeRequest {
+            tenant: 1,
+            task: cmux_tree_task("b", 3),
+        });
+        assert!(!adm.accepted(), "a drained tier must stop admitting");
+        assert_eq!(coord.metrics.counter("admission.rejected"), 1);
+    }
+
+    #[test]
+    fn lookahead_metrics_surface_under_row_locality_pnm() {
+        let cfg = ApacheConfig {
+            backend: "pnm".into(),
+            use_runtime: true,
+            ..Default::default()
+        };
+        let shard_cfg = ShardConfig {
+            shards: 1,
+            ..ShardConfig::default()
+        };
+        let coord = ShardedCoordinator::new(cfg, shard_cfg);
+        for i in 0..4u64 {
+            let adm = coord.submit(ServeRequest {
+                tenant: i,
+                task: cmux_tree_task(&format!("t{i}"), 3),
+            });
+            assert!(adm.accepted());
+        }
+        let metrics = coord.metrics.clone();
+        let results = coord.drain();
+        assert_eq!(results.len(), 4);
+        assert!(metrics.counter("pnm.shard.lookahead.plans") >= 1);
+        assert!(
+            metrics.counter("pnm.shard.lookahead.predicted_row_hits")
+                + metrics.counter("pnm.shard.lookahead.predicted_row_misses")
+                > 0,
+            "the lookahead must have priced at least one batch"
+        );
+        assert!(metrics.counter("pnm.dispatches") >= 1);
+    }
+}

@@ -9,7 +9,9 @@
 //!   artifacts — list the runtime's artifact manifest + active backend
 
 use apache_fhe::baseline;
-use apache_fhe::coordinator::{ApacheConfig, Coordinator, TaskRequest};
+use apache_fhe::coordinator::{
+    ApacheConfig, Coordinator, ServeRequest, ShardConfig, ShardedCoordinator, TaskRequest,
+};
 use apache_fhe::hw::AreaPower;
 use apache_fhe::params::{CkksParams, TfheParams};
 use apache_fhe::sched::microcode;
@@ -84,6 +86,27 @@ fn load_config(args: &Args) -> ApacheConfig {
             }
         }
     }
+    // serving-tier knobs, same chain: --shards > APACHE_SHARDS > config
+    // (and --queue-depth > APACHE_QUEUE_DEPTH > config), validated at
+    // parse time whichever source wins
+    cfg.shards = ApacheConfig::resolve_shards(
+        args.opt("shards"),
+        ApacheConfig::env_shards(),
+        cfg.shards,
+    )
+    .unwrap_or_else(|e| {
+        eprintln!("config error: {e}");
+        std::process::exit(2);
+    });
+    cfg.queue_depth = ApacheConfig::resolve_queue_depth(
+        args.opt("queue-depth"),
+        ApacheConfig::env_queue_depth(),
+        cfg.queue_depth,
+    )
+    .unwrap_or_else(|e| {
+        eprintln!("config error: {e}");
+        std::process::exit(2);
+    });
     cfg
 }
 
@@ -111,21 +134,49 @@ fn main() {
         Some("serve") => {
             let cfg = load_config(&args);
             let n_tasks = args.opt_usize("tasks", 16);
-            let coord = Coordinator::new(cfg);
-            let reqs: Vec<TaskRequest> = (0..n_tasks)
-                .map(|i| TaskRequest {
-                    task: cmux_tree_task(&format!("task-{i:03}"), 31),
-                })
-                .collect();
-            let t0 = std::time::Instant::now();
-            let results = coord.serve_batch(reqs);
-            println!(
-                "served {} tasks in {} (modelled DIMM time: {})",
-                results.len(),
-                fmt_duration(t0.elapsed().as_secs_f64()),
-                fmt_duration(results.iter().map(|r| r.modelled_s).sum::<f64>()),
-            );
-            println!("{}", coord.metrics.to_json().render());
+            let mk_task = |i: usize| cmux_tree_task(&format!("task-{i:03}"), 31);
+            if args.flag("sharded") {
+                // the sharded tier: per-tenant affinity routing, bounded
+                // queues, double-buffered per-shard pipelines
+                let shard_cfg = ShardConfig::from_config(&cfg);
+                let coord = ShardedCoordinator::new(cfg, shard_cfg);
+                let t0 = std::time::Instant::now();
+                let mut rejected = 0usize;
+                for i in 0..n_tasks {
+                    let adm = coord.submit(ServeRequest {
+                        tenant: (i % 8) as u64,
+                        task: mk_task(i),
+                    });
+                    if !adm.accepted() {
+                        rejected += 1;
+                    }
+                }
+                let metrics = coord.metrics.clone();
+                let results = coord.drain();
+                println!(
+                    "served {} tasks in {} ({} shard batches, {} rejected; modelled DIMM time: {})",
+                    results.len(),
+                    fmt_duration(t0.elapsed().as_secs_f64()),
+                    metrics.counter("pnm.shard.batches"),
+                    rejected,
+                    fmt_duration(results.iter().map(|r| r.modelled_s).sum::<f64>()),
+                );
+                println!("{}", metrics.to_json().render());
+            } else {
+                let coord = Coordinator::new(cfg);
+                let reqs: Vec<TaskRequest> = (0..n_tasks)
+                    .map(|i| TaskRequest { task: mk_task(i) })
+                    .collect();
+                let t0 = std::time::Instant::now();
+                let results = coord.serve_batch(reqs);
+                println!(
+                    "served {} tasks in {} (modelled DIMM time: {})",
+                    results.len(),
+                    fmt_duration(t0.elapsed().as_secs_f64()),
+                    fmt_duration(results.iter().map(|r| r.modelled_s).sum::<f64>()),
+                );
+                println!("{}", coord.metrics.to_json().render());
+            }
         }
         Some("profile") => {
             let cfg = load_config(&args);
@@ -217,7 +268,8 @@ fn main() {
                 "usage: apache <serve|profile|inspect|area|config|baselines|artifacts> \
                  [--config file.toml] [--dimms N] [--tasks N] [--runtime] \
                  [--backend reference|pnm] [--alloc-policy rank_aware|identity] \
-                 [--plan-policy row_locality|fifo] [--residency-budget BYTES]"
+                 [--plan-policy row_locality|fifo] [--residency-budget BYTES] \
+                 [--sharded] [--shards N] [--queue-depth N]"
             );
             std::process::exit(2);
         }

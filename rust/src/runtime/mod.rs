@@ -779,9 +779,15 @@ impl Backend for PjrtBackend {
 }
 
 /// Backend-agnostic executor: manifest + validation + dispatch.
+///
+/// The backend box is `Send + Sync`: every compiled-in backend keeps its
+/// mutable state behind `Mutex`es, so a `Runtime` can be shared across
+/// the sharded serving tier's prep/exec threads behind an `Arc`. (The
+/// feature-gated PJRT client is the historical exception — it stays
+/// pinned to one thread inside its own backend when it lands.)
 pub struct Runtime {
     pub manifest: HashMap<String, ArtifactMeta>,
-    backend: Box<dyn Backend>,
+    backend: Box<dyn Backend + Send + Sync>,
     /// dispatch-planning policy of the batched entry point (`Fifo` — the
     /// pre-planner behavior — unless explicitly selected otherwise)
     plan_policy: PlanPolicy,
@@ -936,7 +942,7 @@ impl Runtime {
     }
 
     /// Assemble from explicit parts (tests, future backends).
-    pub fn from_parts(metas: Vec<ArtifactMeta>, backend: Box<dyn Backend>) -> Self {
+    pub fn from_parts(metas: Vec<ArtifactMeta>, backend: Box<dyn Backend + Send + Sync>) -> Self {
         Runtime {
             manifest: metas.into_iter().map(|m| (m.name.clone(), m)).collect(),
             backend,
@@ -1075,6 +1081,44 @@ impl Runtime {
             .into_iter()
             .map(|s| s.unwrap_or_else(|| Err(Error::new("backend returned too few batch results"))))
             .collect()
+    }
+
+    /// Host-side planning preview of a batch: validate the invocations,
+    /// preview their rank assignment, and price a dispatch plan — without
+    /// touching device state ([`Backend::rank_assignment`] is
+    /// side-effect-free and `plan::predict_from` clones the state it
+    /// prices against). The sharded serving tier uses this to plan batch
+    /// k+1 on the host while batch k executes on the device model.
+    /// `None` under [`PlanPolicy::Fifo`], on placement-blind backends, or
+    /// when nothing in the batch validates.
+    pub fn plan_lookahead(&self, invocations: &[Invocation]) -> Option<DispatchPlan> {
+        if self.plan_policy == PlanPolicy::Fifo || invocations.is_empty() {
+            return None;
+        }
+        let mut items: Vec<BatchItem<'_>> = Vec::new();
+        for inv in invocations {
+            let lens: Vec<usize> = inv.inputs.iter().map(|v| v.len()).collect();
+            if let Ok(meta) = self.validate(&inv.artifact, &lens) {
+                items.push(BatchItem {
+                    meta,
+                    inputs: &inv.inputs,
+                    pool: inv.pool,
+                    kinds: &inv.kinds,
+                });
+            }
+        }
+        if items.is_empty() {
+            return None;
+        }
+        let geo = self.backend.plan_geometry()?;
+        let ranks = self.backend.rank_assignment(&items)?;
+        let plan_items: Vec<PlanItem> = items
+            .iter()
+            .zip(&ranks)
+            .map(|(it, &rank)| it.plan_item(rank))
+            .collect();
+        let state = self.backend.plan_state();
+        Some(Planner::new(self.plan_policy, geo).plan_with(&plan_items, state.as_ref()))
     }
 
     pub fn artifact_names(&self) -> Vec<String> {

@@ -82,6 +82,34 @@ pub fn schedule_tasks(
     }
 }
 
+/// Deterministic tenant→shard affinity: the splitmix64 finalizer over
+/// the tenant id, reduced modulo the shard count. A tenant always lands
+/// on the same shard for a given shard count — the condition under which
+/// a returning pool reaches the shard whose runtime still holds its
+/// pinned residency-cache rows — and the mixer keeps sequential tenant
+/// ids from piling onto one shard.
+pub fn tenant_shard(tenant: u64, shards: usize) -> usize {
+    assert!(shards > 0, "tenant_shard: shard count must be >= 1");
+    let mut z = tenant.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    (z % shards as u64) as usize
+}
+
+/// Partition request indices across shard queues by tenant affinity:
+/// `out[s]` lists the indices of `tenants` routed to shard `s`, in
+/// submission order. The scheduling entry point of the sharded serving
+/// tier (`coordinator::shard`); within a shard, drained batches still go
+/// through [`schedule_tasks`] for the DIMM-level assignment.
+pub fn route_to_shards(tenants: &[u64], shards: usize) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); shards];
+    for (i, &t) in tenants.iter().enumerate() {
+        out[tenant_shard(t, shards)].push(i);
+    }
+    out
+}
+
 /// Build a simple CMUX-tree demo task (Fig. 8(a)).
 pub fn cmux_tree_task(name: &str, leaves: usize) -> Task {
     let mut g = OpGraph::default();
@@ -152,6 +180,36 @@ mod tests {
         let mut seen: Vec<usize> = a.per_dimm.iter().flatten().copied().collect();
         seen.sort_unstable();
         assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn tenant_affinity_is_deterministic_and_in_range() {
+        for shards in [1usize, 2, 4, 7] {
+            for t in 0..64u64 {
+                let s = tenant_shard(t, shards);
+                assert!(s < shards);
+                assert_eq!(s, tenant_shard(t, shards), "affinity must be stable");
+            }
+        }
+        // one shard takes everything
+        assert!((0..100).all(|t| tenant_shard(t, 1) == 0));
+    }
+
+    #[test]
+    fn tenant_affinity_spreads_sequential_ids() {
+        // sequential tenant ids must not collapse onto one shard
+        let shards = 4;
+        let routed = route_to_shards(&(0..64).collect::<Vec<u64>>(), shards);
+        assert_eq!(routed.len(), shards);
+        let occupied = routed.iter().filter(|q| !q.is_empty()).count();
+        assert!(occupied >= 3, "64 tenants landed on {occupied} of 4 shards");
+        // every index routed exactly once, in submission order per shard
+        let mut seen: Vec<usize> = routed.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..64).collect::<Vec<usize>>());
+        for q in &routed {
+            assert!(q.windows(2).all(|w| w[0] < w[1]));
+        }
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! Property tests for the sharded serving tier (`coordinator::shard`):
+//! the refactor's contract with the synchronous coordinator it replaced.
+//!
+//! * bit-identity: for any task mix, tenant assignment, shard count in
+//!   {1, 2, 4} and buffering mode, the sharded tier returns exactly the
+//!   synchronous `serve_batch` results — same names, output digests,
+//!   invocation counts and error flags. Operand pools are pure functions
+//!   of (ring, key), so per-shard lowerers reproduce the same operands
+//!   regardless of which tasks they see and in what order;
+//! * deterministic affinity: a tenant's shard is a pure function of
+//!   (tenant id, shard count), always in range;
+//! * per-slot error isolation: a corrupted artifact fails its own task
+//!   under every shard count while the sibling task completes;
+//! * drain-no-drop: every accepted request comes back exactly once, for
+//!   any admission pattern the bounded queues produce.
+
+use apache_fhe::coordinator::{
+    ApacheConfig, Coordinator, ServeRequest, ShardConfig, ShardedCoordinator, TaskRequest,
+    TaskResult,
+};
+use apache_fhe::runtime::{builtin_manifest, ReferenceBackend, Runtime};
+use apache_fhe::sched::graph::OpGraph;
+use apache_fhe::sched::oplevel::FheOp;
+use apache_fhe::sched::tasklevel::{cmux_tree_task, tenant_shard, Task};
+use apache_fhe::util::proptest_lite::{run_prop, GenExt};
+
+/// Serve the mix through the synchronous compatibility wrapper.
+fn serve_sync(
+    cfg: &ApacheConfig,
+    runtime: Option<Runtime>,
+    mix: &[(u64, Task)],
+) -> Vec<TaskResult> {
+    let coord = Coordinator::with_runtime(cfg.clone(), runtime);
+    let reqs: Vec<TaskRequest> = mix
+        .iter()
+        .map(|(_, t)| TaskRequest { task: t.clone() })
+        .collect();
+    coord.serve_batch(reqs)
+}
+
+/// Serve the mix through the sharded tier and drain it.
+fn serve_sharded(
+    cfg: &ApacheConfig,
+    shard_cfg: ShardConfig,
+    factory: impl FnMut(usize) -> Option<Runtime>,
+    mix: &[(u64, Task)],
+) -> Vec<TaskResult> {
+    let coord = ShardedCoordinator::with_runtime_factory(cfg.clone(), shard_cfg, factory);
+    for (tenant, task) in mix {
+        let adm = coord.submit(ServeRequest {
+            tenant: *tenant,
+            task: task.clone(),
+        });
+        assert!(adm.accepted(), "deep queues must admit the whole mix");
+    }
+    coord.drain()
+}
+
+fn assert_bit_identical(sharded: &[TaskResult], baseline: &[TaskResult], what: &str) {
+    assert_eq!(sharded.len(), baseline.len(), "{what}: count diverged");
+    for (a, b) in sharded.iter().zip(baseline) {
+        let name = &a.name;
+        assert_eq!(a.name, b.name, "{what}: result order diverged");
+        assert_eq!(
+            a.runtime_digest, b.runtime_digest,
+            "{what}: output digest diverged for {name}"
+        );
+        assert_eq!(
+            a.runtime_invocations, b.runtime_invocations,
+            "{what}: invocation count diverged for {name}"
+        );
+        assert_eq!(
+            a.runtime_error.is_some(),
+            b.runtime_error.is_some(),
+            "{what}: error flag diverged for {name}"
+        );
+    }
+}
+
+#[test]
+fn sharded_serving_is_bit_identical_to_serve_batch() {
+    run_prop("shard-bit-identity", 6, |rng, case| {
+        // a random multi-tenant mix: task sizes, tenants and batch
+        // windows all vary, so shard queues drain in different
+        // interleavings from case to case
+        let n = 3 + rng.uniform(6) as usize;
+        let mix: Vec<(u64, Task)> = (0..n)
+            .map(|i| {
+                let leaves = 1 + rng.uniform(4) as usize;
+                let tenant = rng.uniform(5);
+                (tenant, cmux_tree_task(&format!("c{case}-t{i:02}"), leaves))
+            })
+            .collect();
+        let cfg = ApacheConfig::default();
+        let baseline = serve_sync(&cfg, Some(Runtime::reference()), &mix);
+        assert_eq!(baseline.len(), n);
+        for shards in [1usize, 2, 4] {
+            let shard_cfg = ShardConfig {
+                shards,
+                queue_depth: 64,
+                batch_window: 1 + rng.uniform(4) as usize,
+                double_buffer: rng.gen_bool(),
+            };
+            let results = serve_sharded(&cfg, shard_cfg, |_| Some(Runtime::reference()), &mix);
+            assert_bit_identical(&results, &baseline, &format!("{shards} shards"));
+        }
+    });
+}
+
+#[test]
+fn pnm_sharded_matches_pnm_synchronous() {
+    // the placement-aware backend: per-shard runtimes hold their own
+    // allocators, dispatch planners and residency caches, yet the
+    // numeric outputs must match the one-runtime synchronous loop
+    // bit-for-bit — plans and placement permute dispatch, never results
+    let cfg = ApacheConfig {
+        backend: "pnm".into(),
+        use_runtime: true,
+        ..Default::default()
+    };
+    let mix: Vec<(u64, Task)> = (0..6)
+        .map(|i| ((i % 3) as u64, cmux_tree_task(&format!("p{i}"), 3)))
+        .collect();
+    let sync = Coordinator::new(cfg.clone());
+    let reqs: Vec<TaskRequest> = mix
+        .iter()
+        .map(|(_, t)| TaskRequest { task: t.clone() })
+        .collect();
+    let baseline = sync.serve_batch(reqs);
+    assert!(baseline.iter().all(|r| r.runtime_error.is_none()));
+    assert!(baseline.iter().all(|r| r.runtime_digest != 0));
+    for shards in [1usize, 2, 4] {
+        let shard_cfg = ShardConfig {
+            shards,
+            queue_depth: 32,
+            batch_window: 4,
+            double_buffer: true,
+        };
+        let coord = ShardedCoordinator::new(cfg.clone(), shard_cfg);
+        for (tenant, task) in &mix {
+            let adm = coord.submit(ServeRequest {
+                tenant: *tenant,
+                task: task.clone(),
+            });
+            assert!(adm.accepted());
+        }
+        let results = coord.drain();
+        assert_bit_identical(&results, &baseline, &format!("pnm {shards} shards"));
+    }
+}
+
+#[test]
+fn tenant_affinity_is_pure_and_in_range() {
+    run_prop("shard-affinity", 64, |rng, _| {
+        let tenant = rng.next_u64();
+        for shards in [1usize, 2, 4, 8, 13] {
+            let s = tenant_shard(tenant, shards);
+            assert!(s < shards, "affinity out of range: {s} >= {shards}");
+            assert_eq!(s, tenant_shard(tenant, shards), "affinity must be pure");
+        }
+        assert_eq!(tenant_shard(tenant, 1), 0);
+    });
+}
+
+/// A runtime whose external-product artifact declares a corrupt shape:
+/// CMUX lowering fails validation, pointwise ops still execute.
+fn corrupted_runtime() -> Runtime {
+    let mut metas = builtin_manifest();
+    for m in &mut metas {
+        if m.name == "external_product_n1024" {
+            m.shapes[0] = vec![1, 8];
+        }
+    }
+    Runtime::from_parts(metas, Box::new(ReferenceBackend::new()))
+}
+
+#[test]
+fn per_slot_error_isolation_survives_sharding() {
+    let mut add_graph = OpGraph::default();
+    add_graph.add(FheOp::HAdd, &[], None);
+    let add_task = Task {
+        name: "b-add".into(),
+        graph: add_graph,
+        state_bytes: 1 << 12,
+    };
+    let mix: Vec<(u64, Task)> = vec![(0, cmux_tree_task("a-cmux", 3)), (1, add_task)];
+    let cfg = ApacheConfig::default();
+    for shards in [1usize, 2, 4] {
+        let shard_cfg = ShardConfig {
+            shards,
+            queue_depth: 8,
+            batch_window: 2,
+            double_buffer: true,
+        };
+        let results = serve_sharded(&cfg, shard_cfg, |_| Some(corrupted_runtime()), &mix);
+        assert_eq!(results.len(), 2);
+        let cmux = results.iter().find(|r| r.name == "a-cmux").unwrap();
+        let add = results.iter().find(|r| r.name == "b-add").unwrap();
+        assert!(
+            cmux.runtime_error.is_some(),
+            "shape corruption must surface at {shards} shards"
+        );
+        assert!(
+            add.runtime_error.is_none(),
+            "the corrupt sibling must not poison b-add at {shards} shards"
+        );
+        assert_eq!(add.runtime_invocations, 1);
+    }
+}
+
+#[test]
+fn drain_returns_every_accepted_request_exactly_once() {
+    run_prop("shard-drain-no-drop", 8, |rng, case| {
+        let shards = [1usize, 2, 4][rng.uniform(3) as usize];
+        let depth = 1 + rng.uniform(4) as usize;
+        let shard_cfg = ShardConfig {
+            shards,
+            queue_depth: depth,
+            batch_window: 2,
+            double_buffer: rng.gen_bool(),
+        };
+        let cfg = ApacheConfig::default();
+        let coord = ShardedCoordinator::with_runtime_factory(cfg, shard_cfg, |_| None);
+        let n = 5 + rng.uniform(20) as usize;
+        let mut accepted_names: Vec<String> = Vec::new();
+        for i in 0..n {
+            // tiny queues under a burst: some of these are rejected,
+            // depending on how fast the shard workers drain
+            let name = format!("d{case}-{i:02}");
+            let adm = coord.submit(ServeRequest {
+                tenant: rng.next_u64(),
+                task: cmux_tree_task(&name, 1),
+            });
+            if adm.accepted() {
+                accepted_names.push(name);
+            }
+        }
+        assert_eq!(coord.accepted() as usize, accepted_names.len());
+        let results = coord.drain();
+        let got: Vec<String> = results.iter().map(|r| r.name.clone()).collect();
+        accepted_names.sort();
+        assert_eq!(got, accepted_names, "drain must return the accepted set");
+    });
+}
