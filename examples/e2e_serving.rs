@@ -114,7 +114,13 @@ fn main() {
         backend: "pnm".into(),
         ..Default::default()
     };
-    let rt = apache_fhe::runtime::Runtime::for_backend("pnm", &pnm_cfg.dimm).expect("pnm");
+    let rt = apache_fhe::runtime::RuntimeOptions {
+        backend: "pnm".into(),
+        dimm: pnm_cfg.dimm.clone(),
+        ..Default::default()
+    }
+    .build()
+    .expect("pnm");
     let pnm = Coordinator::with_runtime(pnm_cfg, Some(rt));
     let pnm_results = pnm.serve_batch(build_requests());
     assert_eq!(pnm_results.len(), n);

@@ -29,7 +29,7 @@
 use apache_fhe::hw::{AllocPolicy, DimmConfig};
 use apache_fhe::math::ntt::NttTable;
 use apache_fhe::math::sampler::Rng;
-use apache_fhe::runtime::{Invocation, PlanPolicy, Runtime};
+use apache_fhe::runtime::{Invocation, PlanPolicy, Runtime, RuntimeOptions};
 use apache_fhe::sched::plan::PlanCost;
 use apache_fhe::util::benchkit::{bench, fmt_rate, Table};
 use apache_fhe::util::jsonw::Json;
@@ -102,7 +102,12 @@ fn mixed_batch(rng: &mut Rng, rt: &Runtime, batch: usize) -> Vec<Invocation> {
 
 fn main() {
     let reference = Runtime::reference();
-    let pnm = Runtime::for_backend("pnm", &DimmConfig::paper()).expect("pnm backend");
+    let pnm = RuntimeOptions {
+        backend: "pnm".into(),
+        ..RuntimeOptions::default()
+    }
+    .build()
+    .expect("pnm backend");
     // the recorded traces come from separate runtimes that execute each
     // batch exactly once: the timed runtime's trace accumulates across
     // bench repetitions of identical operands, which would saturate the
@@ -112,8 +117,13 @@ fn main() {
     let cold_runtimes: Vec<Runtime> = cold_policies
         .iter()
         .map(|&p| {
-            Runtime::for_backend_with_policy("pnm", &DimmConfig::paper(), p)
-                .expect("pnm backend")
+            RuntimeOptions {
+                backend: "pnm".into(),
+                alloc_policy: p,
+                ..RuntimeOptions::default()
+            }
+            .build()
+            .expect("pnm backend")
         })
         .collect();
     // the plan-policy A/B runs on a rank-starved DIMM: more pools than
@@ -128,8 +138,14 @@ fn main() {
     let plan_runtimes: Vec<Runtime> = plan_policies
         .iter()
         .map(|&p| {
-            Runtime::for_backend_with_policies("pnm", &plan_dimm, AllocPolicy::RankAware, p)
-                .expect("pnm backend")
+            RuntimeOptions {
+                backend: "pnm".into(),
+                dimm: plan_dimm.clone(),
+                plan_policy: p,
+                ..RuntimeOptions::default()
+            }
+            .build()
+            .expect("pnm backend")
         })
         .collect();
     let mut rng = Rng::seeded(23);
@@ -282,13 +298,14 @@ fn main() {
     let residency_runtimes: Vec<Runtime> = residency_budgets
         .iter()
         .map(|&budget| {
-            Runtime::for_backend_configured(
-                "pnm",
-                &plan_dimm,
-                AllocPolicy::RankAware,
-                PlanPolicy::RowLocality,
-                budget,
-            )
+            RuntimeOptions {
+                backend: "pnm".into(),
+                dimm: plan_dimm.clone(),
+                plan_policy: PlanPolicy::RowLocality,
+                residency_budget: budget,
+                ..RuntimeOptions::default()
+            }
+            .build()
             .expect("pnm backend")
         })
         .collect();

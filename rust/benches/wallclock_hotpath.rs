@@ -1,120 +1,152 @@
-//! Real wall-clock micro-benchmarks of the functional hot paths: Rust NTT,
-//! external product, gate bootstrap, CKKS CMult, and the PJRT artifact
-//! round-trip. These are the §Perf before/after numbers in EXPERIMENTS.md.
-use apache_fhe::ckks::ciphertext::encrypt;
-use apache_fhe::ckks::encoding::C64;
-use apache_fhe::ckks::keys::CkksKeys;
-use apache_fhe::ckks::{ops, CkksCtx};
-use apache_fhe::math::modops::ntt_primes;
+//! Wall-clock A/B of the numeric hot path: the vectorized native backend
+//! (lazy-reduction kernels over flat operand arenas) against the scalar
+//! reference backend, through the same `Runtime::execute_batch_u64` seam
+//! the serving tier drives. CI runs this and uploads the
+//! `BENCH_wallclock_hotpath.json` artifact as the per-commit perf
+//! trajectory of the host datapath.
+//!
+//! The headline gate rides in the bench itself: at batch 16 the native
+//! backend must clear 2x the reference backend's batch-NTT throughput —
+//! the acceptance bar of the arena/vectorization work. A bit-identity
+//! spot check precedes every timing so the speed being measured is the
+//! speed of the *same* function.
+
 use apache_fhe::math::ntt::NttTable;
 use apache_fhe::math::sampler::Rng;
-use apache_fhe::params::{CkksParams, TfheParams};
-use apache_fhe::runtime::Runtime;
-use apache_fhe::tfhe::bootstrap::{bootstrap_to_sign, BootstrapKey};
-use apache_fhe::tfhe::gates::encrypt_bool;
-use apache_fhe::tfhe::lwe::LweSecretKey;
-use apache_fhe::tfhe::rgsw::{external_product, RgswCiphertext};
-use apache_fhe::tfhe::rlwe::{RlweCiphertext, RlweSecretKey};
-use apache_fhe::tfhe::TfheCtx;
-use apache_fhe::util::benchkit::{bench, bench_once, fmt_rate, Table};
+use apache_fhe::math::vntt::VnttTable;
+use apache_fhe::runtime::{Invocation, Runtime, RuntimeOptions};
+use apache_fhe::util::benchkit::{bench, fmt_rate, Table};
+use apache_fhe::util::jsonw::Json;
+use std::sync::Arc;
+
+/// A batch of `ntt_fwd_n1024` invocations: distinct data operands, one
+/// Arc-shared twiddle table — the operand shape the lowerer produces.
+fn ntt_batch(rng: &mut Rng, rt: &Runtime, batch: usize) -> Vec<Invocation> {
+    let meta = &rt.manifest["ntt_fwd_n1024"];
+    let q = meta.modulus;
+    let len: usize = meta.shapes[0].iter().product();
+    let n = *meta.shapes[0].last().unwrap();
+    let fwd_tw = Arc::new(NttTable::new(n, q).forward_twiddles().to_vec());
+    (0..batch)
+        .map(|_| {
+            let data: Arc<Vec<u64>> = Arc::new((0..len).map(|_| rng.uniform(q)).collect());
+            Invocation::new("ntt_fwd_n1024", vec![data, fwd_tw.clone()])
+        })
+        .collect()
+}
 
 fn main() {
-    let mut rng = Rng::seeded(1);
-    let mut t = Table::new(&["hot path", "median", "throughput"]);
+    let reference = Runtime::reference();
+    let native = RuntimeOptions {
+        backend: "native".into(),
+        ..RuntimeOptions::default()
+    }
+    .build()
+    .expect("native backend");
+    let mut rng = Rng::seeded(29);
 
-    // NTT at several sizes
-    for logn in [10usize, 12] {
-        let n = 1 << logn;
-        let q = ntt_primes(28, 2 * n as u64, 1)[0];
+    // bit-identity spot check: same batch, both backends, every slot
+    let check = ntt_batch(&mut rng, &reference, 4);
+    let ref_outs = reference.execute_batch_u64(&check);
+    let nat_outs = native.execute_batch_u64(&check);
+    for (i, (r, n)) in ref_outs.iter().zip(&nat_outs).enumerate() {
+        assert_eq!(
+            r.as_ref().expect("reference executes"),
+            n.as_ref().expect("native executes"),
+            "slot {i}: native diverged from reference"
+        );
+    }
+
+    let mut t = Table::new(&["batch", "reference", "native", "native/ref"]);
+    let mut rows_json: Vec<Json> = Vec::new();
+    let mut speedup_at_16 = 0.0f64;
+    for batch in [1usize, 16] {
+        let invs = ntt_batch(&mut rng, &reference, batch);
+        // warm both table caches before timing
+        for rt in [&reference, &native] {
+            for r in rt.execute_batch_u64(&invs) {
+                r.unwrap();
+            }
+        }
+        let st_ref = bench(&format!("reference ntt x{batch}"), || {
+            for r in std::hint::black_box(reference.execute_batch_u64(&invs)) {
+                r.unwrap();
+            }
+        });
+        let st_nat = bench(&format!("native    ntt x{batch}"), || {
+            for r in std::hint::black_box(native.execute_batch_u64(&invs)) {
+                r.unwrap();
+            }
+        });
+        let tput_ref = batch as f64 / st_ref.median;
+        let tput_nat = batch as f64 / st_nat.median;
+        let speedup = tput_nat / tput_ref;
+        if batch == 16 {
+            speedup_at_16 = speedup;
+        }
+        t.row(&[
+            batch.to_string(),
+            fmt_rate(tput_ref),
+            fmt_rate(tput_nat),
+            format!("{speedup:.2}x"),
+        ]);
+        rows_json.push(
+            Json::obj()
+                .put("artifact", "ntt_fwd_n1024")
+                .put("batch", batch)
+                .put("reference_ops_per_s", tput_ref)
+                .put("native_ops_per_s", tput_nat)
+                .put("native_over_reference", speedup),
+        );
+    }
+    t.print("wall-clock hot path: batch NTT through execute_batch_u64");
+
+    // kernel-level control: one poly through the forward transform,
+    // scalar oracle vs lazy lanes, no dispatch layer in the way — the
+    // per-core speedup the batch numbers amplify with tiling
+    let kernel_json = {
+        let n = 1024usize;
+        let q = reference.manifest["ntt_fwd_n1024"].modulus;
         let table = NttTable::new(n, q);
-        let data = rng.uniform_poly(n, q);
-        let st = bench(&format!("ntt-{n}"), || {
-            let mut a = data.clone();
+        let vt = VnttTable::from_base(NttTable::new(n, q));
+        let poly = rng.uniform_poly(n, q);
+        let st_scalar = bench("scalar ntt kernel", || {
+            let mut a = poly.clone();
             table.forward(&mut a);
             std::hint::black_box(&a);
         });
-        t.row(&[
-            format!("NTT N={n}"),
-            apache_fhe::util::benchkit::fmt_duration(st.median),
-            fmt_rate(st.ops_per_sec()),
-        ]);
-    }
-
-    // TFHE external product + gate bootstrap (tiny params)
-    let ctx = TfheCtx::new(TfheParams::tiny());
-    let sk = LweSecretKey::generate(&ctx, &mut rng);
-    let zk = RlweSecretKey::generate(&ctx, &mut rng);
-    let rgsw = RgswCiphertext::encrypt_bit(&ctx, &zk, 1, ctx.params.rlwe_sigma, &mut rng);
-    let ct = RlweCiphertext::encrypt_phase(
-        &ctx,
-        &zk,
-        &vec![0u64; ctx.n_poly()],
-        ctx.params.rlwe_sigma,
-        &mut rng,
-    );
-    let st = bench("external-product", || {
-        std::hint::black_box(external_product(&ctx, &rgsw, &ct));
-    });
-    t.row(&[
-        "TFHE external product (N=256)".into(),
-        apache_fhe::util::benchkit::fmt_duration(st.median),
-        fmt_rate(st.ops_per_sec()),
-    ]);
-
-    let bk = BootstrapKey::generate(&ctx, &sk, &zk, &mut rng);
-    let c = encrypt_bool(&ctx, &sk, true, &mut rng);
-    let st = bench_once("gate-bootstrap", || {
-        std::hint::black_box(bootstrap_to_sign(&ctx, &bk, &c, ctx.q() / 8));
-    });
-    t.row(&[
-        "TFHE gate bootstrap (tiny)".into(),
-        apache_fhe::util::benchkit::fmt_duration(st.median),
-        fmt_rate(st.ops_per_sec()),
-    ]);
-
-    // CKKS CMult (tiny)
-    let cctx = CkksCtx::new(CkksParams::tiny());
-    let keys = CkksKeys::generate(&cctx, &[], false, &mut rng);
-    let slots = cctx.params.num_slots();
-    let z: Vec<C64> = (0..slots).map(|i| C64::from_re(i as f64 / slots as f64)).collect();
-    let a = encrypt(&cctx, &keys.sk, &z, cctx.params.scale, cctx.max_level(), &mut rng);
-    let st = bench_once("ckks-cmult", || {
-        std::hint::black_box(ops::rescale(&cctx, &ops::square(&cctx, &keys, &a)));
-    });
-    t.row(&[
-        "CKKS CMult+rescale (N=1024, L=4)".into(),
-        apache_fhe::util::benchkit::fmt_duration(st.median),
-        fmt_rate(st.ops_per_sec()),
-    ]);
-
-    // runtime artifact round trip (PJRT when artifacts + feature are
-    // present, the hermetic ReferenceBackend otherwise)
-    {
-        let rt = Runtime::new(Runtime::default_dir()).unwrap_or_else(|_| Runtime::reference());
-        let q = rt.manifest["external_product_n256"].modulus;
-        let table = NttTable::new(256, q);
-        let mk = |rng: &mut Rng, bound: u64, len: usize| -> Vec<u64> {
-            (0..len).map(|_| rng.uniform(bound)).collect()
-        };
-        let digits = mk(&mut rng, 256, 14 * 256);
-        let rows_b = mk(&mut rng, q, 14 * 256);
-        let rows_a = mk(&mut rng, q, 14 * 256);
-        let inputs = vec![
-            digits,
-            rows_b,
-            rows_a,
-            table.forward_twiddles().to_vec(),
-            table.inverse_twiddles().to_vec(),
-            vec![table.n_inv()],
-        ];
-        let st = bench("runtime-external-product", || {
-            std::hint::black_box(rt.execute_u64("external_product_n256", &inputs).unwrap());
+        let st_lazy = bench("lazy ntt kernel", || {
+            let mut a = poly.clone();
+            vt.forward_lazy(&mut a);
+            vt.normalize(&mut a);
+            std::hint::black_box(&a);
         });
-        t.row(&[
-            format!("{} external_product_n256", rt.backend_name()),
-            apache_fhe::util::benchkit::fmt_duration(st.median),
-            fmt_rate(st.ops_per_sec()),
-        ]);
-    }
-    t.print("wall-clock hot paths (this machine)");
+        let speedup = st_scalar.median / st_lazy.median;
+        println!(
+            "kernel n={n}: scalar {} / lazy {} ({speedup:.2}x)",
+            fmt_rate(st_scalar.ops_per_sec()),
+            fmt_rate(st_lazy.ops_per_sec()),
+        );
+        Json::obj()
+            .put("n", n)
+            .put("scalar_ops_per_s", st_scalar.ops_per_sec())
+            .put("lazy_ops_per_s", st_lazy.ops_per_sec())
+            .put("lazy_over_scalar", speedup)
+    };
+
+    let doc = Json::obj()
+        .put("bench", "wallclock_hotpath")
+        .put("batches", Json::Arr(rows_json))
+        .put("kernel", kernel_json)
+        .put("speedup_at_batch16", speedup_at_16);
+    let path = std::env::var("BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_wallclock_hotpath.json".to_string());
+    std::fs::write(&path, doc.render() + "\n").expect("write bench artifact");
+    println!("wrote {path}");
+
+    // the acceptance gate of the arena/vectorization work
+    assert!(
+        speedup_at_16 >= 2.0,
+        "native must clear 2x reference batch-NTT throughput at batch 16, got {speedup_at_16:.2}x"
+    );
 }

@@ -1,9 +1,10 @@
 //! Coordinator configuration: TOML-subset file + CLI overrides.
 
 use crate::hw::{AllocPolicy, DimmConfig, DramTiming};
+use crate::runtime::RuntimeOptions;
 use crate::sched::plan::PlanPolicy;
 use crate::util::error::{Error, Result};
-use crate::util::toml_lite;
+use crate::util::{knob, toml_lite};
 
 /// Full system configuration (one file drives the launcher, the hardware
 /// model and the scheduler).
@@ -16,11 +17,11 @@ pub struct ApacheConfig {
     /// execute the numeric hot path through the runtime backend
     pub use_runtime: bool,
     /// which [`crate::runtime::Backend`] serves the hot path:
-    /// `"reference"` (pure Rust / PJRT artifacts) or `"pnm"` (the
-    /// near-memory device model with its cycle/energy trace). The
-    /// `apache` CLI resolves precedence as `--backend` > the
-    /// `APACHE_BACKEND` environment variable (the CI matrix dimension)
-    /// > this config key.
+    /// `"reference"` (pure Rust / PJRT artifacts), `"native"` (vectorized
+    /// host kernels over flat operand arenas) or `"pnm"` (the near-memory
+    /// device model with its cycle/energy trace). The `apache` CLI
+    /// resolves precedence as `--backend` > the `APACHE_BACKEND`
+    /// environment variable (the CI matrix dimension) > this config key.
     pub backend: String,
     /// operand-placement policy of placement-aware backends:
     /// `"rank_aware"` (explicit bank/row extents through `hw::alloc`,
@@ -61,47 +62,18 @@ pub const MAX_SHARDS: usize = 256;
 /// Queue-depth ceiling, same rationale: bounded queues are the point.
 pub const MAX_QUEUE_DEPTH: usize = 1 << 20;
 
-fn validate_shards(raw: i64, what: &str) -> Result<usize> {
-    if raw < 1 || raw > MAX_SHARDS as i64 {
-        return Err(Error::new(format!(
-            "{what} must be in 1..={MAX_SHARDS}, got {raw}"
-        )));
+fn validate_count(raw: i64, max: usize, what: &str) -> Result<usize> {
+    if raw < 1 || raw > max as i64 {
+        return Err(Error::new(format!("{what} must be in 1..={max}, got {raw}")));
     }
     Ok(raw as usize)
 }
 
-fn validate_queue_depth(raw: i64, what: &str) -> Result<usize> {
-    if raw < 1 || raw > MAX_QUEUE_DEPTH as i64 {
-        return Err(Error::new(format!(
-            "{what} must be in 1..={MAX_QUEUE_DEPTH}, got {raw}"
-        )));
-    }
-    Ok(raw as usize)
-}
-
-fn resolve_knob(
-    cli: Option<&str>,
-    env: Option<String>,
-    cfg: usize,
-    names: (&str, &str),
-    validate: fn(i64, &str) -> Result<usize>,
-) -> Result<usize> {
-    // CLI > env > config — the same precedence rule as --backend /
-    // --alloc-policy / --plan-policy / --residency-budget. A pure
-    // function of its inputs so the order itself is unit-testable
-    // without mutating process-global environment state.
-    let (cli_name, env_name) = names;
-    let parse = |raw: &str, what: &str| -> Result<usize> {
-        let n: i64 = raw
-            .parse()
-            .map_err(|_| Error::new(format!("{what} must be an integer, got `{raw}`")))?;
-        validate(n, what)
-    };
-    match (cli, env) {
-        (Some(raw), _) => parse(raw, cli_name),
-        (None, Some(raw)) => parse(&raw, env_name),
-        (None, None) => Ok(cfg),
-    }
+fn parse_count(raw: &str, max: usize, what: &str) -> Result<usize> {
+    let n: i64 = raw
+        .parse()
+        .map_err(|_| Error::new(format!("{what} must be an integer, got `{raw}`")))?;
+    validate_count(n, max, what)
 }
 
 impl Default for ApacheConfig {
@@ -168,12 +140,14 @@ impl ApacheConfig {
                 }
                 raw as u64
             },
-            shards: validate_shards(
+            shards: validate_count(
                 doc.get_int("system", "shards", def.shards as i64),
+                MAX_SHARDS,
                 "system.shards",
             )?,
-            queue_depth: validate_queue_depth(
+            queue_depth: validate_count(
                 doc.get_int("system", "queue_depth", def.queue_depth as i64),
+                MAX_QUEUE_DEPTH,
                 "system.queue_depth",
             )?,
             worker_threads: doc.get_int("system", "worker_threads", def.worker_threads as i64)
@@ -182,12 +156,8 @@ impl ApacheConfig {
         if cfg.dimms == 0 {
             return Err(Error::new("system.dimms must be >= 1"));
         }
-        if cfg.backend != "reference" && cfg.backend != "pnm" {
-            return Err(Error::new(format!(
-                "system.backend must be `reference` or `pnm`, got `{}`",
-                cfg.backend
-            )));
-        }
+        RuntimeOptions::validate_backend(&cfg.backend)
+            .map_err(|e| Error::new(format!("system.backend: {e}")))?;
         AllocPolicy::parse(&cfg.alloc_policy)
             .map_err(|e| Error::new(format!("system.alloc_policy: {e}")))?;
         PlanPolicy::parse(&cfg.plan_policy)
@@ -199,48 +169,61 @@ impl ApacheConfig {
         Self::from_toml(&std::fs::read_to_string(path)?)
     }
 
-    /// Shard-count override from `APACHE_SHARDS`. `None` when unset or
-    /// empty; validated by [`ApacheConfig::resolve_shards`] at the point
-    /// of use.
+    /// Parse + validate a shard count from one knob source (the
+    /// per-value half of `knob::SHARDS.resolve(...)`; the resolver
+    /// prefixes the winning source's spelling on rejection).
+    pub fn parse_shards(raw: &str) -> Result<usize> {
+        parse_count(raw, MAX_SHARDS, "shard count")
+    }
+
+    /// Parse + validate a queue depth from one knob source (pairs with
+    /// `knob::QUEUE_DEPTH.resolve(...)`).
+    pub fn parse_queue_depth(raw: &str) -> Result<usize> {
+        parse_count(raw, MAX_QUEUE_DEPTH, "queue depth")
+    }
+
+    /// The runtime construction options this config selects — the bridge
+    /// from the string-typed config/CLI/env knobs to the typed
+    /// [`RuntimeOptions`] builder. The `artifacts_dir` rides along so the
+    /// `reference` backend keeps its on-disk-manifest upgrade path.
+    pub fn runtime_options(&self) -> Result<RuntimeOptions> {
+        RuntimeOptions::validate_backend(&self.backend)?;
+        Ok(RuntimeOptions {
+            backend: self.backend.clone(),
+            dimm: self.dimm.clone(),
+            alloc_policy: AllocPolicy::parse(&self.alloc_policy)?,
+            plan_policy: PlanPolicy::parse(&self.plan_policy)?,
+            residency_budget: self.residency_budget_bytes,
+            artifacts_dir: Some(self.artifacts_dir.clone()),
+        })
+    }
+
+    #[deprecated(note = "read through `crate::util::knob::SHARDS.env_value()`")]
     pub fn env_shards() -> Option<String> {
-        std::env::var("APACHE_SHARDS").ok().filter(|s| !s.is_empty())
+        knob::SHARDS.env_value()
     }
 
-    /// Queue-depth override from `APACHE_QUEUE_DEPTH`. `None` when unset
-    /// or empty; validated by [`ApacheConfig::resolve_queue_depth`].
+    #[deprecated(note = "read through `crate::util::knob::QUEUE_DEPTH.env_value()`")]
     pub fn env_queue_depth() -> Option<String> {
-        std::env::var("APACHE_QUEUE_DEPTH")
-            .ok()
-            .filter(|s| !s.is_empty())
+        knob::QUEUE_DEPTH.env_value()
     }
 
-    /// Resolve the serving-tier shard count through the standard
-    /// precedence chain — `--shards` (CLI) > `APACHE_SHARDS` (env) > the
-    /// `[system] shards` config key — validating whichever source wins.
+    #[deprecated(
+        note = "resolve through `crate::util::knob::SHARDS` with `ApacheConfig::parse_shards`"
+    )]
     pub fn resolve_shards(cli: Option<&str>, env: Option<String>, cfg: usize) -> Result<usize> {
-        resolve_knob(
-            cli,
-            env,
-            cfg,
-            ("--shards", "APACHE_SHARDS"),
-            validate_shards,
-        )
+        knob::SHARDS.resolve_from(cli, env.as_deref(), cfg, Self::parse_shards)
     }
 
-    /// Resolve the shard queue depth through the same chain:
-    /// `--queue-depth` > `APACHE_QUEUE_DEPTH` > `[system] queue_depth`.
+    #[deprecated(
+        note = "resolve through `crate::util::knob::QUEUE_DEPTH` with `ApacheConfig::parse_queue_depth`"
+    )]
     pub fn resolve_queue_depth(
         cli: Option<&str>,
         env: Option<String>,
         cfg: usize,
     ) -> Result<usize> {
-        resolve_knob(
-            cli,
-            env,
-            cfg,
-            ("--queue-depth", "APACHE_QUEUE_DEPTH"),
-            validate_queue_depth,
-        )
+        knob::QUEUE_DEPTH.resolve_from(cli, env.as_deref(), cfg, Self::parse_queue_depth)
     }
 }
 
@@ -289,6 +272,8 @@ imc_ks = false
     fn backend_selection_parses_and_validates() {
         let cfg = ApacheConfig::from_toml("[system]\nbackend = \"pnm\"\n").unwrap();
         assert_eq!(cfg.backend, "pnm");
+        let cfg = ApacheConfig::from_toml("[system]\nbackend = \"native\"\n").unwrap();
+        assert_eq!(cfg.backend, "native");
         let err = ApacheConfig::from_toml("[system]\nbackend = \"gpu\"\n");
         assert!(err.is_err(), "unknown backends must be rejected");
         assert!(err.unwrap_err().to_string().contains("backend"));
@@ -346,9 +331,11 @@ imc_ks = false
     }
 
     #[test]
+    #[allow(deprecated)]
     fn shard_precedence_is_cli_env_config() {
-        // the standard chain: CLI beats env beats config — NOT the
-        // inverted config-first order
+        // the deprecated wrappers must stay behaviorally equivalent to
+        // the `util::knob` resolver they delegate to (the canonical
+        // precedence tests live in `util::knob::tests`)
         let r = ApacheConfig::resolve_shards(Some("8"), Some("4".into()), 2);
         assert_eq!(r.unwrap(), 8, "CLI must beat env and config");
         let r = ApacheConfig::resolve_shards(None, Some("4".into()), 2);
@@ -362,6 +349,7 @@ imc_ks = false
     }
 
     #[test]
+    #[allow(deprecated)]
     fn shard_resolution_rejects_bad_values_from_any_source() {
         // a bad winning source is an error even when a lower-precedence
         // source holds a valid value — silent fallback would mask typos
@@ -375,6 +363,23 @@ imc_ks = false
         }
         let err = ApacheConfig::resolve_queue_depth(Some("0"), None, 64);
         assert!(err.unwrap_err().to_string().contains("--queue-depth"));
+    }
+
+    #[test]
+    fn runtime_options_bridge_carries_every_knob() {
+        let cfg = ApacheConfig::from_toml(
+            "[system]\nbackend = \"native\"\nplan_policy = \"fifo\"\nalloc_policy = \"identity\"\nresidency_budget_bytes = 4096\n",
+        )
+        .unwrap();
+        let opts = cfg.runtime_options().unwrap();
+        assert_eq!(opts.backend, "native");
+        assert_eq!(opts.plan_policy.name(), "fifo");
+        assert_eq!(opts.alloc_policy.name(), "identity");
+        assert_eq!(opts.residency_budget, 4096);
+        assert_eq!(opts.artifacts_dir.as_deref(), Some("artifacts"));
+        // and the options actually build a runtime of the selected kind
+        let rt = opts.build().unwrap();
+        assert_eq!(rt.backend_name(), "native");
     }
 
     #[test]

@@ -60,25 +60,8 @@ pub(crate) fn build_runtime(cfg: &ApacheConfig) -> Option<Runtime> {
         return None;
     }
     // policies were validated at config parse time; a hand-built
-    // config with a bad policy surfaces here
-    let built = crate::sched::plan::PlanPolicy::parse(&cfg.plan_policy).and_then(|plan_policy| {
-        if cfg.backend == "reference" {
-            // the reference path may upgrade to on-disk PJRT
-            // artifacts; planning no-ops on placement-blind
-            // backends but the policy threads uniformly
-            Runtime::new(&cfg.artifacts_dir).map(|rt| rt.with_plan_policy(plan_policy))
-        } else {
-            crate::hw::AllocPolicy::parse(&cfg.alloc_policy).and_then(|policy| {
-                Runtime::for_backend_configured(
-                    &cfg.backend,
-                    &cfg.dimm,
-                    policy,
-                    plan_policy,
-                    cfg.residency_budget_bytes,
-                )
-            })
-        }
-    });
+    // config with a bad knob surfaces here
+    let built = cfg.runtime_options().and_then(|opts| opts.build());
     match built {
         Ok(rt) => {
             eprintln!("[coordinator] runtime backend: {}", rt.backend_name());
@@ -281,7 +264,13 @@ mod tests {
             backend: "pnm".into(),
             ..Default::default()
         };
-        let rt = Runtime::for_backend("pnm", &cfg.dimm).unwrap();
+        let rt = crate::runtime::RuntimeOptions {
+            backend: "pnm".into(),
+            dimm: cfg.dimm.clone(),
+            ..Default::default()
+        }
+        .build()
+        .unwrap();
         let coord = Coordinator::with_runtime(cfg, Some(rt));
         let reqs: Vec<TaskRequest> = (0..4)
             .map(|i| TaskRequest {

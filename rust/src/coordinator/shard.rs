@@ -84,7 +84,8 @@ impl Admission {
 
 /// Serving-tier knobs. Shard count and queue depth resolve through the
 /// standard CLI > env > config precedence chain
-/// ([`ApacheConfig::resolve_shards`] / [`ApacheConfig::resolve_queue_depth`]).
+/// ([`crate::util::knob::SHARDS`] / [`crate::util::knob::QUEUE_DEPTH`]
+/// with [`ApacheConfig::parse_shards`] / [`ApacheConfig::parse_queue_depth`]).
 #[derive(Debug, Clone)]
 pub struct ShardConfig {
     /// independent pipelines, each with its own queue and runtime

@@ -19,6 +19,7 @@ use apache_fhe::sched::oplevel::{profile_op, FheOp, OpShapes};
 use apache_fhe::sched::tasklevel::cmux_tree_task;
 use apache_fhe::util::benchkit::{fmt_bytes, fmt_duration, Table};
 use apache_fhe::util::cli::Args;
+use apache_fhe::util::knob;
 
 fn shapes() -> OpShapes {
     OpShapes {
@@ -41,72 +42,51 @@ fn load_config(args: &Args) -> ApacheConfig {
     if args.flag("runtime") {
         cfg.use_runtime = true;
     }
-    // backend precedence: --backend > APACHE_BACKEND > config file
-    if let Some(b) = args.opt("backend") {
-        cfg.backend = b.to_string();
-    } else if let Some(b) = apache_fhe::runtime::Runtime::env_backend() {
-        cfg.backend = b;
-    }
-    // placement-policy precedence mirrors the backend's:
-    // --alloc-policy > APACHE_ALLOC_POLICY > config file
-    if let Some(p) = args.opt("alloc-policy") {
-        cfg.alloc_policy = p.to_string();
-    } else if let Some(p) = apache_fhe::runtime::Runtime::env_alloc_policy() {
-        cfg.alloc_policy = p;
-    }
-    if let Err(e) = apache_fhe::hw::AllocPolicy::parse(&cfg.alloc_policy) {
+    // every knob resolves through the same CLI > env > config chain
+    // (util::knob), validated at parse time whichever source wins
+    fn die(e: apache_fhe::util::error::Error) -> ! {
         eprintln!("config error: {e}");
         std::process::exit(2);
     }
-    // dispatch-planning precedence mirrors both:
-    // --plan-policy > APACHE_PLAN_POLICY > config file
-    if let Some(p) = args.opt("plan-policy") {
-        cfg.plan_policy = p.to_string();
-    } else if let Some(p) = apache_fhe::runtime::Runtime::env_plan_policy() {
-        cfg.plan_policy = p;
-    }
-    if let Err(e) = apache_fhe::sched::plan::PlanPolicy::parse(&cfg.plan_policy) {
-        eprintln!("config error: {e}");
-        std::process::exit(2);
-    }
-    // residency-cache precedence, same chain:
-    // --residency-budget > APACHE_RESIDENCY_BUDGET > config file
-    let budget_override = args
-        .opt("residency-budget")
-        .map(|s| s.to_string())
-        .or_else(apache_fhe::runtime::Runtime::env_residency_budget);
-    if let Some(raw) = budget_override {
-        match raw.parse::<u64>() {
-            Ok(b) => cfg.residency_budget_bytes = b,
-            Err(_) => {
-                eprintln!(
-                    "config error: residency budget must be a byte count >= 0, got `{raw}`"
-                );
-                std::process::exit(2);
-            }
-        }
-    }
-    // serving-tier knobs, same chain: --shards > APACHE_SHARDS > config
-    // (and --queue-depth > APACHE_QUEUE_DEPTH > config), validated at
-    // parse time whichever source wins
-    cfg.shards = ApacheConfig::resolve_shards(
-        args.opt("shards"),
-        ApacheConfig::env_shards(),
-        cfg.shards,
-    )
-    .unwrap_or_else(|e| {
-        eprintln!("config error: {e}");
-        std::process::exit(2);
-    });
-    cfg.queue_depth = ApacheConfig::resolve_queue_depth(
-        args.opt("queue-depth"),
-        ApacheConfig::env_queue_depth(),
-        cfg.queue_depth,
-    )
-    .unwrap_or_else(|e| {
-        eprintln!("config error: {e}");
-        std::process::exit(2);
-    });
+    cfg.backend = knob::BACKEND
+        .resolve(args.opt("backend"), cfg.backend, |raw| {
+            apache_fhe::runtime::RuntimeOptions::validate_backend(raw)?;
+            Ok(raw.to_string())
+        })
+        .unwrap_or_else(|e| die(e));
+    cfg.alloc_policy = knob::ALLOC_POLICY
+        .resolve(args.opt("alloc-policy"), cfg.alloc_policy, |raw| {
+            apache_fhe::hw::AllocPolicy::parse(raw).map(|p| p.name().to_string())
+        })
+        .unwrap_or_else(|e| die(e));
+    cfg.plan_policy = knob::PLAN_POLICY
+        .resolve(args.opt("plan-policy"), cfg.plan_policy, |raw| {
+            apache_fhe::sched::plan::PlanPolicy::parse(raw).map(|p| p.name().to_string())
+        })
+        .unwrap_or_else(|e| die(e));
+    cfg.residency_budget_bytes = knob::RESIDENCY_BUDGET
+        .resolve(
+            args.opt("residency-budget"),
+            cfg.residency_budget_bytes,
+            |raw| {
+                raw.parse::<u64>().map_err(|_| {
+                    apache_fhe::util::error::Error::new(format!(
+                        "residency budget must be a byte count >= 0, got `{raw}`"
+                    ))
+                })
+            },
+        )
+        .unwrap_or_else(|e| die(e));
+    cfg.shards = knob::SHARDS
+        .resolve(args.opt("shards"), cfg.shards, ApacheConfig::parse_shards)
+        .unwrap_or_else(|e| die(e));
+    cfg.queue_depth = knob::QUEUE_DEPTH
+        .resolve(
+            args.opt("queue-depth"),
+            cfg.queue_depth,
+            ApacheConfig::parse_queue_depth,
+        )
+        .unwrap_or_else(|e| die(e));
     cfg
 }
 
@@ -232,28 +212,13 @@ fn main() {
         }
         Some("artifacts") => {
             let cfg = load_config(&args);
-            let rt = if cfg.backend == "reference" {
-                apache_fhe::runtime::Runtime::new(&cfg.artifacts_dir).unwrap_or_else(|e| {
-                    eprintln!("artifacts dir unusable ({e}); using reference backend");
-                    apache_fhe::runtime::Runtime::reference()
-                })
-            } else {
-                let policy = apache_fhe::hw::AllocPolicy::parse(&cfg.alloc_policy)
-                    .expect("load_config validated the policy");
-                let plan = apache_fhe::sched::plan::PlanPolicy::parse(&cfg.plan_policy)
-                    .expect("load_config validated the policy");
-                apache_fhe::runtime::Runtime::for_backend_configured(
-                    &cfg.backend,
-                    &cfg.dimm,
-                    policy,
-                    plan,
-                    cfg.residency_budget_bytes,
-                )
+            let rt = cfg
+                .runtime_options()
+                .and_then(|opts| opts.build())
                 .unwrap_or_else(|e| {
                     eprintln!("backend `{}` unusable ({e}); using reference", cfg.backend);
                     apache_fhe::runtime::Runtime::reference()
-                })
-            };
+                });
             println!("backend: {}", rt.backend_name());
             for name in rt.artifact_names() {
                 let m = &rt.manifest[&name];
@@ -267,7 +232,7 @@ fn main() {
             eprintln!(
                 "usage: apache <serve|profile|inspect|area|config|baselines|artifacts> \
                  [--config file.toml] [--dimms N] [--tasks N] [--runtime] \
-                 [--backend reference|pnm] [--alloc-policy rank_aware|identity] \
+                 [--backend reference|native|pnm] [--alloc-policy rank_aware|identity] \
                  [--plan-policy row_locality|fifo] [--residency-budget BYTES] \
                  [--sharded] [--shards N] [--queue-depth N]"
             );

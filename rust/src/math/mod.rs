@@ -9,3 +9,4 @@ pub mod ntt;
 pub mod poly;
 pub mod rns;
 pub mod sampler;
+pub mod vntt;

@@ -1,0 +1,432 @@
+//! Batch-vectorized NTT and modular kernels for the native backend.
+//!
+//! [`crate::math::ntt`] / [`crate::math::modops`] are the *scalar oracle*:
+//! exact, branchy, `u128`-widening arithmetic shaped like the paper's
+//! pipelined FU datapath. This module is the same arithmetic re-shaped for
+//! host SIMD throughput — the software stand-in for APACHE's fine-grained
+//! functional units keeping compute saturated against memory bandwidth
+//! (§V). Three rules make every inner loop autovectorizable:
+//!
+//! * **no `u128`** — residues live under 31-bit primes, so every product
+//!   of two masked 32-bit operands fits a `u64` lane (`vpmuludq`-shaped);
+//! * **branch-free** — conditional subtractions are arithmetic
+//!   (`r - q * (r >= q)`), never `if`, so lanes stay divergence-free;
+//! * **lazy reduction** — butterfly values ride in `[0, 2q)` (Harvey-style
+//!   lazy lanes over 32-bit Shoup twiddles) and are canonicalized once at
+//!   the end, halving the reduction work per butterfly.
+//!
+//! Everything here is bit-identical to the scalar oracle after the final
+//! normalization pass — `tests/vntt_props.rs` sweeps the equality across
+//! every manifest modulus and adversarial operand values.
+//!
+//! Supported modulus range: `2^30 < q < 2^31` (the manifest's 31-bit NTT
+//! primes). [`supported`] gates the fast path; callers fall back to the
+//! scalar kernels outside it.
+
+use super::modops::mod_add;
+use super::ntt::NttTable;
+
+const MASK32: u64 = 0xFFFF_FFFF;
+
+/// Whether the lazy kernels support modulus `q`: the 32-bit Shoup
+/// companions need `2q < 2^32`, the Barrett-62 estimate needs
+/// `floor(2^62 / q) < 2^32`.
+#[inline]
+pub fn supported(q: u64) -> bool {
+    q > (1 << 30) && q < (1 << 31)
+}
+
+/// 32-bit Shoup companion of a fixed multiplicand `w < q < 2^31`:
+/// `floor(w * 2^32 / q)` — fits `u64` arithmetic end to end, unlike the
+/// 64-bit companion in [`crate::math::modops::shoup_precompute`].
+#[inline]
+pub fn shoup32(w: u64, q: u64) -> u64 {
+    debug_assert!(w < q && q < (1 << 31));
+    (w << 32) / q
+}
+
+/// Lazy Shoup multiply: `(a * w) mod q` up to one multiple of `q` — the
+/// result lands in `[0, 2q)`. Requires `a < 2^32` (any lazy lane value)
+/// and `ws = shoup32(w, q)`. Masking the operands to 32 bits is a no-op
+/// on the values but tells the autovectorizer every product fits a lane.
+#[inline(always)]
+pub fn mul_shoup32_lazy(a: u64, w: u64, ws: u64, q: u64) -> u64 {
+    debug_assert!(a >> 32 == 0);
+    let a = a & MASK32;
+    let hi = (a * (ws & MASK32)) >> 32;
+    let r = (a * (w & MASK32)).wrapping_sub(hi.wrapping_mul(q));
+    debug_assert!(r < 2 * q);
+    r
+}
+
+/// Branch-free canonicalization of a lazy value in `[0, 2q)` to `[0, q)`.
+#[inline(always)]
+pub fn normalize_lazy(v: u64, q: u64) -> u64 {
+    debug_assert!(v < 2 * q);
+    v - q * u64::from(v >= q)
+}
+
+/// Barrett-62 reducer for one fixed modulus `2^30 < q < 2^31`: multiplies
+/// two canonical residues (or folds any `p < 2^62`) back to `[0, q)`
+/// without `u128` widening or hardware division — three masked 32×32→64
+/// multiplies and two branch-free conditional subtractions per reduction.
+#[derive(Debug, Clone, Copy)]
+pub struct LazyReducer {
+    pub q: u64,
+    /// `floor(2^62 / q)` — `< 2^32` because `q > 2^30`.
+    m62: u64,
+}
+
+impl LazyReducer {
+    pub fn new(q: u64) -> Self {
+        assert!(supported(q), "LazyReducer requires 2^30 < q < 2^31, got {q}");
+        LazyReducer {
+            q,
+            m62: (1u64 << 62) / q,
+        }
+    }
+
+    /// Canonicalize an arbitrary `u64` — the same `v % q` the scalar
+    /// oracle applies to raw operands, short-circuited for the common
+    /// already-reduced case.
+    #[inline(always)]
+    pub fn canon(self, v: u64) -> u64 {
+        if v < self.q {
+            v
+        } else {
+            v % self.q
+        }
+    }
+
+    /// Reduce any `p < 2^62` to `[0, q)`. The quotient estimate
+    /// `floor(p * m62 / 2^62)` is computed from the 32-bit halves of `p`,
+    /// undershoots `floor(p / q)` by at most 2, and never overshoots — so
+    /// two conditional subtractions finish the job.
+    #[inline(always)]
+    pub fn reduce(self, p: u64) -> u64 {
+        debug_assert!(p < (1 << 62));
+        let p1 = p >> 32;
+        let p0 = p & MASK32;
+        let est = (p1 * self.m62 + ((p0 * self.m62) >> 32)) >> 30;
+        let mut r = p.wrapping_sub(est.wrapping_mul(self.q));
+        r -= self.q * u64::from(r >= self.q);
+        r -= self.q * u64::from(r >= self.q);
+        debug_assert_eq!(r, p % self.q);
+        r
+    }
+
+    /// `(a * b) mod q` for canonical `a, b < q` — bit-identical to
+    /// [`crate::math::modops::mod_mul`] on the same operands.
+    #[inline(always)]
+    pub fn mul(self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.q && b < self.q);
+        self.reduce((a & MASK32) * (b & MASK32))
+    }
+
+    /// `(a + b) mod q` for canonical operands, branch-free.
+    #[inline(always)]
+    pub fn add(self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.q && b < self.q);
+        let s = a + b;
+        s - self.q * u64::from(s >= self.q)
+    }
+}
+
+/// Canonicalize a raw operand slice into `dst` (the oracle's `v % q`
+/// load-normalization, fused with the arena→scratch copy).
+pub fn canon_into(red: LazyReducer, src: &[u64], dst: &mut [u64]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = red.canon(s);
+    }
+}
+
+/// `out[i] = (a[i] * b[i]) mod q` over raw operands — the vectorized
+/// `pointwise_mul` kernel.
+pub fn pointwise_mul_into(red: LazyReducer, a: &[u64], b: &[u64], out: &mut [u64]) {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = red.mul(red.canon(x), red.canon(y));
+    }
+}
+
+/// `out[i] = (a[i] + b[i]) mod q` over raw operands.
+pub fn pointwise_add_into(red: LazyReducer, a: &[u64], b: &[u64], out: &mut [u64]) {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = red.add(red.canon(x), red.canon(y));
+    }
+}
+
+/// `out[i] = (a[i] * b[i] + c[i]) mod q` over raw operands — the fused
+/// MMult–MAdd traffic of `routine2`.
+pub fn mul_add_into(red: LazyReducer, a: &[u64], b: &[u64], c: &[u64], out: &mut [u64]) {
+    for (((o, &x), &y), &z) in out.iter_mut().zip(a).zip(b).zip(c) {
+        *o = red.add(red.mul(red.canon(x), red.canon(y)), red.canon(z));
+    }
+}
+
+/// Precomputed lazy tables for one `(n, q)` pair: the canonical
+/// [`NttTable`] (twiddle layout contract with every other backend) plus
+/// 32-bit Shoup companions for the branch-free butterfly loops.
+#[derive(Debug, Clone)]
+pub struct VnttTable {
+    base: NttTable,
+    w32: Vec<u64>,
+    wi32: Vec<u64>,
+    n_inv32: u64,
+    red: LazyReducer,
+}
+
+impl VnttTable {
+    pub fn new(n: usize, q: u64) -> Self {
+        Self::from_base(NttTable::new(n, q))
+    }
+
+    /// Derive the lazy companions from an existing canonical table —
+    /// identical twiddle values, so outputs stay bit-identical.
+    pub fn from_base(base: NttTable) -> Self {
+        let q = base.q;
+        let red = LazyReducer::new(q);
+        let w32 = base.forward_twiddles().iter().map(|&w| shoup32(w, q)).collect();
+        let wi32 = base.inverse_twiddles().iter().map(|&w| shoup32(w, q)).collect();
+        let n_inv32 = shoup32(base.n_inv(), q);
+        VnttTable {
+            base,
+            w32,
+            wi32,
+            n_inv32,
+            red,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.base.n
+    }
+
+    pub fn q(&self) -> u64 {
+        self.base.q
+    }
+
+    pub fn reducer(&self) -> LazyReducer {
+        self.red
+    }
+
+    /// The canonical table (twiddle layouts, `n_inv`) this lazy table was
+    /// derived from — what operand table validation compares against.
+    pub fn base(&self) -> &NttTable {
+        &self.base
+    }
+
+    /// Forward negacyclic NTT over lazy lanes: input canonical (or lazy,
+    /// `< 2q`), output lazy in `[0, 2q)` — call [`Self::normalize`] (or
+    /// fold into a consuming kernel) to canonicalize. Same CT scheduling
+    /// and twiddle order as [`NttTable::forward`], so the canonical
+    /// residues are bit-identical.
+    pub fn forward_lazy(&self, a: &mut [u64]) {
+        let n = self.base.n;
+        debug_assert_eq!(a.len(), n);
+        let q = self.base.q;
+        let two_q = 2 * q;
+        let w = self.base.forward_twiddles();
+        let mut t = n;
+        let mut m = 1usize;
+        while m < n {
+            t >>= 1;
+            for i in 0..m {
+                let wv = w[m + i];
+                let ws = self.w32[m + i];
+                let j1 = 2 * i * t;
+                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let u = *x;
+                    let v = mul_shoup32_lazy(*y, wv, ws, q);
+                    let s = u + v;
+                    *x = s - two_q * u64::from(s >= two_q);
+                    let d = u + two_q - v;
+                    *y = d - two_q * u64::from(d >= two_q);
+                }
+            }
+            m <<= 1;
+        }
+    }
+
+    /// Inverse negacyclic NTT over lazy lanes: input canonical or lazy,
+    /// output **canonical** (the closing `n_inv` scaling folds the final
+    /// normalization). Bit-identical to [`NttTable::inverse`].
+    pub fn inverse_lazy(&self, a: &mut [u64]) {
+        let n = self.base.n;
+        debug_assert_eq!(a.len(), n);
+        let q = self.base.q;
+        let two_q = 2 * q;
+        let wi = self.base.inverse_twiddles();
+        let mut t = 1usize;
+        let mut m = n;
+        while m > 1 {
+            let h = m >> 1;
+            let mut j1 = 0usize;
+            for i in 0..h {
+                let wv = wi[h + i];
+                let ws = self.wi32[h + i];
+                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let u = *x;
+                    let v = *y;
+                    let s = u + v;
+                    *x = s - two_q * u64::from(s >= two_q);
+                    let mut d = u + two_q - v;
+                    d -= two_q * u64::from(d >= two_q);
+                    *y = mul_shoup32_lazy(d, wv, ws, q);
+                }
+                j1 += 2 * t;
+            }
+            t <<= 1;
+            m = h;
+        }
+        let n_inv = self.base.n_inv();
+        for x in a.iter_mut() {
+            let r = mul_shoup32_lazy(*x, n_inv, self.n_inv32, q);
+            *x = normalize_lazy(r, q);
+        }
+    }
+
+    /// Canonicalize a lazy slice in place.
+    pub fn normalize(&self, a: &mut [u64]) {
+        let q = self.base.q;
+        for x in a.iter_mut() {
+            *x = normalize_lazy(*x, q);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::modops::{mod_mul, ntt_primes};
+    use crate::math::sampler::Rng;
+
+    fn manifest_moduli() -> Vec<(usize, u64)> {
+        [256usize, 1024]
+            .iter()
+            .map(|&n| (n, ntt_primes(31, 2 * n as u64, 1)[0]))
+            .collect()
+    }
+
+    #[test]
+    fn manifest_moduli_are_supported() {
+        for (_, q) in manifest_moduli() {
+            assert!(supported(q), "manifest prime {q} outside lazy range");
+        }
+        assert!(!supported(1 << 30));
+        assert!(!supported((1 << 31) + 11));
+    }
+
+    #[test]
+    fn lazy_reducer_matches_mod_mul() {
+        for (_, q) in manifest_moduli() {
+            let red = LazyReducer::new(q);
+            let mut rng = Rng::seeded(q);
+            for _ in 0..2000 {
+                let a = rng.uniform(q);
+                let b = rng.uniform(q);
+                assert_eq!(red.mul(a, b), mod_mul(a, b, q));
+            }
+            // adversarial corners: 0, 1, values hugging q
+            for a in [0u64, 1, 2, q - 2, q - 1] {
+                for b in [0u64, 1, 2, q - 2, q - 1] {
+                    assert_eq!(red.mul(a, b), mod_mul(a, b, q));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn canon_matches_plain_remainder() {
+        for (_, q) in manifest_moduli() {
+            let red = LazyReducer::new(q);
+            for v in [0u64, 1, q - 1, q, q + 1, 2 * q - 1, u64::MAX - 1, u64::MAX] {
+                assert_eq!(red.canon(v), v % q);
+            }
+        }
+    }
+
+    #[test]
+    fn shoup32_lazy_is_congruent_and_bounded() {
+        for (_, q) in manifest_moduli() {
+            let mut rng = Rng::seeded(17 ^ q);
+            for _ in 0..2000 {
+                let w = rng.uniform(q);
+                let ws = shoup32(w, q);
+                let a = rng.uniform(2 * q); // any lazy lane value
+                let r = mul_shoup32_lazy(a, w, ws, q);
+                assert!(r < 2 * q);
+                assert_eq!(r % q, mod_mul(a % q, w, q));
+            }
+        }
+    }
+
+    #[test]
+    fn forward_lazy_matches_scalar_oracle() {
+        for (n, q) in manifest_moduli() {
+            let vt = VnttTable::new(n, q);
+            let mut rng = Rng::seeded(42 ^ q);
+            let orig = rng.uniform_poly(n, q);
+            let mut expect = orig.clone();
+            vt.base().forward(&mut expect);
+            let mut got = orig.clone();
+            vt.forward_lazy(&mut got);
+            vt.normalize(&mut got);
+            assert_eq!(got, expect, "forward diverged at n={n}");
+        }
+    }
+
+    #[test]
+    fn inverse_lazy_matches_scalar_oracle() {
+        for (n, q) in manifest_moduli() {
+            let vt = VnttTable::new(n, q);
+            let mut rng = Rng::seeded(43 ^ q);
+            let orig = rng.uniform_poly(n, q);
+            let mut expect = orig.clone();
+            vt.base().inverse(&mut expect);
+            let mut got = orig.clone();
+            vt.inverse_lazy(&mut got);
+            assert_eq!(got, expect, "inverse diverged at n={n}");
+        }
+    }
+
+    #[test]
+    fn lazy_roundtrip_is_identity() {
+        for (n, q) in manifest_moduli() {
+            let vt = VnttTable::new(n, q);
+            let mut rng = Rng::seeded(44 ^ q);
+            let orig = rng.uniform_poly(n, q);
+            let mut a = orig.clone();
+            vt.forward_lazy(&mut a);
+            vt.inverse_lazy(&mut a);
+            assert_eq!(a, orig);
+        }
+    }
+
+    #[test]
+    fn elementwise_kernels_match_modops_on_raw_operands() {
+        let (_, q) = manifest_moduli()[0];
+        let red = LazyReducer::new(q);
+        // raw (unreduced) operands, as the artifact contract allows
+        let adversarial = [0u64, 1, q - 1, q, q + 1, (1 << 32) - 1, u64::MAX];
+        let a: Vec<u64> = adversarial.to_vec();
+        let b: Vec<u64> = adversarial.iter().rev().copied().collect();
+        let c = vec![q + 3; a.len()];
+        let mut mul = vec![0u64; a.len()];
+        let mut add = vec![0u64; a.len()];
+        let mut fma = vec![0u64; a.len()];
+        pointwise_mul_into(red, &a, &b, &mut mul);
+        pointwise_add_into(red, &a, &b, &mut add);
+        mul_add_into(red, &a, &b, &c, &mut fma);
+        for i in 0..a.len() {
+            assert_eq!(mul[i], mod_mul(a[i] % q, b[i] % q, q));
+            assert_eq!(add[i], mod_add(a[i] % q, b[i] % q, q));
+            assert_eq!(
+                fma[i],
+                mod_add(mod_mul(a[i] % q, b[i] % q, q), c[i] % q, q)
+            );
+        }
+    }
+}

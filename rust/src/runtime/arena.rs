@@ -1,0 +1,215 @@
+//! Flat operand arenas: one contiguous, cache-aligned `u64` slab per
+//! invocation batch, with offset-based views replacing per-operand
+//! `Arc<Vec<u64>>` indirection on the hot dispatch path.
+//!
+//! The legacy [`Backend::execute_batch`](super::Backend::execute_batch)
+//! seam hands backends a slice of `Arc`-held vectors scattered across the
+//! heap; every kernel then streams operands from wherever the allocator
+//! left them. The arena seam ([`OperandArena::pack`] →
+//! [`Backend::execute_batch_arena`](super::Backend::execute_batch_arena))
+//! instead copies each *distinct* operand once into a single slab whose
+//! views start on 64-byte cache-line boundaries:
+//!
+//! * operands shared across invocations (twiddle tables, evk-style rows —
+//!   the §V-B streaming amortization) are deduplicated by `Arc` data
+//!   pointer, so the slab holds each one exactly once and a view's
+//!   `(offset, len)` is a canonical per-batch identity for memoized table
+//!   validation;
+//! * every view is cache-line aligned and padded to a whole number of
+//!   lines, so vectorized kernels never straddle lines at operand edges
+//!   and the prefetcher sees one linear stream per batch.
+//!
+//! This is the host-side mirror of the paper's operand placement: the
+//! slab is the "row buffer" the batch executes out of, packed once per
+//! dispatch instead of chased through pointers per call.
+
+use super::{ArtifactMeta, BatchItem};
+use crate::hw::alloc::OperandKind;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Views are aligned to (and padded to a multiple of) one cache line.
+pub const ARENA_ALIGN_BYTES: usize = 64;
+const ALIGN_WORDS: usize = ARENA_ALIGN_BYTES / 8;
+
+/// An offset-based operand view into an [`OperandArena`] slab — the
+/// arena-seam replacement for an `Arc<Vec<u64>>` operand handle. Offsets
+/// are in words, relative to the arena's aligned base, and are unique per
+/// distinct operand within a batch (shared operands share one view).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArenaView {
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// One batch entry under the arena seam: manifest metadata plus operand
+/// views into the batch's [`OperandArena`] — the flat-slab counterpart of
+/// [`BatchItem`].
+#[derive(Debug, Clone)]
+pub struct ArenaItem<'a> {
+    pub meta: &'a ArtifactMeta,
+    pub views: Vec<ArenaView>,
+    /// see [`super::Invocation::pool`]
+    pub pool: Option<u64>,
+    /// see [`super::Invocation::kinds`] (empty when unstamped)
+    pub kinds: &'a [OperandKind],
+}
+
+/// One contiguous `u64` slab holding every distinct operand of a batch,
+/// each starting on a cache-line boundary. Built once per dispatch by
+/// [`OperandArena::pack`]; kernels read operands through
+/// [`OperandArena::slice`].
+#[derive(Debug)]
+pub struct OperandArena {
+    slab: Vec<u64>,
+    /// words skipped so offset 0 lands on a 64-byte boundary
+    base: usize,
+}
+
+impl OperandArena {
+    /// Pack a validated batch into a flat slab: deduplicate operands by
+    /// `Arc` data pointer, assign each distinct operand a cache-aligned
+    /// view, copy its data exactly once, and rewrite every item against
+    /// the views. Pointer identity is stable for the call because each
+    /// operand stays alive behind its `Arc` in `items`.
+    pub fn pack<'a>(items: &[BatchItem<'a>]) -> (OperandArena, Vec<ArenaItem<'a>>) {
+        let mut by_ptr: HashMap<usize, ArenaView> = HashMap::new();
+        let mut unique: Vec<(&'a Arc<Vec<u64>>, ArenaView)> = Vec::new();
+        let mut total = 0usize;
+        for it in items {
+            for a in it.inputs {
+                let key = a.as_ptr() as usize;
+                if !by_ptr.contains_key(&key) {
+                    let view = ArenaView {
+                        offset: total,
+                        len: a.len(),
+                    };
+                    total += a.len().next_multiple_of(ALIGN_WORDS);
+                    by_ptr.insert(key, view);
+                    unique.push((a, view));
+                }
+            }
+        }
+        // over-allocate one line so the first view can start on a boundary
+        let mut slab = vec![0u64; total + ALIGN_WORDS];
+        let addr = slab.as_ptr() as usize;
+        debug_assert_eq!(addr % 8, 0);
+        let base = (ALIGN_WORDS - (addr / 8) % ALIGN_WORDS) % ALIGN_WORDS;
+        for (a, view) in &unique {
+            slab[base + view.offset..base + view.offset + view.len].copy_from_slice(a);
+        }
+        let arena_items = items
+            .iter()
+            .map(|it| ArenaItem {
+                meta: it.meta,
+                views: it
+                    .inputs
+                    .iter()
+                    .map(|a| by_ptr[&(a.as_ptr() as usize)])
+                    .collect(),
+                pool: it.pool,
+                kinds: it.kinds,
+            })
+            .collect();
+        (OperandArena { slab, base }, arena_items)
+    }
+
+    /// Borrow the operand behind a view. The returned slice starts on a
+    /// 64-byte boundary for every view produced by [`OperandArena::pack`].
+    pub fn slice(&self, view: ArenaView) -> &[u64] {
+        &self.slab[self.base + view.offset..self.base + view.offset + view.len]
+    }
+
+    /// Total payload words packed (excluding alignment padding).
+    pub fn payload_words(&self) -> usize {
+        self.slab.len() - ALIGN_WORDS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(n: usize) -> ArtifactMeta {
+        ArtifactMeta {
+            name: format!("pointwise_add_n{n}"),
+            file: "x".into(),
+            num_inputs: 2,
+            shapes: vec![vec![1, n], vec![1, n]],
+            modulus: 2147483137,
+        }
+    }
+
+    #[test]
+    fn pack_dedups_shared_operands_and_roundtrips_content() {
+        let m = meta(100);
+        let shared = Arc::new((0..100u64).collect::<Vec<_>>());
+        let own_a = Arc::new(vec![7u64; 100]);
+        let own_b = Arc::new(vec![9u64; 100]);
+        let items = vec![
+            BatchItem {
+                meta: &m,
+                inputs: std::slice::from_ref(&shared),
+                pool: None,
+                kinds: &[],
+            },
+            BatchItem {
+                meta: &m,
+                inputs: &[own_a.clone(), shared.clone()],
+                pool: Some(3),
+                kinds: &[],
+            },
+            BatchItem {
+                meta: &m,
+                inputs: &[own_b.clone(), shared.clone()],
+                pool: None,
+                kinds: &[],
+            },
+        ];
+        let (arena, packed) = OperandArena::pack(&items);
+        assert_eq!(packed.len(), 3);
+        // the shared operand maps to one view everywhere it appears
+        let v_shared = packed[0].views[0];
+        assert_eq!(packed[1].views[1], v_shared);
+        assert_eq!(packed[2].views[1], v_shared);
+        assert_ne!(packed[1].views[0], packed[2].views[0]);
+        // 3 distinct 100-word operands, each padded to whole lines
+        assert_eq!(arena.payload_words(), 3 * 100usize.next_multiple_of(8));
+        // content round-trips exactly
+        assert_eq!(arena.slice(v_shared), shared.as_slice());
+        assert_eq!(arena.slice(packed[1].views[0]), own_a.as_slice());
+        assert_eq!(arena.slice(packed[2].views[0]), own_b.as_slice());
+        // pool/kind metadata rides along
+        assert_eq!(packed[1].pool, Some(3));
+    }
+
+    #[test]
+    fn every_view_is_cache_line_aligned() {
+        let m = meta(33); // deliberately not a multiple of the line size
+        let ops: Vec<Arc<Vec<u64>>> = (0..5).map(|i| Arc::new(vec![i as u64; 33])).collect();
+        let items: Vec<BatchItem<'_>> = ops
+            .chunks(1)
+            .map(|c| BatchItem {
+                meta: &m,
+                inputs: c,
+                pool: None,
+                kinds: &[],
+            })
+            .collect();
+        let (arena, packed) = OperandArena::pack(&items);
+        for it in &packed {
+            for &v in &it.views {
+                let ptr = arena.slice(v).as_ptr() as usize;
+                assert_eq!(ptr % ARENA_ALIGN_BYTES, 0, "view off the line: {v:?}");
+                assert_eq!(v.offset % (ARENA_ALIGN_BYTES / 8), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_packs_to_empty_arena() {
+        let (arena, packed) = OperandArena::pack(&[]);
+        assert!(packed.is_empty());
+        assert_eq!(arena.payload_words(), 0);
+    }
+}

@@ -12,23 +12,36 @@
 //!   pipeline routines, automorphism, pointwise mul/add) bit-for-bit via
 //!   [`crate::math::ntt`] / [`crate::math::modops`], so the cross-layer
 //!   seam is exercised hermetically on every `cargo test`.
+//! * [`NativeBackend`] — fast host execution (`native.rs`): the same
+//!   contract over flat cache-aligned operand arenas (`arena.rs`) and the
+//!   batch-vectorized lazy kernels in [`crate::math::vntt`],
+//!   bit-identical to reference and gated for wall-clock speedup by
+//!   `benches/wallclock_hotpath.rs`.
 //! * [`PnmBackend`] — the near-memory device model (`pnm.rs`): one
 //!   device dispatch per invocation batch, partitioned across a modeled
 //!   DIMM rank topology, executing the same kernels bit-for-bit while
 //!   accruing a cycle/energy [`CostTrace`] through the `hw` model.
-//!   Selected with `backend = "pnm"` in the coordinator config or the
-//!   `APACHE_BACKEND` environment variable (the CI matrix dimension).
-//! * `PjrtBackend` (feature `pjrt`) — loads the HLO-text artifacts that
-//!   `make artifacts` produced and executes them on the PJRT CPU client;
-//!   Python never runs at request time. Requires vendoring the `xla`
-//!   crate (see rust/Cargo.toml).
+//! * `PjrtBackend` (feature `pjrt`) — a stub for the PJRT device path;
+//!   the `xla` client is not vendored (see rust/Cargo.toml), so it
+//!   reports that at construction and `Runtime::new` falls back. The
+//!   arena seam ([`Backend::execute_batch_arena`]) is where a real
+//!   device backend plugs in.
 //!
-//! Future GPU/Pallas backends slot in behind the same trait.
+//! Runtimes are constructed through one public path, [`RuntimeOptions`]:
+//! backend name (`reference` / `native` / `pnm` — the config /
+//! `APACHE_BACKEND` / CI matrix dimension), DIMM shape, placement and
+//! plan policies, and the residency budget. The historical `for_backend*`
+//! constructors survive as `#[deprecated]` wrappers over it, and every
+//! knob resolves CLI > env > config through [`crate::util::knob`].
 
+pub mod arena;
+pub mod native;
 pub mod pnm;
 
 pub use crate::hw::alloc::{AllocPolicy, OperandKind, ResidencyCache};
 pub use crate::sched::plan::{DispatchPlan, PlanPolicy};
+pub use arena::{ArenaItem, ArenaView, OperandArena};
+pub use native::NativeBackend;
 pub use pnm::{CostTrace, OpClass, PnmBackend};
 
 use crate::hw::alloc::Geometry;
@@ -281,9 +294,53 @@ pub trait Backend {
             .collect()
     }
 
+    /// Whether this backend consumes flat operand arenas natively. When
+    /// `true`, the runtime packs each batch once ([`OperandArena::pack`])
+    /// and dispatches through [`Backend::execute_batch_arena`] instead of
+    /// the `Arc`-operand path. Default `false`: legacy backends are
+    /// bridged unchanged.
+    fn supports_arena(&self) -> bool {
+        false
+    }
+
+    /// Execute a pre-validated batch through the arena seam: every
+    /// distinct operand lives exactly once in `arena`, cache-aligned, and
+    /// items reference it by [`ArenaView`]. The default bridges to the
+    /// legacy [`Backend::execute_batch`] by materializing per-item
+    /// operands, so trait implementors need not know arenas exist;
+    /// arena-native backends override it (and `supports_arena`) to run
+    /// straight off the slab.
+    fn execute_batch_arena(
+        &self,
+        arena: &OperandArena,
+        items: &[ArenaItem<'_>],
+    ) -> Vec<Result<Vec<u64>>> {
+        let owned: Vec<Vec<Arc<Vec<u64>>>> = items
+            .iter()
+            .map(|it| {
+                it.views
+                    .iter()
+                    .map(|&v| Arc::new(arena.slice(v).to_vec()))
+                    .collect()
+            })
+            .collect();
+        let batch: Vec<BatchItem<'_>> = items
+            .iter()
+            .zip(&owned)
+            .map(|(it, inputs)| BatchItem {
+                meta: it.meta,
+                inputs,
+                pool: it.pool,
+                kinds: it.kinds,
+            })
+            .collect();
+        self.execute_batch(&batch)
+    }
+
     /// Cumulative hardware cost accrued by this backend, if it models
-    /// one. The default (reference/PJRT execution) has no device model
-    /// and returns `None`; the pnm backend returns its [`CostTrace`].
+    /// one. The default (reference/native/PJRT execution) has no device
+    /// model and returns `None`; the pnm backend returns its
+    /// [`CostTrace`].
     fn cost_trace(&self) -> Option<CostTrace> {
         None
     }
@@ -351,6 +408,18 @@ impl<B: Backend + ?Sized> Backend for Arc<B> {
 
     fn execute_batch(&self, items: &[BatchItem<'_>]) -> Vec<Result<Vec<u64>>> {
         (**self).execute_batch(items)
+    }
+
+    fn supports_arena(&self) -> bool {
+        (**self).supports_arena()
+    }
+
+    fn execute_batch_arena(
+        &self,
+        arena: &OperandArena,
+        items: &[ArenaItem<'_>],
+    ) -> Vec<Result<Vec<u64>>> {
+        (**self).execute_batch_arena(arena, items)
     }
 
     fn execute_batch_placed(
@@ -702,46 +771,27 @@ impl Backend for ReferenceBackend {
     }
 }
 
-/// PJRT execution of the on-disk HLO-text artifacts. Compiles lazily per
-/// artifact; the client handles are !Send, so the Runtime stays on the
-/// leader thread (see coordinator::server). Batches go through the
-/// default per-item [`Backend::execute_batch`] fallback until the PJRT
-/// path grows multi-executable dispatch.
+/// Stub for the PJRT device path. The upstream `xla` crate is not
+/// vendored in this build (see rust/Cargo.toml), so constructing the
+/// backend reports exactly that and [`Runtime::new`] surfaces the error
+/// to its caller's fallback — the feature compiles (`cargo check
+/// --all-features`) instead of failing CI on a missing dependency. A
+/// vendored client plugs in behind the arena seam: it would override
+/// [`Backend::supports_arena`] / [`Backend::execute_batch_arena`] and
+/// upload each batch's slab as one device buffer.
 #[cfg(feature = "pjrt")]
 pub struct PjrtBackend {
-    client: xla::PjRtClient,
     dir: PathBuf,
-    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
 #[cfg(feature = "pjrt")]
 impl PjrtBackend {
     pub fn new(dir: PathBuf) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| Error::new(format!("pjrt: {e}")))?;
-        Ok(PjrtBackend {
-            client,
-            dir,
-            cache: Mutex::new(HashMap::new()),
-        })
-    }
-
-    fn compile(&self, meta: &ArtifactMeta) -> Result<()> {
-        let mut cache = self.cache.lock().unwrap();
-        if cache.contains_key(&meta.name) {
-            return Ok(());
-        }
-        let path = self.dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| Error::new("bad path"))?,
-        )
-        .map_err(|e| Error::new(format!("parse {path:?}: {e}")))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| Error::new(format!("compile {}: {e}", meta.name)))?;
-        cache.insert(meta.name.clone(), exe);
-        Ok(())
+        Err(Error::new(format!(
+            "pjrt: the `xla` PJRT client is not vendored in this build \
+             (artifacts in {dir:?}); see rust/Cargo.toml — select the \
+             `native` backend for fast host execution"
+        )))
     }
 }
 
@@ -751,30 +801,104 @@ impl Backend for PjrtBackend {
         "pjrt"
     }
 
-    fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[&[u64]]) -> Result<Vec<u64>> {
-        self.compile(meta)?;
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (i, data) in inputs.iter().enumerate() {
-            let dims: Vec<i64> = meta.shapes[i].iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(*data)
-                .reshape(&dims)
-                .map_err(|e| Error::new(format!("reshape: {e}")))?;
-            literals.push(lit);
+    fn execute_u64(&self, meta: &ArtifactMeta, _inputs: &[&[u64]]) -> Result<Vec<u64>> {
+        Err(Error::new(format!(
+            "pjrt: cannot execute `{}` from {:?} — no PJRT client is vendored",
+            meta.name, self.dir
+        )))
+    }
+}
+
+/// The one public construction surface for [`Runtime`]: every knob the
+/// config file / CLI / environment can set, in one struct with usable
+/// defaults. Replaces the historical `for_backend` /
+/// `for_backend_with_policy` / `for_backend_with_policies` /
+/// `for_backend_configured` constructor ladder (now `#[deprecated]`
+/// wrappers over this).
+///
+/// ```ignore
+/// let rt = RuntimeOptions {
+///     backend: "native".into(),
+///     ..Default::default()
+/// }
+/// .build()?;
+/// ```
+#[derive(Debug, Clone)]
+pub struct RuntimeOptions {
+    /// `reference`, `native` or `pnm` (see [`RuntimeOptions::BACKENDS`]).
+    pub backend: String,
+    /// DIMM topology for placement-aware backends; placement-blind
+    /// backends ignore it.
+    pub dimm: DimmConfig,
+    /// Operand-placement policy for placement-aware backends.
+    pub alloc_policy: AllocPolicy,
+    /// Dispatch-planning policy of the batched entry point.
+    pub plan_policy: PlanPolicy,
+    /// Cross-batch residency-cache budget in bytes (0 = per-batch
+    /// allocation, the cache-off control).
+    pub residency_budget: u64,
+    /// For the `reference` backend only: a directory to probe for
+    /// on-disk artifacts via [`Runtime::new`] (the `pjrt`-feature upgrade
+    /// path). `None` constructs the hermetic builtin-manifest runtime.
+    pub artifacts_dir: Option<String>,
+}
+
+impl Default for RuntimeOptions {
+    fn default() -> Self {
+        RuntimeOptions {
+            backend: "reference".into(),
+            dimm: DimmConfig::paper(),
+            alloc_policy: AllocPolicy::RankAware,
+            plan_policy: PlanPolicy::Fifo,
+            residency_budget: 0,
+            artifacts_dir: None,
         }
-        let cache = self.cache.lock().unwrap();
-        let exe = &cache[&meta.name];
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::new(format!("execute {}: {e}", meta.name)))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::new(format!("fetch: {e}")))?;
-        // aot.py lowers with return_tuple=True → single-element tuple
-        let out = lit
-            .to_tuple1()
-            .map_err(|e| Error::new(format!("tuple: {e}")))?;
-        out.to_vec::<u64>()
-            .map_err(|e| Error::new(format!("to_vec: {e}")))
+    }
+}
+
+impl RuntimeOptions {
+    /// The backend names [`RuntimeOptions::build`] accepts.
+    pub const BACKENDS: [&'static str; 3] = ["reference", "native", "pnm"];
+
+    /// Reject unknown backend names with the canonical error — shared by
+    /// [`RuntimeOptions::build`] and config-file validation so the
+    /// message never forks.
+    pub fn validate_backend(name: &str) -> Result<()> {
+        if Self::BACKENDS.contains(&name) {
+            return Ok(());
+        }
+        Err(Error::new(format!(
+            "unknown backend `{name}` (expected `reference`, `native` or `pnm`)"
+        )))
+    }
+
+    /// Construct the configured [`Runtime`].
+    pub fn build(self) -> Result<Runtime> {
+        let RuntimeOptions {
+            backend,
+            dimm,
+            alloc_policy,
+            plan_policy,
+            residency_budget,
+            artifacts_dir,
+        } = self;
+        Self::validate_backend(&backend)?;
+        let rt = match backend.as_str() {
+            "reference" => match artifacts_dir {
+                Some(dir) => Runtime::new(&dir)?,
+                None => Runtime::reference(),
+            },
+            "native" => Runtime::from_parts(builtin_manifest(), Box::new(NativeBackend::new())),
+            _ => Runtime::from_parts(
+                builtin_manifest(),
+                Box::new(PnmBackend::with_policy_and_budget(
+                    dimm,
+                    alloc_policy,
+                    residency_budget,
+                )),
+            ),
+        };
+        Ok(rt.with_plan_policy(plan_policy))
     }
 }
 
@@ -820,52 +944,49 @@ impl Runtime {
         Self::from_parts(builtin_manifest(), Box::new(ReferenceBackend::new()))
     }
 
-    /// Construct the runtime for a named backend: `reference` (pure
-    /// Rust) or `pnm` (the near-memory device model over the same
-    /// kernels, parameterized by the DIMM configuration) with the
-    /// default operand-placement policy ([`AllocPolicy::RankAware`]).
+    #[deprecated(note = "construct through `RuntimeOptions { backend, dimm, .. }.build()`")]
     pub fn for_backend(name: &str, dimm: &DimmConfig) -> Result<Self> {
-        Self::for_backend_with_policy(name, dimm, AllocPolicy::RankAware)
+        RuntimeOptions {
+            backend: name.into(),
+            dimm: dimm.clone(),
+            ..RuntimeOptions::default()
+        }
+        .build()
     }
 
-    /// [`Runtime::for_backend`] with an explicit operand-placement
-    /// policy for placement-aware backends (the reference backend models
-    /// no memory and ignores it). Dispatch planning stays on the
-    /// [`PlanPolicy::Fifo`] control; use
-    /// [`Runtime::for_backend_with_policies`] to select it too.
+    #[deprecated(note = "construct through `RuntimeOptions { backend, dimm, alloc_policy, .. }.build()`")]
     pub fn for_backend_with_policy(
         name: &str,
         dimm: &DimmConfig,
         policy: AllocPolicy,
     ) -> Result<Self> {
-        match name {
-            "reference" => Ok(Self::reference()),
-            "pnm" => Ok(Self::from_parts(
-                builtin_manifest(),
-                Box::new(PnmBackend::with_policy(dimm.clone(), policy)),
-            )),
-            other => Err(Error::new(format!(
-                "unknown backend `{other}` (expected `reference` or `pnm`)"
-            ))),
+        RuntimeOptions {
+            backend: name.into(),
+            dimm: dimm.clone(),
+            alloc_policy: policy,
+            ..RuntimeOptions::default()
         }
+        .build()
     }
 
-    /// [`Runtime::for_backend_with_policy`] plus an explicit
-    /// dispatch-planning policy. Cross-batch residency stays off (budget
-    /// 0); use [`Runtime::for_backend_configured`] to enable it.
+    #[deprecated(note = "construct through `RuntimeOptions { backend, dimm, alloc_policy, plan_policy, .. }.build()`")]
     pub fn for_backend_with_policies(
         name: &str,
         dimm: &DimmConfig,
         alloc_policy: AllocPolicy,
         plan_policy: PlanPolicy,
     ) -> Result<Self> {
-        Self::for_backend_configured(name, dimm, alloc_policy, plan_policy, 0)
+        RuntimeOptions {
+            backend: name.into(),
+            dimm: dimm.clone(),
+            alloc_policy,
+            plan_policy,
+            ..RuntimeOptions::default()
+        }
+        .build()
     }
 
-    /// The full configuration surface the coordinator threads from
-    /// config/CLI/env: backend, DIMM, both policies, and the cross-batch
-    /// residency budget in bytes (0 = per-batch allocation, today's
-    /// cache-off behavior).
+    #[deprecated(note = "construct through `RuntimeOptions`")]
     pub fn for_backend_configured(
         name: &str,
         dimm: &DimmConfig,
@@ -873,21 +994,15 @@ impl Runtime {
         plan_policy: PlanPolicy,
         residency_budget: u64,
     ) -> Result<Self> {
-        match name {
-            "reference" => Ok(Self::reference().with_plan_policy(plan_policy)),
-            "pnm" => Ok(Self::from_parts(
-                builtin_manifest(),
-                Box::new(PnmBackend::with_policy_and_budget(
-                    dimm.clone(),
-                    alloc_policy,
-                    residency_budget,
-                )),
-            )
-            .with_plan_policy(plan_policy)),
-            other => Err(Error::new(format!(
-                "unknown backend `{other}` (expected `reference` or `pnm`)"
-            ))),
+        RuntimeOptions {
+            backend: name.into(),
+            dimm: dimm.clone(),
+            alloc_policy,
+            plan_policy,
+            residency_budget,
+            ..RuntimeOptions::default()
         }
+        .build()
     }
 
     /// Select the dispatch-planning policy of the batched entry point.
@@ -900,40 +1015,24 @@ impl Runtime {
         self.plan_policy
     }
 
-    /// Backend override from the `APACHE_BACKEND` environment variable —
-    /// the CI matrix dimension. `None` when unset or empty.
+    #[deprecated(note = "read through `crate::util::knob::BACKEND.env_value()`")]
     pub fn env_backend() -> Option<String> {
-        std::env::var("APACHE_BACKEND").ok().filter(|s| !s.is_empty())
+        crate::util::knob::BACKEND.env_value()
     }
 
-    /// Placement-policy override from the `APACHE_ALLOC_POLICY`
-    /// environment variable (the second CI matrix dimension). `None`
-    /// when unset or empty; the value is validated by
-    /// [`AllocPolicy::parse`] at the point of use.
+    #[deprecated(note = "read through `crate::util::knob::ALLOC_POLICY.env_value()`")]
     pub fn env_alloc_policy() -> Option<String> {
-        std::env::var("APACHE_ALLOC_POLICY")
-            .ok()
-            .filter(|s| !s.is_empty())
+        crate::util::knob::ALLOC_POLICY.env_value()
     }
 
-    /// Plan-policy override from the `APACHE_PLAN_POLICY` environment
-    /// variable (the third CI matrix dimension). `None` when unset or
-    /// empty; the value is validated by [`PlanPolicy::parse`] at the
-    /// point of use.
+    #[deprecated(note = "read through `crate::util::knob::PLAN_POLICY.env_value()`")]
     pub fn env_plan_policy() -> Option<String> {
-        std::env::var("APACHE_PLAN_POLICY")
-            .ok()
-            .filter(|s| !s.is_empty())
+        crate::util::knob::PLAN_POLICY.env_value()
     }
 
-    /// Residency-budget override (bytes) from the
-    /// `APACHE_RESIDENCY_BUDGET` environment variable — the cache-enabled
-    /// CI matrix leg. `None` when unset or empty; parsed as `u64` at the
-    /// point of use.
+    #[deprecated(note = "read through `crate::util::knob::RESIDENCY_BUDGET.env_value()`")]
     pub fn env_residency_budget() -> Option<String> {
-        std::env::var("APACHE_RESIDENCY_BUDGET")
-            .ok()
-            .filter(|s| !s.is_empty())
+        crate::util::knob::RESIDENCY_BUDGET.env_value()
     }
 
     /// The backend's cumulative hardware cost trace, when it models one.
@@ -1009,14 +1108,14 @@ impl Runtime {
     /// plans permute *dispatch*, never results.
     fn dispatch_planned(&self, items: &[BatchItem<'_>]) -> Vec<Result<Vec<u64>>> {
         if self.plan_policy == PlanPolicy::Fifo || items.is_empty() {
-            return self.backend.execute_batch(items);
+            return self.execute_direct(items);
         }
         let (geo, ranks) = match (
             self.backend.plan_geometry(),
             self.backend.rank_assignment(items),
         ) {
             (Some(g), Some(r)) => (g, r),
-            _ => return self.backend.execute_batch(items),
+            _ => return self.execute_direct(items),
         };
         let plan_items: Vec<PlanItem> = items
             .iter()
@@ -1043,6 +1142,18 @@ impl Runtime {
             .into_iter()
             .map(|s| s.unwrap_or_else(|| Err(Error::new("plan dropped a batch item"))))
             .collect()
+    }
+
+    /// The unplanned dispatch path: one batched call in item order. An
+    /// arena-native backend ([`Backend::supports_arena`]) gets the batch
+    /// packed once into a flat [`OperandArena`]; legacy backends get the
+    /// `Arc`-operand [`Backend::execute_batch`] path unchanged.
+    fn execute_direct(&self, items: &[BatchItem<'_>]) -> Vec<Result<Vec<u64>>> {
+        if !items.is_empty() && self.backend.supports_arena() {
+            let (arena, arena_items) = OperandArena::pack(items);
+            return self.backend.execute_batch_arena(&arena, &arena_items);
+        }
+        self.backend.execute_batch(items)
     }
 
     /// Execute a batch of artifact invocations, returning one result per
@@ -1331,5 +1442,100 @@ mod tests {
         assert_eq!(outs[0].as_ref().unwrap().as_slice(), &[2, 4, 6, 8]);
         assert!(outs[1].is_err());
         assert_eq!(outs[2].as_ref().unwrap().as_slice(), &[10, 12, 14, 16]);
+    }
+
+    #[test]
+    fn runtime_options_builds_every_backend() {
+        for (name, expect) in [("reference", "reference"), ("native", "native"), ("pnm", "pnm")] {
+            let rt = RuntimeOptions {
+                backend: name.into(),
+                ..Default::default()
+            }
+            .build()
+            .unwrap();
+            assert_eq!(rt.backend_name(), expect);
+            assert_eq!(rt.plan_policy(), PlanPolicy::Fifo);
+        }
+        let rt = RuntimeOptions {
+            backend: "pnm".into(),
+            plan_policy: PlanPolicy::RowLocality,
+            residency_budget: 1 << 20,
+            ..Default::default()
+        }
+        .build()
+        .unwrap();
+        assert_eq!(rt.plan_policy(), PlanPolicy::RowLocality);
+        let err = RuntimeOptions {
+            backend: "gpu".into(),
+            ..Default::default()
+        }
+        .build()
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("backend"), "{err}");
+        assert!(err.contains("native"), "{err}");
+        assert!(RuntimeOptions::validate_backend("native").is_ok());
+        assert!(RuntimeOptions::validate_backend("gpu").is_err());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_constructors_still_build_equivalent_runtimes() {
+        let dimm = DimmConfig::paper();
+        let a = Runtime::for_backend("pnm", &dimm).unwrap();
+        assert_eq!(a.backend_name(), "pnm");
+        assert_eq!(a.plan_policy(), PlanPolicy::Fifo);
+        let b = Runtime::for_backend_with_policies(
+            "reference",
+            &dimm,
+            AllocPolicy::Identity,
+            PlanPolicy::RowLocality,
+        )
+        .unwrap();
+        assert_eq!(b.backend_name(), "reference");
+        assert_eq!(b.plan_policy(), PlanPolicy::RowLocality);
+        let c =
+            Runtime::for_backend_configured("native", &dimm, AllocPolicy::RankAware, PlanPolicy::Fifo, 0)
+                .unwrap();
+        assert_eq!(c.backend_name(), "native");
+        // the wrappers reject unknown names with the builder's error
+        assert!(Runtime::for_backend("gpu", &dimm).is_err());
+    }
+
+    #[test]
+    fn arena_bridge_serves_legacy_backends_unchanged() {
+        // a backend that never heard of arenas, driven through the arena
+        // entry point via the default bridge
+        struct Tripler;
+        impl Backend for Tripler {
+            fn name(&self) -> &'static str {
+                "tripler"
+            }
+            fn execute_u64(&self, _meta: &ArtifactMeta, inputs: &[&[u64]]) -> Result<Vec<u64>> {
+                Ok(inputs[0].iter().map(|&v| v * 3).collect())
+            }
+        }
+        assert!(!Tripler.supports_arena());
+        let meta = ArtifactMeta {
+            name: "tpl".into(),
+            file: "x".into(),
+            num_inputs: 1,
+            shapes: vec![vec![4]],
+            modulus: 17,
+        };
+        let ops = [Arc::new(vec![1u64, 2, 3, 4]), Arc::new(vec![5u64, 6, 7, 8])];
+        let items: Vec<BatchItem<'_>> = ops
+            .iter()
+            .map(|a| BatchItem {
+                meta: &meta,
+                inputs: std::slice::from_ref(a),
+                pool: None,
+                kinds: &[],
+            })
+            .collect();
+        let (arena, arena_items) = OperandArena::pack(&items);
+        let outs = Tripler.execute_batch_arena(&arena, &arena_items);
+        assert_eq!(outs[0].as_ref().unwrap().as_slice(), &[3, 6, 9, 12]);
+        assert_eq!(outs[1].as_ref().unwrap().as_slice(), &[15, 18, 21, 24]);
     }
 }

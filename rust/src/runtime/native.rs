@@ -1,0 +1,508 @@
+//! [`NativeBackend`]: fast host execution of the artifact contract over
+//! flat operand arenas and the batch-vectorized kernels in
+//! [`crate::math::vntt`].
+//!
+//! Same contract, different shape: where [`ReferenceBackend`] runs the
+//! scalar oracle (`u128`-widening Shoup multiplies, branchy reductions)
+//! over scattered `Arc<Vec<u64>>` operands, this backend consumes the
+//! [`OperandArena`] seam — each batch is one cache-aligned slab — and
+//! executes Harvey-style lazy butterflies and Barrett-62 elementwise
+//! kernels whose inner loops are branch-free, `u128`-free and
+//! autovectorizable. Batches tile across cores with the same scoped-thread
+//! partitioning as the reference backend, one table memo per chunk.
+//!
+//! Outputs are bit-identical to the reference backend for every manifest
+//! artifact: lazy lanes are canonicalized before anything observable, and
+//! canonical residues mod `q` are unique regardless of the reduction
+//! strategy that produced them (`tests/runtime_crossval.rs` sweeps the
+//! full manifest; `tests/vntt_props.rs` sweeps the kernels). Moduli
+//! outside the lazy window (`2^30 < q < 2^31` — see [`vntt::supported`])
+//! take the embedded scalar oracle, so off-manifest artifacts keep
+//! working.
+//!
+//! The backend is placement-blind: it models no DRAM geometry, so the
+//! dispatch planner is a no-op over it and there is no
+//! [`CostTrace`](super::CostTrace) — this backend is about wall-clock,
+//! measured by `benches/wallclock_hotpath.rs`.
+
+use super::arena::{ArenaItem, OperandArena};
+use super::{
+    ArtifactMeta, Backend, BatchItem, ReferenceBackend, TableMemo, TW_FWD, TW_INV, TW_NINV,
+};
+use crate::math::vntt::{self, VnttTable};
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// The operator families this backend vectorizes natively.
+const FAMILIES: [&str; 8] = [
+    "ntt_fwd",
+    "ntt_inv",
+    "external_product",
+    "routine1",
+    "routine2",
+    "automorph",
+    "pointwise_mul",
+    "pointwise_add",
+];
+
+/// Vectorized host backend over flat operand arenas. See the module docs.
+#[derive(Default)]
+pub struct NativeBackend {
+    tables: Mutex<HashMap<(usize, u64), Arc<VnttTable>>>,
+    /// scalar oracle for moduli outside the lazy-kernel window
+    fallback: ReferenceBackend,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn table(&self, n: usize, q: u64) -> Arc<VnttTable> {
+        // recover the memo from a poisoned lock: cached tables written
+        // before a worker panic are still canonical
+        let mut cache = match self.tables.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        cache
+            .entry((n, q))
+            .or_insert_with(|| Arc::new(VnttTable::new(n, q)))
+            .clone()
+    }
+
+    fn check_arity(name: &str, inputs: &[&[u64]], want: usize) -> Result<()> {
+        if inputs.len() != want {
+            return Err(Error::new(format!(
+                "{name}: native backend expects {want} inputs, manifest declares {}",
+                inputs.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Execute a contiguous slice of an arena batch with one shared table
+    /// memo (views are canonical per-batch operand identities, so a
+    /// twiddle table shared across invocations validates once per chunk).
+    fn exec_chunk(&self, arena: &OperandArena, chunk: &[ArenaItem<'_>]) -> Vec<Result<Vec<u64>>> {
+        let mut memo = TableMemo::default();
+        chunk
+            .iter()
+            .map(|it| {
+                let refs: Vec<&[u64]> = it.views.iter().map(|&v| arena.slice(v)).collect();
+                self.exec(it.meta, &refs, &mut memo)
+            })
+            .collect()
+    }
+
+    /// One artifact execution against borrowed operand slices (arena views
+    /// or caller slices — the kernels only see `&[u64]`).
+    fn exec(&self, meta: &ArtifactMeta, inputs: &[&[u64]], memo: &mut TableMemo) -> Result<Vec<u64>> {
+        let name = meta.name.as_str();
+        let q = meta.modulus;
+        let first = meta
+            .shapes
+            .first()
+            .ok_or_else(|| Error::new(format!("{name}: artifact declares no inputs")))?;
+        if first.len() != 2 {
+            return Err(Error::new(format!(
+                "{name}: native backend expects a (rows, N) first input, got shape {first:?}"
+            )));
+        }
+        let rows = first[0];
+        let n = first[1];
+        if !FAMILIES.iter().any(|p| name.starts_with(p)) {
+            return Err(Error::new(format!(
+                "native backend has no implementation for artifact `{name}`"
+            )));
+        }
+        if name.starts_with("automorph") {
+            // eval-domain Galois permutation: a raw index-remap copy, no
+            // reduction at all — bit-identical by construction
+            Self::check_arity(name, inputs, 2)?;
+            let (x, map) = (inputs[0], inputs[1]);
+            let mut out = vec![0u64; rows * n];
+            for (k, &src) in map.iter().enumerate() {
+                let src = src as usize;
+                if src >= n {
+                    return Err(Error::new(format!(
+                        "{name}: permutation index {src} out of range (n={n})"
+                    )));
+                }
+                for r in 0..rows {
+                    out[r * n + k] = x[r * n + src];
+                }
+            }
+            return Ok(out);
+        }
+        if !vntt::supported(q) {
+            // off-manifest modulus: the lazy kernels don't apply, the
+            // scalar oracle does (sharing the memo — both validate against
+            // the same canonical NttTable layout)
+            return self.fallback.exec(meta, inputs, memo);
+        }
+        let vt = self.table(n, q);
+        let red = vt.reducer();
+        if name.starts_with("ntt_fwd") {
+            Self::check_arity(name, inputs, 2)?;
+            ReferenceBackend::check_tables_memo(
+                name,
+                "forward twiddle",
+                inputs[1],
+                vt.base().forward_twiddles(),
+                n,
+                q,
+                TW_FWD,
+                memo,
+            )?;
+            let mut out = vec![0u64; inputs[0].len()];
+            vntt::canon_into(red, inputs[0], &mut out);
+            for r in 0..rows {
+                let row = &mut out[r * n..(r + 1) * n];
+                vt.forward_lazy(row);
+                vt.normalize(row);
+            }
+            Ok(out)
+        } else if name.starts_with("ntt_inv") {
+            Self::check_arity(name, inputs, 3)?;
+            ReferenceBackend::check_tables_memo(
+                name,
+                "inverse twiddle",
+                inputs[1],
+                vt.base().inverse_twiddles(),
+                n,
+                q,
+                TW_INV,
+                memo,
+            )?;
+            ReferenceBackend::check_tables_memo(
+                name,
+                "n_inv",
+                inputs[2],
+                &[vt.base().n_inv()],
+                n,
+                q,
+                TW_NINV,
+                memo,
+            )?;
+            let mut out = vec![0u64; inputs[0].len()];
+            vntt::canon_into(red, inputs[0], &mut out);
+            for r in 0..rows {
+                vt.inverse_lazy(&mut out[r * n..(r + 1) * n]);
+            }
+            Ok(out)
+        } else if name.starts_with("external_product") {
+            Self::check_arity(name, inputs, 6)?;
+            ReferenceBackend::check_tables_memo(
+                name,
+                "forward twiddle",
+                inputs[3],
+                vt.base().forward_twiddles(),
+                n,
+                q,
+                TW_FWD,
+                memo,
+            )?;
+            ReferenceBackend::check_tables_memo(
+                name,
+                "inverse twiddle",
+                inputs[4],
+                vt.base().inverse_twiddles(),
+                n,
+                q,
+                TW_INV,
+                memo,
+            )?;
+            ReferenceBackend::check_tables_memo(
+                name,
+                "n_inv",
+                inputs[5],
+                &[vt.base().n_inv()],
+                n,
+                q,
+                TW_NINV,
+                memo,
+            )?;
+            let (digits, rows_b, rows_a) = (inputs[0], inputs[1], inputs[2]);
+            let mut acc_b = vec![0u64; n];
+            let mut acc_a = vec![0u64; n];
+            let mut d = vec![0u64; n];
+            for j in 0..rows {
+                vntt::canon_into(red, &digits[j * n..(j + 1) * n], &mut d);
+                vt.forward_lazy(&mut d);
+                vt.normalize(&mut d);
+                let rb = &rows_b[j * n..(j + 1) * n];
+                let ra = &rows_a[j * n..(j + 1) * n];
+                for k in 0..n {
+                    acc_b[k] = red.add(acc_b[k], red.mul(d[k], red.canon(rb[k])));
+                    acc_a[k] = red.add(acc_a[k], red.mul(d[k], red.canon(ra[k])));
+                }
+            }
+            vt.inverse_lazy(&mut acc_b);
+            vt.inverse_lazy(&mut acc_a);
+            acc_b.extend_from_slice(&acc_a);
+            Ok(acc_b)
+        } else if name.starts_with("routine1") {
+            // R1: out = NTT(x) ∘ key + acc (Fig. 5 pipeline R1)
+            Self::check_arity(name, inputs, 4)?;
+            ReferenceBackend::check_tables_memo(
+                name,
+                "forward twiddle",
+                inputs[3],
+                vt.base().forward_twiddles(),
+                n,
+                q,
+                TW_FWD,
+                memo,
+            )?;
+            let (x, key, acc) = (inputs[0], inputs[1], inputs[2]);
+            let mut out = vec![0u64; rows * n];
+            let mut xr = vec![0u64; n];
+            for r in 0..rows {
+                vntt::canon_into(red, &x[r * n..(r + 1) * n], &mut xr);
+                vt.forward_lazy(&mut xr);
+                vt.normalize(&mut xr);
+                vntt::mul_add_into(
+                    red,
+                    &xr,
+                    &key[r * n..(r + 1) * n],
+                    &acc[r * n..(r + 1) * n],
+                    &mut out[r * n..(r + 1) * n],
+                );
+            }
+            Ok(out)
+        } else if name.starts_with("routine2") {
+            // R2: out = a ∘ b + c (NTT-independent MMult–MAdd traffic)
+            Self::check_arity(name, inputs, 3)?;
+            let mut out = vec![0u64; rows * n];
+            vntt::mul_add_into(red, inputs[0], inputs[1], inputs[2], &mut out);
+            Ok(out)
+        } else if name.starts_with("pointwise_mul") {
+            Self::check_arity(name, inputs, 2)?;
+            let mut out = vec![0u64; rows * n];
+            vntt::pointwise_mul_into(red, inputs[0], inputs[1], &mut out);
+            Ok(out)
+        } else {
+            // pointwise_add — the family gate above admits nothing else
+            Self::check_arity(name, inputs, 2)?;
+            let mut out = vec![0u64; rows * n];
+            vntt::pointwise_add_into(red, inputs[0], inputs[1], &mut out);
+            Ok(out)
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn execute_u64(&self, meta: &ArtifactMeta, inputs: &[&[u64]]) -> Result<Vec<u64>> {
+        self.exec(meta, inputs, &mut TableMemo::default())
+    }
+
+    /// Legacy entry point: pack the batch into a flat arena first, so
+    /// direct callers get the same dedup + cache-aligned layout the
+    /// planner-routed path does.
+    fn execute_batch(&self, items: &[BatchItem<'_>]) -> Vec<Result<Vec<u64>>> {
+        if items.is_empty() {
+            return Vec::new();
+        }
+        let (arena, arena_items) = OperandArena::pack(items);
+        self.execute_batch_arena(&arena, &arena_items)
+    }
+
+    fn supports_arena(&self) -> bool {
+        true
+    }
+
+    /// Arena-native batched execution: contiguous chunks tile across
+    /// scoped threads (one per available core), each chunk sharing one
+    /// table memo. Item order is preserved; a failed item only fails its
+    /// own slot, and a panicking chunk fails its own items, not the batch.
+    fn execute_batch_arena(
+        &self,
+        arena: &OperandArena,
+        items: &[ArenaItem<'_>],
+    ) -> Vec<Result<Vec<u64>>> {
+        if items.is_empty() {
+            return Vec::new();
+        }
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(items.len());
+        if workers <= 1 {
+            return self.exec_chunk(arena, items);
+        }
+        let chunk = items.len().div_ceil(workers);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = items
+                .chunks(chunk)
+                .map(|c| s.spawn(move || self.exec_chunk(arena, c)))
+                .collect();
+            handles
+                .into_iter()
+                .zip(items.chunks(chunk))
+                .flat_map(|(h, c)| match h.join() {
+                    Ok(outs) => outs,
+                    Err(_) => c
+                        .iter()
+                        .map(|it| {
+                            Err(Error::new(format!(
+                                "{}: batch chunk worker panicked",
+                                it.meta.name
+                            )))
+                        })
+                        .collect(),
+                })
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{builtin_manifest, Invocation, Runtime, RuntimeOptions};
+    use super::*;
+    use crate::math::ntt::NttTable;
+    use crate::math::sampler::Rng;
+
+    fn native_rt() -> Runtime {
+        RuntimeOptions {
+            backend: "native".into(),
+            ..Default::default()
+        }
+        .build()
+        .unwrap()
+    }
+
+    /// Operands for one artifact: twiddle tables canonical per position,
+    /// data inputs raw/unreduced to stress load canonicalization.
+    fn gen_inputs(meta: &ArtifactMeta, rng: &mut Rng) -> Vec<Vec<u64>> {
+        let n = meta.shapes[0][1];
+        let q = meta.modulus;
+        let t = NttTable::new(n, q);
+        meta.shapes
+            .iter()
+            .enumerate()
+            .map(|(i, shape)| {
+                let len: usize = shape.iter().product();
+                let is = |p: &str| meta.name.starts_with(p);
+                if is("automorph") && i == 1 {
+                    // a valid permutation: rotate by 1
+                    return (0..len).map(|k| ((k + 1) % n) as u64).collect();
+                }
+                if (is("ntt_fwd") && i == 1)
+                    || ((is("routine1") || is("external_product")) && i == 3)
+                {
+                    return t.forward_twiddles().to_vec();
+                }
+                if (is("ntt_inv") && i == 1) || (is("external_product") && i == 4) {
+                    return t.inverse_twiddles().to_vec();
+                }
+                if (is("ntt_inv") && i == 2) || (is("external_product") && i == 5) {
+                    return vec![t.n_inv()];
+                }
+                // raw u64s, including values ≥ q
+                (0..len).map(|_| rng.next_u64() % (4 * q)).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn native_matches_reference_across_builtin_manifest() {
+        let native = native_rt();
+        let reference = Runtime::reference();
+        let mut rng = Rng::seeded(0xA9A);
+        for meta in builtin_manifest() {
+            let inputs = gen_inputs(&meta, &mut rng);
+            let a = native.execute_u64(&meta.name, &inputs).unwrap();
+            let b = reference.execute_u64(&meta.name, &inputs).unwrap();
+            assert_eq!(a, b, "native diverged from reference on {}", meta.name);
+        }
+    }
+
+    #[test]
+    fn native_batch_equals_per_call_and_isolates_failures() {
+        let rt = native_rt();
+        let mut rng = Rng::seeded(0xB7);
+        let meta = rt.manifest["routine2_n256"].clone();
+        let gen = |rng: &mut Rng| gen_inputs(&meta, rng);
+        let (x, y) = (gen(&mut rng), gen(&mut rng));
+        let invs = vec![
+            Invocation::from_owned("routine2_n256", x.clone()),
+            Invocation::from_owned("no_such_artifact", vec![vec![1u64]]),
+            Invocation::from_owned("routine2_n256", y.clone()),
+        ];
+        let outs = rt.execute_batch_u64(&invs);
+        assert_eq!(outs[0].as_ref().unwrap(), &rt.execute_u64("routine2_n256", &x).unwrap());
+        assert!(outs[1].is_err());
+        assert_eq!(outs[2].as_ref().unwrap(), &rt.execute_u64("routine2_n256", &y).unwrap());
+    }
+
+    #[test]
+    fn native_rejects_divergent_twiddles() {
+        let rt = native_rt();
+        let n = 256;
+        let err = rt.execute_u64("ntt_fwd_n256", &[vec![0u64; 14 * n], vec![1u64; n]]);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("twiddle"));
+    }
+
+    #[test]
+    fn unsupported_modulus_takes_the_scalar_oracle() {
+        // a 17-bit prime is outside the lazy window; the embedded
+        // reference kernels must serve it bit-identically anyway
+        let q = crate::math::modops::ntt_primes(17, 16, 1)[0];
+        assert!(!vntt::supported(q));
+        let meta = ArtifactMeta {
+            name: "pointwise_mul_n8".into(),
+            file: "x".into(),
+            num_inputs: 2,
+            shapes: vec![vec![2, 8], vec![2, 8]],
+            modulus: q,
+        };
+        let native = NativeBackend::new();
+        let reference = ReferenceBackend::new();
+        let a: Vec<u64> = (0..16).map(|i| i * 31 + 7).collect();
+        let b: Vec<u64> = (0..16).map(|i| i * 17 + 3).collect();
+        let refs: Vec<&[u64]> = vec![&a, &b];
+        assert_eq!(
+            native.execute_u64(&meta, &refs).unwrap(),
+            reference.execute_u64(&meta, &refs).unwrap()
+        );
+    }
+
+    #[test]
+    fn arena_entry_point_matches_legacy_batch() {
+        let rt = native_rt();
+        let mut rng = Rng::seeded(0xC1);
+        let meta = rt.manifest["ntt_fwd_n256"].clone();
+        let backend = NativeBackend::new();
+        let tw = Arc::new(gen_inputs(&meta, &mut rng)[1].clone());
+        let polys: Vec<Arc<Vec<u64>>> = (0..4)
+            .map(|_| Arc::new(gen_inputs(&meta, &mut rng)[0].clone()))
+            .collect();
+        let inputs: Vec<Vec<Arc<Vec<u64>>>> = polys
+            .iter()
+            .map(|p| vec![p.clone(), tw.clone()])
+            .collect();
+        let items: Vec<BatchItem<'_>> = inputs
+            .iter()
+            .map(|ops| BatchItem {
+                meta: &meta,
+                inputs: ops,
+                pool: None,
+                kinds: &[],
+            })
+            .collect();
+        let legacy = backend.execute_batch(&items);
+        let (arena, arena_items) = OperandArena::pack(&items);
+        let flat = backend.execute_batch_arena(&arena, &arena_items);
+        for (a, b) in legacy.iter().zip(&flat) {
+            assert_eq!(a.as_ref().unwrap(), b.as_ref().unwrap());
+        }
+    }
+}

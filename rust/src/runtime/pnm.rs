@@ -941,7 +941,7 @@ mod tests {
     use crate::math::modops::ntt_primes;
     use crate::math::ntt::NttTable;
     use crate::math::sampler::Rng;
-    use crate::runtime::{builtin_manifest, Invocation, PlanPolicy, Runtime};
+    use crate::runtime::{builtin_manifest, Invocation, PlanPolicy, Runtime, RuntimeOptions};
     use std::sync::Arc;
 
     use super::*;
@@ -1106,10 +1106,18 @@ mod tests {
     #[test]
     fn policies_execute_identical_numerics() {
         let dimm = DimmConfig::paper();
-        let identity =
-            Runtime::for_backend_with_policy("pnm", &dimm, AllocPolicy::Identity).unwrap();
-        let rank_aware =
-            Runtime::for_backend_with_policy("pnm", &dimm, AllocPolicy::RankAware).unwrap();
+        let rt_with = |alloc_policy: AllocPolicy| {
+            RuntimeOptions {
+                backend: "pnm".into(),
+                dimm: dimm.clone(),
+                alloc_policy,
+                ..RuntimeOptions::default()
+            }
+            .build()
+            .unwrap()
+        };
+        let identity = rt_with(AllocPolicy::Identity);
+        let rank_aware = rt_with(AllocPolicy::RankAware);
         let invs = routine2_invs(6, 17);
         let a = identity.execute_batch_u64(&invs);
         let b = rank_aware.execute_batch_u64(&invs);
@@ -1245,12 +1253,13 @@ mod tests {
         // reference backend, and the trace counts the plan
         let mut dimm = DimmConfig::paper();
         dimm.ranks = 1;
-        let planned = Runtime::for_backend_with_policies(
-            "pnm",
-            &dimm,
-            AllocPolicy::RankAware,
-            PlanPolicy::RowLocality,
-        )
+        let planned = RuntimeOptions {
+            backend: "pnm".into(),
+            dimm,
+            plan_policy: PlanPolicy::RowLocality,
+            ..RuntimeOptions::default()
+        }
+        .build()
         .unwrap();
         assert_eq!(planned.plan_policy(), PlanPolicy::RowLocality);
         let reference = Runtime::reference();
@@ -1293,12 +1302,12 @@ mod tests {
         // one pool, many distinct large operands: the working set blows
         // the residency budget, the plan splits, every segment is its own
         // device dispatch, and outputs stay bit-identical throughout
-        let planned = Runtime::for_backend_with_policies(
-            "pnm",
-            &DimmConfig::paper(),
-            AllocPolicy::RankAware,
-            PlanPolicy::RowLocality,
-        )
+        let planned = RuntimeOptions {
+            backend: "pnm".into(),
+            plan_policy: PlanPolicy::RowLocality,
+            ..RuntimeOptions::default()
+        }
+        .build()
         .unwrap();
         let reference = Runtime::reference();
         let q = ntt_primes(31, 2048, 1)[0];

@@ -1,0 +1,180 @@
+//! One generic CLI > env > config knob resolver.
+//!
+//! Every runtime knob in the system — backend selection, placement and
+//! plan policies, the residency budget, shard count, queue depth — obeys
+//! the same precedence contract: an explicit CLI flag wins, else the
+//! environment variable (the CI matrix dimension), else the config-file /
+//! built-in default. This module is that contract in one place,
+//! replacing the per-knob `resolve_shards` / `resolve_queue_depth` /
+//! `env_backend` / `env_alloc_policy` / `env_plan_policy` /
+//! `env_residency_budget` helpers that each re-implemented it.
+//!
+//! A [`Knob`] is the pair of spellings (`--flag`, `ENV_VAR`); resolution
+//! is parameterized by a per-knob `parse` so validation lives with the
+//! type that owns the value (e.g. `AllocPolicy::parse`,
+//! `ApacheConfig::parse_shards`). A rejected value names the source that
+//! supplied it (`--shards: …` / `APACHE_SHARDS: …`), so a bad CI matrix
+//! entry and a typo'd flag are distinguishable from the same error text.
+
+use super::error::{Error, Result};
+
+/// One knob's CLI flag and environment variable spellings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Knob {
+    pub cli: &'static str,
+    pub env: &'static str,
+}
+
+/// Backend selection (`reference` / `native` / `pnm`).
+pub const BACKEND: Knob = Knob {
+    cli: "--backend",
+    env: "APACHE_BACKEND",
+};
+
+/// Operand-placement policy of placement-aware backends.
+pub const ALLOC_POLICY: Knob = Knob {
+    cli: "--alloc-policy",
+    env: "APACHE_ALLOC_POLICY",
+};
+
+/// Dispatch-planning policy of the batched entry point.
+pub const PLAN_POLICY: Knob = Knob {
+    cli: "--plan-policy",
+    env: "APACHE_PLAN_POLICY",
+};
+
+/// Cross-batch residency-cache budget in bytes (0 = per-batch control).
+pub const RESIDENCY_BUDGET: Knob = Knob {
+    cli: "--residency-budget",
+    env: "APACHE_RESIDENCY_BUDGET",
+};
+
+/// Serving-tier shard count.
+pub const SHARDS: Knob = Knob {
+    cli: "--shards",
+    env: "APACHE_SHARDS",
+};
+
+/// Per-shard bounded queue depth.
+pub const QUEUE_DEPTH: Knob = Knob {
+    cli: "--queue-depth",
+    env: "APACHE_QUEUE_DEPTH",
+};
+
+impl Knob {
+    /// The knob's environment override: `None` when unset or empty (an
+    /// empty matrix entry means "not selected", not "select the empty
+    /// string").
+    pub fn env_value(&self) -> Option<String> {
+        std::env::var(self.env).ok().filter(|s| !s.is_empty())
+    }
+
+    /// Resolve against the live process environment:
+    /// CLI > env > config default.
+    pub fn resolve<T>(
+        &self,
+        cli: Option<&str>,
+        cfg: T,
+        parse: impl Fn(&str) -> Result<T>,
+    ) -> Result<T> {
+        let env = self.env_value();
+        self.resolve_from(cli, env.as_deref(), cfg, parse)
+    }
+
+    /// Pure-function core of [`Knob::resolve`]: the environment value is
+    /// an explicit argument, so precedence and rejection are testable
+    /// without mutating process-global environment state. A value from
+    /// CLI or env must parse — falling back past a *present but invalid*
+    /// override would silently run a configuration the operator did not
+    /// select. Errors are prefixed with the winning source's spelling.
+    pub fn resolve_from<T>(
+        &self,
+        cli: Option<&str>,
+        env: Option<&str>,
+        cfg: T,
+        parse: impl Fn(&str) -> Result<T>,
+    ) -> Result<T> {
+        let (source, raw) = match (cli, env) {
+            (Some(raw), _) => (self.cli, raw),
+            (None, Some(raw)) => (self.env, raw),
+            (None, None) => return Ok(cfg),
+        };
+        parse(raw).map_err(|e| Error::new(format!("{source}: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_count(raw: &str) -> Result<usize> {
+        let n: usize = raw
+            .parse()
+            .map_err(|_| Error::new(format!("must be an integer, got `{raw}`")))?;
+        if n == 0 {
+            return Err(Error::new("must be >= 1"));
+        }
+        Ok(n)
+    }
+
+    /// Every knob in the system, so the precedence contract is asserted
+    /// over the full surface, not a sample.
+    const ALL: [Knob; 6] = [
+        BACKEND,
+        ALLOC_POLICY,
+        PLAN_POLICY,
+        RESIDENCY_BUDGET,
+        SHARDS,
+        QUEUE_DEPTH,
+    ];
+
+    #[test]
+    fn precedence_is_cli_env_config_for_every_knob() {
+        for k in ALL {
+            // all three present: CLI wins
+            assert_eq!(
+                k.resolve_from(Some("1"), Some("2"), 3, parse_count).unwrap(),
+                1
+            );
+            // no CLI: env wins
+            assert_eq!(k.resolve_from(None, Some("2"), 3, parse_count).unwrap(), 2);
+            // neither: config default passes through unparsed
+            assert_eq!(k.resolve_from(None, None, 3, parse_count).unwrap(), 3);
+        }
+    }
+
+    #[test]
+    fn rejection_names_the_winning_source() {
+        for k in ALL {
+            let cli_err = k
+                .resolve_from(Some("zero"), None, 3, parse_count)
+                .unwrap_err()
+                .to_string();
+            assert!(cli_err.contains(k.cli), "{cli_err} must name {}", k.cli);
+            assert!(cli_err.contains("must be an integer"), "{cli_err}");
+            let env_err = k
+                .resolve_from(None, Some("0"), 3, parse_count)
+                .unwrap_err()
+                .to_string();
+            assert!(env_err.contains(k.env), "{env_err} must name {}", k.env);
+        }
+    }
+
+    #[test]
+    fn invalid_override_never_falls_back_to_config() {
+        // a present-but-bad CLI value must not silently yield env/config
+        assert!(SHARDS
+            .resolve_from(Some("bad"), Some("2"), 3, parse_count)
+            .is_err());
+        // a present-but-bad env value must not silently yield config
+        assert!(SHARDS.resolve_from(None, Some("bad"), 3, parse_count).is_err());
+    }
+
+    #[test]
+    fn spellings_are_the_documented_ones() {
+        assert_eq!(BACKEND.env, "APACHE_BACKEND");
+        assert_eq!(SHARDS.cli, "--shards");
+        assert_eq!(QUEUE_DEPTH.env, "APACHE_QUEUE_DEPTH");
+        assert_eq!(RESIDENCY_BUDGET.cli, "--residency-budget");
+    }
+}

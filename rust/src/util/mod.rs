@@ -1,11 +1,13 @@
 //! In-repo replacements for crates unavailable in the offline vendor set:
 //! property testing (`proptest_lite`), benchmarking (`benchkit`), config
 //! parsing (`toml_lite`), CLI parsing (`cli`), structured output
-//! (`jsonw`) and error plumbing (`error`, the `anyhow` stand-in).
+//! (`jsonw`) and error plumbing (`error`, the `anyhow` stand-in) — plus
+//! the shared CLI > env > config knob resolver (`knob`).
 
 pub mod benchkit;
 pub mod cli;
 pub mod error;
 pub mod jsonw;
+pub mod knob;
 pub mod proptest_lite;
 pub mod toml_lite;

@@ -5,7 +5,7 @@
 //! and it runs on every plain `cargo test` — no artifacts required.
 //!
 //! The `APACHE_BACKEND` environment variable swaps the backend under
-//! test (`reference` | `pnm`), `APACHE_ALLOC_POLICY` the operand
+//! test (`reference` | `native` | `pnm`), `APACHE_ALLOC_POLICY` the operand
 //! placement policy (`rank_aware` | `identity`), `APACHE_PLAN_POLICY`
 //! the dispatch-planning policy (`row_locality` | `fifo`) and
 //! `APACHE_RESIDENCY_BUDGET` the cross-batch residency budget in bytes
@@ -24,13 +24,15 @@ use apache_fhe::math::sampler::Rng;
 use apache_fhe::params::{CkksParams, TfheParams};
 use apache_fhe::runtime::{
     builtin_manifest, ArtifactMeta, BatchItem, Invocation, PlanPolicy, PnmBackend, Runtime,
+    RuntimeOptions,
 };
 use apache_fhe::sched::lowering::Lowerer;
 use apache_fhe::sched::oplevel::OpShapes;
+use apache_fhe::util::knob;
 
 /// The placement policy named by `APACHE_ALLOC_POLICY`, else the default.
 fn env_policy() -> AllocPolicy {
-    match Runtime::env_alloc_policy() {
+    match knob::ALLOC_POLICY.env_value() {
         Some(name) => {
             AllocPolicy::parse(&name).expect("APACHE_ALLOC_POLICY must name a known policy")
         }
@@ -41,7 +43,7 @@ fn env_policy() -> AllocPolicy {
 /// The plan policy named by `APACHE_PLAN_POLICY`, else the serving
 /// default (`row_locality` — the coordinator's config default).
 fn env_plan() -> PlanPolicy {
-    match Runtime::env_plan_policy() {
+    match knob::PLAN_POLICY.env_value() {
         Some(name) => {
             PlanPolicy::parse(&name).expect("APACHE_PLAN_POLICY must name a known policy")
         }
@@ -52,7 +54,7 @@ fn env_plan() -> PlanPolicy {
 /// The residency budget named by `APACHE_RESIDENCY_BUDGET` (bytes), else
 /// 0 — the per-batch default every pre-cache leg ran under.
 fn env_budget() -> u64 {
-    match Runtime::env_residency_budget() {
+    match knob::RESIDENCY_BUDGET.env_value() {
         Some(raw) => raw
             .parse()
             .expect("APACHE_RESIDENCY_BUDGET must be a byte count"),
@@ -64,14 +66,15 @@ fn env_budget() -> u64 {
 /// artifacts when built with `--features pjrt` after `make artifacts`,
 /// and the hermetic reference runtime in every other case. Never skips.
 fn runtime() -> Runtime {
-    if let Some(name) = Runtime::env_backend() {
-        return Runtime::for_backend_configured(
-            &name,
-            &DimmConfig::paper(),
-            env_policy(),
-            env_plan(),
-            env_budget(),
-        )
+    if let Some(name) = knob::BACKEND.env_value() {
+        return RuntimeOptions {
+            backend: name,
+            alloc_policy: env_policy(),
+            plan_policy: env_plan(),
+            residency_budget: env_budget(),
+            ..RuntimeOptions::default()
+        }
+        .build()
         .expect("APACHE_BACKEND must name a known backend");
     }
     match Runtime::new(Runtime::default_dir()) {
@@ -81,6 +84,26 @@ fn runtime() -> Runtime {
             Runtime::reference()
         }
     }
+}
+
+/// A pnm runtime with explicit knobs — the per-test construction path
+/// (tests that pin a policy A/B regardless of the environment matrix).
+fn pnm_rt(
+    dimm: &DimmConfig,
+    alloc_policy: AllocPolicy,
+    plan_policy: PlanPolicy,
+    residency_budget: u64,
+) -> Runtime {
+    RuntimeOptions {
+        backend: "pnm".into(),
+        dimm: dimm.clone(),
+        alloc_policy,
+        plan_policy,
+        residency_budget,
+        artifacts_dir: None,
+    }
+    .build()
+    .unwrap()
 }
 
 #[test]
@@ -468,7 +491,12 @@ fn pnm_full_manifest_bit_identity_sweep() {
     // the near-memory backend must be bit-identical to the reference
     // backend in every slot, and must dispatch once per batch.
     let reference = Runtime::reference();
-    let pnm = Runtime::for_backend("pnm", &DimmConfig::paper()).unwrap();
+    let pnm = pnm_rt(
+        &DimmConfig::paper(),
+        AllocPolicy::RankAware,
+        PlanPolicy::Fifo,
+        0,
+    );
     let names = reference.artifact_names();
     let mut rng = Rng::seeded(90);
     let mut batches = 0u64;
@@ -503,6 +531,51 @@ fn pnm_full_manifest_bit_identity_sweep() {
     assert!(
         reference.cost_trace().is_none(),
         "the reference backend models no hardware cost"
+    );
+}
+
+#[test]
+fn native_full_manifest_bit_identity_sweep() {
+    // every artifact in the builtin manifest, at batch 1 and batch 16:
+    // the vectorized native backend (lazy-reduction kernels over flat
+    // operand arenas) must be bit-identical to the reference backend in
+    // every slot. Canonical residues are unique mod q, so equality here
+    // is exact functional equivalence, not equivalence up to
+    // normalization.
+    let reference = Runtime::reference();
+    let native = RuntimeOptions {
+        backend: "native".into(),
+        ..RuntimeOptions::default()
+    }
+    .build()
+    .unwrap();
+    assert_eq!(native.backend_name(), "native");
+    let names = reference.artifact_names();
+    let mut rng = Rng::seeded(92);
+    for batch in [1usize, 16] {
+        let mut invs = Vec::new();
+        for name in &names {
+            let meta = &reference.manifest[name];
+            for _ in 0..batch {
+                invs.push(Invocation::from_owned(name.clone(), gen_inputs(meta, &mut rng)));
+            }
+        }
+        let ref_outs = reference.execute_batch_u64(&invs);
+        let nat_outs = native.execute_batch_u64(&invs);
+        assert_eq!(ref_outs.len(), nat_outs.len());
+        for ((inv, r), n) in invs.iter().zip(&ref_outs).zip(&nat_outs) {
+            let r = r.as_ref().unwrap_or_else(|e| {
+                panic!("reference failed {} at batch {batch}: {e}", inv.artifact)
+            });
+            let n = n.as_ref().unwrap_or_else(|e| {
+                panic!("native failed {} at batch {batch}: {e}", inv.artifact)
+            });
+            assert_eq!(r, n, "{}: native diverged at batch {batch}", inv.artifact);
+        }
+    }
+    assert!(
+        native.cost_trace().is_none(),
+        "the native backend is a host executor, not a device model"
     );
 }
 
@@ -550,9 +623,8 @@ fn rank_aware_policy_beats_identity_on_the_serving_mix() {
     // traffic balanced under a fixed bound.
     let reference = Runtime::reference();
     let dimm = crossval_dimm();
-    let identity = Runtime::for_backend_with_policy("pnm", &dimm, AllocPolicy::Identity).unwrap();
-    let rank_aware =
-        Runtime::for_backend_with_policy("pnm", &dimm, AllocPolicy::RankAware).unwrap();
+    let identity = pnm_rt(&dimm, AllocPolicy::Identity, PlanPolicy::Fifo, 0);
+    let rank_aware = pnm_rt(&dimm, AllocPolicy::RankAware, PlanPolicy::Fifo, 0);
     let invs = serving_mix_invocations(&reference);
     assert!(invs.len() > 100, "the mix must be a real batch");
     let ref_outs = reference.execute_batch_u64(&invs);
@@ -602,7 +674,7 @@ fn policy_trace_shape_sweep_is_dispatch_invariant() {
         .collect();
     let mut hit_rates = Vec::new();
     for policy in [AllocPolicy::Identity, AllocPolicy::RankAware] {
-        let rt = Runtime::for_backend_with_policy("pnm", &crossval_dimm(), policy).unwrap();
+        let rt = pnm_rt(&crossval_dimm(), policy, PlanPolicy::Fifo, 0);
         let mut dispatches = 0u64;
         for (piece, ref_piece) in invs.chunks(chunk).zip(&ref_outs) {
             let outs = rt.execute_batch_u64(piece);
@@ -639,20 +711,8 @@ fn row_locality_plan_beats_fifo_on_the_serving_mix() {
     // planner's own prediction honest (never worse than its control).
     let reference = Runtime::reference();
     let dimm = crossval_dimm();
-    let fifo = Runtime::for_backend_with_policies(
-        "pnm",
-        &dimm,
-        AllocPolicy::RankAware,
-        PlanPolicy::Fifo,
-    )
-    .unwrap();
-    let planned = Runtime::for_backend_with_policies(
-        "pnm",
-        &dimm,
-        AllocPolicy::RankAware,
-        PlanPolicy::RowLocality,
-    )
-    .unwrap();
+    let fifo = pnm_rt(&dimm, AllocPolicy::RankAware, PlanPolicy::Fifo, 0);
+    let planned = pnm_rt(&dimm, AllocPolicy::RankAware, PlanPolicy::RowLocality, 0);
     let invs = serving_mix_invocations(&reference);
     assert!(invs.len() > 100, "the mix must be a real batch");
     let ref_outs = reference.execute_batch_u64(&invs);
@@ -716,13 +776,7 @@ fn plan_policies_stay_bit_identical_across_dispatch_shapes() {
         .collect();
     let mut hit_rates = Vec::new();
     for plan_policy in [PlanPolicy::Fifo, PlanPolicy::RowLocality] {
-        let rt = Runtime::for_backend_with_policies(
-            "pnm",
-            &crossval_dimm(),
-            AllocPolicy::RankAware,
-            plan_policy,
-        )
-        .unwrap();
+        let rt = pnm_rt(&crossval_dimm(), AllocPolicy::RankAware, plan_policy, 0);
         let mut batches = 0u64;
         for (piece, ref_piece) in invs.chunks(chunk).zip(&ref_outs) {
             let outs = rt.execute_batch_u64(piece);
@@ -761,7 +815,12 @@ fn plan_policies_stay_bit_identical_across_dispatch_shapes() {
 fn pnm_per_slot_error_isolation() {
     // an invalid invocation fails in its own slot without aborting its
     // siblings, and never reaches the modeled device.
-    let pnm = Runtime::for_backend("pnm", &DimmConfig::paper()).unwrap();
+    let pnm = pnm_rt(
+        &DimmConfig::paper(),
+        AllocPolicy::RankAware,
+        PlanPolicy::Fifo,
+        0,
+    );
     let meta = &pnm.manifest["routine2_n256"];
     let mut rng = Rng::seeded(91);
     let good = Invocation::from_owned("routine2_n256", gen_inputs(meta, &mut rng));
@@ -854,22 +913,8 @@ fn repeated_tenant_mix_wins_row_hits_only_with_the_residency_cache() {
     // pinned key rows stay put and stay open.
     let reference = Runtime::reference();
     let dimm = residency_dimm();
-    let cold = Runtime::for_backend_configured(
-        "pnm",
-        &dimm,
-        AllocPolicy::RankAware,
-        PlanPolicy::RowLocality,
-        0,
-    )
-    .unwrap();
-    let cached = Runtime::for_backend_configured(
-        "pnm",
-        &dimm,
-        AllocPolicy::RankAware,
-        PlanPolicy::RowLocality,
-        8 << 20,
-    )
-    .unwrap();
+    let cold = pnm_rt(&dimm, AllocPolicy::RankAware, PlanPolicy::RowLocality, 0);
+    let cached = pnm_rt(&dimm, AllocPolicy::RankAware, PlanPolicy::RowLocality, 8 << 20);
     let meta = &reference.manifest["routine2_n256"];
     let len: usize = meta.shapes[0].iter().product();
     let q = meta.modulus;

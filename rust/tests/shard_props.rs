@@ -150,6 +150,62 @@ fn pnm_sharded_matches_pnm_synchronous() {
 }
 
 #[test]
+fn native_sharded_matches_native_synchronous() {
+    // the vectorized arena backend behind the full serving tier: each
+    // shard packs its own operand arenas and tiles batches across its
+    // own worker threads, yet the digests must match the one-runtime
+    // synchronous loop bit-for-bit
+    let cfg = ApacheConfig {
+        backend: "native".into(),
+        use_runtime: true,
+        ..Default::default()
+    };
+    let mix: Vec<(u64, Task)> = (0..6)
+        .map(|i| ((i % 3) as u64, cmux_tree_task(&format!("n{i}"), 3)))
+        .collect();
+    let sync = Coordinator::new(cfg.clone());
+    let reqs: Vec<TaskRequest> = mix
+        .iter()
+        .map(|(_, t)| TaskRequest { task: t.clone() })
+        .collect();
+    let baseline = sync.serve_batch(reqs);
+    assert!(baseline.iter().all(|r| r.runtime_error.is_none()));
+    assert!(baseline.iter().all(|r| r.runtime_digest != 0));
+    // the native tier must also agree with the reference tier: the same
+    // mix through the scalar oracle yields the same digests
+    let ref_cfg = ApacheConfig {
+        backend: "reference".into(),
+        use_runtime: true,
+        ..Default::default()
+    };
+    let ref_sync = Coordinator::new(ref_cfg);
+    let ref_reqs: Vec<TaskRequest> = mix
+        .iter()
+        .map(|(_, t)| TaskRequest { task: t.clone() })
+        .collect();
+    let ref_baseline = ref_sync.serve_batch(ref_reqs);
+    assert_bit_identical(&baseline, &ref_baseline, "native vs reference sync");
+    for shards in [1usize, 2, 4] {
+        let shard_cfg = ShardConfig {
+            shards,
+            queue_depth: 32,
+            batch_window: 4,
+            double_buffer: true,
+        };
+        let coord = ShardedCoordinator::new(cfg.clone(), shard_cfg);
+        for (tenant, task) in &mix {
+            let adm = coord.submit(ServeRequest {
+                tenant: *tenant,
+                task: task.clone(),
+            });
+            assert!(adm.accepted());
+        }
+        let results = coord.drain();
+        assert_bit_identical(&results, &baseline, &format!("native {shards} shards"));
+    }
+}
+
+#[test]
 fn tenant_affinity_is_pure_and_in_range() {
     run_prop("shard-affinity", 64, |rng, _| {
         let tenant = rng.next_u64();

@@ -1,0 +1,254 @@
+//! Property sweeps for the vectorized lazy kernels (`math::vntt`)
+//! against the scalar oracle (`math::ntt` / `math::modops`).
+//!
+//! The native backend's correctness rests on one claim: after final
+//! normalization, every lazy kernel is *bit-identical* to the scalar
+//! library on the same operands — not merely congruent mod q. These
+//! sweeps pin that claim across every manifest modulus, random operand
+//! streams, and the adversarial corners (values hugging the modulus,
+//! lazy-lane maxima near 2q, and raw u64 extremes the artifact contract
+//! lets callers pass).
+
+use apache_fhe::math::modops::{mod_add, mod_mul, ntt_primes};
+use apache_fhe::math::ntt::NttTable;
+use apache_fhe::math::sampler::Rng;
+use apache_fhe::math::vntt::{
+    canon_into, mul_add_into, mul_shoup32_lazy, pointwise_add_into, pointwise_mul_into, shoup32,
+    supported, LazyReducer, VnttTable,
+};
+use apache_fhe::util::proptest_lite::run_prop;
+
+/// The manifest's ring/prime pairs — the moduli every backend executes.
+fn manifest_moduli() -> Vec<(usize, u64)> {
+    [256usize, 1024]
+        .iter()
+        .map(|&n| (n, ntt_primes(31, 2 * n as u64, 1)[0]))
+        .collect()
+}
+
+/// Adversarial scalar operands for modulus `q`: the corners where a
+/// reduction estimate or a masked multiply would first go wrong.
+fn corners(q: u64) -> Vec<u64> {
+    vec![
+        0,
+        1,
+        2,
+        q - 2,
+        q - 1,
+        q,
+        q + 1,
+        2 * q - 2,
+        2 * q - 1,
+        (1 << 31) - 1,
+        (1 << 32) - 1,
+        1 << 32,
+        u64::MAX - 1,
+        u64::MAX,
+    ]
+}
+
+#[test]
+fn manifest_moduli_are_in_the_lazy_range() {
+    for (n, q) in manifest_moduli() {
+        assert!(supported(q), "manifest prime {q} (n={n}) outside 2^30..2^31");
+    }
+}
+
+#[test]
+fn reducer_mul_matches_mod_mul_for_canonical_operands() {
+    run_prop("vntt-mul-vs-modops", 32, |rng, _| {
+        for (_, q) in manifest_moduli() {
+            let red = LazyReducer::new(q);
+            for _ in 0..64 {
+                let a = rng.uniform(q);
+                let b = rng.uniform(q);
+                assert_eq!(red.mul(a, b), mod_mul(a, b, q), "q={q} a={a} b={b}");
+            }
+            // corners, canonicalized the way every kernel entry does
+            for &a in &corners(q) {
+                for &b in &corners(q) {
+                    let (ca, cb) = (red.canon(a), red.canon(b));
+                    assert_eq!(red.mul(ca, cb), mod_mul(ca, cb, q), "q={q} a={a} b={b}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn reducer_handles_any_product_below_2_62() {
+    // `reduce` sees products of canonical residues (< q^2 < 2^62); sweep
+    // the whole contract range, not just reachable products
+    run_prop("vntt-barrett62", 32, |rng, _| {
+        for (_, q) in manifest_moduli() {
+            let red = LazyReducer::new(q);
+            for _ in 0..128 {
+                let p = rng.next_u64() >> 2; // uniform in [0, 2^62)
+                assert_eq!(red.reduce(p), p % q, "q={q} p={p}");
+            }
+            for p in [0u64, 1, q - 1, q, q * q - 1, (1 << 62) - 1] {
+                assert_eq!(red.reduce(p), p % q, "q={q} p={p}");
+            }
+        }
+    });
+}
+
+#[test]
+fn reducer_canon_is_plain_remainder_on_u64_extremes() {
+    for (_, q) in manifest_moduli() {
+        let red = LazyReducer::new(q);
+        for v in corners(q) {
+            assert_eq!(red.canon(v), v % q, "q={q} v={v}");
+        }
+    }
+}
+
+#[test]
+fn shoup32_multiply_is_congruent_and_lazy_bounded() {
+    run_prop("vntt-shoup32", 32, |rng, _| {
+        for (_, q) in manifest_moduli() {
+            for _ in 0..64 {
+                let w = rng.uniform(q);
+                let ws = shoup32(w, q);
+                // any lazy lane value, including the 2q-1 maximum
+                let a = rng.uniform(2 * q);
+                let r = mul_shoup32_lazy(a, w, ws, q);
+                assert!(r < 2 * q, "q={q} w={w} a={a}: lane escaped [0,2q)");
+                assert_eq!(r % q, mod_mul(a % q, w, q), "q={q} w={w} a={a}");
+            }
+            for w in [0u64, 1, q - 1] {
+                let ws = shoup32(w, q);
+                for a in [0u64, 1, q - 1, q, 2 * q - 1] {
+                    let r = mul_shoup32_lazy(a, w, ws, q);
+                    assert!(r < 2 * q);
+                    assert_eq!(r % q, mod_mul(a % q, w, q));
+                }
+            }
+        }
+    });
+}
+
+/// Adversarial polynomials for ring size `n`: constant extremes,
+/// alternating spikes, and a single impulse — shapes that stress carry
+/// chains and butterfly symmetry rather than average-case mixing.
+fn adversarial_polys(n: usize, q: u64) -> Vec<Vec<u64>> {
+    let mut impulse = vec![0u64; n];
+    impulse[0] = q - 1;
+    vec![
+        vec![0u64; n],
+        vec![q - 1; n],
+        (0..n).map(|i| if i % 2 == 0 { 0 } else { q - 1 }).collect(),
+        impulse,
+    ]
+}
+
+#[test]
+fn forward_lazy_is_bit_identical_to_ntt_table() {
+    run_prop("vntt-forward", 16, |rng, _| {
+        for (n, q) in manifest_moduli() {
+            let vt = VnttTable::new(n, q);
+            let mut polys = adversarial_polys(n, q);
+            polys.push(rng.uniform_poly(n, q));
+            for orig in polys {
+                let mut expect = orig.clone();
+                vt.base().forward(&mut expect);
+                let mut got = orig;
+                vt.forward_lazy(&mut got);
+                vt.normalize(&mut got);
+                assert_eq!(got, expect, "forward diverged at n={n}");
+            }
+        }
+    });
+}
+
+#[test]
+fn inverse_lazy_is_bit_identical_to_ntt_table() {
+    run_prop("vntt-inverse", 16, |rng, _| {
+        for (n, q) in manifest_moduli() {
+            let vt = VnttTable::new(n, q);
+            let mut polys = adversarial_polys(n, q);
+            polys.push(rng.uniform_poly(n, q));
+            for orig in polys {
+                let mut expect = orig.clone();
+                vt.base().inverse(&mut expect);
+                let mut got = orig;
+                vt.inverse_lazy(&mut got);
+                assert_eq!(got, expect, "inverse diverged at n={n}");
+            }
+        }
+    });
+}
+
+#[test]
+fn lazy_roundtrip_recovers_the_input() {
+    run_prop("vntt-roundtrip", 16, |rng, _| {
+        for (n, q) in manifest_moduli() {
+            let vt = VnttTable::new(n, q);
+            let orig = rng.uniform_poly(n, q);
+            let mut a = orig.clone();
+            vt.forward_lazy(&mut a);
+            vt.inverse_lazy(&mut a);
+            assert_eq!(a, orig, "roundtrip diverged at n={n}");
+        }
+    });
+}
+
+#[test]
+fn elementwise_kernels_match_modops_on_raw_operands() {
+    // the artifact contract lets callers pass raw (unreduced) u64 data;
+    // the kernels must canonicalize exactly like the oracle's `% q`
+    run_prop("vntt-elementwise", 16, |rng, _| {
+        for (_, q) in manifest_moduli() {
+            let red = LazyReducer::new(q);
+            let len = 64usize;
+            let mut a: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let mut b: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let c: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            // splice the corners into the random stream
+            for (i, v) in corners(q).into_iter().enumerate() {
+                a[i] = v;
+                b[len - 1 - i] = v;
+            }
+            let mut mul = vec![0u64; len];
+            let mut add = vec![0u64; len];
+            let mut fma = vec![0u64; len];
+            let mut canon = vec![0u64; len];
+            pointwise_mul_into(red, &a, &b, &mut mul);
+            pointwise_add_into(red, &a, &b, &mut add);
+            mul_add_into(red, &a, &b, &c, &mut fma);
+            canon_into(red, &a, &mut canon);
+            for i in 0..len {
+                let (x, y, z) = (a[i] % q, b[i] % q, c[i] % q);
+                assert_eq!(mul[i], mod_mul(x, y, q), "mul[{i}] q={q}");
+                assert_eq!(add[i], mod_add(x, y, q), "add[{i}] q={q}");
+                assert_eq!(fma[i], mod_add(mod_mul(x, y, q), z, q), "fma[{i}] q={q}");
+                assert_eq!(canon[i], x, "canon[{i}] q={q}");
+            }
+        }
+    });
+}
+
+#[test]
+fn negacyclic_convolution_through_lazy_kernels_matches_oracle() {
+    // the full external-product inner loop: NTT → pointwise mul → INTT,
+    // all through the lazy kernels, against NttTable::negacyclic_mul
+    run_prop("vntt-negacyclic", 8, |rng, _| {
+        for (n, q) in manifest_moduli() {
+            let vt = VnttTable::new(n, q);
+            let red = vt.reducer();
+            let a = rng.uniform_poly(n, q);
+            let b = rng.uniform_poly(n, q);
+            let expect = vt.base().negacyclic_mul(&a, &b);
+            let mut ea = a.clone();
+            let mut eb = b.clone();
+            vt.forward_lazy(&mut ea);
+            vt.normalize(&mut ea);
+            vt.forward_lazy(&mut eb);
+            vt.normalize(&mut eb);
+            let mut prod = vec![0u64; n];
+            pointwise_mul_into(red, &ea, &eb, &mut prod);
+            vt.inverse_lazy(&mut prod);
+            assert_eq!(prod, expect, "negacyclic product diverged at n={n}");
+        }
+    });
+}
