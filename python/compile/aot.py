@@ -34,14 +34,20 @@ def u64(shape):
     return jax.ShapeDtypeStruct(shape, jnp.uint64)
 
 
+# One (ring degree, operand rows) pair per compiled ring — must mirror
+# rust/src/runtime/mod.rs::MANIFEST_RINGS. The TFHE rings (N ∈ {256, 1024})
+# carry l = 7 gadget levels → 14 RGSW rows; the paper-shaped CKKS rings
+# (N ∈ {4096, 8192, 16384}) carry one RNS-limb tile → 2 polynomial rows.
+MANIFEST_RINGS = [(256, 14), (1024, 14), (4096, 2), (8192, 2), (16384, 2)]
+
+
 def artifact_registry():
     """Every (name, fn, arg_shapes) pair to lower. Shapes follow the
-    functional TFHE parameter sets (rust params.rs): N ∈ {256, 1024},
-    l = 7 gadget levels → 14 RGSW rows."""
+    functional parameter sets (rust params.rs) plus the paper-shaped CKKS
+    rings, per MANIFEST_RINGS."""
     registry = []
-    for n in (256, 1024):
+    for n, rows in MANIFEST_RINGS:
         q = ntt_prime(31, 2 * n)
-        rows = 14
         # twiddle tables are runtime inputs (see kernels/ntt.py docstring)
         tw = u64((n,))
         ninv = u64((1,))

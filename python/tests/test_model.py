@@ -81,11 +81,13 @@ def test_pointwise_graphs_match_reference():
     np.testing.assert_array_equal(np.asarray(add), (a + b) % np.uint64(q))
 
 
-def test_aot_registry_covers_both_rings():
-    from compile.aot import artifact_registry
+def test_aot_registry_covers_every_manifest_ring():
+    from compile.aot import MANIFEST_RINGS, artifact_registry
 
-    names = [r[0] for r in artifact_registry()]
-    for n in (256, 1024):
+    registry = artifact_registry()
+    names = [r[0] for r in registry]
+    assert [n for n, _ in MANIFEST_RINGS] == [256, 1024, 4096, 8192, 16384]
+    for n, rows in MANIFEST_RINGS:
         for kind in (
             "ntt_fwd",
             "ntt_inv",
@@ -97,3 +99,7 @@ def test_aot_registry_covers_both_rings():
             "pointwise_add",
         ):
             assert f"{kind}_n{n}" in names
+        # the first input of the forward NTT carries the ring's row count
+        (fwd,) = [r for r in registry if r[0] == f"ntt_fwd_n{n}"]
+        assert fwd[2][0].shape == (rows, n)
+    assert len(registry) == 8 * len(MANIFEST_RINGS)

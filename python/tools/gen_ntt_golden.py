@@ -3,7 +3,8 @@ rust/tests/ntt_golden.rs.
 
 Run from the repository root:
 
-    python python/tools/gen_ntt_golden.py
+    python python/tools/gen_ntt_golden.py            # print the rows
+    python python/tools/gen_ntt_golden.py --check    # CI drift gate
 
 The script is the Python mirror of the Rust test: it re-implements the
 repo's xoshiro256++ sampler (rust/src/math/sampler.rs) bit-exactly,
@@ -14,9 +15,15 @@ schoolbook oracle in python/compile/kernels/ref.py, and prints the FNV-1a
 digests of inputs and outputs. Paste the printed rows into the GOLDEN
 table of rust/tests/ntt_golden.rs whenever the twiddle layout or the
 sampler changes (they should not — that is the point of the test).
+
+`--check` instead parses the committed GOLDEN table out of
+rust/tests/ntt_golden.rs and exits non-zero on any disagreement — the CI
+golden-drift job, so a prime-scan/twiddle/sampler change cannot land
+without regenerating the digests.
 """
 
 import os
+import re
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -137,19 +144,75 @@ def self_check():
     assert [int(v) for v in oracle] == x, "NTT loop diverges from ref.py oracle"
 
 
-def main():
-    self_check()
-    print("# case: (n, seed, q, input_digest, output_digest)")
-    for n, seed in [(256, 0x5EED0100), (1024, 0x5EED0400)]:
+# One (ring degree, sampler seed) row per compiled ring — mirrors the
+# GOLDEN table of rust/tests/ntt_golden.rs and runtime MANIFEST_RINGS.
+CASES = [
+    (256, 0x5EED0100),
+    (1024, 0x5EED0400),
+    (4096, 0x5EED1000),
+    (8192, 0x5EED2000),
+    (16384, 0x5EED4000),
+]
+
+
+def compute_rows():
+    rows = []
+    for n, seed in CASES:
         q = ntt_prime(31, 2 * n)
         w, _, _ = twiddles(n, q)
         rng = Xoshiro256pp(seed)
         poly = rng.uniform_poly(n, q)
         out = ntt_forward(poly, w, q)
-        print(
-            f"(n={n}, seed=0x{seed:X}, q={q}, "
-            f"input=0x{fnv1a64(poly):016X}, output=0x{fnv1a64(out):016X})"
-        )
+        rows.append((n, seed, q, fnv1a64(poly), fnv1a64(out)))
+    return rows
+
+
+def committed_rows():
+    """The GOLDEN table as committed in rust/tests/ntt_golden.rs."""
+    path = os.path.join(
+        os.path.dirname(__file__), "..", "..", "rust", "tests", "ntt_golden.rs"
+    )
+    with open(path) as f:
+        text = f.read()
+    pat = re.compile(
+        r"\(\s*(\d+)\s*,\s*(0x[0-9A-Fa-f_]+)\s*,\s*([\d_]+)\s*,"
+        r"\s*(0x[0-9A-Fa-f_]+)\s*,\s*(0x[0-9A-Fa-f_]+)\s*,?\s*\)"
+    )
+    rows = []
+    for m in pat.finditer(text):
+        n, seed, q, din, dout = (g.replace("_", "") for g in m.groups())
+        rows.append((int(n), int(seed, 16), int(q), int(din, 16), int(dout, 16)))
+    return rows
+
+
+def check():
+    want = compute_rows()
+    got = committed_rows()
+    ok = True
+    if [r[0] for r in got] != [r[0] for r in want]:
+        print(f"ring mismatch: committed {[r[0] for r in got]}, " f"expected {[r[0] for r in want]}")
+        ok = False
+    else:
+        for w_row, g_row in zip(want, got):
+            if w_row != g_row:
+                print(f"drift at n={w_row[0]}:")
+                print(f"  committed: seed=0x{g_row[1]:X} q={g_row[2]} in=0x{g_row[3]:016X} out=0x{g_row[4]:016X}")
+                print(f"  computed:  seed=0x{w_row[1]:X} q={w_row[2]} in=0x{w_row[3]:016X} out=0x{w_row[4]:016X}")
+                ok = False
+    if not ok:
+        print("GOLDEN drift: regenerate with gen_ntt_golden.py and commit the rows")
+        sys.exit(1)
+    print(f"golden digests match rust/tests/ntt_golden.rs ({len(want)} rings)")
+
+
+def main():
+    self_check()
+    if "--check" in sys.argv[1:]:
+        check()
+        return
+    print("# case: (n, seed, q, input_digest, output_digest)")
+    for n, seed, q, din, dout in compute_rows():
+        print(f"(n={n}, seed=0x{seed:X}, q={q}, " f"input=0x{din:016X}, output=0x{dout:016X})")
 
 
 if __name__ == "__main__":

@@ -52,6 +52,11 @@ pub struct ApacheConfig {
     /// chain: `--queue-depth` > `APACHE_QUEUE_DEPTH` > this config key.
     pub queue_depth: usize,
     pub worker_threads: usize,
+    /// reject (per slot) any lane whose ring is not exactly compiled in
+    /// the artifact manifest, instead of tiling it onto the closest ring
+    /// and counting a `lowering.lane_fallback`. Same precedence chain:
+    /// `--strict-lowering` > `APACHE_STRICT_LOWERING` > this config key.
+    pub strict_lowering: bool,
 }
 
 /// Validation shared by the config file, the CLI and the environment:
@@ -91,6 +96,7 @@ impl Default for ApacheConfig {
             shards: 2,
             queue_depth: 64,
             worker_threads: 2,
+            strict_lowering: false,
         }
     }
 }
@@ -152,6 +158,7 @@ impl ApacheConfig {
             )?,
             worker_threads: doc.get_int("system", "worker_threads", def.worker_threads as i64)
                 as usize,
+            strict_lowering: doc.get_bool("system", "strict_lowering", def.strict_lowering),
         };
         if cfg.dimms == 0 {
             return Err(Error::new("system.dimms must be >= 1"));
@@ -180,6 +187,19 @@ impl ApacheConfig {
     /// `knob::QUEUE_DEPTH.resolve(...)`).
     pub fn parse_queue_depth(raw: &str) -> Result<usize> {
         parse_count(raw, MAX_QUEUE_DEPTH, "queue depth")
+    }
+
+    /// Parse a strict-lowering toggle from one knob source (pairs with
+    /// `knob::STRICT_LOWERING.resolve(...)`). A bare `--strict-lowering`
+    /// flag and a CI matrix entry of `1`/`true` both mean on.
+    pub fn parse_strict_lowering(raw: &str) -> Result<bool> {
+        match raw {
+            "1" | "true" | "on" => Ok(true),
+            "0" | "false" | "off" => Ok(false),
+            _ => Err(Error::new(format!(
+                "strict lowering must be one of 1/0/true/false/on/off, got `{raw}`"
+            ))),
+        }
     }
 
     /// The runtime construction options this config selects — the bridge
@@ -380,6 +400,20 @@ imc_ks = false
         // and the options actually build a runtime of the selected kind
         let rt = opts.build().unwrap();
         assert_eq!(rt.backend_name(), "native");
+    }
+
+    #[test]
+    fn strict_lowering_parses_and_validates() {
+        let cfg = ApacheConfig::from_toml("").unwrap();
+        assert!(!cfg.strict_lowering, "tiling fallback stays on by default");
+        let cfg = ApacheConfig::from_toml("[system]\nstrict_lowering = true\n").unwrap();
+        assert!(cfg.strict_lowering);
+        // the knob-source parser accepts the documented spellings only
+        for (raw, want) in [("1", true), ("true", true), ("on", true), ("0", false)] {
+            assert_eq!(ApacheConfig::parse_strict_lowering(raw).unwrap(), want);
+        }
+        let err = ApacheConfig::parse_strict_lowering("yes").unwrap_err();
+        assert!(err.to_string().contains("strict lowering"));
     }
 
     #[test]

@@ -33,10 +33,7 @@ impl Metrics {
     /// could have left half-applied — so adopting the inner state is
     /// strictly better than panicking every future reader and writer.
     fn lock(&self) -> MutexGuard<'_, Inner> {
-        match self.inner.lock() {
-            Ok(g) => g,
-            Err(poisoned) => poisoned.into_inner(),
-        }
+        crate::util::sync::lock(&self.inner)
     }
 
     pub fn incr(&self, name: &str, by: u64) {

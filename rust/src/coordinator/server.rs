@@ -101,11 +101,12 @@ impl Coordinator {
             ckks: CkksParams::paper_shape(),
             tfhe: TfheParams::paper_shape(),
         };
+        let lowerer = Mutex::new(Lowerer::strict(cfg.strict_lowering));
         Coordinator {
             cfg,
             metrics: Arc::new(Metrics::default()),
             runtime,
-            lowerer: Mutex::new(Lowerer::new()),
+            lowerer,
             shapes,
         }
     }
@@ -115,10 +116,7 @@ impl Coordinator {
     /// next miss), so adopting the inner state is strictly better than
     /// wedging every future served batch.
     fn lowerer(&self) -> MutexGuard<'_, Lowerer> {
-        match self.lowerer.lock() {
-            Ok(g) => g,
-            Err(poisoned) => poisoned.into_inner(),
-        }
+        crate::util::sync::lock(&self.lowerer)
     }
 
     pub fn shapes(&self) -> OpShapes {
@@ -183,7 +181,7 @@ impl Coordinator {
             None => return,
         };
         let mut lowerer = self.lowerer();
-        let prepared = shard::lower_tasks(&mut lowerer, tasks, &self.shapes, rt);
+        let prepared = shard::lower_tasks(&mut lowerer, tasks, &self.shapes, rt, &self.metrics);
         shard::execute_prepared(rt, &self.metrics, &prepared, results);
     }
 }
@@ -256,6 +254,56 @@ mod tests {
         }
         assert_eq!(coord.metrics.counter("runtime.invocations"), total as u64);
         assert_eq!(coord.metrics.counter("runtime.errors"), 0);
+    }
+
+    #[test]
+    fn tiled_ckks_lane_surfaces_the_lane_fallback_metric() {
+        // paper CKKS lane (N = 2^16) exceeds the largest compiled ring:
+        // every CKKS op in the batch is tiled, and the serving tier must
+        // say so on `lowering.lane_fallback` rather than stay silent
+        let coord = Coordinator::with_runtime(ApacheConfig::default(), Some(Runtime::reference()));
+        let mut g = OpGraph::default();
+        let a = g.add(FheOp::HAdd, &[], None);
+        g.add(FheOp::CMult, &[a], Some(1));
+        let task = crate::sched::tasklevel::Task {
+            name: "ckks2".into(),
+            graph: g,
+            state_bytes: 1 << 20,
+        };
+        let results = coord.serve_batch(vec![TaskRequest { task }]);
+        assert!(results[0].runtime_error.is_none(), "{:?}", results[0].runtime_error);
+        assert_eq!(coord.metrics.counter("lowering.lane_fallback"), 2);
+    }
+
+    #[test]
+    fn strict_lowering_turns_the_fallback_into_a_per_task_error() {
+        let cfg = ApacheConfig {
+            strict_lowering: true,
+            ..Default::default()
+        };
+        let coord = Coordinator::with_runtime(cfg, Some(Runtime::reference()));
+        let mut g = OpGraph::default();
+        g.add(FheOp::HAdd, &[], None);
+        let bad = crate::sched::tasklevel::Task {
+            name: "ckks-tiled".into(),
+            graph: g,
+            state_bytes: 1 << 20,
+        };
+        // a TFHE task on the exactly-compiled n=1024 ring rides along
+        let good = cmux_tree_task("tfhe-exact", 3);
+        let mut results = coord.serve_batch(vec![
+            TaskRequest { task: bad },
+            TaskRequest { task: good },
+        ]);
+        results.sort_by(|a, b| a.name.cmp(&b.name));
+        let bad_r = results.iter().find(|r| r.name == "ckks-tiled").unwrap();
+        let msg = bad_r.runtime_error.as_ref().expect("strict mode must reject the tiled lane");
+        assert!(msg.contains("strict-lowering"), "names the knob: {msg}");
+        // per-slot, not per-batch: the exact-ring task still executes
+        let good_r = results.iter().find(|r| r.name == "tfhe-exact").unwrap();
+        assert!(good_r.runtime_error.is_none(), "{:?}", good_r.runtime_error);
+        assert!(good_r.runtime_invocations > 0);
+        assert_eq!(coord.metrics.counter("lowering.lane_fallback"), 0);
     }
 
     #[test]

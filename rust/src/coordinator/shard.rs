@@ -153,10 +153,7 @@ impl<T> BoundedQueue<T> {
     /// Recover from poisoning: the queue holds plain jobs, and adopting
     /// them after a worker panic beats wedging every later submission.
     fn lock(&self) -> MutexGuard<'_, QueueState<T>> {
-        match self.state.lock() {
-            Ok(g) => g,
-            Err(poisoned) => poisoned.into_inner(),
-        }
+        crate::util::sync::lock(&self.state)
     }
 
     /// Enqueue unless full or closed; `Ok` carries the new depth, `Err`
@@ -243,7 +240,7 @@ impl PrepStage {
         // persistent per shard, like the synchronous coordinator's
         // per-lifetime lowerer: returning tenants present stable
         // operand identities, the residency cache's precondition
-        let mut lowerer = Lowerer::new();
+        let mut lowerer = Lowerer::strict(self.cfg.strict_lowering);
         while let Some(first) = self.queue.pop_blocking() {
             let mut jobs = vec![first];
             while jobs.len() < self.batch_window {
@@ -283,7 +280,7 @@ impl PrepStage {
             }
         }
         let prepared = self.runtime.as_ref().map(|rt| {
-            let p = lower_tasks(lowerer, &tasks, &self.shapes, rt);
+            let p = lower_tasks(lowerer, &tasks, &self.shapes, rt, &self.metrics);
             self.lookahead(rt, &p);
             p
         });
@@ -329,10 +326,9 @@ impl ExecStage {
                 execute_prepared(rt, &self.metrics, p, &mut batch.results);
             }
             self.metrics.incr("pnm.shard.batches", 1);
-            let mut sink = match self.sink.lock() {
-                Ok(g) => g,
-                Err(poisoned) => poisoned.into_inner(),
-            };
+            // a result sink is a plain Vec of finished results — adopt it
+            // past a poisoning panic rather than dropping accepted work
+            let mut sink = crate::util::sync::lock(&self.sink);
             for (job, r) in batch.jobs.iter().zip(batch.results.drain(..)) {
                 if let Some(r) = r {
                     let latency = job.submitted.elapsed().as_secs_f64();
@@ -495,10 +491,7 @@ impl ShardedCoordinator {
     pub fn drain(mut self) -> Vec<TaskResult> {
         self.shutdown();
         let mut out = {
-            let mut sink = match self.sink.lock() {
-                Ok(g) => g,
-                Err(poisoned) => poisoned.into_inner(),
-            };
+            let mut sink = crate::util::sync::lock(&self.sink);
             std::mem::take(&mut *sink)
         };
         out.sort_by(|a, b| a.name.cmp(&b.name));
@@ -576,19 +569,24 @@ pub(crate) struct Prepared {
 }
 
 /// Lower every task's op graph through the (persistent) lowerer into
-/// one invocation batch. Pure bookkeeping — metrics and result splicing
-/// happen in [`execute_prepared`].
+/// one invocation batch. Execution metrics and result splicing happen
+/// in [`execute_prepared`]; the one metric emitted here is
+/// `lowering.lane_fallback` — how many ops in this batch were tiled
+/// onto a ring other than their lane's own (under `--strict-lowering`
+/// those surface as per-task `lower_errors` instead).
 pub(crate) fn lower_tasks(
     lowerer: &mut Lowerer,
     tasks: &[Task],
     shapes: &OpShapes,
     rt: &Runtime,
+    metrics: &Metrics,
 ) -> Prepared {
     let mut p = Prepared {
         invocations: Vec::new(),
         spans: Vec::new(),
         lower_errors: Vec::new(),
     };
+    let fallbacks_before = lowerer.lane_fallbacks();
     for (ti, task) in tasks.iter().enumerate() {
         match lowerer.lower_graph(&task.graph, shapes, rt) {
             Ok(invs) => {
@@ -598,6 +596,10 @@ pub(crate) fn lower_tasks(
             }
             Err(e) => p.lower_errors.push((ti, format!("lowering: {e}"))),
         }
+    }
+    let fallbacks = lowerer.lane_fallbacks() - fallbacks_before;
+    if fallbacks > 0 {
+        metrics.incr("lowering.lane_fallback", fallbacks);
     }
     p
 }

@@ -87,6 +87,20 @@ fn load_config(args: &Args) -> ApacheConfig {
             ApacheConfig::parse_queue_depth,
         )
         .unwrap_or_else(|e| die(e));
+    // a bare `--strict-lowering` means on; `--strict-lowering=0` etc.
+    // still resolve through the shared knob chain
+    let strict_cli = if args.flag("strict-lowering") {
+        Some("1")
+    } else {
+        args.opt("strict-lowering")
+    };
+    cfg.strict_lowering = knob::STRICT_LOWERING
+        .resolve(
+            strict_cli,
+            cfg.strict_lowering,
+            ApacheConfig::parse_strict_lowering,
+        )
+        .unwrap_or_else(|e| die(e));
     cfg
 }
 
@@ -234,7 +248,7 @@ fn main() {
                  [--config file.toml] [--dimms N] [--tasks N] [--runtime] \
                  [--backend reference|native|pnm] [--alloc-policy rank_aware|identity] \
                  [--plan-policy row_locality|fifo] [--residency-budget BYTES] \
-                 [--sharded] [--shards N] [--queue-depth N]"
+                 [--sharded] [--shards N] [--queue-depth N] [--strict-lowering]"
             );
             std::process::exit(2);
         }

@@ -36,6 +36,26 @@ pub fn supported(q: u64) -> bool {
     q > (1 << 30) && q < (1 << 31)
 }
 
+/// [`supported`] as a loud, attributable error: names the modulus, the
+/// window, and which half of the contract it breaks. Table construction
+/// and backend setup call this so an out-of-contract modulus fails at
+/// build time — never silently mid-batch.
+pub fn ensure_supported(n: usize, q: u64) -> crate::util::error::Result<()> {
+    if supported(q) {
+        return Ok(());
+    }
+    let bound = if q <= (1 << 30) {
+        "q <= 2^30 breaks the Barrett-62 estimate (floor(2^62/q) must fit 32 bits)"
+    } else {
+        "q >= 2^31 breaks the 32-bit Shoup companions (2q must fit 32 bits)"
+    };
+    Err(crate::util::error::Error::new(format!(
+        "vntt: modulus q={q} (ring N={n}) is outside the lazy-kernel window \
+         2^30 < q < 2^31 — {bound}; recompile the artifact with an in-window \
+         prime or run it on the `reference` backend"
+    )))
+}
+
 /// 32-bit Shoup companion of a fixed multiplicand `w < q < 2^31`:
 /// `floor(w * 2^32 / q)` — fits `u64` arithmetic end to end, unlike the
 /// 64-bit companion in [`crate::math::modops::shoup_precompute`].
@@ -304,10 +324,21 @@ mod tests {
     use crate::math::sampler::Rng;
 
     fn manifest_moduli() -> Vec<(usize, u64)> {
-        [256usize, 1024]
+        [256usize, 1024, 4096, 8192, 16384]
             .iter()
             .map(|&n| (n, ntt_primes(31, 2 * n as u64, 1)[0]))
             .collect()
+    }
+
+    #[test]
+    fn ensure_supported_names_the_broken_bound() {
+        for (n, q) in manifest_moduli() {
+            assert!(ensure_supported(n, q).is_ok(), "manifest prime q={q}");
+        }
+        let low = ensure_supported(16, ntt_primes(17, 32, 1)[0]).unwrap_err();
+        assert!(low.to_string().contains("Barrett-62"), "{low}");
+        let high = ensure_supported(16, (1 << 31) + 11).unwrap_err();
+        assert!(high.to_string().contains("Shoup"), "{high}");
     }
 
     #[test]

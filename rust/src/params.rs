@@ -82,6 +82,20 @@ impl CkksParams {
         }
     }
 
+    /// The paper's evaluation shape at the largest *compiled* ring
+    /// (N = 2^14, the top of the artifact manifest): same tower depth as
+    /// [`Self::paper_shape`], but every lowered CKKS op lands on an
+    /// exactly-compiled kernel — the shape the Fig. 11 end-to-end bench
+    /// runs under `--strict-lowering`.
+    pub fn paper_compiled_shape() -> CkksShape {
+        CkksShape {
+            n: 1 << 14,
+            num_q: 44,
+            num_p: 4,
+            limb_bits: 28,
+        }
+    }
+
     pub fn shape(&self) -> CkksShape {
         CkksShape {
             n: self.n,

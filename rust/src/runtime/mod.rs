@@ -107,15 +107,26 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
     Ok(out)
 }
 
+/// Every ring size the manifest compiles, with its first-input row count:
+/// the TFHE rings N ∈ {256, 1024} carry l = 7 gadget levels → 14 RGSW
+/// rows, the paper-shaped CKKS rings N ∈ {4096, 8192, 16384} carry one
+/// ciphertext limb tile — the two polynomial components of one RNS limb.
+/// `sched::lowering` tiles a CKKS lane onto the largest of these that
+/// fits; the paper lane (N = 2^16) tiles onto N = 16384.
+pub const MANIFEST_RINGS: [(usize, usize); 5] =
+    [(256, 14), (1024, 14), (4096, 2), (8192, 2), (16384, 2)];
+
 /// The manifest `python/compile/aot.py::artifact_registry()` emits,
 /// constructed in-process so the hermetic build needs no artifacts on
-/// disk. Shapes follow the functional TFHE parameter sets: N ∈ {256,
-/// 1024}, l = 7 gadget levels → 14 RGSW rows; q is the same 31-bit NTT
-/// prime both layers scan for (`ntt_primes` ↔ `common.ntt_prime`).
+/// disk. Shapes follow [`MANIFEST_RINGS`]: the functional TFHE parameter
+/// sets (N ∈ {256, 1024}, 14 RGSW rows) plus the paper-shaped CKKS rings
+/// (N ∈ {4096, 8192, 16384}, two-row limb tiles); q is the same 31-bit
+/// NTT prime both layers scan for (`ntt_primes` ↔ `common.ntt_prime`),
+/// and every one of them sits inside the native backend's lazy-kernel
+/// window (`2^30 < q < 2^31` — asserted at [`RuntimeOptions::build`]).
 pub fn builtin_manifest() -> Vec<ArtifactMeta> {
-    let rows = 14usize;
     let mut out = Vec::new();
-    for n in [256usize, 1024] {
+    for (n, rows) in MANIFEST_RINGS {
         let q = ntt_primes(31, 2 * n as u64, 1)[0];
         let mut push = |name: String, shapes: Vec<Vec<usize>>| {
             out.push(ArtifactMeta {
@@ -480,10 +491,7 @@ impl ReferenceBackend {
     fn table(&self, n: usize, q: u64) -> Arc<NttTable> {
         // recover the memo from a poisoned lock: cached tables written
         // before a worker panic are still canonical
-        let mut cache = match self.tables.lock() {
-            Ok(g) => g,
-            Err(poisoned) => poisoned.into_inner(),
-        };
+        let mut cache = crate::util::sync::lock(&self.tables);
         cache
             .entry((n, q))
             .or_insert_with(|| Arc::new(NttTable::new(n, q)))
@@ -872,8 +880,19 @@ impl RuntimeOptions {
         )))
     }
 
-    /// Construct the configured [`Runtime`].
+    /// Construct the configured [`Runtime`] over the builtin manifest.
     pub fn build(self) -> Result<Runtime> {
+        let manifest = builtin_manifest();
+        self.build_with_manifest(manifest)
+    }
+
+    /// Construct over an explicit manifest (tests inject corrupted or
+    /// trimmed ones; `build` passes [`builtin_manifest`]). The `native`
+    /// backend validates every modulus against the lazy-kernel window
+    /// *here* — an out-of-contract manifest fails at construction with an
+    /// attributable error instead of silently taking a different code
+    /// path at its first mid-batch dispatch.
+    pub fn build_with_manifest(self, manifest: Vec<ArtifactMeta>) -> Result<Runtime> {
         let RuntimeOptions {
             backend,
             dimm,
@@ -886,11 +905,24 @@ impl RuntimeOptions {
         let rt = match backend.as_str() {
             "reference" => match artifacts_dir {
                 Some(dir) => Runtime::new(&dir)?,
-                None => Runtime::reference(),
+                None => Runtime::from_parts(manifest, Box::new(ReferenceBackend::new())),
             },
-            "native" => Runtime::from_parts(builtin_manifest(), Box::new(NativeBackend::new())),
+            "native" => {
+                for meta in &manifest {
+                    // automorph is a raw index permutation — no modular
+                    // arithmetic, executable for any q
+                    if meta.name.starts_with("automorph") {
+                        continue;
+                    }
+                    let n = meta.shapes.first().and_then(|s| s.last()).copied().unwrap_or(0);
+                    crate::math::vntt::ensure_supported(n, meta.modulus).map_err(|e| {
+                        Error::new(format!("native backend manifest: {}: {e}", meta.name))
+                    })?;
+                }
+                Runtime::from_parts(manifest, Box::new(NativeBackend::new()))
+            }
             _ => Runtime::from_parts(
-                builtin_manifest(),
+                manifest,
                 Box::new(PnmBackend::with_policy_and_budget(
                     dimm,
                     alloc_policy,
@@ -1282,8 +1314,9 @@ mod tests {
 
     #[test]
     fn builtin_manifest_mirrors_aot_registry() {
-        let names: Vec<String> = builtin_manifest().iter().map(|m| m.name.clone()).collect();
-        for n in [256, 1024] {
+        let manifest = builtin_manifest();
+        let names: Vec<String> = manifest.iter().map(|m| m.name.clone()).collect();
+        for (n, rows) in MANIFEST_RINGS {
             for kind in [
                 "ntt_fwd",
                 "ntt_inv",
@@ -1299,6 +1332,31 @@ mod tests {
                     "missing {kind}_n{n}"
                 );
             }
+            // the row counts the registry declares: 14 RGSW rows on the
+            // TFHE rings, two-row limb tiles on the CKKS rings
+            let fwd = manifest
+                .iter()
+                .find(|m| m.name == format!("ntt_fwd_n{n}"))
+                .unwrap();
+            assert_eq!(fwd.shapes[0], vec![rows, n], "ntt_fwd_n{n} first input");
+        }
+        assert_eq!(manifest.len(), 8 * MANIFEST_RINGS.len());
+    }
+
+    #[test]
+    fn builtin_manifest_moduli_are_lazy_window_ntt_primes() {
+        // every compiled modulus must satisfy both cross-layer contracts:
+        // q ≡ 1 mod 2N (negacyclic NTT exists) and 2^30 < q < 2^31 (the
+        // native backend's Barrett-62/Shoup-32 lazy-kernel window)
+        for meta in builtin_manifest() {
+            let n = meta.shapes[0][1] as u64;
+            assert_eq!(meta.modulus % (2 * n), 1, "{}: q !≡ 1 mod 2N", meta.name);
+            assert!(
+                crate::math::vntt::supported(meta.modulus),
+                "{}: q={} outside the lazy window",
+                meta.name,
+                meta.modulus
+            );
         }
     }
 

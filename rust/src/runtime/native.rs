@@ -17,8 +17,13 @@
 //! strategy that produced them (`tests/runtime_crossval.rs` sweeps the
 //! full manifest; `tests/vntt_props.rs` sweeps the kernels). Moduli
 //! outside the lazy window (`2^30 < q < 2^31` — see [`vntt::supported`])
-//! take the embedded scalar oracle, so off-manifest artifacts keep
-//! working.
+//! are a *loud* contract error at table build ([`vntt::ensure_supported`])
+//! — this backend used to fall back to the scalar oracle silently
+//! mid-batch, which masked out-of-contract manifests until their first
+//! dispatch; `RuntimeOptions::build` now additionally validates every
+//! manifest modulus up front. (The `automorph` family is the one
+//! exception: a raw index permutation touches no modular arithmetic, so
+//! it executes for any q.)
 //!
 //! The backend is placement-blind: it models no DRAM geometry, so the
 //! dispatch planner is a no-op over it and there is no
@@ -50,8 +55,6 @@ const FAMILIES: [&str; 8] = [
 #[derive(Default)]
 pub struct NativeBackend {
     tables: Mutex<HashMap<(usize, u64), Arc<VnttTable>>>,
-    /// scalar oracle for moduli outside the lazy-kernel window
-    fallback: ReferenceBackend,
 }
 
 impl NativeBackend {
@@ -59,17 +62,19 @@ impl NativeBackend {
         Self::default()
     }
 
-    fn table(&self, n: usize, q: u64) -> Arc<VnttTable> {
+    /// The memoized lazy table for `(n, q)` — or the loud contract error
+    /// when `q` sits outside the lazy window. The check runs *before*
+    /// table construction so an out-of-contract modulus can never panic
+    /// inside `LazyReducer::new` or silently take a different code path.
+    fn table(&self, n: usize, q: u64) -> Result<Arc<VnttTable>> {
+        vntt::ensure_supported(n, q)?;
         // recover the memo from a poisoned lock: cached tables written
         // before a worker panic are still canonical
-        let mut cache = match self.tables.lock() {
-            Ok(g) => g,
-            Err(poisoned) => poisoned.into_inner(),
-        };
-        cache
+        let mut cache = crate::util::sync::lock(&self.tables);
+        Ok(cache
             .entry((n, q))
             .or_insert_with(|| Arc::new(VnttTable::new(n, q)))
-            .clone()
+            .clone())
     }
 
     fn check_arity(name: &str, inputs: &[&[u64]], want: usize) -> Result<()> {
@@ -136,13 +141,7 @@ impl NativeBackend {
             }
             return Ok(out);
         }
-        if !vntt::supported(q) {
-            // off-manifest modulus: the lazy kernels don't apply, the
-            // scalar oracle does (sharing the memo — both validate against
-            // the same canonical NttTable layout)
-            return self.fallback.exec(meta, inputs, memo);
-        }
-        let vt = self.table(n, q);
+        let vt = self.table(n, q)?;
         let red = vt.reducer();
         if name.starts_with("ntt_fwd") {
             Self::check_arity(name, inputs, 2)?;
@@ -452,9 +451,11 @@ mod tests {
     }
 
     #[test]
-    fn unsupported_modulus_takes_the_scalar_oracle() {
-        // a 17-bit prime is outside the lazy window; the embedded
-        // reference kernels must serve it bit-identically anyway
+    fn unsupported_modulus_fails_loudly_not_silently() {
+        // regression: a modulus outside the lazy window used to take the
+        // embedded scalar oracle silently mid-batch — an out-of-contract
+        // manifest executed on a different code path with no signal. It
+        // is now a loud contract error naming the window and the ring.
         let q = crate::math::modops::ntt_primes(17, 16, 1)[0];
         assert!(!vntt::supported(q));
         let meta = ArtifactMeta {
@@ -465,14 +466,48 @@ mod tests {
             modulus: q,
         };
         let native = NativeBackend::new();
-        let reference = ReferenceBackend::new();
         let a: Vec<u64> = (0..16).map(|i| i * 31 + 7).collect();
         let b: Vec<u64> = (0..16).map(|i| i * 17 + 3).collect();
         let refs: Vec<&[u64]> = vec![&a, &b];
+        let err = native.execute_u64(&meta, &refs).unwrap_err().to_string();
+        assert!(err.contains("lazy-kernel window"), "{err}");
+        assert!(err.contains(&q.to_string()), "{err}");
+        // the automorph family touches no modular arithmetic: it stays
+        // executable for any modulus (a raw index-remap copy)
+        let auto_meta = ArtifactMeta {
+            name: "automorph_n8".into(),
+            file: "x".into(),
+            num_inputs: 2,
+            shapes: vec![vec![2, 8], vec![8]],
+            modulus: q,
+        };
+        let map: Vec<u64> = (0..8).map(|k| ((k + 1) % 8) as u64).collect();
+        let auto_refs: Vec<&[u64]> = vec![&a, &map];
         assert_eq!(
-            native.execute_u64(&meta, &refs).unwrap(),
-            reference.execute_u64(&meta, &refs).unwrap()
+            native.execute_u64(&auto_meta, &auto_refs).unwrap(),
+            ReferenceBackend::new()
+                .execute_u64(&auto_meta, &auto_refs)
+                .unwrap()
         );
+    }
+
+    #[test]
+    fn runtime_options_reject_out_of_window_native_manifest() {
+        // the eager half of the same bugfix: building the native backend
+        // over a manifest with an out-of-contract modulus fails at
+        // construction, not at first dispatch
+        let mut manifest = builtin_manifest();
+        manifest[0].modulus = crate::math::modops::ntt_primes(17, 512, 1)[0];
+        let name = manifest[0].name.clone();
+        let err = RuntimeOptions {
+            backend: "native".into(),
+            ..Default::default()
+        }
+        .build_with_manifest(manifest)
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("lazy-kernel window"), "{err}");
+        assert!(err.contains(&name), "{err} must name the artifact");
     }
 
     #[test]

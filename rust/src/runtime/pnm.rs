@@ -63,10 +63,7 @@ use super::{ArtifactMeta, Backend, BatchItem, DispatchPlan, ReferenceBackend};
 /// (counters are plain sums; the allocator frees idempotently), so
 /// recover the guard and keep dispatching.
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    match m.lock() {
-        Ok(g) => g,
-        Err(poisoned) => poisoned.into_inner(),
-    }
+    crate::util::sync::lock(m)
 }
 
 /// Artifact classes the cost trace attributes cycles to — one per

@@ -17,9 +17,14 @@
 //! chunk instead of once per invocation.
 //!
 //! The paper ring of a lane may exceed the fixed-shape artifact set (the
-//! CKKS ring is far larger than the compiled N ∈ {256, 1024} kernels);
-//! the lowerer then selects the largest manifest ring that fits, so each
-//! invocation is one per-limb tile of the operator.
+//! paper CKKS lane N = 2^16 is larger than the largest compiled ring,
+//! N = 16384); the lowerer then selects the largest manifest ring that
+//! fits, so each invocation is one per-limb tile of the operator. Any
+//! lane whose ring is not an exactly-compiled one is a *lane fallback*:
+//! counted on [`Lowerer::lane_fallbacks`] (surfaced as the
+//! `lowering.lane_fallback` metric by the serving tier) and, under the
+//! strict knob (`--strict-lowering` / `APACHE_STRICT_LOWERING`), a
+//! per-slot error instead of a silent tiling.
 
 use crate::math::automorph::galois_eval_map;
 use crate::math::ntt::NttTable;
@@ -100,11 +105,28 @@ impl RingOperands {
 pub struct Lowerer {
     rings: HashMap<usize, RingOperands>,
     ring_choice: HashMap<usize, usize>,
+    /// Reject (instead of tiling) lanes whose ring is not exactly compiled.
+    strict: bool,
+    /// Lanes lowered onto a ring other than their own since construction.
+    lane_fallbacks: u64,
 }
 
 impl Lowerer {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A lowerer that treats any lane→ring mismatch as a per-slot error
+    /// rather than a silently tiled fallback (`--strict-lowering`).
+    pub fn strict(strict: bool) -> Self {
+        Lowerer { strict, ..Self::default() }
+    }
+
+    /// How many ops were lowered onto a ring other than the lane's own
+    /// ring (per-limb tiling or undersized-lane promotion). The serving
+    /// tier surfaces the delta as the `lowering.lane_fallback` metric.
+    pub fn lane_fallbacks(&self) -> u64 {
+        self.lane_fallbacks
     }
 
     /// The pool id for ops on `ring` sharing `key_id` (keyless ops share
@@ -188,6 +210,16 @@ impl Lowerer {
             _ => shapes.ckks.n,
         };
         let ring = self.ring_for(want, rt)?;
+        if ring != want {
+            if self.strict {
+                return Err(Error::new(format!(
+                    "lowering: {op:?} lane N={want} has no exactly-compiled ring \
+                     (closest manifest ring: N={ring}); compile the lane's ring into \
+                     the manifest or drop --strict-lowering to tile it"
+                )));
+            }
+            self.lane_fallbacks += 1;
+        }
         let pool = Self::pool_for(ring, key_id);
         let ops = self.operands(ring, rt)?;
         // evk-style pools are only materialized for ops that consume them
@@ -441,8 +473,11 @@ mod tests {
         let s = shapes();
         let mut low = Lowerer::new();
         let invs = low.lower_op(FheOp::HAdd, None, &s, &rt).unwrap();
-        // paper CKKS ring exceeds every compiled kernel: tile on n=1024
-        assert_eq!(invs[0].artifact, "pointwise_add_n1024");
+        // paper CKKS ring (2^16) exceeds every compiled kernel: one
+        // per-limb tile on the largest manifest ring, n=16384
+        assert_eq!(invs[0].artifact, "pointwise_add_n16384");
+        // the tiling is not silent: it is counted as a lane fallback
+        assert_eq!(low.lane_fallbacks(), 1);
     }
 
     #[test]
@@ -455,6 +490,39 @@ mod tests {
         let mut low = Lowerer::new();
         let invs = low.lower_op(FheOp::HAdd, None, &s, &rt).unwrap();
         assert_eq!(invs[0].artifact, "pointwise_add_n256");
+        assert_eq!(low.lane_fallbacks(), 1);
+    }
+
+    #[test]
+    fn exactly_compiled_lane_is_not_a_fallback() {
+        let rt = Runtime::reference();
+        let mut s = shapes();
+        s.ckks.n = 8192;
+        let mut low = Lowerer::strict(true);
+        // strict mode accepts an exactly-compiled ring...
+        let invs = low.lower_op(FheOp::HAdd, None, &s, &rt).unwrap();
+        assert_eq!(invs[0].artifact, "pointwise_add_n8192");
+        // ...and the TFHE lane (compiled n=1024) too
+        low.lower_op(FheOp::Cmux, Some(1), &s, &rt).unwrap();
+        assert_eq!(low.lane_fallbacks(), 0);
+    }
+
+    #[test]
+    fn strict_lowering_rejects_a_tiled_lane_per_slot() {
+        // the bugfix gate: a too-large CKKS lane must either be counted
+        // (non-strict, tests above) or rejected with a descriptive error
+        // naming both rings (strict) — never silently tiled
+        let rt = Runtime::reference();
+        let s = shapes(); // paper CKKS lane N = 65536 > largest ring
+        let mut low = Lowerer::strict(true);
+        let err = low.lower_op(FheOp::HAdd, None, &s, &rt).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("N=65536"), "names the lane ring: {msg}");
+        assert!(msg.contains("N=16384"), "names the chosen ring: {msg}");
+        assert!(msg.contains("strict-lowering"), "names the knob: {msg}");
+        // the rejection is per slot: an exactly-compiled lane on the
+        // same lowerer still goes through
+        low.lower_op(FheOp::Cmux, Some(1), &s, &rt).unwrap();
     }
 
     #[test]

@@ -61,6 +61,13 @@ pub const QUEUE_DEPTH: Knob = Knob {
     env: "APACHE_QUEUE_DEPTH",
 };
 
+/// Strict lowering: reject lanes whose ring is not exactly compiled in
+/// the manifest instead of tiling them onto the closest ring.
+pub const STRICT_LOWERING: Knob = Knob {
+    cli: "--strict-lowering",
+    env: "APACHE_STRICT_LOWERING",
+};
+
 impl Knob {
     /// The knob's environment override: `None` when unset or empty (an
     /// empty matrix entry means "not selected", not "select the empty
@@ -119,13 +126,14 @@ mod tests {
 
     /// Every knob in the system, so the precedence contract is asserted
     /// over the full surface, not a sample.
-    const ALL: [Knob; 6] = [
+    const ALL: [Knob; 7] = [
         BACKEND,
         ALLOC_POLICY,
         PLAN_POLICY,
         RESIDENCY_BUDGET,
         SHARDS,
         QUEUE_DEPTH,
+        STRICT_LOWERING,
     ];
 
     #[test]
@@ -176,5 +184,7 @@ mod tests {
         assert_eq!(SHARDS.cli, "--shards");
         assert_eq!(QUEUE_DEPTH.env, "APACHE_QUEUE_DEPTH");
         assert_eq!(RESIDENCY_BUDGET.cli, "--residency-budget");
+        assert_eq!(STRICT_LOWERING.cli, "--strict-lowering");
+        assert_eq!(STRICT_LOWERING.env, "APACHE_STRICT_LOWERING");
     }
 }

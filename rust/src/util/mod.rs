@@ -2,7 +2,8 @@
 //! property testing (`proptest_lite`), benchmarking (`benchkit`), config
 //! parsing (`toml_lite`), CLI parsing (`cli`), structured output
 //! (`jsonw`) and error plumbing (`error`, the `anyhow` stand-in) — plus
-//! the shared CLI > env > config knob resolver (`knob`).
+//! the shared CLI > env > config knob resolver (`knob`) and the
+//! poison-recovering mutex helper (`sync`).
 
 pub mod benchkit;
 pub mod cli;
@@ -10,4 +11,5 @@ pub mod error;
 pub mod jsonw;
 pub mod knob;
 pub mod proptest_lite;
+pub mod sync;
 pub mod toml_lite;

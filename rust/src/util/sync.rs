@@ -1,0 +1,55 @@
+//! The one poison-recovering mutex lock for the serving hot paths.
+//!
+//! A worker that panics while holding a `Mutex` poisons it; every later
+//! bare `.lock().unwrap()` then panics too, so one bad task wedges the
+//! whole server. Every mutex on the coordinator/runtime hot paths guards
+//! either a memo table (lowerer operand pools, NTT table caches), a
+//! plain job/result container (shard queues, result sinks), or an
+//! append-only registry (metrics) — none has a multi-step invariant a
+//! poisoned guard could have left half-applied, so adopting the inner
+//! state is strictly better than propagating the panic.
+//!
+//! This helper was introduced inline in PR 5 (`Metrics::lock`) and then
+//! re-implemented at every new lock site; it now lives here once, and
+//! `metrics.rs`, `server.rs`, `shard.rs`, the reference/native table
+//! memos and the pnm device state all route through it.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering from poisoning by adopting the inner state.
+///
+/// Use only for state with single-step updates (memo inserts, counter
+/// bumps, queue push/pop) — the precondition every call site documents.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn poisoned_mutex_is_recovered_with_state_intact() {
+        // regression for the bare-`.unwrap()` sweep: a panic while
+        // holding the lock must not wedge later lockers, and the state
+        // written before the panic must survive
+        let m = Arc::new(Mutex::new(vec![1u64, 2]));
+        let held = m.clone();
+        let worker = std::thread::spawn(move || {
+            let mut g = held.lock().unwrap();
+            g.push(3);
+            panic!("worker dies holding the lock");
+        });
+        assert!(worker.join().is_err(), "the worker must have panicked");
+        assert!(m.is_poisoned(), "the panic must have poisoned the lock");
+        let mut g = lock(&m);
+        assert_eq!(*g, vec![1, 2, 3], "pre-panic writes survive");
+        g.push(4);
+        drop(g);
+        assert_eq!(lock(&m).len(), 4, "the mutex keeps serving");
+    }
+}

@@ -1,6 +1,7 @@
 //! Golden-vector regression tests for the negacyclic NTT.
 //!
-//! Fixed-seed inputs for N ∈ {256, 1024}, with FNV-1a digests of the
+//! Fixed-seed inputs for every compiled ring, N ∈ {256, 1024, 4096,
+//! 8192, 16384}, with FNV-1a digests of the
 //! input polynomial and its forward transform committed below. The
 //! digests are cross-checked against the Python compile layer: regenerate
 //! (and re-verify against the `python/compile/kernels/ref.py` schoolbook
@@ -19,7 +20,7 @@ use apache_fhe::math::ntt::NttTable;
 use apache_fhe::math::sampler::Rng;
 
 /// (n, seed, q, input_digest, output_digest) — from gen_ntt_golden.py.
-const GOLDEN: [(usize, u64, u64, u64, u64); 2] = [
+const GOLDEN: [(usize, u64, u64, u64, u64); 5] = [
     (
         256,
         0x5EED0100,
@@ -33,6 +34,29 @@ const GOLDEN: [(usize, u64, u64, u64, u64); 2] = [
         2147473409,
         0x910A028357469D4C,
         0x285FC57178C9830F,
+    ),
+    (
+        4096,
+        0x5EED1000,
+        2147377153,
+        0x2D4FE41A29C56C0A,
+        0x1C79CD44F3029E0F,
+    ),
+    // N = 8192 and 16384 share one prime: 2147352577 is the largest
+    // 31-bit prime ≡ 1 (mod 2N) for both rings
+    (
+        8192,
+        0x5EED2000,
+        2147352577,
+        0x670991CA8E11BCC9,
+        0xD30985DF08E71DBF,
+    ),
+    (
+        16384,
+        0x5EED4000,
+        2147352577,
+        0xC195DD6B6CAE96BD,
+        0x61E39D1B9454DD36,
     ),
 ];
 

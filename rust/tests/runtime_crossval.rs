@@ -21,7 +21,7 @@ use apache_fhe::math::automorph::galois_eval_map;
 use apache_fhe::math::modops::ntt_primes;
 use apache_fhe::math::ntt::NttTable;
 use apache_fhe::math::sampler::Rng;
-use apache_fhe::params::{CkksParams, TfheParams};
+use apache_fhe::params::{CkksParams, CkksShape, TfheParams};
 use apache_fhe::runtime::{
     builtin_manifest, ArtifactMeta, BatchItem, Invocation, PlanPolicy, PnmBackend, Runtime,
     RuntimeOptions,
@@ -119,7 +119,13 @@ fn runtime_is_always_available() {
 #[test]
 fn artifact_prime_matches_rust_prime() {
     let rt = runtime();
-    for (n, name) in [(256usize, "ntt_fwd_n256"), (1024, "ntt_fwd_n1024")] {
+    for (n, name) in [
+        (256usize, "ntt_fwd_n256"),
+        (1024, "ntt_fwd_n1024"),
+        (4096, "ntt_fwd_n4096"),
+        (8192, "ntt_fwd_n8192"),
+        (16384, "ntt_fwd_n16384"),
+    ] {
         let q_rust = ntt_primes(31, 2 * n as u64, 1)[0];
         assert_eq!(rt.manifest[name].modulus, q_rust, "prime mismatch at N={n}");
     }
@@ -583,9 +589,12 @@ fn native_full_manifest_bit_identity_sweep() {
 /// inference (Lola-MNIST), an HELR iteration and a TFHE VSP cycle share
 /// one lowerer, so operand pools (and the §V-B key clusters they encode)
 /// span the whole mix — 5 pools across the compiled rings.
-fn serving_mix_invocations(rt: &Runtime) -> Vec<Invocation> {
+fn serving_mix_invocations_at(rt: &Runtime, ckks_n: usize) -> Vec<Invocation> {
     let shapes = OpShapes {
-        ckks: CkksParams::paper_shape(),
+        ckks: CkksShape {
+            n: ckks_n,
+            ..CkksParams::paper_shape()
+        },
         tfhe: TfheParams::paper_shape(),
     };
     let tasks = [
@@ -603,6 +612,28 @@ fn serving_mix_invocations(rt: &Runtime) -> Vec<Invocation> {
         );
     }
     invs
+}
+
+/// The serving mix the placement/planner A/B gates run on, with the CKKS
+/// lane pinned to the exactly-compiled N = 1024 ring.
+///
+/// The pin is deliberate, not an oversight: the gates below compare
+/// observed DRAM open-row hit rates, and row residency only
+/// discriminates placement quality while one operand's rows fit inside a
+/// rank's bank skyline (15 data banks × one open row each). At N = 1024
+/// a limb tile is 14 rows — stripes and EVK runs stay resident, and the
+/// rank-aware allocator's wins are real signal. At the paper-shaped
+/// rings a single limb tile is 2 × 16384 × 8 B = 256 KiB = 32 DRAM rows:
+/// *every* placement (stripe, resident run, identity addressing alike)
+/// degenerates to ping-pong misses, rank-aware CKKS row hits drop to
+/// exactly zero, and the A/B comparison measures TFHE-side noise instead
+/// of placement quality. Large-ring behavior is covered by the dedicated
+/// legs below: bit-identity at N = 8192
+/// (`helr_iteration_is_bit_identical_across_backends_at_large_ring_8192`)
+/// and residency-plan splitting at N = 16384
+/// (`paper_ring_16384_working_set_splits_the_residency_plan`).
+fn serving_mix_invocations(rt: &Runtime) -> Vec<Invocation> {
+    serving_mix_invocations_at(rt, 1024)
 }
 
 /// A 4-rank DIMM: fewer ranks than the mix has pools, so the rank-aware
@@ -809,6 +840,109 @@ fn plan_policies_stay_bit_identical_across_dispatch_shapes() {
         hit_rates[1] >= hit_rates[0],
         "planning must never lose locality under chunked dispatch: {hit_rates:?}"
     );
+}
+
+#[test]
+fn helr_iteration_is_bit_identical_across_backends_at_large_ring_8192() {
+    // The paper-shaped-ring bit-identity leg: an HELR training iteration
+    // lowered *strictly* onto the exactly-compiled N = 8192 ring (no lane
+    // fallback) must produce bit-identical outputs on the reference,
+    // native, and pnm backends. Bit-identity is placement-independent, so
+    // it must hold at rings where row residency degrades (a limb tile
+    // here is 16 DRAM rows — beyond the open-row skyline).
+    let reference = Runtime::reference();
+    let shapes = OpShapes {
+        ckks: CkksShape {
+            n: 8192,
+            ..CkksParams::paper_shape()
+        },
+        tfhe: TfheParams::paper_shape(),
+    };
+    let task = apache_fhe::apps::helr_iteration();
+    let mut lowerer = Lowerer::strict(true);
+    let invs = lowerer
+        .lower_graph(&task.graph, &shapes, &reference)
+        .expect("an all-CKKS task at a compiled ring lowers strictly");
+    assert_eq!(lowerer.lane_fallbacks(), 0, "N=8192 is exactly compiled");
+    assert!(!invs.is_empty());
+    assert!(
+        invs.iter().all(|i| i.artifact.ends_with("_n8192")),
+        "every invocation lands on the 8192 ring"
+    );
+    let ref_outs = reference.execute_batch_u64(&invs);
+    let native = RuntimeOptions {
+        backend: "native".into(),
+        ..RuntimeOptions::default()
+    }
+    .build()
+    .unwrap();
+    let pnm = pnm_rt(
+        &crossval_dimm(),
+        AllocPolicy::RankAware,
+        PlanPolicy::RowLocality,
+        0,
+    );
+    let nat_outs = native.execute_batch_u64(&invs);
+    let pnm_outs = pnm.execute_batch_u64(&invs);
+    for ((inv, r), (n, p)) in invs
+        .iter()
+        .zip(&ref_outs)
+        .zip(nat_outs.iter().zip(&pnm_outs))
+    {
+        let r = r.as_ref().unwrap_or_else(|e| panic!("{}: reference: {e}", inv.artifact));
+        let n = n.as_ref().unwrap_or_else(|e| panic!("{}: native: {e}", inv.artifact));
+        let p = p.as_ref().unwrap_or_else(|e| panic!("{}: pnm: {e}", inv.artifact));
+        assert_eq!(r, n, "{}: native diverged at N=8192", inv.artifact);
+        assert_eq!(r, p, "{}: pnm diverged at N=8192", inv.artifact);
+    }
+    let tr = pnm.cost_trace().unwrap();
+    assert_eq!(tr.invocations, invs.len() as u64);
+    assert!(tr.cycles > 0 && tr.energy_j > 0.0);
+}
+
+#[test]
+fn paper_ring_16384_working_set_splits_the_residency_plan() {
+    // EVK-row stress at the top of the manifest: one pool of distinct
+    // N = 16384 operands (256 KiB each — 32 DRAM rows per limb tile)
+    // blows the per-rank residency budget, so the row-locality plan must
+    // split into multiple device dispatches while every slot stays
+    // bit-identical to the reference backend.
+    let planned = pnm_rt(
+        &crossval_dimm(),
+        AllocPolicy::RankAware,
+        PlanPolicy::RowLocality,
+        0,
+    );
+    let reference = Runtime::reference();
+    let n = 16384usize;
+    let q = ntt_primes(31, 2 * n as u64, 1)[0];
+    let rows_n = 2 * n; // the (rows, N) tile of the 16384-ring artifacts
+    let mut rng = Rng::seeded(47);
+    let mut gen = || -> Arc<Vec<u64>> { Arc::new((0..rows_n).map(|_| rng.uniform(q)).collect()) };
+    let key = gen();
+    let invs: Vec<Invocation> = (0..24)
+        .map(|_| {
+            Invocation::new("routine2_n16384", vec![gen(), key.clone(), gen()]).with_pool(1)
+        })
+        .collect();
+    let a = planned.execute_batch_u64(&invs);
+    let b = reference.execute_batch_u64(&invs);
+    for ((inv, x), y) in invs.iter().zip(&a).zip(&b) {
+        assert_eq!(
+            x.as_ref().unwrap(),
+            y.as_ref().unwrap(),
+            "{}: planned diverged at N=16384",
+            inv.artifact
+        );
+    }
+    let tr = planned.cost_trace().unwrap();
+    assert_eq!(tr.plans, 1);
+    assert!(
+        tr.plan_splits > 0,
+        "a ~12 MiB working set of 32-row operands must split the plan"
+    );
+    assert_eq!(tr.dispatches, 1 + tr.plan_splits);
+    assert_eq!(tr.invocations, 24);
 }
 
 #[test]

@@ -19,8 +19,12 @@ use apache_fhe::math::vntt::{
 use apache_fhe::util::proptest_lite::run_prop;
 
 /// The manifest's ring/prime pairs — the moduli every backend executes.
+/// All five compiled rings, including the paper-shaped CKKS ones
+/// (N = 8192 and 16384 share the prime 2147352577 — the Barrett/Shoup
+/// companions depend only on q, so the reducer sweeps still cover every
+/// distinct modulus and the transform sweeps every distinct ring).
 fn manifest_moduli() -> Vec<(usize, u64)> {
-    [256usize, 1024]
+    [256usize, 1024, 4096, 8192, 16384]
         .iter()
         .map(|&n| (n, ntt_primes(31, 2 * n as u64, 1)[0]))
         .collect()
