@@ -16,9 +16,11 @@
 use apache_fhe::coordinator::{
     ApacheConfig, Coordinator, ServeRequest, ShardConfig, ShardedCoordinator, TaskRequest,
 };
+use apache_fhe::obs::{chrome, STAGES};
 use apache_fhe::sched::tasklevel::{cmux_tree_task, Task};
 use apache_fhe::util::benchkit::{fmt_duration, fmt_rate, Table};
 use apache_fhe::util::jsonw::Json;
+use apache_fhe::util::knob;
 use std::time::{Duration, Instant};
 
 /// Offered load per run — small enough for the CI smoke leg, large
@@ -155,6 +157,50 @@ fn open_loop(rate: f64) -> SweepRow {
     }
 }
 
+/// One traced sharded pass (the CI trace smoke leg): the same burst as
+/// [`sharded_saturation`] with span tracing on, exported as a Chrome
+/// trace-event document and self-validated before it leaves the process
+/// — exactly one complete tree per accepted request, every pipeline
+/// stage present. CI re-validates the written JSON with python3 and
+/// uploads it as an artifact next to `BENCH_serving_tier.json`.
+fn traced_pass(path: &str) {
+    let mut traced = cfg();
+    traced.trace_out = path.to_string();
+    let coord = ShardedCoordinator::new(traced, shard_cfg(true));
+    for i in 0..TASKS {
+        loop {
+            let adm = coord.submit(ServeRequest {
+                tenant: i as u64 % TENANTS,
+                task: mk_task("trace", i),
+            });
+            if adm.accepted() {
+                break;
+            }
+            std::thread::yield_now();
+        }
+    }
+    let accepted = coord.accepted();
+    let trace = coord.trace.clone();
+    let results = coord.drain();
+    assert_eq!(results.len() as u64, accepted, "tier lost accepted work");
+    assert_eq!(
+        trace.committed_trees(),
+        accepted,
+        "exactly one span tree per accepted request"
+    );
+    assert_eq!(trace.dropped_trees(), 0, "the default ring must hold the run");
+    let events = trace.snapshot();
+    for stage in STAGES {
+        assert!(
+            events.iter().any(|e| e.name == stage),
+            "stage `{stage}` missing from the traced pass"
+        );
+    }
+    let doc = chrome::render(&trace).render();
+    std::fs::write(path, doc + "\n").expect("write trace artifact");
+    println!("wrote {path} ({} span trees)", trace.resident_trees());
+}
+
 fn main() {
     let sync_tput = sync_saturation();
     let single_tput = sharded_saturation(false);
@@ -224,4 +270,10 @@ fn main() {
     let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| default_out.to_string());
     std::fs::write(&path, doc.render() + "\n").expect("write bench artifact");
     println!("wrote {path}");
+
+    // the trace smoke leg rides the standard knob: bare bench runs skip
+    // it, `APACHE_TRACE_OUT=trace.json` adds the traced pass + export
+    if let Some(trace_path) = knob::TRACE_OUT.env_value() {
+        traced_pass(&trace_path);
+    }
 }

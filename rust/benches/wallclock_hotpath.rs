@@ -134,10 +134,57 @@ fn main() {
             .put("lazy_over_scalar", speedup)
     };
 
+    // tracing A/B through the same dispatch seam: `execute_batch_u64`
+    // is the tracing-disabled serving path and must not pay for the
+    // instrumentation it is not using — the zero-cost-off gate of the
+    // obs layer, enforced here where a regression shows up as wall time
+    let tracing_json = {
+        let batch = 16usize;
+        let invs = ntt_batch(&mut rng, &native, batch);
+        for r in native.execute_batch_u64(&invs) {
+            r.unwrap();
+        }
+        let st_off = bench("native ntt x16, tracing off", || {
+            for r in std::hint::black_box(native.execute_batch_u64(&invs)) {
+                r.unwrap();
+            }
+        });
+        let st_on = bench("native ntt x16, tracing on ", || {
+            let (outs, segs) = native.execute_batch_u64_traced(&invs);
+            for r in std::hint::black_box(outs) {
+                r.unwrap();
+            }
+            std::hint::black_box(segs);
+        });
+        let tput_off = batch as f64 / st_off.median;
+        let tput_on = batch as f64 / st_on.median;
+        println!(
+            "tracing off {} / on {} (off/on {:.3}x)",
+            fmt_rate(tput_off),
+            fmt_rate(tput_on),
+            tput_off / tput_on,
+        );
+        // the disabled path may not trail the best observed throughput
+        // of the seam by more than 3% — instrumentation must be free
+        // when off (and nearly free when on; segment bookkeeping is a
+        // few Vec pushes per device dispatch)
+        assert!(
+            tput_off >= 0.97 * tput_off.max(tput_on),
+            "tracing-disabled throughput regressed more than 3%: \
+             off {tput_off:.1} vs on {tput_on:.1} ops/s"
+        );
+        Json::obj()
+            .put("batch", batch)
+            .put("disabled_ops_per_s", tput_off)
+            .put("enabled_ops_per_s", tput_on)
+            .put("disabled_over_enabled", tput_off / tput_on)
+    };
+
     let doc = Json::obj()
         .put("bench", "wallclock_hotpath")
         .put("batches", Json::Arr(rows_json))
         .put("kernel", kernel_json)
+        .put("tracing", tracing_json)
         .put("speedup_at_batch16", speedup_at_16);
     let path = std::env::var("BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_wallclock_hotpath.json".to_string());

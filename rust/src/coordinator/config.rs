@@ -57,6 +57,11 @@ pub struct ApacheConfig {
     /// and counting a `lowering.lane_fallback`. Same precedence chain:
     /// `--strict-lowering` > `APACHE_STRICT_LOWERING` > this config key.
     pub strict_lowering: bool,
+    /// Chrome trace-event output path for the serving tier's span trees
+    /// (`obs`); empty = tracing disabled (the serving hot path pays one
+    /// branch). Same precedence chain: `--trace-out` >
+    /// `APACHE_TRACE_OUT` > this config key.
+    pub trace_out: String,
 }
 
 /// Validation shared by the config file, the CLI and the environment:
@@ -97,6 +102,7 @@ impl Default for ApacheConfig {
             queue_depth: 64,
             worker_threads: 2,
             strict_lowering: false,
+            trace_out: String::new(),
         }
     }
 }
@@ -159,6 +165,7 @@ impl ApacheConfig {
             worker_threads: doc.get_int("system", "worker_threads", def.worker_threads as i64)
                 as usize,
             strict_lowering: doc.get_bool("system", "strict_lowering", def.strict_lowering),
+            trace_out: doc.get_str("system", "trace_out", &def.trace_out).to_string(),
         };
         if cfg.dimms == 0 {
             return Err(Error::new("system.dimms must be >= 1"));
@@ -414,6 +421,15 @@ imc_ks = false
         }
         let err = ApacheConfig::parse_strict_lowering("yes").unwrap_err();
         assert!(err.to_string().contains("strict lowering"));
+    }
+
+    #[test]
+    fn trace_out_parses_and_defaults_off() {
+        let cfg = ApacheConfig::from_toml("").unwrap();
+        assert!(cfg.trace_out.is_empty(), "tracing is off by default");
+        let cfg =
+            ApacheConfig::from_toml("[system]\ntrace_out = \"trace.json\"\n").unwrap();
+        assert_eq!(cfg.trace_out, "trace.json");
     }
 
     #[test]

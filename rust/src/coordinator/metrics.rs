@@ -1,13 +1,86 @@
-//! Metrics registry: counters and latency aggregates, JSON-exportable.
+//! Metrics registry: counters, gauges and bounded latency reservoirs,
+//! exportable as JSON ([`Metrics::to_json`]) and Prometheus text
+//! exposition ([`Metrics::to_prometheus`]).
 
 use crate::util::jsonw::Json;
 use std::collections::BTreeMap;
 use std::sync::{Mutex, MutexGuard};
 
+/// Per-metric sample bound. Sustained serving observes latencies without
+/// limit; the reservoir keeps a uniform sample of fixed size so memory
+/// stays bounded while p50/p99 stay exact below the cap and unbiased
+/// estimates above it.
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Bounded latency aggregate: exact `count`/`sum`, plus a uniform
+/// fixed-size sample (Vitter's Algorithm R with a deterministic
+/// splitmix64 stream, so runs are reproducible). NaN observations are
+/// counted but never sampled — they can neither occupy a percentile rank
+/// nor poison the mean.
+#[derive(Debug)]
+struct Reservoir {
+    /// all observations, NaN included (the JSON `count` field)
+    count: u64,
+    /// non-NaN observations — the sampling population
+    kept: u64,
+    /// sum over the non-NaN observations
+    sum: f64,
+    samples: Vec<f64>,
+    rng: u64,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Reservoir {
+    fn new() -> Self {
+        Reservoir {
+            count: 0,
+            kept: 0,
+            sum: 0.0,
+            samples: Vec::new(),
+            rng: 0x0bad_5eed_0bad_5eed,
+        }
+    }
+
+    fn observe(&mut self, x: f64) {
+        self.count += 1;
+        // NaNs of either sign (0.0/0.0 yields -NaN on x86_64) are
+        // dropped from the statistics at ingest
+        if x.is_nan() {
+            return;
+        }
+        self.kept += 1;
+        self.sum += x;
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(x);
+            return;
+        }
+        // Algorithm R: keep with probability cap/kept, replacing a
+        // uniformly random resident sample
+        let j = (splitmix64(&mut self.rng) % self.kept) as usize;
+        if j < RESERVOIR_CAP {
+            self.samples[j] = x;
+        }
+    }
+
+    fn sorted(&self) -> Vec<f64> {
+        let mut s = self.samples.clone();
+        s.sort_by(f64::total_cmp);
+        s
+    }
+}
+
 #[derive(Debug, Default)]
 struct Inner {
     counters: BTreeMap<String, u64>,
-    latencies: BTreeMap<String, Vec<f64>>,
+    gauges: BTreeMap<String, f64>,
+    latencies: BTreeMap<String, Reservoir>,
 }
 
 /// Thread-safe metrics sink shared by leader + workers.
@@ -16,14 +89,41 @@ pub struct Metrics {
     inner: Mutex<Inner>,
 }
 
-/// Sorted copy of the observations with NaNs (either sign — 0.0/0.0
-/// yields -NaN on x86_64) dropped: a NaN can neither panic a sort nor
-/// occupy a percentile rank or poison a mean.
-fn sorted_finite(v: &[f64]) -> Vec<f64> {
-    let mut s: Vec<f64> = v.iter().copied().filter(|x| !x.is_nan()).collect();
-    s.sort_by(f64::total_cmp);
-    s
+/// The one percentile definition (nearest rank, ties rounded away from
+/// zero) shared by [`Metrics::percentile`], [`Metrics::to_json`] and the
+/// Prometheus quantile series — the three must never disagree about what
+/// "p99" means. `s` must be sorted and NaN-free.
+fn percentile_of(s: &[f64], p: f64) -> Option<f64> {
+    if s.is_empty() {
+        return None;
+    }
+    let idx = ((s.len() - 1) as f64 * p).round() as usize;
+    Some(s[idx.min(s.len() - 1)])
 }
+
+/// One latency metric's summary in a [`MetricsSnapshot`].
+#[derive(Debug, Clone)]
+pub struct LatencySummary {
+    pub name: String,
+    /// all observations, NaN included
+    pub count: u64,
+    /// sum over the non-NaN observations
+    pub sum: f64,
+    /// (quantile, value) pairs over the reservoir sample
+    pub quantiles: Vec<(f64, f64)>,
+}
+
+/// A point-in-time copy of the registry — the exporter-facing view
+/// (`obs::prom` renders it; tests inspect it without holding the lock).
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub latencies: Vec<LatencySummary>,
+}
+
+/// The quantiles every exporter publishes for a latency metric.
+pub const EXPORT_QUANTILES: [f64; 3] = [0.5, 0.9, 0.99];
 
 impl Metrics {
     /// Lock the registry, recovering from poisoning: a worker that
@@ -43,7 +143,22 @@ impl Metrics {
 
     pub fn observe(&self, name: &str, seconds: f64) {
         let mut g = self.lock();
-        g.latencies.entry(name.to_string()).or_default().push(seconds);
+        g.latencies
+            .entry(name.to_string())
+            .or_insert_with(Reservoir::new)
+            .observe(seconds);
+    }
+
+    /// Set a gauge — a point-in-time level (bytes pinned, queue depth
+    /// now), overwritten on every set, unlike a monotone counter or a
+    /// latency observation.
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        let mut g = self.lock();
+        g.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.lock().gauges.get(name).copied()
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -52,16 +167,38 @@ impl Metrics {
 
     pub fn percentile(&self, name: &str, p: f64) -> Option<f64> {
         let g = self.lock();
-        let v = g.latencies.get(name)?;
-        if v.is_empty() {
-            return None;
+        let r = g.latencies.get(name)?;
+        percentile_of(&r.sorted(), p)
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.lock();
+        MetricsSnapshot {
+            counters: g.counters.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            gauges: g.gauges.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            latencies: g
+                .latencies
+                .iter()
+                .map(|(k, r)| {
+                    let s = r.sorted();
+                    LatencySummary {
+                        name: k.clone(),
+                        count: r.count,
+                        sum: r.sum,
+                        quantiles: EXPORT_QUANTILES
+                            .iter()
+                            .filter_map(|&q| percentile_of(&s, q).map(|v| (q, v)))
+                            .collect(),
+                    }
+                })
+                .collect(),
         }
-        let s = sorted_finite(v);
-        if s.is_empty() {
-            return None;
-        }
-        let idx = ((s.len() - 1) as f64 * p).round() as usize;
-        Some(s[idx])
+    }
+
+    /// Prometheus text exposition (counters, gauges, summary quantiles)
+    /// — the scrape-format sibling of [`Metrics::to_json`].
+    pub fn to_prometheus(&self) -> String {
+        crate::obs::prom::render_snapshot(&self.snapshot())
     }
 
     pub fn to_json(&self) -> Json {
@@ -70,24 +207,32 @@ impl Metrics {
         for (k, v) in &g.counters {
             counters = counters.put(k, *v);
         }
+        let mut gauges = Json::obj();
+        for (k, v) in &g.gauges {
+            gauges = gauges.put(k, *v);
+        }
         let mut lats = Json::obj();
-        for (k, v) in &g.latencies {
-            let s = sorted_finite(v);
+        for (k, r) in &g.latencies {
+            let s = r.sorted();
             if s.is_empty() {
-                lats = lats.put(k, Json::obj().put("count", v.len()));
+                lats = lats.put(k, Json::obj().put("count", r.count));
                 continue;
             }
-            let mean = s.iter().sum::<f64>() / s.len() as f64;
+            let mean = r.sum / r.kept as f64;
             lats = lats.put(
                 k,
                 Json::obj()
-                    .put("count", v.len())
+                    .put("count", r.count)
                     .put("mean_s", mean)
-                    .put("p50_s", s[s.len() / 2])
-                    .put("p99_s", s[(s.len() - 1) * 99 / 100]),
+                    // the same nearest-rank definition as `percentile`
+                    .put("p50_s", percentile_of(&s, 0.5).unwrap())
+                    .put("p99_s", percentile_of(&s, 0.99).unwrap()),
             );
         }
-        Json::obj().put("counters", counters).put("latencies", lats)
+        Json::obj()
+            .put("counters", counters)
+            .put("gauges", gauges)
+            .put("latencies", lats)
     }
 }
 
@@ -109,6 +254,76 @@ mod tests {
         assert!(m.percentile("missing", 0.5).is_none());
         let js = m.to_json().render();
         assert!(js.contains("\"ops\":5"));
+    }
+
+    #[test]
+    fn json_and_percentile_share_one_rank_definition() {
+        // regression: to_json computed p99 as s[(len-1)*99/100] (floor)
+        // while percentile() rounded the rank — on adversarial lengths
+        // the two reported different samples for the same metric. Both
+        // now route through `percentile_of`.
+        let m = Metrics::default();
+        // len = 51: rank(p99) = round(50 * 0.99) = round(49.5) = 50,
+        // where the old floor formula picked 50*99/100 = 49
+        for i in 0..51 {
+            m.observe("lat", i as f64);
+        }
+        let js = m.to_json().render();
+        let p50 = m.percentile("lat", 0.5).unwrap();
+        let p99 = m.percentile("lat", 0.99).unwrap();
+        assert_eq!(p99, 50.0, "nearest-rank rounds 49.5 away from zero");
+        assert!(
+            js.contains(&format!("\"p50_s\":{p50}")),
+            "JSON p50 must agree with percentile(): {js}"
+        );
+        assert!(
+            js.contains(&format!("\"p99_s\":{p99}")),
+            "JSON p99 must agree with percentile(): {js}"
+        );
+        // the Prometheus quantile series reports the same samples
+        let prom = m.to_prometheus();
+        assert!(prom.contains(&format!("{{quantile=\"0.5\"}} {p50}")));
+        assert!(prom.contains(&format!("{{quantile=\"0.99\"}} {p99}")));
+    }
+
+    #[test]
+    fn gauges_are_levels_not_counters() {
+        let m = Metrics::default();
+        assert!(m.gauge("pnm.cache.pinned_bytes").is_none());
+        m.set_gauge("pnm.cache.pinned_bytes", 4096.0);
+        m.set_gauge("pnm.cache.pinned_bytes", 1024.0);
+        // last set wins: a gauge is a snapshot, not an accumulation
+        assert_eq!(m.gauge("pnm.cache.pinned_bytes"), Some(1024.0));
+        let js = m.to_json().render();
+        assert!(js.contains("\"gauges\":{\"pnm.cache.pinned_bytes\":1024"));
+        let prom = m.to_prometheus();
+        assert!(prom.contains("# TYPE apache_pnm_cache_pinned_bytes gauge"));
+        assert!(prom.contains("apache_pnm_cache_pinned_bytes 1024"));
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_keeps_percentiles_honest() {
+        let m = Metrics::default();
+        // 20x the cap, uniform 0..1s: memory must stay at the cap and
+        // the sampled median must stay near the true median
+        let n = RESERVOIR_CAP * 20;
+        for i in 0..n {
+            m.observe("lat", (i as f64 + 0.5) / n as f64);
+        }
+        {
+            let g = m.inner.lock().unwrap();
+            let r = g.latencies.get("lat").unwrap();
+            assert_eq!(r.samples.len(), RESERVOIR_CAP, "reservoir must stay bounded");
+            assert_eq!(r.count, n as u64, "count stays exact past the cap");
+            assert!((r.sum - n as f64 / 2.0).abs() < 1e-6 * n as f64);
+        }
+        let p50 = m.percentile("lat", 0.5).unwrap();
+        assert!(
+            (p50 - 0.5).abs() < 0.05,
+            "sampled median {p50} strayed from the true median 0.5"
+        );
+        let p99 = m.percentile("lat", 0.99).unwrap();
+        assert!((p99 - 0.99).abs() < 0.05, "sampled p99 {p99} strayed from 0.99");
     }
 
     #[test]
@@ -155,9 +370,11 @@ mod tests {
         // every entry point still serves
         m.incr("after", 3);
         m.observe("lat", 0.25);
+        m.set_gauge("level", 7.0);
         assert_eq!(m.counter("before"), 2);
         assert_eq!(m.counter("after"), 3);
         assert_eq!(m.percentile("lat", 0.5), Some(0.25));
+        assert_eq!(m.gauge("level"), Some(7.0));
         assert!(m.to_json().render().contains("\"after\":3"));
     }
 }

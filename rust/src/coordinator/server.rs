@@ -13,6 +13,7 @@
 use super::config::ApacheConfig;
 use super::metrics::Metrics;
 use super::shard;
+use crate::obs::{RequestTrace, TraceSink};
 use crate::params::{CkksParams, TfheParams};
 use crate::runtime::Runtime;
 use crate::sched::lowering::Lowerer;
@@ -20,6 +21,7 @@ use crate::sched::oplevel::OpShapes;
 use crate::sched::tasklevel::{schedule_tasks, Task};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
 
 // This synchronous coordinator survives as the thin compatibility
 // wrapper over the sharded serving tier's pipeline stages
@@ -78,6 +80,9 @@ pub(crate) fn build_runtime(cfg: &ApacheConfig) -> Option<Runtime> {
 pub struct Coordinator {
     pub cfg: ApacheConfig,
     pub metrics: Arc<Metrics>,
+    /// span-tree sink, enabled iff `cfg.trace_out` names an output path
+    /// (the synchronous wrapper serves every request as shard 0)
+    pub trace: Arc<TraceSink>,
     runtime: Option<Runtime>,
     /// one lowerer for the coordinator's lifetime, not one per served
     /// batch: its operand pools memoize evk/twiddle buffers per
@@ -102,9 +107,15 @@ impl Coordinator {
             tfhe: TfheParams::paper_shape(),
         };
         let lowerer = Mutex::new(Lowerer::strict(cfg.strict_lowering));
+        let trace = if cfg.trace_out.is_empty() {
+            TraceSink::noop().clone()
+        } else {
+            TraceSink::enabled()
+        };
         Coordinator {
             cfg,
             metrics: Arc::new(Metrics::default()),
+            trace,
             runtime,
             lowerer,
             shapes,
@@ -134,7 +145,34 @@ impl Coordinator {
     /// thread. High-throughput callers use
     /// [`super::shard::ShardedCoordinator`] instead.
     pub fn serve_batch(&self, requests: Vec<TaskRequest>) -> Vec<TaskResult> {
+        let submitted = Instant::now();
         let tasks: Vec<Task> = requests.into_iter().map(|r| r.task).collect();
+        // same span taxonomy as the sharded tier: the synchronous path
+        // admits instantly and waits in no queue, so `admit` and
+        // `queue_wait` are zero-length — the tree shape stays identical
+        let mut traces: Vec<Option<Box<RequestTrace>>> = tasks
+            .iter()
+            .map(|t| {
+                self.trace.start_request(0, &t.name, 0, submitted).map(|mut tr| {
+                    let root = tr.root();
+                    tr.add_span(
+                        root,
+                        "admit",
+                        submitted,
+                        submitted,
+                        vec![("shard", 0usize.into())],
+                    );
+                    tr.add_span(
+                        root,
+                        "queue_wait",
+                        submitted,
+                        submitted,
+                        vec![("queue_s", 0.0.into())],
+                    );
+                    tr
+                })
+            })
+            .collect();
         let assignment = schedule_tasks(
             &tasks,
             &self.shapes,
@@ -164,7 +202,19 @@ impl Coordinator {
             }
             out
         });
-        self.dispatch_runtime(&tasks, &mut results);
+        self.dispatch_runtime(&tasks, &mut results, &mut traces);
+        let done = Instant::now();
+        for (i, tr) in traces.into_iter().enumerate() {
+            if let Some(mut tr) = tr {
+                let latency = done.saturating_duration_since(submitted).as_secs_f64();
+                tr.add_root_attr("latency_s", latency);
+                if let Some(r) = results[i].as_ref() {
+                    tr.add_root_attr("ok", r.runtime_error.is_none());
+                    tr.add_root_attr("invocations", r.runtime_invocations);
+                }
+                tr.finish(done);
+            }
+        }
         let mut out: Vec<TaskResult> = results.into_iter().flatten().collect();
         out.sort_by(|a, b| a.name.cmp(&b.name));
         out
@@ -175,14 +225,37 @@ impl Coordinator {
     /// executed inline on the caller's thread. A failing invocation
     /// marks its own task's result and the `runtime.errors` counter — it
     /// never aborts the serving loop.
-    fn dispatch_runtime(&self, tasks: &[Task], results: &mut [Option<TaskResult>]) {
+    fn dispatch_runtime(
+        &self,
+        tasks: &[Task],
+        results: &mut [Option<TaskResult>],
+        traces: &mut [Option<Box<RequestTrace>>],
+    ) {
         let rt = match &self.runtime {
             Some(rt) => rt,
             None => return,
         };
         let mut lowerer = self.lowerer();
-        let prepared = shard::lower_tasks(&mut lowerer, tasks, &self.shapes, rt, &self.metrics);
-        shard::execute_prepared(rt, &self.metrics, &prepared, results);
+        let prepared =
+            shard::lower_tasks(&mut lowerer, tasks, &self.shapes, rt, &self.metrics, traces);
+        drop(lowerer);
+        // with tracing on, price the batch's plan so the tree carries
+        // the same six stages as the sharded tier (`plan_lookahead` is
+        // host-side and side-effect-free — off-trace runs skip it)
+        if traces.iter().any(Option::is_some) {
+            let t0 = Instant::now();
+            let plan = rt.plan_lookahead(&prepared.invocations);
+            let t1 = Instant::now();
+            let attrs = match &plan {
+                Some(p) => p.span_attrs(),
+                None => vec![("planned", 0u64.into())],
+            };
+            for tr in traces.iter_mut().flatten() {
+                let root = tr.root();
+                tr.add_span(root, "plan", t0, t1, attrs.clone());
+            }
+        }
+        shard::execute_prepared(rt, &self.metrics, &prepared, results, traces);
     }
 }
 
@@ -436,8 +509,57 @@ mod tests {
             coord.metrics.counter("pnm.cache.hits") > 0,
             "returning tenants must find their key material resident"
         );
-        let pinned = coord.metrics.percentile("pnm.cache.pinned_bytes", 0.5).unwrap();
+        let pinned = coord.metrics.gauge("pnm.cache.pinned_bytes").unwrap();
         assert!(pinned > 0.0, "the pinned-bytes gauge must surface");
+    }
+
+    #[test]
+    fn traced_serve_batch_emits_complete_span_trees() {
+        let cfg = ApacheConfig {
+            backend: "pnm".into(),
+            use_runtime: true,
+            trace_out: "unused-by-this-test.json".into(),
+            ..Default::default()
+        };
+        let coord = Coordinator::new(cfg);
+        let results = coord.serve_batch(
+            (0..3)
+                .map(|i| TaskRequest {
+                    task: cmux_tree_task(&format!("t{i}"), 3),
+                })
+                .collect(),
+        );
+        assert_eq!(results.len(), 3);
+        assert!(results.iter().all(|r| r.runtime_error.is_none()));
+        assert_eq!(coord.trace.committed_trees(), 3, "one tree per request");
+        let events = coord.trace.snapshot();
+        for stage in crate::obs::STAGES {
+            assert!(
+                events.iter().any(|e| e.name == stage),
+                "stage `{stage}` missing from the sync-path trace"
+            );
+        }
+        // dispatch spans carry the CostTrace attribution
+        let dispatch_end = events
+            .iter()
+            .find(|e| e.name == "dispatch" && e.kind == crate::obs::SpanKind::End)
+            .expect("a dispatch span must close");
+        for key in ["cycles", "rank_bytes", "row_hits", "energy_j"] {
+            assert!(
+                dispatch_end.attrs.iter().any(|(k, _)| *k == key),
+                "dispatch span lost the `{key}` cost attr"
+            );
+        }
+    }
+
+    #[test]
+    fn untraced_coordinator_shares_the_noop_sink() {
+        let coord = Coordinator::new(ApacheConfig::default());
+        assert!(!coord.trace.is_enabled());
+        coord.serve_batch(vec![TaskRequest {
+            task: cmux_tree_task("t", 3),
+        }]);
+        assert_eq!(coord.trace.committed_trees(), 0);
     }
 
     #[test]

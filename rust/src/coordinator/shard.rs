@@ -46,8 +46,9 @@
 use super::config::ApacheConfig;
 use super::metrics::Metrics;
 use super::server::{build_runtime, TaskResult};
+use crate::obs::{RequestTrace, TraceSink};
 use crate::params::{CkksParams, TfheParams};
-use crate::runtime::{CostTrace, Invocation, OpClass, Runtime};
+use crate::runtime::{CostTrace, DispatchPlan, Invocation, OpClass, Runtime};
 use crate::sched::lowering::Lowerer;
 use crate::sched::oplevel::{profile_op, OpShapes};
 use crate::sched::tasklevel::{schedule_tasks, tenant_shard, Task};
@@ -206,15 +207,19 @@ impl<T> BoundedQueue<T> {
 /// One accepted job in a shard queue.
 struct Job {
     task: Task,
+    tenant: u64,
     submitted: Instant,
 }
 
 /// What the prep thread hands the exec thread: the drained jobs, their
-/// model-phase results, and the lowered invocation batch.
+/// model-phase results, the lowered invocation batch, and each job's
+/// open span tree (the trace crosses the prep→exec thread handoff
+/// inside this struct and is finished by the exec thread).
 struct PreparedBatch {
     jobs: Vec<Job>,
     results: Vec<Option<TaskResult>>,
     prepared: Option<Prepared>,
+    traces: Vec<Option<Box<RequestTrace>>>,
 }
 
 /// Everything one shard's prep thread needs — moved into the thread.
@@ -222,6 +227,8 @@ struct PrepStage {
     queue: Arc<BoundedQueue<Job>>,
     metrics: Arc<Metrics>,
     runtime: Option<Arc<Runtime>>,
+    trace: Arc<TraceSink>,
+    shard: usize,
     cfg: ApacheConfig,
     shapes: OpShapes,
     batch_window: usize,
@@ -264,6 +271,36 @@ impl PrepStage {
     }
 
     fn prepare(&self, lowerer: &mut Lowerer, jobs: Vec<Job>) -> PreparedBatch {
+        // open one span tree per job the moment the batch leaves the
+        // queue: `admit` is the (instant) accept decision back at
+        // submit time, `queue_wait` the span from accept to this drain
+        let popped = Instant::now();
+        let mut traces: Vec<Option<Box<RequestTrace>>> = jobs
+            .iter()
+            .map(|j| {
+                self.trace
+                    .start_request(self.shard, &j.task.name, j.tenant, j.submitted)
+                    .map(|mut tr| {
+                        let root = tr.root();
+                        tr.add_span(
+                            root,
+                            "admit",
+                            j.submitted,
+                            j.submitted,
+                            vec![("shard", self.shard.into())],
+                        );
+                        let waited = popped.saturating_duration_since(j.submitted);
+                        tr.add_span(
+                            root,
+                            "queue_wait",
+                            j.submitted,
+                            popped,
+                            vec![("queue_s", waited.as_secs_f64().into())],
+                        );
+                        tr
+                    })
+            })
+            .collect();
         let tasks: Vec<Task> = jobs.iter().map(|j| j.task.clone()).collect();
         let mut results: Vec<Option<TaskResult>> = jobs.iter().map(|_| None).collect();
         let assignment = schedule_tasks(
@@ -280,24 +317,34 @@ impl PrepStage {
             }
         }
         let prepared = self.runtime.as_ref().map(|rt| {
-            let p = lower_tasks(lowerer, &tasks, &self.shapes, rt, &self.metrics);
-            self.lookahead(rt, &p);
+            let p = lower_tasks(lowerer, &tasks, &self.shapes, rt, &self.metrics, &mut traces);
+            let t0 = Instant::now();
+            let plan = self.lookahead(rt, &p);
+            let t1 = Instant::now();
+            // the plan prices the whole batch; every request in it gets
+            // the same `plan` span so each tree stays self-contained
+            let attrs = match &plan {
+                Some(plan) => plan.span_attrs(),
+                None => vec![("planned", 0u64.into())],
+            };
+            for tr in traces.iter_mut().flatten() {
+                let root = tr.root();
+                tr.add_span(root, "plan", t0, t1, attrs.clone());
+            }
             p
         });
         PreparedBatch {
             jobs,
             results,
             prepared,
+            traces,
         }
     }
 
     /// Price the upcoming batch's dispatch plan on the host — the pure
     /// half of double buffering — and surface the prediction.
-    fn lookahead(&self, rt: &Runtime, p: &Prepared) {
-        let plan = match rt.plan_lookahead(&p.invocations) {
-            Some(plan) => plan,
-            None => return,
-        };
+    fn lookahead(&self, rt: &Runtime, p: &Prepared) -> Option<DispatchPlan> {
+        let plan = rt.plan_lookahead(&p.invocations)?;
         self.metrics.incr("pnm.shard.lookahead.plans", 1);
         self.metrics
             .incr("pnm.shard.lookahead.predicted_row_hits", plan.predicted.row_hits);
@@ -306,6 +353,7 @@ impl PrepStage {
         if plan.fell_back {
             self.metrics.incr("pnm.shard.lookahead.fell_back", 1);
         }
+        Some(plan)
     }
 }
 
@@ -323,15 +371,26 @@ impl ExecStage {
     fn run(self) {
         while let Ok(mut batch) = self.rx.recv() {
             if let (Some(rt), Some(p)) = (&self.runtime, &batch.prepared) {
-                execute_prepared(rt, &self.metrics, p, &mut batch.results);
+                execute_prepared(rt, &self.metrics, p, &mut batch.results, &mut batch.traces);
             }
             self.metrics.incr("pnm.shard.batches", 1);
+            let done = Instant::now();
             // a result sink is a plain Vec of finished results — adopt it
             // past a poisoning panic rather than dropping accepted work
             let mut sink = crate::util::sync::lock(&self.sink);
-            for (job, r) in batch.jobs.iter().zip(batch.results.drain(..)) {
+            for (i, (job, r)) in batch.jobs.iter().zip(batch.results.drain(..)).enumerate() {
+                let latency = job.submitted.elapsed().as_secs_f64();
+                // the trace crossed the thread handoff inside the batch;
+                // close the root span here, where the request ends
+                if let Some(mut tr) = batch.traces[i].take() {
+                    tr.add_root_attr("latency_s", latency);
+                    if let Some(r) = r.as_ref() {
+                        tr.add_root_attr("ok", r.runtime_error.is_none());
+                        tr.add_root_attr("invocations", r.runtime_invocations);
+                    }
+                    tr.finish(done);
+                }
                 if let Some(r) = r {
-                    let latency = job.submitted.elapsed().as_secs_f64();
                     self.metrics.observe("serve.latency_s", latency);
                     sink.push(r);
                 }
@@ -353,6 +412,10 @@ struct ShardWorker {
 /// pairs, one [`Runtime`] per shard behind a shared `Arc` seam.
 pub struct ShardedCoordinator {
     pub metrics: Arc<Metrics>,
+    /// the tier's span-tree sink: enabled iff `[system] trace_out` (or
+    /// `--trace-out` / `APACHE_TRACE_OUT`) names an output path; the
+    /// shared static no-op otherwise. Clone before `drain` to export.
+    pub trace: Arc<TraceSink>,
     queues: Vec<Arc<BoundedQueue<Job>>>,
     workers: Vec<ShardWorker>,
     sink: Arc<Mutex<Vec<TaskResult>>>,
@@ -384,6 +447,14 @@ impl ShardedCoordinator {
             tfhe: TfheParams::paper_shape(),
         };
         let sink: Arc<Mutex<Vec<TaskResult>>> = Arc::new(Mutex::new(Vec::new()));
+        // tracing rides the same knob that names its output file: an
+        // empty `trace_out` shares the static no-op sink (hot path pays
+        // one branch, allocates nothing)
+        let trace = if cfg.trace_out.is_empty() {
+            TraceSink::noop().clone()
+        } else {
+            TraceSink::enabled()
+        };
         let mut queues = Vec::with_capacity(shard_cfg.shards);
         let mut workers = Vec::with_capacity(shard_cfg.shards);
         for shard in 0..shard_cfg.shards {
@@ -397,6 +468,8 @@ impl ShardedCoordinator {
                 queue: queue.clone(),
                 metrics: metrics.clone(),
                 runtime: runtime.clone(),
+                trace: trace.clone(),
+                shard,
                 cfg: cfg.clone(),
                 shapes,
                 batch_window: shard_cfg.batch_window,
@@ -424,6 +497,7 @@ impl ShardedCoordinator {
         }
         ShardedCoordinator {
             metrics,
+            trace,
             queues,
             workers,
             sink,
@@ -455,6 +529,7 @@ impl ShardedCoordinator {
         }
         let job = Job {
             task: req.task,
+            tenant: req.tenant,
             submitted: Instant::now(),
         };
         match self.queues[shard].try_push(job) {
@@ -580,6 +655,7 @@ pub(crate) fn lower_tasks(
     shapes: &OpShapes,
     rt: &Runtime,
     metrics: &Metrics,
+    traces: &mut [Option<Box<RequestTrace>>],
 ) -> Prepared {
     let mut p = Prepared {
         invocations: Vec::new(),
@@ -588,7 +664,27 @@ pub(crate) fn lower_tasks(
     };
     let fallbacks_before = lowerer.lane_fallbacks();
     for (ti, task) in tasks.iter().enumerate() {
-        match lowerer.lower_graph(&task.graph, shapes, rt) {
+        let task_fallbacks_before = lowerer.lane_fallbacks();
+        let t0 = Instant::now();
+        let lowered = lowerer.lower_graph(&task.graph, shapes, rt);
+        let t1 = Instant::now();
+        if let Some(tr) = traces.get_mut(ti).and_then(Option::as_mut) {
+            let mut attrs: crate::obs::Attrs = vec![
+                ("ops", task.graph.nodes.len().into()),
+                (
+                    "lane_fallbacks",
+                    (lowerer.lane_fallbacks() - task_fallbacks_before).into(),
+                ),
+                ("rings_resident", lowerer.rings_resident().into()),
+            ];
+            match &lowered {
+                Ok(invs) => attrs.push(("invocations", invs.len().into())),
+                Err(e) => attrs.push(("error", e.to_string().into())),
+            }
+            let root = tr.root();
+            tr.add_span(root, "lower", t0, t1, attrs);
+        }
+        match lowered {
             Ok(invs) => {
                 let start = p.invocations.len();
                 p.invocations.extend(invs);
@@ -614,6 +710,7 @@ pub(crate) fn execute_prepared(
     metrics: &Metrics,
     prepared: &Prepared,
     results: &mut [Option<TaskResult>],
+    traces: &mut [Option<Box<RequestTrace>>],
 ) {
     for (ti, msg) in &prepared.lower_errors {
         metrics.incr("runtime.errors", 1);
@@ -621,8 +718,17 @@ pub(crate) fn execute_prepared(
             r.runtime_error = Some(msg.clone());
         }
     }
+    let tracing = traces.iter().any(Option::is_some);
     let before = rt.cost_trace().unwrap_or_default();
-    let outs = rt.execute_batch_u64(&prepared.invocations);
+    let t0 = Instant::now();
+    // the untraced branch is byte-for-byte the pre-tracing dispatch
+    // path: tracing off costs this one test
+    let (outs, segs) = if tracing {
+        rt.execute_batch_u64_traced(&prepared.invocations)
+    } else {
+        (rt.execute_batch_u64(&prepared.invocations), Vec::new())
+    };
+    let t1 = Instant::now();
     for (ti, span) in &prepared.spans {
         let r = match results[*ti].as_mut() {
             Some(r) => r,
@@ -646,8 +752,41 @@ pub(crate) fn execute_prepared(
         }
         r.runtime_digest = digest;
     }
-    if let Some(after) = rt.cost_trace() {
-        let d = after.delta_since(&before);
+    let delta = rt.cost_trace().map(|after| after.delta_since(&before));
+    if tracing {
+        for (ti, span) in &prepared.spans {
+            let tr = match traces.get_mut(*ti).and_then(Option::as_mut) {
+                Some(tr) => tr,
+                None => continue,
+            };
+            // dispatch span: the whole-batch device window this task
+            // rode in, billed with the batch's CostTrace delta
+            let mut attrs = delta.as_ref().map(CostTrace::span_attrs).unwrap_or_default();
+            attrs.push(("task_invocations", span.len().into()));
+            attrs.push(("batch_invocations", prepared.invocations.len().into()));
+            let root = tr.root();
+            let dispatch = tr.add_span(root, "dispatch", t0, t1, attrs);
+            // one device_segment child per device dispatch that carried
+            // any of this task's invocation slots; `task_items` vs
+            // `segment_items` lets a consumer pro-rate shared segments
+            for (si, seg) in segs.iter().enumerate() {
+                let overlap = seg.items.iter().filter(|&&i| span.contains(&i)).count();
+                if overlap == 0 {
+                    continue;
+                }
+                let mut sattrs = seg
+                    .cost
+                    .as_ref()
+                    .map(CostTrace::span_attrs)
+                    .unwrap_or_default();
+                sattrs.push(("segment", si.into()));
+                sattrs.push(("segment_items", seg.items.len().into()));
+                sattrs.push(("task_items", overlap.into()));
+                tr.add_span(dispatch, "device_segment", seg.begin, seg.end, sattrs);
+            }
+        }
+    }
+    if let Some(d) = delta {
         // an empty batch never reached the device; recording its
         // all-zero delta would skew the utilization/energy histograms
         if d.dispatches > 0 {
@@ -676,13 +815,13 @@ pub(crate) fn record_cost(metrics: &Metrics, d: CostTrace) {
         metrics.incr("pnm.plan.predicted_row_misses", d.predicted_row_misses);
     }
     // residency-cache outcomes (all-zero when the budget is 0 or the
-    // backend is placement-blind); pinned_bytes is a gauge — observe
-    // the end-of-batch footprint rather than accumulating it
+    // backend is placement-blind); pinned_bytes is a first-class gauge —
+    // the end-of-batch footprint, a level, not a distribution
     if d.cache_hits + d.cache_misses + d.cache_evictions > 0 {
         metrics.incr("pnm.cache.hits", d.cache_hits);
         metrics.incr("pnm.cache.misses", d.cache_misses);
         metrics.incr("pnm.cache.evictions", d.cache_evictions);
-        metrics.observe("pnm.cache.pinned_bytes", d.cache_pinned_bytes as f64);
+        metrics.set_gauge("pnm.cache.pinned_bytes", d.cache_pinned_bytes as f64);
     }
     for class in OpClass::ALL {
         let c = d.class_cycles(class);

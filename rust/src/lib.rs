@@ -18,6 +18,9 @@
 //!   JAX/Pallas kernels (`artifacts/*.hlo.txt`, feature `pjrt`).
 //! * [`coordinator`] — the L3 leader: config, task queue, DIMM workers,
 //!   metrics, serving loop.
+//! * [`obs`] — structured tracing of the serving path: per-request span
+//!   trees, Chrome-trace + Prometheus export, per-tenant cost
+//!   attribution.
 //! * [`apps`] — paper benchmark workload generators (Lola-MNIST, HELR,
 //!   packed bootstrapping, VSP, HE3DB TPC-H Q6).
 //! * [`baseline`] — fixed-pipeline two-level-memory accelerator model and
@@ -40,6 +43,8 @@ pub mod sched;
 pub mod baseline;
 
 pub mod coordinator;
+
+pub mod obs;
 
 pub mod apps;
 

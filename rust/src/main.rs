@@ -101,7 +101,30 @@ fn load_config(args: &Args) -> ApacheConfig {
             ApacheConfig::parse_strict_lowering,
         )
         .unwrap_or_else(|e| die(e));
+    cfg.trace_out = knob::TRACE_OUT
+        .resolve(args.opt("trace-out"), cfg.trace_out, |raw| Ok(raw.to_string()))
+        .unwrap_or_else(|e| die(e));
     cfg
+}
+
+/// Write the sink's span trees as Chrome trace-event JSON to the path
+/// the `--trace-out` / `APACHE_TRACE_OUT` / `[system] trace_out` knob
+/// resolved to (no-op when tracing is off). Load the file in Perfetto
+/// or `chrome://tracing`.
+fn write_trace(path: &str, sink: &apache_fhe::obs::TraceSink) {
+    if path.is_empty() || !sink.is_enabled() {
+        return;
+    }
+    let doc = apache_fhe::obs::chrome::render(sink).render();
+    match std::fs::write(path, &doc) {
+        Ok(()) => eprintln!(
+            "[trace] wrote {} span trees to {path} ({} committed, {} dropped by ring overflow)",
+            sink.resident_trees(),
+            sink.committed_trees(),
+            sink.dropped_trees()
+        ),
+        Err(e) => eprintln!("[trace] failed to write {path}: {e}"),
+    }
 }
 
 fn all_ops() -> Vec<FheOp> {
@@ -127,6 +150,7 @@ fn main() {
     match args.subcommand.as_deref() {
         Some("serve") => {
             let cfg = load_config(&args);
+            let trace_out = cfg.trace_out.clone();
             let n_tasks = args.opt_usize("tasks", 16);
             let mk_task = |i: usize| cmux_tree_task(&format!("task-{i:03}"), 31);
             if args.flag("sharded") {
@@ -146,6 +170,9 @@ fn main() {
                     }
                 }
                 let metrics = coord.metrics.clone();
+                // hold the sink past drain (which consumes the tier) so
+                // the completed trees can be exported afterwards
+                let trace = coord.trace.clone();
                 let results = coord.drain();
                 println!(
                     "served {} tasks in {} ({} shard batches, {} rejected; modelled DIMM time: {})",
@@ -155,6 +182,7 @@ fn main() {
                     rejected,
                     fmt_duration(results.iter().map(|r| r.modelled_s).sum::<f64>()),
                 );
+                write_trace(&trace_out, &trace);
                 println!("{}", metrics.to_json().render());
             } else {
                 let coord = Coordinator::new(cfg);
@@ -169,6 +197,7 @@ fn main() {
                     fmt_duration(t0.elapsed().as_secs_f64()),
                     fmt_duration(results.iter().map(|r| r.modelled_s).sum::<f64>()),
                 );
+                write_trace(&trace_out, &coord.trace);
                 println!("{}", coord.metrics.to_json().render());
             }
         }
@@ -248,7 +277,8 @@ fn main() {
                  [--config file.toml] [--dimms N] [--tasks N] [--runtime] \
                  [--backend reference|native|pnm] [--alloc-policy rank_aware|identity] \
                  [--plan-policy row_locality|fifo] [--residency-budget BYTES] \
-                 [--sharded] [--shards N] [--queue-depth N] [--strict-lowering]"
+                 [--sharded] [--shards N] [--queue-depth N] [--strict-lowering] \
+                 [--trace-out trace.json]"
             );
             std::process::exit(2);
         }

@@ -1,0 +1,125 @@
+//! Chrome trace-event JSON export (Perfetto / `chrome://tracing`).
+//!
+//! Layout contract: **one pid per shard, one tid per pipeline stage**
+//! (the index of the stage name in [`super::span::STAGES`]), so every
+//! trace of the serving tier opens with the same track geometry. Each
+//! complete span becomes one `"ph":"X"` (complete) event with `ts`/`dur`
+//! in microseconds relative to the sink epoch; span/parent/trace ids and
+//! the key=value attrs ride in `args`, which is where per-tenant and
+//! per-pool cost attribution lives.
+
+use super::sink::TraceSink;
+use super::span::{stage_tid, SpanEvent, SpanKind};
+use crate::util::jsonw::Json;
+use std::collections::{BTreeSet, HashMap};
+
+/// Render the sink's resident trees as a Chrome trace-event document.
+pub fn render(sink: &TraceSink) -> Json {
+    let events = sink.snapshot();
+    let mut out: Vec<Json> = Vec::new();
+
+    // metadata: name the per-shard processes and per-stage threads once
+    let shards: BTreeSet<usize> = events.iter().map(|e| e.shard).collect();
+    let stages: BTreeSet<&'static str> = events.iter().map(|e| e.name).collect();
+    for &shard in &shards {
+        out.push(
+            Json::obj()
+                .put("name", "process_name")
+                .put("ph", "M")
+                .put("pid", shard)
+                .put("args", Json::obj().put("name", format!("shard {shard}"))),
+        );
+        for &stage in &stages {
+            out.push(
+                Json::obj()
+                    .put("name", "thread_name")
+                    .put("ph", "M")
+                    .put("pid", shard)
+                    .put("tid", stage_tid(stage))
+                    .put("args", Json::obj().put("name", stage)),
+            );
+        }
+    }
+
+    // pair Begin/End by span id (trees are committed whole, so every
+    // begin's end is present in the same snapshot)
+    let mut ends: HashMap<u64, &SpanEvent> = HashMap::new();
+    for e in &events {
+        if e.kind == SpanKind::End {
+            ends.insert(e.span, e);
+        }
+    }
+    for b in &events {
+        if b.kind != SpanKind::Begin {
+            continue;
+        }
+        // defensive: an unpaired begin renders nothing
+        if let Some(end) = ends.get(&b.span) {
+            out.push(span_event(sink, b, end));
+        }
+    }
+
+    Json::obj()
+        .put("traceEvents", Json::Arr(out))
+        .put("displayTimeUnit", "ms")
+}
+
+fn span_event(sink: &TraceSink, begin: &SpanEvent, end: &SpanEvent) -> Json {
+    let ts = sink.micros_since_epoch(begin.t);
+    let dur = (sink.micros_since_epoch(end.t) - ts).max(0.0);
+    let mut args = Json::obj()
+        .put("trace", begin.trace)
+        .put("span", begin.span)
+        .put("parent", begin.parent);
+    for (k, v) in &end.attrs {
+        args = args.put(k, v.to_json());
+    }
+    Json::obj()
+        .put("name", begin.name)
+        .put("cat", "apache")
+        .put("ph", "X")
+        .put("pid", begin.shard)
+        .put("tid", stage_tid(begin.name))
+        .put("ts", ts)
+        .put("dur", dur)
+        .put("args", args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn renders_complete_events_with_metadata_tracks() {
+        let sink = TraceSink::enabled_with_capacity(64);
+        let t0 = Instant::now();
+        let mut tr = sink.start_request(2, "task-x", 9, t0).unwrap();
+        let root = tr.root();
+        let d = tr.add_span(root, "dispatch", t0, t0, vec![("energy_j", 0.25.into())]);
+        tr.add_span(d, "device_segment", t0, t0, vec![("segment", 0u64.into())]);
+        tr.finish(Instant::now());
+        let doc = render(&sink).render();
+        assert!(doc.starts_with('{'));
+        assert!(doc.contains("\"traceEvents\""));
+        assert!(doc.contains("\"process_name\""));
+        assert!(doc.contains("\"shard 2\""));
+        assert!(doc.contains("\"thread_name\""));
+        assert!(doc.contains("\"ph\":\"X\""));
+        assert!(doc.contains("\"request\""));
+        assert!(doc.contains("\"dispatch\""));
+        assert!(doc.contains("\"device_segment\""));
+        assert!(doc.contains("\"energy_j\":0.25"));
+        assert!(doc.contains("\"tenant\":9"));
+        // one pid per shard, one tid per stage: dispatch rides tid 5
+        assert!(doc.contains("\"pid\":2"));
+        assert!(doc.contains("\"tid\":5"));
+    }
+
+    #[test]
+    fn disabled_sink_renders_an_empty_document() {
+        let doc = render(&TraceSink::disabled());
+        let s = doc.render();
+        assert!(s.contains("\"traceEvents\":[]"));
+    }
+}

@@ -1,0 +1,35 @@
+//! Structured observability for the serving path.
+//!
+//! The paper's utilization story (Fig. 12, §V) is a *stage-attribution*
+//! story: knowing that a request spent its time in queue wait vs
+//! lowering vs dispatch — and which tenant's operand pool paid which
+//! device cost — is what turns the flat `Metrics` registry into an
+//! explanation. This module is that layer:
+//!
+//! * [`span`] — [`span::SpanEvent`] begin/end records with monotonic
+//!   timestamps, parent ids and key=value attrs, built per request into
+//!   a [`span::RequestTrace`] that moves with the request across the
+//!   shard prep/exec thread handoff.
+//! * [`sink`] — the bounded [`sink::TraceSink`] ring buffer (whole-tree
+//!   commit/evict; a disabled sink costs the hot path one branch).
+//! * [`chrome`] — Chrome trace-event JSON export (Perfetto-loadable;
+//!   one pid per shard, one tid per pipeline stage), written by
+//!   `apache serve --trace-out` / `APACHE_TRACE_OUT` /
+//!   `[system] trace_out`.
+//! * [`prom`] — Prometheus text exposition over the `Metrics` registry
+//!   (counters, gauges, summary quantiles), `Metrics::to_prometheus`.
+//!
+//! Every accepted request traces the same taxonomy
+//! ([`span::STAGES`]): `admit → queue_wait → lower → plan → dispatch →
+//! device_segment[i]`, with `CostTrace` deltas attached to the dispatch
+//! and per-segment spans. Tracing never perturbs the numeric path — the
+//! bit-identity gates (`runtime_crossval`, `shard_props`) run unchanged
+//! with tracing on.
+
+pub mod chrome;
+pub mod prom;
+pub mod sink;
+pub mod span;
+
+pub use sink::TraceSink;
+pub use span::{stage_tid, AttrValue, Attrs, RequestTrace, SpanEvent, SpanKind, STAGES};

@@ -1,0 +1,96 @@
+//! Prometheus text-exposition rendering of the [`Metrics`] registry.
+//!
+//! Counters render as `counter`, gauges as `gauge`, and each bounded
+//! latency reservoir as a `summary` (quantile series + `_sum`/`_count`).
+//! Metric names are sanitized to the Prometheus grammar
+//! (`[a-zA-Z_:][a-zA-Z0-9_:]*`) under an `apache_` prefix, so
+//! `pnm.cache.pinned_bytes` scrapes as `apache_pnm_cache_pinned_bytes`.
+//! The output is one self-contained exposition page — what `/metrics`
+//! would serve.
+
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use std::fmt::Write as _;
+
+/// Sanitize one metric name into the Prometheus grammar.
+pub fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 7);
+    out.push_str("apache_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+/// Render a snapshot as a text-exposition page.
+pub fn render_snapshot(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        let n = prom_name(name);
+        let _ = writeln!(out, "# TYPE {n} counter");
+        let _ = writeln!(out, "{n} {v}");
+    }
+    for (name, v) in &snap.gauges {
+        let n = prom_name(name);
+        let _ = writeln!(out, "# TYPE {n} gauge");
+        let _ = writeln!(out, "{n} {v}");
+    }
+    for lat in &snap.latencies {
+        let n = prom_name(&lat.name);
+        let _ = writeln!(out, "# TYPE {n} summary");
+        for (q, v) in &lat.quantiles {
+            let _ = writeln!(out, "{n}{{quantile=\"{q}\"}} {v}");
+        }
+        let _ = writeln!(out, "{n}_sum {}", lat.sum);
+        let _ = writeln!(out, "{n}_count {}", lat.count);
+    }
+    out
+}
+
+/// Render the live registry (the `Metrics::to_prometheus` entry point).
+pub fn render(metrics: &Metrics) -> String {
+    render_snapshot(&metrics.snapshot())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_sanitization_matches_the_prometheus_grammar() {
+        assert_eq!(prom_name("pnm.cache.pinned_bytes"), "apache_pnm_cache_pinned_bytes");
+        assert_eq!(prom_name("serve.latency_s"), "apache_serve_latency_s");
+        assert_eq!(prom_name("op.cmux-9"), "apache_op_cmux_9");
+    }
+
+    #[test]
+    fn exposition_covers_counters_gauges_and_quantiles() {
+        let m = Metrics::default();
+        m.incr("admission.accepted", 12);
+        m.set_gauge("pnm.cache.pinned_bytes", 172032.0);
+        for i in 1..=100 {
+            m.observe("serve.latency_s", i as f64 / 1000.0);
+        }
+        let page = m.to_prometheus();
+        assert!(page.contains("# TYPE apache_admission_accepted counter"));
+        assert!(page.contains("apache_admission_accepted 12"));
+        assert!(page.contains("# TYPE apache_pnm_cache_pinned_bytes gauge"));
+        assert!(page.contains("apache_pnm_cache_pinned_bytes 172032"));
+        assert!(page.contains("# TYPE apache_serve_latency_s summary"));
+        // nearest-rank on 100 samples of 1..=100 ms: rank 50 -> 51 ms
+        assert!(page.contains("apache_serve_latency_s{quantile=\"0.5\"} 0.051"));
+        assert!(page.contains("apache_serve_latency_s{quantile=\"0.99\"} 0.099"));
+        assert!(page.contains("apache_serve_latency_s_count 100"));
+        assert!(page.contains("apache_serve_latency_s_sum "));
+        // every non-comment line is `name[{labels}] value`
+        for line in page.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "unparsable value in `{line}`");
+            assert!(parts.next().unwrap().starts_with("apache_"));
+        }
+    }
+}

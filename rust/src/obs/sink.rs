@@ -1,0 +1,268 @@
+//! The bounded trace sink.
+//!
+//! A [`TraceSink`] is either *enabled* — a mutex-guarded ring buffer of
+//! [`SpanEvent`]s grouped into whole request trees — or *disabled*, in
+//! which case every entry point returns immediately: the serving hot
+//! path pays exactly one branch ([`TraceSink::start_request`] checking
+//! the `enabled` flag) and allocates nothing. [`TraceSink::noop`] is the
+//! shared static no-op sink for paths that need *a* sink unconditionally.
+//!
+//! Overflow semantics: a tree is committed atomically; when it does not
+//! fit, the *oldest whole trees* are evicted first, and a tree larger
+//! than the ring is dropped in its entirety. Either way the ring never
+//! holds a partial tree — the invariant `tests/obs_props.rs` gates.
+
+use super::span::{AttrValue, Attrs, RequestTrace, SpanEvent};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Default ring capacity in events (~64k begin/end records; a serving
+/// request tree is typically 10–30 events).
+pub const DEFAULT_RING_EVENTS: usize = 1 << 16;
+
+struct Ring {
+    events: VecDeque<SpanEvent>,
+    /// (trace id, event count) per resident tree, oldest first — the
+    /// eviction unit
+    trees: VecDeque<(u64, usize)>,
+    committed: u64,
+    dropped: u64,
+}
+
+pub struct TraceSink {
+    enabled: bool,
+    epoch: Instant,
+    next_id: AtomicU64,
+    cap: usize,
+    ring: Mutex<Ring>,
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceSink")
+            .field("enabled", &self.enabled)
+            .field("cap", &self.cap)
+            .finish()
+    }
+}
+
+impl TraceSink {
+    fn new(enabled: bool, cap: usize) -> Arc<TraceSink> {
+        Arc::new(TraceSink {
+            enabled,
+            epoch: Instant::now(),
+            // span/trace ids start at 1: 0 is the "no parent" sentinel
+            next_id: AtomicU64::new(1),
+            cap,
+            ring: Mutex::new(Ring {
+                events: VecDeque::new(),
+                trees: VecDeque::new(),
+                committed: 0,
+                dropped: 0,
+            }),
+        })
+    }
+
+    /// An enabled sink with the default ring capacity.
+    pub fn enabled() -> Arc<TraceSink> {
+        Self::new(true, DEFAULT_RING_EVENTS)
+    }
+
+    /// An enabled sink with an explicit event capacity (tests exercise
+    /// overflow with tiny rings).
+    pub fn enabled_with_capacity(cap_events: usize) -> Arc<TraceSink> {
+        assert!(cap_events >= 1, "ring capacity must be >= 1");
+        Self::new(true, cap_events)
+    }
+
+    /// A fresh disabled sink (every call is a no-op).
+    pub fn disabled() -> Arc<TraceSink> {
+        Self::new(false, 0)
+    }
+
+    /// The shared static no-op sink — the guaranteed-zero-cost disabled
+    /// mode: one branch on `start_request`, no allocation, no lock.
+    pub fn noop() -> &'static Arc<TraceSink> {
+        static NOOP: OnceLock<Arc<TraceSink>> = OnceLock::new();
+        NOOP.get_or_init(|| TraceSink::new(false, 0))
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Allocate a sink-unique span/trace id.
+    pub(super) fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Open the span tree of one accepted request: the root `request`
+    /// span begins at `begin` (submission time) and carries the task
+    /// name + tenant as root attrs. `None` when the sink is disabled —
+    /// the hot path's single branch.
+    pub fn start_request(
+        self: &Arc<Self>,
+        shard: usize,
+        task: &str,
+        tenant: u64,
+        begin: Instant,
+    ) -> Option<Box<RequestTrace>> {
+        if !self.enabled {
+            return None;
+        }
+        let trace = self.next_id();
+        let root = self.next_id();
+        let root_attrs: Attrs = vec![
+            ("task", AttrValue::Str(task.to_string())),
+            ("tenant", AttrValue::U64(tenant)),
+        ];
+        Some(Box::new(RequestTrace::open(
+            self.clone(),
+            trace,
+            shard,
+            root,
+            begin,
+            root_attrs,
+        )))
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Ring> {
+        crate::util::sync::lock(&self.ring)
+    }
+
+    /// Commit one finished tree. Whole-tree or nothing: the oldest
+    /// resident trees are evicted to make room; a tree larger than the
+    /// ring itself is counted dropped and discarded.
+    pub(super) fn commit(&self, events: Vec<SpanEvent>) {
+        if !self.enabled || events.is_empty() {
+            return;
+        }
+        let mut ring = self.lock();
+        if events.len() > self.cap {
+            ring.dropped += 1;
+            return;
+        }
+        while ring.events.len() + events.len() > self.cap {
+            let (_, n) = ring
+                .trees
+                .pop_front()
+                .expect("ring accounting: events without a tree");
+            ring.events.drain(..n);
+            ring.dropped += 1;
+        }
+        let trace = events[0].trace;
+        ring.trees.push_back((trace, events.len()));
+        ring.events.extend(events);
+        ring.committed += 1;
+    }
+
+    /// Copy of the resident events, in commit order (trees contiguous).
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        if !self.enabled {
+            return Vec::new();
+        }
+        self.lock().events.iter().cloned().collect()
+    }
+
+    /// Trees committed over the sink's lifetime (including since-evicted
+    /// ones) — the exactly-once witness against `admission.accepted`.
+    pub fn committed_trees(&self) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        self.lock().committed
+    }
+
+    /// Whole trees evicted by overflow (plus oversize trees discarded).
+    pub fn dropped_trees(&self) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        self.lock().dropped
+    }
+
+    /// Trees currently resident in the ring.
+    pub fn resident_trees(&self) -> usize {
+        if !self.enabled {
+            return 0;
+        }
+        self.lock().trees.len()
+    }
+
+    /// Monotonic microseconds of `t` relative to the sink epoch — the
+    /// Chrome-trace `ts` unit.
+    pub fn micros_since_epoch(&self, t: Instant) -> f64 {
+        t.saturating_duration_since(self.epoch).as_secs_f64() * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::SpanKind;
+
+    fn tree(sink: &Arc<TraceSink>, spans: usize) -> u64 {
+        let t = Instant::now();
+        let mut tr = sink.start_request(0, "t", 0, t).unwrap();
+        let id = tr.trace_id();
+        for _ in 0..spans {
+            tr.add_span(tr.root(), "dispatch", t, t, vec![]);
+        }
+        tr.finish(Instant::now());
+        id
+    }
+
+    #[test]
+    fn overflow_evicts_whole_oldest_trees() {
+        // each tree = 2 root events + 2*spans; cap 10 holds two 2-span
+        // trees (6 events each) only by evicting
+        let sink = TraceSink::enabled_with_capacity(10);
+        let a = tree(&sink, 2); // 6 events
+        let b = tree(&sink, 0); // 2 events -> 8 resident
+        let c = tree(&sink, 2); // 6 events -> evicts a (and b)
+        let events = sink.snapshot();
+        assert!(events.len() <= 10);
+        let resident: std::collections::BTreeSet<u64> =
+            events.iter().map(|e| e.trace).collect();
+        assert!(!resident.contains(&a), "oldest tree must be evicted first");
+        assert!(resident.contains(&c));
+        let _ = b;
+        // no partial trees: every resident trace has paired begin/end
+        for t in &resident {
+            let begins = events
+                .iter()
+                .filter(|e| e.trace == *t && e.kind == SpanKind::Begin)
+                .count();
+            let ends = events
+                .iter()
+                .filter(|e| e.trace == *t && e.kind == SpanKind::End)
+                .count();
+            assert_eq!(begins, ends, "trace {t} truncated mid-span");
+        }
+        assert_eq!(sink.committed_trees(), 3);
+        assert!(sink.dropped_trees() >= 1);
+    }
+
+    #[test]
+    fn oversize_tree_is_dropped_never_truncated() {
+        let sink = TraceSink::enabled_with_capacity(4);
+        tree(&sink, 8); // 18 events > cap
+        assert!(sink.snapshot().is_empty());
+        assert_eq!(sink.dropped_trees(), 1);
+        // the ring still works afterwards
+        tree(&sink, 1);
+        assert_eq!(sink.snapshot().len(), 4);
+    }
+
+    #[test]
+    fn noop_sink_is_shared_and_inert() {
+        let a = TraceSink::noop();
+        let b = TraceSink::noop();
+        assert!(Arc::ptr_eq(a, b));
+        assert!(!a.is_enabled());
+        assert!(a.start_request(0, "t", 0, Instant::now()).is_none());
+        assert_eq!(a.committed_trees(), 0);
+    }
+}

@@ -1,0 +1,284 @@
+//! Span events and the per-request trace builder.
+//!
+//! A request's span tree is accumulated *locally* in a [`RequestTrace`]
+//! as the request moves through the serving pipeline — the builder is
+//! plain owned data, so carrying it across the shard prep/exec thread
+//! handoff is a move, not a synchronization. Only [`RequestTrace::finish`]
+//! touches the shared [`super::sink::TraceSink`], committing the whole
+//! tree at once: the sink's ring buffer therefore only ever holds
+//! complete trees and overflow can evict whole trees, never truncate one
+//! mid-span (gated by `tests/obs_props.rs`).
+
+use super::sink::TraceSink;
+use crate::util::jsonw::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The span taxonomy of the serving pipeline, in pipeline order. The
+/// index of a name is its Chrome-trace thread id (one tid per stage,
+/// one pid per shard), so every export lays the stages out identically.
+pub const STAGES: [&str; 7] = [
+    "request",
+    "admit",
+    "queue_wait",
+    "lower",
+    "plan",
+    "dispatch",
+    "device_segment",
+];
+
+/// The Chrome-trace tid of a stage name (its index in [`STAGES`];
+/// unknown names land on a trailing overflow track).
+pub fn stage_tid(name: &str) -> u64 {
+    STAGES
+        .iter()
+        .position(|s| *s == name)
+        .unwrap_or(STAGES.len()) as u64
+}
+
+/// One key=value span attribute.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrValue {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+impl AttrValue {
+    pub fn to_json(&self) -> Json {
+        match self {
+            AttrValue::U64(v) => Json::from(*v),
+            AttrValue::F64(v) => Json::from(*v),
+            AttrValue::Str(v) => Json::from(v.clone()),
+        }
+    }
+}
+
+impl From<u64> for AttrValue {
+    fn from(v: u64) -> Self {
+        AttrValue::U64(v)
+    }
+}
+impl From<usize> for AttrValue {
+    fn from(v: usize) -> Self {
+        AttrValue::U64(v as u64)
+    }
+}
+impl From<bool> for AttrValue {
+    fn from(v: bool) -> Self {
+        AttrValue::U64(v as u64)
+    }
+}
+impl From<f64> for AttrValue {
+    fn from(v: f64) -> Self {
+        AttrValue::F64(v)
+    }
+}
+impl From<&str> for AttrValue {
+    fn from(v: &str) -> Self {
+        AttrValue::Str(v.to_string())
+    }
+}
+impl From<String> for AttrValue {
+    fn from(v: String) -> Self {
+        AttrValue::Str(v)
+    }
+}
+
+/// Span attribute list. Keys are static stage vocabulary, values are
+/// measured — the allocation is one `Vec` per span, paid only when
+/// tracing is enabled.
+pub type Attrs = Vec<(&'static str, AttrValue)>;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    Begin,
+    End,
+}
+
+/// One begin or end record. Timestamps are monotonic [`Instant`]s; the
+/// exporter converts them to microseconds relative to the sink epoch.
+/// Attrs ride on the `End` event (they are known when the span closes).
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    /// the request tree this event belongs to
+    pub trace: u64,
+    /// span id, unique across the sink (ids survive the prep→exec handoff)
+    pub span: u64,
+    /// parent span id; 0 = root (the `request` span itself)
+    pub parent: u64,
+    /// serving shard (Chrome-trace pid)
+    pub shard: usize,
+    pub name: &'static str,
+    pub kind: SpanKind,
+    pub t: Instant,
+    pub attrs: Attrs,
+}
+
+/// The span tree of one accepted request, built stage by stage. Owned
+/// by the request (inside the shard `Job`), so the prep thread's spans
+/// and the exec thread's spans land in the same tree without locking;
+/// `finish` commits the completed tree to the sink exactly once. A
+/// trace dropped unfinished (a dying pipeline) is discarded, never
+/// half-committed.
+#[derive(Debug)]
+pub struct RequestTrace {
+    sink: Arc<TraceSink>,
+    trace: u64,
+    shard: usize,
+    root: u64,
+    root_attrs: Attrs,
+    events: Vec<SpanEvent>,
+}
+
+impl RequestTrace {
+    pub(super) fn open(
+        sink: Arc<TraceSink>,
+        trace: u64,
+        shard: usize,
+        root: u64,
+        begin: Instant,
+        root_attrs: Attrs,
+    ) -> Self {
+        let events = vec![SpanEvent {
+            trace,
+            span: root,
+            parent: 0,
+            shard,
+            name: STAGES[0],
+            kind: SpanKind::Begin,
+            t: begin,
+            attrs: Vec::new(),
+        }];
+        RequestTrace {
+            sink,
+            trace,
+            shard,
+            root,
+            root_attrs,
+            events,
+        }
+    }
+
+    /// The root (`request`) span id — the parent of every stage span.
+    pub fn root(&self) -> u64 {
+        self.root
+    }
+
+    pub fn trace_id(&self) -> u64 {
+        self.trace
+    }
+
+    /// Record one complete stage span under `parent` and return its id
+    /// (so `device_segment` spans can nest under their `dispatch`).
+    pub fn add_span(
+        &mut self,
+        parent: u64,
+        name: &'static str,
+        begin: Instant,
+        end: Instant,
+        attrs: Attrs,
+    ) -> u64 {
+        let span = self.sink.next_id();
+        self.events.push(SpanEvent {
+            trace: self.trace,
+            span,
+            parent,
+            shard: self.shard,
+            name,
+            kind: SpanKind::Begin,
+            t: begin,
+            attrs: Vec::new(),
+        });
+        self.events.push(SpanEvent {
+            trace: self.trace,
+            span,
+            parent,
+            shard: self.shard,
+            name,
+            kind: SpanKind::End,
+            t: end,
+            attrs,
+        });
+        span
+    }
+
+    /// Attach an attribute to the root `request` span (emitted with its
+    /// `End` event at [`RequestTrace::finish`]).
+    pub fn add_root_attr(&mut self, key: &'static str, value: impl Into<AttrValue>) {
+        self.root_attrs.push((key, value.into()));
+    }
+
+    /// Close the root span and commit the whole tree to the sink.
+    pub fn finish(mut self, end: Instant) {
+        let root_end = SpanEvent {
+            trace: self.trace,
+            span: self.root,
+            parent: 0,
+            shard: self.shard,
+            name: STAGES[0],
+            kind: SpanKind::End,
+            t: end,
+            attrs: std::mem::take(&mut self.root_attrs),
+        };
+        self.events.push(root_end);
+        let events = std::mem::take(&mut self.events);
+        self.sink.commit(events);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_tids_are_pipeline_order() {
+        assert_eq!(stage_tid("request"), 0);
+        assert_eq!(stage_tid("admit"), 1);
+        assert_eq!(stage_tid("queue_wait"), 2);
+        assert_eq!(stage_tid("lower"), 3);
+        assert_eq!(stage_tid("plan"), 4);
+        assert_eq!(stage_tid("dispatch"), 5);
+        assert_eq!(stage_tid("device_segment"), 6);
+        assert_eq!(stage_tid("mystery"), STAGES.len() as u64);
+    }
+
+    #[test]
+    fn trace_builds_a_paired_tree_and_commits_once() {
+        let sink = TraceSink::enabled_with_capacity(1024);
+        let t0 = Instant::now();
+        let mut tr = sink
+            .start_request(3, "task-a", 7, t0)
+            .expect("enabled sink must trace");
+        let root = tr.root();
+        let d = tr.add_span(root, "dispatch", t0, t0, vec![("invocations", 4u64.into())]);
+        tr.add_span(d, "device_segment", t0, t0, vec![]);
+        tr.finish(Instant::now());
+        let events = sink.snapshot();
+        // root + dispatch + segment, each a begin/end pair
+        assert_eq!(events.len(), 6);
+        assert_eq!(sink.committed_trees(), 1);
+        let begins = events.iter().filter(|e| e.kind == SpanKind::Begin).count();
+        assert_eq!(begins, 3);
+        // tenant + task name ride on the root End
+        let root_end = events
+            .iter()
+            .find(|e| e.span == root && e.kind == SpanKind::End)
+            .unwrap();
+        assert!(root_end
+            .attrs
+            .iter()
+            .any(|(k, v)| *k == "tenant" && *v == AttrValue::U64(7)));
+        assert!(root_end
+            .attrs
+            .iter()
+            .any(|(k, v)| *k == "task" && *v == AttrValue::Str("task-a".into())));
+    }
+
+    #[test]
+    fn disabled_sink_costs_one_branch() {
+        let sink = TraceSink::disabled();
+        assert!(sink.start_request(0, "t", 0, Instant::now()).is_none());
+        assert!(sink.snapshot().is_empty());
+    }
+}

@@ -53,6 +53,7 @@ use crate::util::error::{Context, Error, Result};
 use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Parsed `artifacts/manifest.txt` entry.
 #[derive(Debug, Clone)]
@@ -195,6 +196,20 @@ pub struct Invocation {
     /// each input from the artifact's operator family
     /// ([`OperandKind::classify`]).
     pub kinds: Vec<OperandKind>,
+}
+
+/// One device dispatch observed by [`Runtime::execute_batch_u64_traced`]:
+/// which invocation slots it carried, when it ran, and the [`CostTrace`]
+/// delta it accrued (`None` on backends that model no cost). Under
+/// [`PlanPolicy::Fifo`] a batch is one dispatch; under
+/// [`PlanPolicy::RowLocality`] each plan segment is one.
+#[derive(Debug, Clone)]
+pub struct SegmentDispatch {
+    /// invocation-slot indices (positions in the submitted batch)
+    pub items: Vec<usize>,
+    pub begin: Instant,
+    pub end: Instant,
+    pub cost: Option<CostTrace>,
 }
 
 impl Invocation {
@@ -1138,16 +1153,20 @@ impl Runtime {
     /// against the backend's rank assignment and dispatched one segment
     /// per device dispatch, with results scattered back into item order —
     /// plans permute *dispatch*, never results.
-    fn dispatch_planned(&self, items: &[BatchItem<'_>]) -> Vec<Result<Vec<u64>>> {
+    fn dispatch_planned(
+        &self,
+        items: &[BatchItem<'_>],
+        mut segs: Option<&mut Vec<SegmentDispatch>>,
+    ) -> Vec<Result<Vec<u64>>> {
         if self.plan_policy == PlanPolicy::Fifo || items.is_empty() {
-            return self.execute_direct(items);
+            return self.execute_direct(items, segs);
         }
         let (geo, ranks) = match (
             self.backend.plan_geometry(),
             self.backend.rank_assignment(items),
         ) {
             (Some(g), Some(r)) => (g, r),
-            _ => return self.execute_direct(items),
+            _ => return self.execute_direct(items, segs),
         };
         let plan_items: Vec<PlanItem> = items
             .iter()
@@ -1163,10 +1182,22 @@ impl Runtime {
             // thread the previewed ranks into the dispatch: the preview
             // is the placement, even for pools first seen mid-batch
             let seg_ranks: Vec<usize> = seg.iter().map(|&i| ranks[i]).collect();
-            for (&i, out) in seg
-                .iter()
-                .zip(self.backend.execute_batch_placed(&seg_items, &seg_ranks))
-            {
+            let before = segs.as_ref().map(|_| self.backend.cost_trace());
+            let t0 = Instant::now();
+            let outs = self.backend.execute_batch_placed(&seg_items, &seg_ranks);
+            if let Some(trace) = segs.as_deref_mut() {
+                trace.push(SegmentDispatch {
+                    items: seg.clone(),
+                    begin: t0,
+                    end: Instant::now(),
+                    cost: self
+                        .backend
+                        .cost_trace()
+                        .zip(before.flatten())
+                        .map(|(now, prev)| now.delta_since(&prev)),
+                });
+            }
+            for (&i, out) in seg.iter().zip(outs) {
                 slots[i] = Some(out);
             }
         }
@@ -1180,12 +1211,34 @@ impl Runtime {
     /// arena-native backend ([`Backend::supports_arena`]) gets the batch
     /// packed once into a flat [`OperandArena`]; legacy backends get the
     /// `Arc`-operand [`Backend::execute_batch`] path unchanged.
-    fn execute_direct(&self, items: &[BatchItem<'_>]) -> Vec<Result<Vec<u64>>> {
-        if !items.is_empty() && self.backend.supports_arena() {
+    fn execute_direct(
+        &self,
+        items: &[BatchItem<'_>],
+        segs: Option<&mut Vec<SegmentDispatch>>,
+    ) -> Vec<Result<Vec<u64>>> {
+        let before = segs.as_ref().map(|_| self.backend.cost_trace());
+        let t0 = Instant::now();
+        let outs = if !items.is_empty() && self.backend.supports_arena() {
             let (arena, arena_items) = OperandArena::pack(items);
-            return self.backend.execute_batch_arena(&arena, &arena_items);
+            self.backend.execute_batch_arena(&arena, &arena_items)
+        } else {
+            self.backend.execute_batch(items)
+        };
+        if let Some(trace) = segs {
+            if !items.is_empty() {
+                trace.push(SegmentDispatch {
+                    items: (0..items.len()).collect(),
+                    begin: t0,
+                    end: Instant::now(),
+                    cost: self
+                        .backend
+                        .cost_trace()
+                        .zip(before.flatten())
+                        .map(|(now, prev)| now.delta_since(&prev)),
+                });
+            }
         }
-        self.backend.execute_batch(items)
+        outs
     }
 
     /// Execute a batch of artifact invocations, returning one result per
@@ -1197,6 +1250,29 @@ impl Runtime {
     /// it once per call. The batch flows through the dispatch planner
     /// ([`crate::sched::plan`]) on its way to the backend.
     pub fn execute_batch_u64(&self, invocations: &[Invocation]) -> Vec<Result<Vec<u64>>> {
+        self.execute_batch_impl(invocations, None)
+    }
+
+    /// [`Runtime::execute_batch_u64`] plus a per-device-dispatch trace:
+    /// each entry records which invocation slots one device dispatch
+    /// carried, when it ran, and the [`CostTrace`] delta it accrued — the
+    /// raw material for `device_segment` spans and per-tenant cost
+    /// attribution. The numeric path is byte-identical to the untraced
+    /// entry point; only bookkeeping differs.
+    pub fn execute_batch_u64_traced(
+        &self,
+        invocations: &[Invocation],
+    ) -> (Vec<Result<Vec<u64>>>, Vec<SegmentDispatch>) {
+        let mut segs = Vec::new();
+        let outs = self.execute_batch_impl(invocations, Some(&mut segs));
+        (outs, segs)
+    }
+
+    fn execute_batch_impl(
+        &self,
+        invocations: &[Invocation],
+        mut segs: Option<&mut Vec<SegmentDispatch>>,
+    ) -> Vec<Result<Vec<u64>>> {
         let mut slots: Vec<Option<Result<Vec<u64>>>> = Vec::with_capacity(invocations.len());
         let mut valid_idx: Vec<usize> = Vec::new();
         let mut items: Vec<BatchItem<'_>> = Vec::new();
@@ -1216,7 +1292,16 @@ impl Runtime {
                 Err(e) => slots.push(Some(Err(e))),
             }
         }
-        let outs = self.dispatch_planned(&items);
+        let outs = self.dispatch_planned(&items, segs.as_deref_mut());
+        // segment traces index item-space; report invocation slots so
+        // callers can line segments up with what they submitted
+        if let Some(trace) = segs {
+            for seg in trace.iter_mut() {
+                for it in seg.items.iter_mut() {
+                    *it = valid_idx[*it];
+                }
+            }
+        }
         for (i, out) in valid_idx.into_iter().zip(outs) {
             slots[i] = Some(out);
         }

@@ -275,6 +275,27 @@ impl CostTrace {
         }
         d
     }
+
+    /// This trace as span attrs — the per-tenant cost-attribution payload
+    /// the serving tier attaches to dispatch spans. Call on a
+    /// [`CostTrace::delta_since`] delta so the numbers are *this* batch's
+    /// bill, not the device's lifetime totals.
+    pub fn span_attrs(&self) -> crate::obs::Attrs {
+        vec![
+            ("dispatches", self.dispatches.into()),
+            ("invocations", self.invocations.into()),
+            ("cycles", self.cycles.into()),
+            ("rank_bytes", self.profile.io_internal.into()),
+            ("bank_bytes", self.profile.io_bank.into()),
+            ("row_hits", self.row_hits.into()),
+            ("row_misses", self.row_misses.into()),
+            ("cache_hits", self.cache_hits.into()),
+            ("cache_misses", self.cache_misses.into()),
+            ("cache_evictions", self.cache_evictions.into()),
+            ("cache_pinned_bytes", self.cache_pinned_bytes.into()),
+            ("energy_j", self.energy_j.into()),
+        ]
+    }
 }
 
 /// The mutable placement state behind one mutex: allocator and residency

@@ -129,6 +129,13 @@ impl Lowerer {
         self.lane_fallbacks
     }
 
+    /// Ring sizes whose operand tables (twiddles, artifact bindings) are
+    /// already resident in this lowerer — a cold ring on a `lower` span
+    /// explains a one-off latency bump that is table setup, not FHE work.
+    pub fn rings_resident(&self) -> usize {
+        self.rings.len()
+    }
+
     /// The pool id for ops on `ring` sharing `key_id` (keyless ops share
     /// one anonymous pool per ring): the §V-B cluster tag stamped onto
     /// every lowered invocation so placement-aware backends (the pnm

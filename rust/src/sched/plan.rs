@@ -178,6 +178,22 @@ impl DispatchPlan {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// This plan as span attrs — what the serving tier records on a
+    /// request's `plan` span: policy, shape, and the predicted
+    /// hit/miss economics the planner committed to.
+    pub fn span_attrs(&self) -> crate::obs::Attrs {
+        vec![
+            ("policy", self.policy.name().into()),
+            ("planned", self.len().into()),
+            ("segments", self.segments.len().into()),
+            ("splits", self.splits().into()),
+            ("fell_back", self.fell_back.into()),
+            ("predicted_row_hits", self.predicted.row_hits.into()),
+            ("predicted_row_misses", self.predicted.row_misses.into()),
+            ("predicted_fifo_row_misses", self.predicted_fifo.row_misses.into()),
+        ]
+    }
 }
 
 /// The device state a plan is priced against: the rank allocator, the

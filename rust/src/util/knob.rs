@@ -68,6 +68,13 @@ pub const STRICT_LOWERING: Knob = Knob {
     env: "APACHE_STRICT_LOWERING",
 };
 
+/// Chrome trace-event output path for serving-path span trees
+/// (empty / unset = tracing disabled).
+pub const TRACE_OUT: Knob = Knob {
+    cli: "--trace-out",
+    env: "APACHE_TRACE_OUT",
+};
+
 impl Knob {
     /// The knob's environment override: `None` when unset or empty (an
     /// empty matrix entry means "not selected", not "select the empty
@@ -126,7 +133,7 @@ mod tests {
 
     /// Every knob in the system, so the precedence contract is asserted
     /// over the full surface, not a sample.
-    const ALL: [Knob; 7] = [
+    const ALL: [Knob; 8] = [
         BACKEND,
         ALLOC_POLICY,
         PLAN_POLICY,
@@ -134,6 +141,7 @@ mod tests {
         SHARDS,
         QUEUE_DEPTH,
         STRICT_LOWERING,
+        TRACE_OUT,
     ];
 
     #[test]
@@ -186,5 +194,7 @@ mod tests {
         assert_eq!(RESIDENCY_BUDGET.cli, "--residency-budget");
         assert_eq!(STRICT_LOWERING.cli, "--strict-lowering");
         assert_eq!(STRICT_LOWERING.env, "APACHE_STRICT_LOWERING");
+        assert_eq!(TRACE_OUT.cli, "--trace-out");
+        assert_eq!(TRACE_OUT.env, "APACHE_TRACE_OUT");
     }
 }

@@ -1,0 +1,294 @@
+//! Property tests for the serving-path tracing layer (`obs`):
+//!
+//! * well-formed span trees: across shard counts {1, 2, 4} and both
+//!   buffering modes, every accepted request commits exactly one tree in
+//!   which every span is a paired Begin/End, every parent exists in the
+//!   same tree, every child interval nests inside its parent's, and all
+//!   seven taxonomy names (`request` + the six pipeline stages) appear;
+//! * exactly-once: the sink's committed-tree count equals the admission
+//!   count for any queue-pressure pattern — rejected requests trace
+//!   nothing, accepted ones trace once;
+//! * ring overflow drops *whole* trees, oldest first, and never
+//!   truncates one mid-span — a resident tree is always complete.
+
+use apache_fhe::coordinator::{ApacheConfig, ServeRequest, ShardConfig, ShardedCoordinator};
+use apache_fhe::obs::{SpanEvent, SpanKind, TraceSink, STAGES};
+use apache_fhe::sched::tasklevel::cmux_tree_task;
+use apache_fhe::util::proptest_lite::{run_prop, GenExt};
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Instant;
+
+/// Group a snapshot into per-trace trees, asserting the commit-order
+/// contiguity the ring guarantees (a tree's events are never interleaved
+/// with another's).
+fn trees_of(events: &[SpanEvent]) -> BTreeMap<u64, Vec<&SpanEvent>> {
+    let mut trees: BTreeMap<u64, Vec<&SpanEvent>> = BTreeMap::new();
+    let mut current = None;
+    for e in events {
+        if current != Some(e.trace) {
+            assert!(
+                !trees.contains_key(&e.trace),
+                "trace {} interleaved with another tree",
+                e.trace
+            );
+            current = Some(e.trace);
+        }
+        trees.entry(e.trace).or_default().push(e);
+    }
+    trees
+}
+
+/// One span reassembled from its Begin/End pair.
+struct Span<'a> {
+    begin: &'a SpanEvent,
+    end: &'a SpanEvent,
+}
+
+/// Assert one committed tree is well formed and return its spans by id.
+fn check_tree<'a>(tree: &[&'a SpanEvent]) -> BTreeMap<u64, Span<'a>> {
+    let mut begins: BTreeMap<u64, &'a SpanEvent> = BTreeMap::new();
+    let mut spans: BTreeMap<u64, Span<'a>> = BTreeMap::new();
+    for e in tree {
+        match e.kind {
+            SpanKind::Begin => {
+                assert!(
+                    begins.insert(e.span, e).is_none(),
+                    "span {} began twice",
+                    e.span
+                );
+            }
+            SpanKind::End => {
+                let b = begins.remove(&e.span).expect("End without a Begin");
+                assert_eq!(b.name, e.name, "span {} changed name", e.span);
+                assert_eq!(b.parent, e.parent, "span {} changed parent", e.span);
+                assert_eq!(b.shard, e.shard, "span {} changed shard", e.span);
+                assert!(b.t <= e.t, "span {} ends before it begins", e.span);
+                spans.insert(e.span, Span { begin: b, end: e });
+            }
+        }
+    }
+    assert!(begins.is_empty(), "tree holds unpaired Begin events");
+    // exactly one root, and it is the `request` span
+    let roots: Vec<u64> = spans
+        .iter()
+        .filter(|(_, s)| s.begin.parent == 0)
+        .map(|(id, _)| *id)
+        .collect();
+    assert_eq!(roots.len(), 1, "a tree must have exactly one root");
+    assert_eq!(spans[&roots[0]].begin.name, "request");
+    // every parent resolves in-tree, and child intervals nest inside it
+    for (id, s) in &spans {
+        if s.begin.parent == 0 {
+            continue;
+        }
+        let p = spans
+            .get(&s.begin.parent)
+            .unwrap_or_else(|| panic!("span {id}'s parent is not in its tree"));
+        assert!(
+            p.begin.t <= s.begin.t && s.end.t <= p.end.t,
+            "span {id} ({}) escapes its parent's interval",
+            s.begin.name
+        );
+    }
+    spans
+}
+
+/// Assert the tree carries the full pipeline taxonomy.
+fn check_stages(spans: &BTreeMap<u64, Span<'_>>) {
+    let names: BTreeSet<&str> = spans.values().map(|s| s.begin.name).collect();
+    for stage in STAGES {
+        assert!(names.contains(stage), "stage `{stage}` missing from tree");
+    }
+    // device_segment spans nest under the dispatch span, never the root
+    for s in spans.values() {
+        if s.begin.name == "device_segment" {
+            assert_eq!(spans[&s.begin.parent].begin.name, "dispatch");
+        }
+    }
+}
+
+fn traced_cfg(backend: &str) -> ApacheConfig {
+    ApacheConfig {
+        backend: backend.into(),
+        use_runtime: true,
+        trace_out: "in-memory-only.json".into(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn span_trees_are_well_formed_across_shardings_and_buffering() {
+    for shards in [1usize, 2, 4] {
+        for double_buffer in [false, true] {
+            let shard_cfg = ShardConfig {
+                shards,
+                queue_depth: 64,
+                batch_window: 3,
+                double_buffer,
+            };
+            let coord = ShardedCoordinator::new(traced_cfg("pnm"), shard_cfg);
+            let n = 6u64;
+            for i in 0..n {
+                let adm = coord.submit(ServeRequest {
+                    tenant: i % 3,
+                    task: cmux_tree_task(&format!("w{i}"), 3),
+                });
+                assert!(adm.accepted(), "deep queues must admit the whole mix");
+            }
+            let trace = coord.trace.clone();
+            let results = coord.drain();
+            assert_eq!(results.len(), n as usize);
+            assert!(results.iter().all(|r| r.runtime_error.is_none()));
+            let what = format!("{shards} shards, double_buffer={double_buffer}");
+            assert_eq!(
+                trace.committed_trees(),
+                n,
+                "{what}: one tree per accepted request, exactly once"
+            );
+            assert_eq!(trace.dropped_trees(), 0, "{what}: nothing may overflow");
+            let events = trace.snapshot();
+            let trees = trees_of(&events);
+            assert_eq!(trees.len(), n as usize, "{what}");
+            for tree in trees.values() {
+                let spans = check_tree(tree);
+                check_stages(&spans);
+                // shard consistency: every span of a tree rides one shard
+                let shards_seen: BTreeSet<usize> =
+                    tree.iter().map(|e| e.shard).collect();
+                assert_eq!(shards_seen.len(), 1, "{what}: tree spans two shards");
+                assert!(*shards_seen.iter().next().unwrap() < shards, "{what}");
+                // the dispatch span carries the cost attribution
+                let dispatch = spans
+                    .values()
+                    .find(|s| s.begin.name == "dispatch")
+                    .expect("dispatch span");
+                for key in ["cycles", "rank_bytes", "row_hits", "energy_j"] {
+                    assert!(
+                        dispatch.end.attrs.iter().any(|(k, _)| *k == key),
+                        "{what}: dispatch span lost the `{key}` cost attr"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_accepted_request_traces_exactly_once_under_pressure() {
+    run_prop("obs-exactly-once", 8, |rng, case| {
+        let shard_cfg = ShardConfig {
+            shards: [1usize, 2, 4][rng.uniform(3) as usize],
+            queue_depth: 1 + rng.uniform(4) as usize,
+            batch_window: 1 + rng.uniform(3) as usize,
+            double_buffer: rng.gen_bool(),
+        };
+        // reference backend: cheap per-case runtimes, same span taxonomy
+        let coord = ShardedCoordinator::new(traced_cfg("reference"), shard_cfg);
+        let n = 5 + rng.uniform(16) as usize;
+        let mut accepted = 0u64;
+        for i in 0..n {
+            // tiny queues under a burst: some submissions are rejected
+            let adm = coord.submit(ServeRequest {
+                tenant: rng.next_u64(),
+                task: cmux_tree_task(&format!("p{case}-{i:02}"), 1),
+            });
+            if adm.accepted() {
+                accepted += 1;
+            }
+        }
+        let trace = coord.trace.clone();
+        let results = coord.drain();
+        assert_eq!(results.len(), accepted as usize);
+        // rejected requests trace nothing; accepted ones trace once
+        assert_eq!(trace.committed_trees(), accepted);
+        assert_eq!(trace.dropped_trees(), 0);
+        let events = trace.snapshot();
+        for tree in trees_of(&events).values() {
+            let spans = check_tree(tree);
+            check_stages(&spans);
+        }
+    });
+}
+
+#[test]
+fn ring_overflow_drops_whole_trees_never_truncates() {
+    run_prop("obs-ring-overflow", 32, |rng, _| {
+        let cap = 4 + rng.uniform(60) as usize;
+        let sink = TraceSink::enabled_with_capacity(cap);
+        // expected event count per committed trace id
+        let mut expect: BTreeMap<u64, usize> = BTreeMap::new();
+        let n_trees = 1 + rng.uniform(12);
+        for _ in 0..n_trees {
+            let spans = rng.uniform(8) as usize;
+            let t = Instant::now();
+            let mut tr = sink.start_request(0, "t", 0, t).unwrap();
+            let root = tr.root();
+            for _ in 0..spans {
+                tr.add_span(root, "dispatch", t, t, vec![]);
+            }
+            expect.insert(tr.trace_id(), 2 + 2 * spans);
+            tr.finish(Instant::now());
+        }
+        assert_eq!(sink.committed_trees(), n_trees);
+        assert_eq!(
+            sink.dropped_trees() + sink.resident_trees() as u64,
+            n_trees,
+            "every committed tree is either resident or dropped whole"
+        );
+        let events = sink.snapshot();
+        assert!(events.len() <= cap, "ring exceeded its capacity");
+        let trees = trees_of(&events);
+        assert_eq!(trees.len(), sink.resident_trees());
+        for (id, tree) in &trees {
+            // never truncated: a resident tree holds every event it
+            // committed, and remains a well-formed span tree
+            assert_eq!(tree.len(), expect[id], "tree {id} lost events");
+            check_tree(tree);
+        }
+        // eviction order: among the trees that fit the ring at all
+        // (oversize ones are dropped at commit, they never reside), the
+        // resident set is a suffix of commit order
+        let resident: Vec<u64> = trees.keys().copied().collect();
+        let all: Vec<u64> = expect
+            .iter()
+            .filter(|(_, &n)| n <= cap)
+            .map(|(&id, _)| id)
+            .collect();
+        let survivors: Vec<u64> = all
+            .iter()
+            .copied()
+            .filter(|id| resident.contains(id))
+            .collect();
+        if let Some(&first) = survivors.first() {
+            let tail: Vec<u64> = all.iter().copied().filter(|&id| id >= first).collect();
+            assert_eq!(survivors, tail, "eviction must take the oldest trees first");
+        }
+    });
+}
+
+#[test]
+fn oversize_trees_vanish_entirely_and_leave_the_ring_usable() {
+    run_prop("obs-oversize", 16, |rng, _| {
+        let cap = 2 + rng.uniform(10) as usize;
+        let sink = TraceSink::enabled_with_capacity(cap);
+        // a tree guaranteed past the ring: 2 root + 2*cap span events
+        let t = Instant::now();
+        let mut tr = sink.start_request(0, "big", 0, t).unwrap();
+        let root = tr.root();
+        for _ in 0..cap {
+            tr.add_span(root, "dispatch", t, t, vec![]);
+        }
+        let big = tr.trace_id();
+        tr.finish(Instant::now());
+        assert_eq!(sink.dropped_trees(), 1, "an oversize tree is dropped whole");
+        assert!(sink.snapshot().is_empty(), "no partial residue");
+        // a small tree still commits afterwards
+        let mut tr = sink.start_request(0, "small", 0, t).unwrap();
+        let small = tr.trace_id();
+        tr.finish(Instant::now());
+        let events = sink.snapshot();
+        assert!(events.iter().all(|e| e.trace != big));
+        assert!(events.iter().any(|e| e.trace == small));
+        check_tree(&trees_of(&events)[&small]);
+    });
+}
